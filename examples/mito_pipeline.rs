@@ -1,0 +1,106 @@
+//! End-to-end driver (DESIGN.md §6): the Φ_DNA mitochondrial workload
+//! through the full distributed stack — dataset generation → center-star
+//! MSA on an 8-worker in-memory cluster → distributed avg-SP → sampling
+//! clustering → per-cluster NJ → merged tree → JC69 logML — with
+//! stage-by-stage wall-clock and engine stats. Results are recorded in
+//! EXPERIMENTS.md.
+//!
+//! ```bash
+//! cargo run --release --example mito_pipeline            # 672 x 1.66 kb
+//! SCALE=1.0 COUNT=672 cargo run --release --example mito_pipeline  # paper-length genomes
+//! ```
+
+use halign2::align::center_star::{align_nucleotide, CenterStarConfig};
+use halign2::data::DatasetSpec;
+use halign2::engine::{Cluster, ClusterConfig};
+use halign2::runtime::XlaService;
+use halign2::tree::{build_tree, TreeConfig};
+use halign2::util::timer::fmt_duration;
+use halign2::util::Stopwatch;
+
+fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let length_scale = env_f64("SCALE", 0.1); // 1.0 = full 16.5 kb genomes
+    let count = env_f64("COUNT", 672.0) as usize;
+    let workers = env_f64("WORKERS", 8.0) as usize;
+
+    println!("=== HAlign-II end-to-end: mitochondrial genome pipeline ===");
+    println!(
+        "dataset: {} genomes x ~{} bp, {} workers (in-memory backend)",
+        count,
+        (16_569.0 * length_scale) as usize,
+        workers
+    );
+
+    let mut sw = Stopwatch::new();
+    let spec = DatasetSpec { count, ..DatasetSpec::mito(length_scale, 42) };
+    let seqs = spec.generate();
+    let total_bases: usize = seqs.iter().map(|s| s.len()).sum();
+    println!(
+        "[1] generate        {}  ({:.1} MB of sequence)",
+        fmt_duration(sw.lap("gen")),
+        total_bases as f64 / 1e6
+    );
+
+    // XLA distance kernels are the TPU-architecture path; on the CPU PJRT
+    // plugin (interpret-mode Pallas) they are slower than native (see
+    // EXPERIMENTS.md §Perf), so opt in via HALIGN2_XLA=1.
+    let svc = if std::env::var("HALIGN2_XLA").ok().as_deref() == Some("1") {
+        let svc = XlaService::start("artifacts").ok();
+        if svc.is_some() {
+            println!("    XLA artifacts loaded (distance kernels on PJRT)");
+        }
+        svc
+    } else {
+        None
+    };
+
+    let cluster = Cluster::new(ClusterConfig::spark(workers));
+    let msa = align_nucleotide(&cluster, &seqs, &CenterStarConfig::default())?;
+    println!(
+        "[2] center-star MSA {}  (width {}, {} rows)",
+        fmt_duration(sw.lap("msa")),
+        msa.width,
+        msa.aligned.len()
+    );
+
+    let sp = msa.avg_sp_distributed(&cluster)?;
+    println!(
+        "[3] avg SP          {}  (avg SP = {:.2}, lower is better)",
+        fmt_duration(sw.lap("sp")),
+        sp
+    );
+
+    let tree = build_tree(&cluster, &msa.aligned, svc.as_ref(), &TreeConfig::default())?;
+    println!(
+        "[4] NJ tree         {}  ({} clusters, logML {:.1})",
+        fmt_duration(sw.lap("tree")),
+        tree.num_clusters,
+        tree.log_likelihood
+    );
+
+    let stats = cluster.stats();
+    println!("\n--- engine stats ---");
+    println!("tasks run:            {}", stats.tasks_run);
+    println!("worker busy time:     {}", fmt_duration(stats.total_busy));
+    println!(
+        "shuffle bytes:        {} written / {} read",
+        stats.shuffle_bytes_written, stats.shuffle_bytes_read
+    );
+    println!(
+        "avg max worker memory: {:.1} MB (peak worker: {:.1} MB)",
+        stats.avg_max_memory_bytes / (1 << 20) as f64,
+        stats.max_peak_memory_bytes as f64 / (1 << 20) as f64
+    );
+    println!("total wall:           {}", fmt_duration(sw.elapsed()));
+
+    // Structural invariants — loudly verify the run was real.
+    msa.validate(&seqs)?;
+    tree.tree.validate()?;
+    assert_eq!(tree.tree.num_leaves(), seqs.len());
+    println!("\nall invariants hold ✓");
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Figure-6-style scaling sweep: the same MSA workload at 1..12 workers,
+//! reporting wall-clock, per-worker busy time and peak memory.  On a
+//! 1-core CI box the wall-clock flattens (threads timeshare); the
+//! engine-accounted busy time and per-worker memory still show the
+//! distribution effect — see EXPERIMENTS.md §Figure 6.
+//!
+//! ```bash
+//! cargo run --release --example scaling_sweep
+//! ```
+
+use std::time::Instant;
+
+use halign2::align::center_star::{align_nucleotide, CenterStarConfig};
+use halign2::data::DatasetSpec;
+use halign2::engine::{Cluster, ClusterConfig};
+use halign2::util::timer::fmt_duration;
+
+fn main() -> anyhow::Result<()> {
+    let count = std::env::var("COUNT").ok().and_then(|v| v.parse().ok()).unwrap_or(1344usize);
+    let seqs = DatasetSpec { count, ..DatasetSpec::mito(0.1, 21) }.generate();
+    println!("workload: {} genomes x ~1.66 kb\n", seqs.len());
+    println!(
+        "{:>7} | {:>10} | {:>12} | {:>16} | {:>10}",
+        "workers", "wall", "busy(sum)", "avg max mem (MB)", "tasks"
+    );
+
+    let mut base_mem = 0.0f64;
+    for workers in [1usize, 2, 4, 8, 12] {
+        let cluster = Cluster::new(ClusterConfig::spark(workers));
+        let t = Instant::now();
+        let msa = align_nucleotide(&cluster, &seqs, &CenterStarConfig::default())?;
+        let wall = t.elapsed();
+        let stats = cluster.stats();
+        let mem_mb = stats.avg_max_memory_bytes / (1 << 20) as f64;
+        if workers == 1 {
+            base_mem = mem_mb;
+        }
+        println!(
+            "{workers:>7} | {:>10} | {:>12} | {:>16.1} | {:>10}",
+            fmt_duration(wall),
+            fmt_duration(stats.total_busy),
+            mem_mb,
+            stats.tasks_run
+        );
+        assert_eq!(msa.aligned.len(), seqs.len());
+    }
+    println!(
+        "\nper-worker memory at 12 workers should be a fraction of the 1-worker\n\
+         run ({base_mem:.1} MB) — the paper's 'capacity grows with nodes' claim."
+    );
+    Ok(())
+}

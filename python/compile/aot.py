@@ -1,0 +1,161 @@
+"""AOT compiler: lower every (L2 program, shape bucket) pair to HLO text.
+
+This is the ONLY python entry point in the build; `make artifacts` runs it
+once and the Rust coordinator is self-contained afterwards.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts land in artifacts/ together with `manifest.txt`, one line per
+executable:
+
+    name<TAB>file<TAB>kind<TAB>shape-params (k=v, comma separated)
+
+which rust/src/runtime/artifacts.rs parses to build its registry.  Shape
+buckets are the contract between the Rust batcher (which pads requests up
+to a bucket) and the fixed-shape PJRT executables.
+
+Usage: python -m compile.aot --out-dir ../artifacts [--quick]
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# ---------------------------------------------------------------------------
+# Shape buckets (the Rust batcher must agree — rust/src/runtime/artifacts.rs)
+# ---------------------------------------------------------------------------
+
+# (batch, query_len, center_len): protein SW.  Avg BAliBASE R10 length is
+# 459 aa, so the 512 bucket covers the bulk; 128 catches short sequences
+# cheaply; overlong sequences fall back to the Rust SW path.
+SW_BUCKETS = [
+    (8, 128, 128),
+    (8, 512, 512),
+]
+SW_BUCKETS_QUICK = [(4, 32, 32)]
+
+# (n_rows, dim): k-mer profile distance (k=4 -> D=256).
+GRAM_BUCKETS = [(128, 256)]
+GRAM_BUCKETS_QUICK = [(64, 128)]
+
+# (n_rows, aligned_len): NJ match counts.  DNA alignment columns for the
+# mito dataset pad to 1024 after the quick-path; rRNA to 2048.
+MATCH_DNA_BUCKETS = [(128, 2048)]
+MATCH_PROTEIN_BUCKETS = [(128, 640)]
+MATCH_DNA_BUCKETS_QUICK = [(64, 128)]
+MATCH_PROTEIN_BUCKETS_QUICK = [(64, 64)]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    Rust side unwraps with to_tuple1)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(fn, specs):
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def emit(out_dir, manifest, name, kind, params, fn, specs):
+    text = lower_one(fn, specs)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    pstr = ",".join(f"{k}={v}" for k, v in params)
+    manifest.append(f"{name}\t{fname}\t{kind}\t{pstr}")
+    print(f"  {name}: {len(text)} chars", file=sys.stderr)
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--quick",
+        action="store_true",
+        help="also emit tiny buckets used by the Rust integration tests",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = []
+    alpha = model.PROTEIN_ALPHA
+
+    sw_buckets = SW_BUCKETS + (SW_BUCKETS_QUICK if args.quick else [])
+    for b, m, n in sw_buckets:
+        emit(
+            args.out_dir,
+            manifest,
+            f"sw_b{b}_q{m}_c{n}",
+            "sw",
+            [("b", b), ("m", m), ("n", n), ("alpha", alpha)],
+            lambda a, c, s, g: (model.sw_align(a, c, s, g),),
+            (i32(b, m), i32(n), f32(alpha, alpha), f32(1)),
+        )
+
+    gram_buckets = GRAM_BUCKETS + (GRAM_BUCKETS_QUICK if args.quick else [])
+    for n, d in gram_buckets:
+        emit(
+            args.out_dir,
+            manifest,
+            f"kmerdist_n{n}_d{d}",
+            "kmerdist",
+            [("n", n), ("d", d)],
+            lambda x: (model.kmer_sqdist(x),),
+            (f32(n, d),),
+        )
+
+    dna_buckets = MATCH_DNA_BUCKETS + (
+        MATCH_DNA_BUCKETS_QUICK if args.quick else []
+    )
+    for n, l in dna_buckets:
+        emit(
+            args.out_dir,
+            manifest,
+            f"matchdna_n{n}_l{l}",
+            "match_dna",
+            [("n", n), ("l", l), ("alpha", model.DNA_ALPHA)],
+            lambda c: (model.match_counts_dna(c),),
+            (i32(n, l),),
+        )
+
+    prot_buckets = MATCH_PROTEIN_BUCKETS + (
+        MATCH_PROTEIN_BUCKETS_QUICK if args.quick else []
+    )
+    for n, l in prot_buckets:
+        emit(
+            args.out_dir,
+            manifest,
+            f"matchprot_n{n}_l{l}",
+            "match_protein",
+            [("n", n), ("l", l), ("alpha", alpha)],
+            lambda c: (model.match_counts_protein(c),),
+            (i32(n, l),),
+        )
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {len(manifest)} artifacts to {args.out_dir}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""L1 Pallas kernel: tiled Gram / squared-distance matrix.
+
+HAlign-II's phylogeny stage needs all-pairs distances twice:
+
+  * k-mer profile distances for the initial ~10% sampling clustering
+    (rows = k-mer count vectors, D = 4^k), and
+  * match-count / p-distances over aligned sequences for neighbor-joining
+    (rows = one-hot encoded alignment columns, D = L * alphabet, where a
+    dot product counts exactly the matching columns).
+
+Both reduce to  G = X @ X^T,  from which
+  sqdist(i,j) = g_ii + g_jj - 2 g_ij      (k-mer profiles)
+  matches(i,j) = g_ij                     (one-hot rows)
+
+so a single tiled matmul kernel serves both.  This is the MXU-shaped kernel
+of the reproduction: tiles of X stream HBM->VMEM via BlockSpec, each grid
+step contracts a (tm, td) x (td, tn) block pair on the systolic array, and
+the (tm, tn) f32 accumulator lives in the output VMEM block across the
+contraction loop.
+
+interpret=True for CPU-PJRT execution (see sw.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def gram_tile_kernel(x_ref, y_ref, o_ref):
+    """Accumulate one contraction step: o += x_tile @ y_tile^T.
+
+    Grid = (M/tm, N/tn, D/td); the k-th grid axis walks the contraction.
+    x_ref: (tm, td), y_ref: (tn, td), o_ref: (tm, tn) accumulator.
+    """
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...].T, preferred_element_type=jnp.float32
+    )
+
+
+def gram_matrix(x, *, tm=64, tn=64, td=128, interpret=True):
+    """G = x @ x^T via the tiled Pallas kernel. x: (N, D) f32 -> (N, N) f32.
+
+    N must be divisible by tm and tn, D by td (aot.py only emits such
+    buckets; the Rust batcher pads rows with zeros, which contribute nothing
+    to the Gram matrix).
+    """
+    n, d = x.shape
+    assert n % tm == 0 and n % tn == 0 and d % td == 0, (n, d, tm, tn, td)
+    grid = (n // tm, n // tn, d // td)
+    return pl.pallas_call(
+        gram_tile_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, td), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tn, td), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=interpret,
+    )(x, x)
+
+
+def sqdist_from_gram(g):
+    """sqdist(i,j) = g_ii + g_jj - 2 g_ij, clamped at 0 for fp round-off."""
+    diag = jnp.diagonal(g)
+    return jnp.maximum(diag[:, None] + diag[None, :] - 2.0 * g, 0.0)
+
+
+def kmer_sqdist(x, *, interpret=True, **tiles):
+    """Squared euclidean distance between k-mer profile rows of x."""
+    return sqdist_from_gram(gram_matrix(x, interpret=interpret, **tiles))
+
+
+def match_counts(codes, alpha, *, interpret=True, **tiles):
+    """Pairwise matching-column counts between aligned integer sequences.
+
+    codes: (N, L) int32 in [0, alpha); gaps/sentinels must already be mapped
+    to a dedicated code — matching gaps count as matches here and are
+    corrected by the caller (rust/src/tree/distance.rs keeps per-pair gap
+    tallies).  One-hot to (N, L*alpha) then a Gram matmul counts matches:
+    dot(onehot_i, onehot_j) = #columns where codes agree.
+    """
+    n, l = codes.shape
+    onehot = jax.nn.one_hot(codes, alpha, dtype=jnp.float32).reshape(n, l * alpha)
+    # Zero-pad the contraction dim to the tile width; zero columns add
+    # nothing to the Gram matrix, so this is exact.
+    td = tiles.get("td", 128)
+    d = onehot.shape[1]
+    pad = (-d) % td
+    if pad:
+        onehot = jnp.pad(onehot, ((0, 0), (0, pad)))
+    return gram_matrix(onehot, interpret=interpret, **tiles)

@@ -1,0 +1,101 @@
+"""Pure-jnp / pure-python oracles for the Pallas kernels.
+
+These are the CORE correctness signal: python/tests compares every kernel
+against these references (exact for integer-valued scores, allclose for
+float paths), and the Rust side's unit tests embed small cases whose
+expected values were derived from the same recurrences.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def sw_matrix_ref(a, b, subst, gap):
+    """Textbook O(m*n) Smith-Waterman H matrix (numpy, row-major).
+
+    a: (m,) int codes, b: (n,) int codes, subst: (alpha, alpha), gap: float.
+    Returns H of shape (m+1, n+1), H[0,:] = H[:,0] = 0.
+    """
+    m, n = len(a), len(b)
+    h = np.zeros((m + 1, n + 1), dtype=np.float64)
+    for i in range(1, m + 1):
+        for j in range(1, n + 1):
+            s = subst[a[i - 1], b[j - 1]]
+            h[i, j] = max(
+                0.0,
+                h[i - 1, j - 1] + s,
+                h[i - 1, j] - gap,
+                h[i, j - 1] - gap,
+            )
+    return h.astype(np.float32)
+
+
+def diag_major(h):
+    """Convert a row-major (m+1, n+1) H into the kernel's diagonal-major
+    layout hd[d, i] = H[i, d-i] (zeros outside the band)."""
+    m1, n1 = h.shape
+    m, n = m1 - 1, n1 - 1
+    hd = np.zeros((m + n + 1, m + 1), dtype=np.float32)
+    for i in range(m + 1):
+        for j in range(n + 1):
+            hd[i + j, i] = h[i, j]
+    return hd
+
+
+def row_major(hd, m, n):
+    """Inverse of diag_major (mirrors the Rust re-indexing)."""
+    h = np.zeros((m + 1, n + 1), dtype=np.float32)
+    for i in range(m + 1):
+        for j in range(n + 1):
+            h[i, j] = hd[i + j, i]
+    return h
+
+
+def gram_ref(x):
+    """G = x @ x^T in f64 then cast, the tightest reference for tiling."""
+    x = np.asarray(x, dtype=np.float64)
+    return (x @ x.T).astype(np.float32)
+
+
+def sqdist_ref(x):
+    g = gram_ref(x).astype(np.float64)
+    d = np.diagonal(g)
+    return np.maximum(d[:, None] + d[None, :] - 2.0 * g, 0.0).astype(np.float32)
+
+
+def match_counts_ref(codes):
+    """Pairwise equal-column counts, O(n^2 * l) python loop."""
+    codes = np.asarray(codes)
+    n = codes.shape[0]
+    out = np.zeros((n, n), dtype=np.float32)
+    for i in range(n):
+        for j in range(n):
+            out[i, j] = float(np.sum(codes[i] == codes[j]))
+    return out
+
+
+def jnp_sw_scores(a_batch, b, subst, gap):
+    """Vectorized-over-batch jnp reference for final best scores only
+    (used by perf comparisons: scan over query rows, scan along columns)."""
+    import jax
+
+    def one(a):
+        def row_step(prev_row, ai):
+            s_row = subst[ai, b]  # (n,)
+
+            def col_step(left, inputs):
+                up, diag, s = inputs
+                val = jnp.maximum(
+                    0.0, jnp.maximum(diag + s, jnp.maximum(up, left) - gap)
+                )
+                return val, val
+
+            diag_vals = jnp.concatenate([jnp.zeros((1,)), prev_row[:-1]])
+            _, row = jax.lax.scan(col_step, 0.0, (prev_row, diag_vals, s_row))
+            return row, jnp.max(row)
+
+        init = jnp.zeros((b.shape[0],))
+        _, maxes = jax.lax.scan(row_step, init, a)
+        return jnp.max(maxes)
+
+    return jax.vmap(one)(a_batch)

@@ -1,0 +1,106 @@
+"""L1 Pallas kernel: batched Smith-Waterman scoring via anti-diagonal wavefront.
+
+HAlign-II uses Smith-Waterman (linear gap penalty, substitution matrix) for
+protein pairwise alignment against the broadcast center-star sequence.  The
+DP recurrence
+
+    H[i,j] = max(0,
+                 H[i-1,j-1] + s(a_i, b_j),
+                 H[i-1,j]   - gap,
+                 H[i,j-1]   - gap)
+
+has a row-wise *and* column-wise dependency, so neither rows nor columns
+vectorize.  Every cell on an anti-diagonal d = i+j, however, depends only on
+diagonals d-1 and d-2 — the classical wavefront formulation.  We therefore
+iterate over the m+n diagonals and compute each diagonal as one vector op
+over its lanes.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the three live diagonals
+are (m+1)-lane f32 vectors that sit comfortably in VMEM (3 * 513 * 4B ≈ 6 KB
+for the 512-bucket); the H output is written diagonal-major so each step is
+a contiguous row store.  The substitution lookup s(a_i, b_{d-i}) is a
+vectorized gather from a small (A*A,) table resident in VMEM.
+
+Output layout: ``hd[b, d, i] = H[i, d-i]`` for the b-th query — i.e. H in
+diagonal-major order, including the zero boundary row/column.  The Rust side
+(rust/src/align/protein.rs) re-indexes ``H[i][j] = hd[i+j][i]`` and runs the
+O(m+n) traceback from the argmax, re-deriving the predecessor choice from H
+itself (no pointer matrix needed).
+
+The kernel MUST be lowered with interpret=True: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def sw_wavefront_kernel(a_ref, b_ref, subst_ref, gap_ref, hd_ref, *, m, n, alpha):
+    """One batch element: query a (m,) int32 vs center b (n,) int32.
+
+    a_ref:     (m,)   int32  query codes, padded with `alpha - 1` (sentinel)
+    b_ref:     (n,)   int32  center codes (sentinel-padded likewise)
+    subst_ref: (alpha*alpha,) f32 flattened substitution matrix; the
+               sentinel row/column must hold a large negative score so that
+               padding never extends an alignment.
+    gap_ref:   (1,)   f32    linear gap penalty (positive value, subtracted)
+    hd_ref:    (m+n+1, m+1) f32 out, diagonal-major H (see module docstring)
+    """
+    a = a_ref[...]
+    b = b_ref[...]
+    subst = subst_ref[...]
+    gap = gap_ref[0]
+
+    lanes = m + 1  # lane l corresponds to row index i = l
+    iota = jax.lax.iota(jnp.int32, lanes)
+
+    # a_lane[l] = code of a_{i=l} (1-based row i uses a[i-1]); lane 0 unused.
+    a_lane = jnp.where(iota >= 1, a[jnp.clip(iota - 1, 0, m - 1)], alpha - 1)
+
+    zeros = jnp.zeros((lanes,), jnp.float32)
+    hd_ref[0, :] = zeros
+    hd_ref[1, :] = zeros
+
+    def step(d, carry):
+        # carry: (H on diagonal d-1, H on diagonal d-2), lane-indexed by i.
+        hm1, hm2 = carry
+        j = d - iota  # column index per lane
+        valid = (iota >= 1) & (iota <= m) & (j >= 1) & (j <= n)
+        # substitution score s(a_i, b_j) per lane (clip keeps gathers in
+        # bounds; `valid` masks the result).
+        b_lane = b[jnp.clip(j - 1, 0, n - 1)]
+        s = subst[a_lane * alpha + b_lane]
+        # diag move uses H[i-1, j-1] = hm2[i-1]; up uses H[i-1, j] = hm1[i-1]
+        hm2_shift = jnp.roll(hm2, 1).at[0].set(0.0)
+        hm1_shift = jnp.roll(hm1, 1).at[0].set(0.0)
+        h = jnp.maximum(
+            jnp.maximum(hm2_shift + s, hm1_shift - gap),
+            jnp.maximum(hm1 - gap, 0.0),
+        )
+        h = jnp.where(valid, h, 0.0)
+        hd_ref[d, :] = h
+        return (h, hm1)
+
+    jax.lax.fori_loop(2, m + n + 1, step, (zeros, zeros))
+
+
+def sw_batch(a_codes, b_codes, subst, gap, *, interpret=True):
+    """Batched SW wavefront: vmap of the single-pair Pallas kernel.
+
+    a_codes: (B, m) int32; b_codes: (n,) int32; subst: (alpha, alpha) f32;
+    gap: (1,) f32.  Returns hd: (B, m+n+1, m+1) f32.
+    """
+    batch, m = a_codes.shape
+    (n,) = b_codes.shape
+    alpha = subst.shape[0]
+    kern = functools.partial(sw_wavefront_kernel, m=m, n=n, alpha=alpha)
+    call = pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((m + n + 1, m + 1), jnp.float32),
+        interpret=interpret,
+    )
+    flat_subst = subst.reshape(-1)
+    return jax.vmap(lambda a: call(a, b_codes, flat_subst, gap))(a_codes)

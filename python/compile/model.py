@@ -1,0 +1,64 @@
+"""L2: the jax compute graphs HAlign-II ships to the Rust coordinator.
+
+Each function here is a *whole lowered program*: it composes the L1 Pallas
+kernels with the surrounding jnp glue (masking, one-hot, distance algebra)
+so a single PJRT executable serves one coordinator request.  aot.py lowers
+every (function, shape-bucket) pair once to HLO text; python never runs at
+request time.
+
+Programs
+--------
+sw_align     : (a_codes (B,m) i32, b_codes (n,) i32, subst (A,A) f32,
+                gap (1,) f32) -> hd (B, m+n+1, m+1) f32
+               Batched Smith-Waterman H matrices (diagonal-major) of B
+               padded queries against the broadcast center sequence; the
+               Rust side does traceback.  Hot path of protein center-star.
+
+kmer_sqdist  : (x (N,D) f32) -> (N,N) f32
+               Squared-euclidean distances between k-mer profiles; used by
+               the ~10% sampling clustering before NJ.
+
+match_counts : (codes (N,L) i32) -> (N,N) f32
+               Pairwise matching-column counts over aligned sequences
+               (one-hot + Gram matmul); the NJ p-distance numerator.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels import distance, sw
+
+# Alphabet sizes baked into the artifacts.  25 covers the 20 amino acids,
+# ambiguity codes B/Z/X, the gap code, and a padding sentinel; 6 covers
+# A/C/G/T(U) + N + gap for nucleotide work.
+PROTEIN_ALPHA = 25
+DNA_ALPHA = 6
+
+
+def sw_align(a_codes, b_codes, subst, gap):
+    """Batched SW wavefront against a broadcast center sequence (L1 kernel)."""
+    return sw.sw_batch(a_codes, b_codes, subst, gap, interpret=True)
+
+
+def kmer_sqdist(x):
+    """Sampling-stage k-mer profile distances (L1 Gram kernel + algebra)."""
+    return distance.kmer_sqdist(x, interpret=True)
+
+
+def match_counts_dna(codes):
+    """NJ-stage match counts over DNA/RNA alignments."""
+    return distance.match_counts(codes, DNA_ALPHA, interpret=True)
+
+
+def match_counts_protein(codes):
+    """NJ-stage match counts over protein alignments (the one-hot width
+    L*25 is zero-padded to the Gram tile width inside the kernel wrapper)."""
+    return distance.match_counts(codes, PROTEIN_ALPHA, interpret=True)
+
+
+def pad_cols_to(codes, width, fill):
+    """Right-pad integer code rows to `width` with `fill` (a code both rows
+    share, so padding adds a constant to every match count; the Rust caller
+    subtracts it — see rust/src/tree/distance.rs)."""
+    n, l = codes.shape
+    assert width >= l
+    return jnp.pad(codes, ((0, 0), (0, width - l)), constant_values=fill)

@@ -1,0 +1,246 @@
+"""Kernel-vs-reference correctness: the build-time gate for the artifacts.
+
+Every Pallas kernel is compared against the pure numpy/jnp oracles in
+compile.kernels.ref — exact equality where scores are integer-valued,
+allclose elsewhere.  Hypothesis sweeps shapes and alphabets.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import distance, ref, sw
+
+RNG = np.random.default_rng(7)
+
+
+def blosum_like(alpha, rng):
+    """Random symmetric integer substitution matrix with a sentinel row."""
+    m = rng.integers(-4, 12, size=(alpha, alpha)).astype(np.float32)
+    m = np.tril(m) + np.tril(m, -1).T
+    m[alpha - 1, :] = -1e4  # padding sentinel never matches
+    m[:, alpha - 1] = -1e4
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Smith-Waterman wavefront kernel
+# ---------------------------------------------------------------------------
+
+
+class TestSwKernel:
+    def run_case(self, batch, m, n, alpha, seed):
+        rng = np.random.default_rng(seed)
+        subst = blosum_like(alpha, rng)
+        gap = np.float32(3.0)
+        a = rng.integers(0, alpha - 1, size=(batch, m)).astype(np.int32)
+        b = rng.integers(0, alpha - 1, size=(n,)).astype(np.int32)
+        hd = np.asarray(
+            sw.sw_batch(
+                jnp.asarray(a), jnp.asarray(b), jnp.asarray(subst), jnp.asarray([gap])
+            )
+        )
+        assert hd.shape == (batch, m + n + 1, m + 1)
+        for k in range(batch):
+            h_ref = ref.sw_matrix_ref(a[k], b, subst, gap)
+            np.testing.assert_array_equal(
+                ref.row_major(hd[k], m, n), h_ref, err_msg=f"batch element {k}"
+            )
+
+    def test_small_exact(self):
+        self.run_case(batch=3, m=7, n=9, alpha=5, seed=1)
+
+    def test_square(self):
+        self.run_case(batch=2, m=12, n=12, alpha=25, seed=2)
+
+    def test_query_longer_than_center(self):
+        self.run_case(batch=2, m=15, n=6, alpha=8, seed=3)
+
+    def test_center_longer_than_query(self):
+        self.run_case(batch=2, m=6, n=15, alpha=8, seed=4)
+
+    def test_single_element_batch(self):
+        self.run_case(batch=1, m=10, n=10, alpha=25, seed=5)
+
+    def test_minimal_lengths(self):
+        self.run_case(batch=2, m=1, n=1, alpha=4, seed=6)
+
+    def test_identical_sequences_peak_on_diagonal(self):
+        alpha = 5
+        subst = np.full((alpha, alpha), -2.0, np.float32)
+        np.fill_diagonal(subst, 5.0)
+        a = np.array([[0, 1, 2, 3, 0, 1]], np.int32)
+        hd = np.asarray(
+            sw.sw_batch(
+                jnp.asarray(a),
+                jnp.asarray(a[0]),
+                jnp.asarray(subst),
+                jnp.asarray([4.0], np.float32),
+            )
+        )
+        h = ref.row_major(hd[0], 6, 6)
+        assert h[6, 6] == 30.0  # perfect self-alignment: 6 matches * 5
+
+    def test_padding_sentinel_never_extends(self):
+        """Sentinel-padded tails must not raise any H cell above the
+        unpadded optimum (the batcher relies on this)."""
+        alpha = 6
+        rng = np.random.default_rng(8)
+        subst = blosum_like(alpha, rng)
+        gap = np.float32(2.0)
+        a_real = rng.integers(0, alpha - 1, size=(1, 8)).astype(np.int32)
+        b = rng.integers(0, alpha - 1, size=(10,)).astype(np.int32)
+        a_pad = np.concatenate(
+            [a_real, np.full((1, 4), alpha - 1, np.int32)], axis=1
+        )
+        hd_real = np.asarray(
+            sw.sw_batch(jnp.asarray(a_real), jnp.asarray(b), jnp.asarray(subst),
+                        jnp.asarray([gap]))
+        )
+        hd_pad = np.asarray(
+            sw.sw_batch(jnp.asarray(a_pad), jnp.asarray(b), jnp.asarray(subst),
+                        jnp.asarray([gap]))
+        )
+        assert hd_pad.max() == hd_real.max()
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        batch=st.integers(1, 3),
+        m=st.integers(1, 16),
+        n=st.integers(1, 16),
+        alpha=st.integers(3, 25),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_sweep(self, batch, m, n, alpha, seed):
+        self.run_case(batch, m, n, alpha, seed)
+
+    def test_matches_jnp_score_reference(self):
+        rng = np.random.default_rng(11)
+        alpha = 25
+        subst = blosum_like(alpha, rng)
+        gap = np.float32(3.0)
+        a = rng.integers(0, alpha - 1, size=(4, 20)).astype(np.int32)
+        b = rng.integers(0, alpha - 1, size=(24,)).astype(np.int32)
+        hd = np.asarray(
+            sw.sw_batch(jnp.asarray(a), jnp.asarray(b), jnp.asarray(subst),
+                        jnp.asarray([gap]))
+        )
+        best_kernel = hd.max(axis=(1, 2))
+        best_ref = np.asarray(
+            ref.jnp_sw_scores(
+                jnp.asarray(a, jnp.int32),
+                jnp.asarray(b, jnp.int32),
+                jnp.asarray(subst),
+                jnp.asarray(gap),
+            )
+        )
+        np.testing.assert_allclose(best_kernel, best_ref, rtol=0, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# Gram / distance kernels
+# ---------------------------------------------------------------------------
+
+
+class TestGramKernel:
+    def test_exact_integer_grams(self):
+        x = RNG.integers(0, 9, size=(128, 256)).astype(np.float32)
+        g = np.asarray(distance.gram_matrix(jnp.asarray(x)))
+        np.testing.assert_array_equal(g, ref.gram_ref(x))
+
+    def test_float_allclose(self):
+        x = RNG.normal(size=(128, 256)).astype(np.float32)
+        g = np.asarray(distance.gram_matrix(jnp.asarray(x)))
+        np.testing.assert_allclose(g, ref.gram_ref(x), rtol=1e-5, atol=1e-4)
+
+    def test_single_tile(self):
+        x = RNG.normal(size=(64, 128)).astype(np.float32)
+        g = np.asarray(distance.gram_matrix(jnp.asarray(x)))
+        np.testing.assert_allclose(g, ref.gram_ref(x), rtol=1e-5, atol=1e-4)
+
+    def test_multi_k_accumulation(self):
+        """D = 4 tiles of 128: exercises the k-loop accumulator reuse."""
+        x = RNG.normal(size=(64, 512)).astype(np.float32)
+        g = np.asarray(distance.gram_matrix(jnp.asarray(x)))
+        np.testing.assert_allclose(g, ref.gram_ref(x), rtol=1e-5, atol=1e-3)
+
+    def test_sqdist(self):
+        x = RNG.integers(0, 5, size=(128, 256)).astype(np.float32)
+        d2 = np.asarray(distance.kmer_sqdist(jnp.asarray(x)))
+        np.testing.assert_allclose(d2, ref.sqdist_ref(x), rtol=1e-5, atol=1e-3)
+        assert (np.diagonal(d2) == 0).all()
+        np.testing.assert_allclose(d2, d2.T, atol=1e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        nt=st.integers(1, 3),
+        kt=st.integers(1, 4),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_tile_counts(self, nt, kt, seed):
+        rng = np.random.default_rng(seed)
+        x = rng.normal(size=(64 * nt, 128 * kt)).astype(np.float32)
+        g = np.asarray(distance.gram_matrix(jnp.asarray(x)))
+        np.testing.assert_allclose(g, ref.gram_ref(x), rtol=1e-5, atol=1e-3)
+
+
+class TestMatchCounts:
+    def test_dna_exact(self):
+        codes = RNG.integers(0, model.DNA_ALPHA, size=(64, 100)).astype(np.int32)
+        mc = np.asarray(model.match_counts_dna(jnp.asarray(codes)))
+        np.testing.assert_array_equal(mc, ref.match_counts_ref(codes))
+
+    def test_protein_exact(self):
+        codes = RNG.integers(0, model.PROTEIN_ALPHA, size=(64, 64)).astype(np.int32)
+        mc = np.asarray(model.match_counts_protein(jnp.asarray(codes)))
+        np.testing.assert_array_equal(mc, ref.match_counts_ref(codes))
+
+    def test_identical_rows_full_count(self):
+        row = RNG.integers(0, 6, size=(1, 96)).astype(np.int32)
+        codes = np.repeat(row, 64, axis=0)
+        mc = np.asarray(model.match_counts_dna(jnp.asarray(codes)))
+        np.testing.assert_array_equal(mc, np.full((64, 64), 96.0, np.float32))
+
+    def test_padding_is_constant_offset(self):
+        """pad_cols_to with a shared fill adds exactly (width-L) matches."""
+        codes = RNG.integers(0, 5, size=(64, 50)).astype(np.int32)
+        base = np.asarray(model.match_counts_dna(jnp.asarray(codes)))
+        padded = model.pad_cols_to(jnp.asarray(codes), 96, model.DNA_ALPHA - 1)
+        mc = np.asarray(model.match_counts_dna(padded))
+        np.testing.assert_array_equal(mc, base + 46.0)
+
+
+# ---------------------------------------------------------------------------
+# Model-level shape contracts (what aot.py bakes into the artifacts)
+# ---------------------------------------------------------------------------
+
+
+class TestModelShapes:
+    def test_sw_align_shape(self):
+        b, m, n, alpha = 2, 16, 24, model.PROTEIN_ALPHA
+        out = model.sw_align(
+            jnp.zeros((b, m), jnp.int32),
+            jnp.zeros((n,), jnp.int32),
+            jnp.zeros((alpha, alpha), jnp.float32),
+            jnp.asarray([2.0], jnp.float32),
+        )
+        assert out.shape == (b, m + n + 1, m + 1)
+
+    def test_kmer_sqdist_shape(self):
+        out = model.kmer_sqdist(jnp.zeros((64, 256), jnp.float32))
+        assert out.shape == (64, 64)
+
+    def test_lowering_smoke(self):
+        """The exact lowering path aot.py uses must produce parseable HLO
+        text with the expected entry computation."""
+        from compile import aot
+
+        text = aot.lower_one(
+            lambda x: (model.kmer_sqdist(x),),
+            (jax.ShapeDtypeStruct((64, 128), jnp.float32),),
+        )
+        assert "ENTRY" in text and "f32[64,64]" in text

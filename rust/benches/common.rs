@@ -1,0 +1,52 @@
+//! Shared plumbing for the paper-table bench targets (harness = false —
+//! the offline build has no criterion; each bench is a timed driver that
+//! prints the paper-style table plus machine-readable TSV).
+
+use std::time::Duration;
+
+use halign2::bench::BenchConfig;
+use halign2::metrics::{print_table, tsv_line, RunReport};
+use halign2::runtime::XlaService;
+
+pub fn config_from_env() -> BenchConfig {
+    let env_f = |k: &str, d: f64| {
+        std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
+    };
+    BenchConfig {
+        workers: env_f("WORKERS", 8.0) as usize,
+        scale: env_f("SCALE", 1.0),
+        budget: Duration::from_secs(env_f("BUDGET_SECS", 60.0) as u64),
+        quick: std::env::var("QUICK").is_ok()
+            || std::env::args().any(|a| a == "--quick" || a == "--test"),
+        seed: 0xBEEF,
+    }
+}
+
+/// XLA routing for table benches: interpret-mode Pallas on the CPU PJRT
+/// plugin is an architecture/correctness path, not a CPU speed path
+/// (native SW is ~5x faster on this box — EXPERIMENTS.md §Perf), so the
+/// paper tables run native unless HALIGN2_XLA=1 forces the XLA route.
+pub fn service() -> Option<XlaService> {
+    if std::env::var("HALIGN2_XLA").ok().as_deref() != Some("1") {
+        return None;
+    }
+    service_forced()
+}
+
+/// Unconditional load (micro benches measure the XLA path explicitly).
+pub fn service_forced() -> Option<XlaService> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if std::path::Path::new(dir).join("manifest.txt").exists() {
+        XlaService::start(dir).ok()
+    } else {
+        None
+    }
+}
+
+pub fn emit(title: &str, rows: Vec<RunReport>) {
+    print_table(title, &rows);
+    println!("\n# tool\tdataset\twall_s\tbusy_s\tmetric\tavg_max_mem_mb\tstatus");
+    for r in &rows {
+        println!("{}", tsv_line(r));
+    }
+}

@@ -1,0 +1,13 @@
+//! Regenerates Figure 5 — average maximum per-worker memory of
+//! HAlign(Hadoop) vs SparkSW vs HAlign-II on DNA and protein workloads.
+#[allow(dead_code)]
+mod common;
+
+fn main() {
+    let cfg = common::config_from_env();
+    let svc = common::service();
+    common::emit(
+        "Figure 5 — avg max per-worker memory (MB)",
+        halign2::bench::fig5_memory(&cfg, svc.as_ref()),
+    );
+}

@@ -1,0 +1,12 @@
+//! Regenerates Figure 6 — running time and memory with increasing worker
+//! nodes (1, 2, 4, 8, 12).
+#[allow(dead_code)]
+mod common;
+
+fn main() {
+    let cfg = common::config_from_env();
+    common::emit(
+        "Figure 6 — scaling with worker count",
+        halign2::bench::fig6_scaling(&cfg),
+    );
+}

@@ -1,0 +1,150 @@
+//! Micro-benchmarks of the hot paths (EXPERIMENTS.md §Perf): trie scan
+//! rate, native vs XLA Smith-Waterman cell rate, shuffle throughput per
+//! backend, NJ join rate, executor dispatch overhead.  Median of N runs,
+//! no criterion (offline build).
+#[allow(dead_code)]
+mod common;
+
+use std::time::Instant;
+
+use halign2::align::sw::{sw_matrix, SwParams};
+use halign2::align::trie::SegmentTrie;
+use halign2::data::DatasetSpec;
+use halign2::engine::{Cluster, ClusterConfig, FaultPlan};
+use halign2::fasta::{alphabet::substitution_matrix, Alphabet, Sequence};
+use halign2::runtime::batcher::SwBatcher;
+use halign2::tree::nj::neighbor_joining;
+use halign2::util::Rng;
+
+fn median(mut xs: Vec<f64>) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[xs.len() / 2]
+}
+
+fn bench<F: FnMut()>(name: &str, work_units: f64, unit: &str, iters: usize, mut f: F) {
+    // Warmup.
+    f();
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed().as_secs_f64());
+    }
+    let med = median(times);
+    println!(
+        "{name:<38} {:>10.3} ms   {:>12.2} {unit}",
+        med * 1e3,
+        work_units / med
+    );
+}
+
+fn main() {
+    let quick = std::env::var("QUICK").is_ok()
+        || std::env::args().any(|a| a == "--quick" || a == "--test");
+    let iters = if quick { 3 } else { 9 };
+    println!("{:<38} {:>13}   {:>12}", "bench", "median", "rate");
+
+    // --- trie scan rate ----------------------------------------------------
+    let genome = DatasetSpec { count: 2, ..DatasetSpec::mito(1.0, 3) }.generate();
+    let trie = SegmentTrie::build(&genome[0].codes, 16);
+    let query = &genome[1].codes;
+    bench(
+        "trie chain (16.5 kb genome)",
+        query.len() as f64 / 1e6,
+        "Mchar/s",
+        iters,
+        || {
+            std::hint::black_box(trie.chain(query));
+        },
+    );
+
+    // --- native SW cell rate ------------------------------------------------
+    let alpha = Alphabet::Protein;
+    let params = SwParams {
+        subst: substitution_matrix(alpha),
+        alpha: alpha.size(),
+        gap: 5.0,
+    };
+    let mut rng = Rng::seed_from_u64(4);
+    let a: Vec<i32> = (0..400).map(|_| rng.below(20) as i32).collect();
+    let b: Vec<i32> = (0..400).map(|_| rng.below(20) as i32).collect();
+    bench("native SW 400x400", (400 * 400) as f64 / 1e6, "Mcell/s", iters, || {
+        std::hint::black_box(sw_matrix(&a, &b, &params));
+    });
+
+    // --- XLA SW cell rate ---------------------------------------------------
+    if let Some(svc) = common::service_forced() {
+        let center: Vec<i32> = (0..500).map(|_| rng.below(20) as i32).collect();
+        let queries: Vec<Vec<i32>> =
+            (0..8).map(|_| (0..500).map(|_| rng.below(20) as i32).collect()).collect();
+        let batcher =
+            SwBatcher::new(&svc, center, params.subst.clone(), params.alpha, 5.0).unwrap();
+        bench(
+            "XLA SW batch 8x(500x500)",
+            (8 * 500 * 500) as f64 / 1e6,
+            "Mcell/s",
+            iters.min(5),
+            || {
+                std::hint::black_box(batcher.score(&queries).unwrap());
+            },
+        );
+    } else {
+        println!("(skipping XLA benches: run `make artifacts`)");
+    }
+
+    // --- shuffle throughput per backend -------------------------------------
+    for (name, cfg) in [
+        ("shuffle in-memory (spark)", ClusterConfig::spark(4)),
+        ("shuffle disk-kv (hadoop)", ClusterConfig::hadoop(4)),
+    ] {
+        let pairs: Vec<(u64, Vec<u8>)> =
+            (0..2048u64).map(|i| (i % 64, vec![0u8; 512])).collect();
+        let bytes = 2048.0 * 512.0 / 1e6;
+        bench(name, bytes, "MB/s", iters.min(5), || {
+            let c = Cluster::new(cfg.clone());
+            let out = c
+                .parallelize(pairs.clone(), 8)
+                .group_by_key(4)
+                .count()
+                .unwrap();
+            std::hint::black_box(out);
+        });
+    }
+
+    // --- NJ join rate --------------------------------------------------------
+    let n = if quick { 48 } else { 128 };
+    let labels: Vec<String> = (0..n).map(|i| format!("t{i}")).collect();
+    let mut d = vec![vec![0f64; n]; n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let v = 0.05 + rng.f64();
+            d[i][j] = v;
+            d[j][i] = v;
+        }
+    }
+    bench(&format!("neighbor-joining n={n}"), n as f64, "taxa/s", iters, || {
+        std::hint::black_box(neighbor_joining(&labels, &d).unwrap());
+    });
+
+    // --- executor dispatch overhead ------------------------------------------
+    let cluster = Cluster::new(ClusterConfig::spark(4));
+    bench("executor 512 empty tasks", 512.0 / 1e3, "ktask/s", iters, || {
+        cluster.executor_probe(512).unwrap();
+    });
+
+    // --- fault-injected retry overhead ----------------------------------------
+    let mut cfg = ClusterConfig::spark(4);
+    cfg.fault = FaultPlan::random(0.1, 5);
+    cfg.max_retries = 4;
+    let faulty = Cluster::new(cfg);
+    let seqs: Vec<Sequence> = DatasetSpec { count: 64, ..DatasetSpec::mito(0.01, 5) }.generate();
+    bench("MSA 64 genomes, 10% task faults", 64.0, "seq/s", iters.min(3), || {
+        let msa = halign2::align::center_star::align_nucleotide(
+            &faulty,
+            &seqs,
+            &halign2::align::center_star::CenterStarConfig::default(),
+        )
+        .unwrap();
+        std::hint::black_box(msa);
+    });
+}

@@ -1,0 +1,13 @@
+//! Regenerates Table 2 — genome MSA running time + avg SP
+//! (MUSCLE/MAFFT-like progressive vs HAlign(Hadoop) vs HAlign-II).
+//! Env: QUICK=1, SCALE=<f64>, WORKERS=<n>, BUDGET_SECS=<n>.
+#[allow(dead_code)]
+mod common;
+
+fn main() {
+    let cfg = common::config_from_env();
+    common::emit(
+        "Table 2 — genome MSA (time + avg SP; SP is a penalty, lower = better)",
+        halign2::bench::table2_genome(&cfg),
+    );
+}

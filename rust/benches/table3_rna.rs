@@ -1,0 +1,9 @@
+//! Regenerates Table 3 — RNA MSA running time + avg SP on the divergent
+//! 16S-like datasets.
+#[allow(dead_code)]
+mod common;
+
+fn main() {
+    let cfg = common::config_from_env();
+    common::emit("Table 3 — RNA MSA (time + avg SP)", halign2::bench::table3_rna(&cfg));
+}

@@ -1,0 +1,13 @@
+//! Regenerates Table 4 — protein MSA (progressive vs SparkSW vs
+//! HAlign-II with the XLA-batched SW kernel).
+#[allow(dead_code)]
+mod common;
+
+fn main() {
+    let cfg = common::config_from_env();
+    let svc = common::service();
+    common::emit(
+        "Table 4 — protein MSA (time + avg SP)",
+        halign2::bench::table4_protein(&cfg, svc.as_ref()),
+    );
+}

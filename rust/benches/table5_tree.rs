@@ -1,0 +1,13 @@
+//! Regenerates Table 5 — phylogenetic tree construction times + logML
+//! (IQ-TREE-like ML search vs HPTree(Hadoop) vs HAlign-II).
+#[allow(dead_code)]
+mod common;
+
+fn main() {
+    let cfg = common::config_from_env();
+    let svc = common::service();
+    common::emit(
+        "Table 5 — tree construction (time + JC69 logML)",
+        halign2::bench::table5_tree(&cfg, svc.as_ref()),
+    );
+}

@@ -1,0 +1,292 @@
+//! Distributed center-star MSA — the paper's Figure-3 pipeline.
+//!
+//! Two MapReduce rounds over the engine:
+//!
+//! 1. **Map**: every sequence is pairwise-aligned against the broadcast
+//!    center (trie-anchored for similar nucleotides); the edit path is
+//!    kept, and its center-space profile extracted.
+//!    **Reduce**: element-wise max of the space profiles — "the last and
+//!    longest center star sequence".
+//! 2. **Map**: with the merged profile broadcast, every pair renders its
+//!    final aligned row.  Results are collected (the paper writes them to
+//!    HDFS).
+//!
+//! Between the rounds, the edit paths are held per the backend: cached in
+//! worker memory (Spark) or spilled through a disk checkpoint (Hadoop/
+//! HAlign-v1 emulation) — the exact cost difference the paper measures.
+
+use anyhow::{ensure, Context as _, Result};
+
+use super::pairwise::{
+    anchored_align, center_space_profile, encode_ops, merge_profiles, render_center_row,
+    render_query_row,
+};
+use super::trie::SegmentTrie;
+use super::MsaResult;
+use crate::engine::Cluster;
+use crate::fasta::Sequence;
+
+/// Tuning knobs for the nucleotide pipeline.
+#[derive(Debug, Clone)]
+pub struct CenterStarConfig {
+    /// Trie segment length (HAlign uses short exact segments; 16 works
+    /// well for >99%-similar genomes, smaller for divergent RNA).
+    pub segment_len: usize,
+    /// Partitions for the sequence RDD (0 = cluster default).
+    pub partitions: usize,
+    /// Center selection: 0/1 = first sequence (the paper's choice for
+    /// similar sequences); k > 1 = sample k candidates and pick the one
+    /// with the highest anchored coverage against a probe sample.
+    pub center_sample: usize,
+}
+
+impl Default for CenterStarConfig {
+    fn default() -> Self {
+        Self { segment_len: 16, partitions: 0, center_sample: 1 }
+    }
+}
+
+/// Pick the center sequence index.
+pub fn choose_center(seqs: &[Sequence], cfg: &CenterStarConfig, seed: u64) -> usize {
+    if cfg.center_sample <= 1 || seqs.len() <= 2 {
+        return 0; // "the first sequence represents the center sequence"
+    }
+    let mut rng = crate::util::Rng::seed_from_u64(seed);
+    let candidates = rng.sample_indices(seqs.len(), cfg.center_sample.min(seqs.len()));
+    let probes = rng.sample_indices(seqs.len(), 16.min(seqs.len()));
+    let mut best = (candidates[0], 0usize);
+    for &c in &candidates {
+        let trie = SegmentTrie::build(&seqs[c].codes, cfg.segment_len);
+        let coverage: usize = probes
+            .iter()
+            .map(|&p| trie.chain(&seqs[p].codes).iter().map(|a| a.len).sum::<usize>())
+            .sum();
+        if coverage > best.1 {
+            best = (c, coverage);
+        }
+    }
+    best.0
+}
+
+/// Distributed center-star MSA for similar nucleotide sequences.
+pub fn align_nucleotide(
+    cluster: &Cluster,
+    seqs: &[Sequence],
+    cfg: &CenterStarConfig,
+) -> Result<MsaResult> {
+    ensure!(!seqs.is_empty(), "no sequences to align");
+    let alphabet = seqs[0].alphabet;
+    ensure!(
+        seqs.iter().all(|s| s.alphabet == alphabet && !s.is_empty()),
+        "sequences must share an alphabet and be non-empty"
+    );
+    if seqs.len() == 1 {
+        return Ok(MsaResult {
+            aligned: seqs.to_vec(),
+            center_index: 0,
+            width: seqs[0].len(),
+        });
+    }
+
+    let center_index = choose_center(seqs, cfg, cluster.config().seed);
+    let center_codes = seqs[center_index].codes.clone();
+    let segment_len = cfg.segment_len;
+    let parts = if cfg.partitions == 0 {
+        cluster.config().default_partitions
+    } else {
+        cfg.partitions
+    };
+
+    // ---- Round 1 map: pairwise align vs broadcast center ----------------
+    let center_bc = cluster.broadcast(center_codes.clone())?;
+    let indexed: Vec<(u64, Sequence)> = seqs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| (i as u64, s.clone()))
+        .collect();
+    let rdd = cluster.parallelize(indexed, parts);
+    let center_for_map = center_bc.arc();
+    let paths = rdd.map_partitions_with_index(move |_, items| {
+        // Build the trie once per partition (the broadcast is the center
+        // codes; the automaton is cheap relative to alignment).
+        let trie = SegmentTrie::build(&center_for_map, segment_len);
+        items
+            .into_iter()
+            .map(|(idx, seq)| {
+                let ops = anchored_align(&seq.codes, &center_for_map, &trie);
+                (idx, seq, encode_ops(&ops))
+            })
+            .collect()
+    });
+    // Job boundary: Spark caches, Hadoop spills to disk (HAlign v1).
+    let paths = paths.checkpoint().context("persisting pairwise paths")?;
+
+    // ---- Round 1 reduce: merge space profiles ----------------------------
+    let center_len = center_codes.len();
+    let profiles = paths.map(move |(_, _, ops)| {
+        center_space_profile(&super::pairwise::decode_ops(&ops), center_len)
+    });
+    let global = profiles
+        .reduce(|a, b| merge_profiles(a, &b))?
+        .context("at least one sequence must produce a profile")?;
+
+    // ---- Round 2 map: render final rows under the merged profile --------
+    let global_bc = cluster.broadcast(global.clone())?;
+    let global_for_map = global_bc.arc();
+    let rows = paths.map(move |(idx, seq, ops)| {
+        let ops = super::pairwise::decode_ops(&ops);
+        let own = center_space_profile(&ops, center_len);
+        let row = render_query_row(&seq.codes, &ops, &global_for_map, &own, seq.alphabet);
+        (idx, seq.id, row)
+    });
+    let mut collected = rows.collect()?;
+    collected.sort_by_key(|(idx, _, _)| *idx);
+
+    let width = center_len + global.iter().sum::<u32>() as usize;
+    let mut aligned = Vec::with_capacity(seqs.len());
+    for (idx, id, row) in collected {
+        ensure!(
+            row.len() == width,
+            "row {idx} width {} != MSA width {width}",
+            row.len()
+        );
+        aligned.push(Sequence::new(id, row, alphabet));
+    }
+    // Sanity: the center's own row must round-trip to the center itself.
+    debug_assert_eq!(
+        aligned[center_index]
+            .codes
+            .iter()
+            .filter(|&&c| c != alphabet.gap())
+            .count(),
+        center_codes.len()
+    );
+    let _ = render_center_row(&center_codes, &global, alphabet); // (kept for parity checks)
+    Ok(MsaResult { aligned, center_index, width })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::align::sp_score::avg_sp;
+    use crate::data::DatasetSpec;
+    use crate::engine::{Cluster, ClusterConfig};
+    use crate::fasta::Alphabet;
+
+    fn seq(id: &str, text: &str) -> Sequence {
+        Sequence::from_text(id, text, Alphabet::Dna)
+    }
+
+    fn degapped(s: &Sequence) -> Vec<u8> {
+        s.codes.iter().copied().filter(|&c| c != s.alphabet.gap()).collect()
+    }
+
+    fn check_msa(seqs: &[Sequence], msa: &MsaResult) {
+        assert_eq!(msa.aligned.len(), seqs.len());
+        for (orig, row) in seqs.iter().zip(&msa.aligned) {
+            assert_eq!(row.len(), msa.width, "{}", orig.id);
+            assert_eq!(degapped(row), orig.codes, "{} must round-trip", orig.id);
+            assert_eq!(row.id, orig.id);
+        }
+    }
+
+    #[test]
+    fn identical_sequences_align_gap_free() {
+        let c = Cluster::new(ClusterConfig::spark(2));
+        let seqs = vec![seq("a", "ACGTACGTACGTACGT"); 5];
+        let msa = align_nucleotide(&c, &seqs, &CenterStarConfig::default()).unwrap();
+        check_msa(&seqs, &msa);
+        assert_eq!(msa.width, 16, "no gaps needed");
+        assert_eq!(avg_sp(&msa.aligned).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn single_substitution_needs_no_gaps() {
+        let c = Cluster::new(ClusterConfig::spark(2));
+        let seqs = vec![
+            seq("a", "ACGTACGTACGTACGTACGT"),
+            seq("b", "ACGTACGTACTTACGTACGT"),
+        ];
+        let cfg = CenterStarConfig { segment_len: 4, ..Default::default() };
+        let msa = align_nucleotide(&c, &seqs, &cfg).unwrap();
+        check_msa(&seqs, &msa);
+        assert_eq!(msa.width, 20);
+    }
+
+    #[test]
+    fn insertion_creates_one_gap_column() {
+        let c = Cluster::new(ClusterConfig::spark(2));
+        let seqs = vec![
+            seq("a", "ACGTACGTACGTACGTACGT"),
+            seq("b", "ACGTACGTACCGTACGTACGT"), // one C inserted mid
+        ];
+        let cfg = CenterStarConfig { segment_len: 4, ..Default::default() };
+        let msa = align_nucleotide(&c, &seqs, &cfg).unwrap();
+        check_msa(&seqs, &msa);
+        assert_eq!(msa.width, 21, "one inserted column");
+    }
+
+    #[test]
+    fn works_on_both_backends_with_same_result() {
+        let spec = DatasetSpec { count: 24, ..DatasetSpec::mito(0.01, 5) };
+        let seqs = spec.generate();
+        let cfg = CenterStarConfig { segment_len: 12, ..Default::default() };
+        let spark = align_nucleotide(
+            &Cluster::new(ClusterConfig::spark(3)),
+            &seqs,
+            &cfg,
+        )
+        .unwrap();
+        let hadoop = align_nucleotide(
+            &Cluster::new(ClusterConfig::hadoop(3)),
+            &seqs,
+            &cfg,
+        )
+        .unwrap();
+        check_msa(&seqs, &spark);
+        check_msa(&seqs, &hadoop);
+        assert_eq!(spark.width, hadoop.width);
+        for (a, b) in spark.aligned.iter().zip(&hadoop.aligned) {
+            assert_eq!(a.codes, b.codes, "backends must agree exactly");
+        }
+    }
+
+    #[test]
+    fn mito_msa_quality_reasonable() {
+        let spec = DatasetSpec { count: 30, ..DatasetSpec::mito(0.03, 8) };
+        let seqs = spec.generate();
+        let c = Cluster::new(ClusterConfig::spark(4));
+        let msa =
+            align_nucleotide(&c, &seqs, &CenterStarConfig { segment_len: 12, ..Default::default() })
+                .unwrap();
+        check_msa(&seqs, &msa);
+        let sp = avg_sp(&msa.aligned).unwrap();
+        // ~0.2% divergence over ~500bp: a handful of penalty points/pair.
+        assert!(sp > 0.0 && sp < 50.0, "avg SP {sp} out of expected band");
+    }
+
+    #[test]
+    fn center_sampling_prefers_central_sequence() {
+        let spec = DatasetSpec { count: 16, ..DatasetSpec::mito(0.01, 13) };
+        let mut seqs = spec.generate();
+        // Make sequence 0 junk so "first" would be a bad center.
+        seqs[0] = seq("junk", &"T".repeat(seqs[1].len()));
+        let cfg = CenterStarConfig { segment_len: 12, center_sample: 8, partitions: 0 };
+        let picked = choose_center(&seqs, &cfg, 1);
+        assert_ne!(picked, 0, "sampling should avoid the junk sequence");
+    }
+
+    #[test]
+    fn fault_injection_still_produces_correct_msa() {
+        use crate::engine::FaultPlan;
+        let spec = DatasetSpec { count: 12, ..DatasetSpec::mito(0.01, 3) };
+        let seqs = spec.generate();
+        let mut cfg = ClusterConfig::spark(3);
+        cfg.fault = FaultPlan::random(0.2, 77);
+        cfg.max_retries = 6;
+        let c = Cluster::new(cfg);
+        let msa = align_nucleotide(&c, &seqs, &CenterStarConfig::default()).unwrap();
+        check_msa(&seqs, &msa);
+        assert!(c.stats().injected_failures > 0, "faults should have fired");
+    }
+}

@@ -1,0 +1,229 @@
+//! Affine-gap local alignment (Gotoh 1982) — the general "gap-scoring
+//! scheme W_k" of the paper's Smith-Waterman section: W_k = open + k*ext.
+//! The linear-gap kernel is the open==0 special case (W_k = ext*k);
+//! this module provides the full scheme natively and is exercised by the
+//! property tests against the linear DP.
+
+use super::sw::{LocalAlignment, Op, SwParams};
+
+#[derive(Debug, Clone)]
+pub struct AffineParams {
+    pub subst: Vec<f32>,
+    pub alpha: usize,
+    /// Penalty for opening a gap (positive).
+    pub open: f32,
+    /// Penalty per extended position (positive).
+    pub ext: f32,
+}
+
+impl AffineParams {
+    #[inline]
+    fn score(&self, a: i32, b: i32) -> f32 {
+        self.subst[a as usize * self.alpha + b as usize]
+    }
+
+    /// Equivalent linear-gap params: W_k = open + k*ext degenerates to
+    /// the linear scheme gap*k exactly when open == 0.
+    pub fn as_linear(&self) -> Option<SwParams> {
+        (self.open == 0.0).then(|| SwParams {
+            subst: self.subst.clone(),
+            alpha: self.alpha,
+            gap: self.ext,
+        })
+    }
+}
+
+/// Gotoh local alignment with three DP layers:
+///   H(i,j) — best score ending in a match/mismatch,
+///   E(i,j) — best score ending in a gap in `a` (consuming b_j),
+///   F(i,j) — best score ending in a gap in `b` (consuming a_i).
+pub fn gotoh_align(a: &[i32], b: &[i32], p: &AffineParams) -> LocalAlignment {
+    let (m, n) = (a.len(), b.len());
+    let w = n + 1;
+    let neg = f32::NEG_INFINITY;
+    let mut h = vec![0f32; (m + 1) * w];
+    let mut e = vec![neg; (m + 1) * w];
+    let mut f = vec![neg; (m + 1) * w];
+    let (mut bi, mut bj, mut best) = (0usize, 0usize, 0f32);
+    for i in 1..=m {
+        for j in 1..=n {
+            e[i * w + j] = (e[i * w + j - 1] - p.ext).max(h[i * w + j - 1] - p.open - p.ext);
+            f[i * w + j] = (f[(i - 1) * w + j] - p.ext).max(h[(i - 1) * w + j] - p.open - p.ext);
+            let diag = h[(i - 1) * w + j - 1] + p.score(a[i - 1], b[j - 1]);
+            let v = diag.max(e[i * w + j]).max(f[i * w + j]).max(0.0);
+            h[i * w + j] = v;
+            if v >= best {
+                best = v;
+                bi = i;
+                bj = j;
+            }
+        }
+    }
+    // Traceback across the three layers.
+    let mut ops = Vec::new();
+    let (mut i, mut j) = (bi, bj);
+    #[derive(Clone, Copy, PartialEq)]
+    enum Layer {
+        H,
+        E,
+        F,
+    }
+    let mut layer = Layer::H;
+    const EPS: f32 = 1e-3;
+    while i > 0 && j > 0 {
+        match layer {
+            Layer::H => {
+                let v = h[i * w + j];
+                if v <= 0.0 {
+                    break;
+                }
+                let diag = h[(i - 1) * w + j - 1] + p.score(a[i - 1], b[j - 1]);
+                if (v - diag).abs() <= EPS {
+                    ops.push(Op::Diag);
+                    i -= 1;
+                    j -= 1;
+                } else if (v - e[i * w + j]).abs() <= EPS {
+                    layer = Layer::E;
+                } else {
+                    debug_assert!((v - f[i * w + j]).abs() <= EPS);
+                    layer = Layer::F;
+                }
+            }
+            Layer::E => {
+                // Gap in `a`: consume b_j.
+                let v = e[i * w + j];
+                ops.push(Op::Left);
+                let from_open = h[i * w + j - 1] - p.open - p.ext;
+                j -= 1;
+                if (v - from_open).abs() <= EPS {
+                    layer = Layer::H;
+                }
+            }
+            Layer::F => {
+                let v = f[i * w + j];
+                ops.push(Op::Up);
+                let from_open = h[(i - 1) * w + j] - p.open - p.ext;
+                i -= 1;
+                if (v - from_open).abs() <= EPS {
+                    layer = Layer::H;
+                }
+            }
+        }
+    }
+    ops.reverse();
+    LocalAlignment { score: best, a_start: i, a_end: bi, b_start: j, b_end: bj, ops }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::align::sw::sw_align;
+    use crate::fasta::{alphabet::substitution_matrix, Alphabet};
+    use crate::util::Rng;
+
+    fn params(open: f32, ext: f32) -> AffineParams {
+        AffineParams {
+            subst: substitution_matrix(Alphabet::Dna),
+            alpha: Alphabet::Dna.size(),
+            open,
+            ext,
+        }
+    }
+
+    fn codes(s: &str) -> Vec<i32> {
+        s.bytes().map(|b| Alphabet::Dna.encode(b) as i32).collect()
+    }
+
+    #[test]
+    fn identical_sequences_full_match() {
+        let a = codes("ACGTACGT");
+        let al = gotoh_align(&a, &a, &params(6.0, 1.0));
+        assert_eq!(al.score, 40.0);
+        assert!(al.ops.iter().all(|&o| o == Op::Diag));
+    }
+
+    #[test]
+    fn long_gap_cheaper_than_two_short_under_affine() {
+        // One 2-gap: open+2*ext = 8; two 1-gaps: 2*(open+ext) = 14.
+        let p = params(6.0, 1.0);
+        let a = codes("ACGTACGTCCGGAA");
+        let b = codes("ACGTACGTAA"); // CCGG deleted as one block
+        let al = gotoh_align(&a, &b, &p);
+        // Expect a single contiguous Up run of length 4.
+        let mut runs = Vec::new();
+        let mut cur = 0;
+        for op in &al.ops {
+            if *op == Op::Up {
+                cur += 1;
+            } else if cur > 0 {
+                runs.push(cur);
+                cur = 0;
+            }
+        }
+        if cur > 0 {
+            runs.push(cur);
+        }
+        assert_eq!(runs, vec![4], "ops: {:?}", al.ops);
+        assert_eq!(al.score, 10.0 * 5.0 - (6.0 + 4.0 * 1.0)); // 10 matches, one 4-gap
+    }
+
+    #[test]
+    fn reduces_to_linear_sw_when_open_equals_ext() {
+        let mut rng = Rng::seed_from_u64(77);
+        for _ in 0..40 {
+            let a: Vec<i32> = (0..5 + rng.below(25)).map(|_| rng.below(4) as i32).collect();
+            let b: Vec<i32> = (0..5 + rng.below(25)).map(|_| rng.below(4) as i32).collect();
+            let affine = params(0.0, 4.0); // W_k = 4k  <=>  linear gap 4
+            assert!(affine.as_linear().is_some());
+            let g = gotoh_align(&a, &b, &affine);
+            let s = sw_align(
+                &a,
+                &b,
+                &crate::align::sw::SwParams {
+                    subst: affine.subst.clone(),
+                    alpha: affine.alpha,
+                    gap: 4.0,
+                },
+            );
+            assert_eq!(g.score, s.score, "affine W_k=4k must equal linear gap 4");
+        }
+    }
+
+    #[test]
+    fn traceback_path_rescores_to_best() {
+        let p = params(5.0, 2.0);
+        let mut rng = Rng::seed_from_u64(88);
+        for case in 0..40 {
+            let a: Vec<i32> = (0..3 + rng.below(30)).map(|_| rng.below(4) as i32).collect();
+            let b: Vec<i32> = (0..3 + rng.below(30)).map(|_| rng.below(4) as i32).collect();
+            let al = gotoh_align(&a, &b, &p);
+            // Re-score the path with affine accounting.
+            let (mut i, mut j) = (al.a_start, al.b_start);
+            let mut score = 0f32;
+            let mut prev: Option<Op> = None;
+            for &op in &al.ops {
+                match op {
+                    Op::Diag => {
+                        score += p.score(a[i], b[j]);
+                        i += 1;
+                        j += 1;
+                    }
+                    Op::Up => {
+                        score -= if prev == Some(Op::Up) { p.ext } else { p.open + p.ext };
+                        i += 1;
+                    }
+                    Op::Left => {
+                        score -= if prev == Some(Op::Left) { p.ext } else { p.open + p.ext };
+                        j += 1;
+                    }
+                }
+                prev = Some(op);
+            }
+            assert!(
+                (score - al.score).abs() < 1e-2,
+                "case {case}: path rescore {score} vs {}",
+                al.score
+            );
+        }
+    }
+}

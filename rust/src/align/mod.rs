@@ -1,0 +1,144 @@
+//! Center-star MSA: trie acceleration, pairwise DP, space-merge algebra,
+//! SP scoring, and the nucleotide / protein pipelines.
+
+pub mod center_star;
+pub mod gotoh;
+pub mod pairwise;
+pub mod protein;
+pub mod sp_score;
+pub mod sw;
+pub mod trie;
+
+use anyhow::Result;
+
+use crate::engine::Cluster;
+use crate::fasta::{Alphabet, Sequence};
+
+/// A finished multiple sequence alignment: one gap-padded row per input
+/// sequence (same order), all of equal `width`.
+#[derive(Debug, Clone)]
+pub struct MsaResult {
+    pub aligned: Vec<Sequence>,
+    pub center_index: usize,
+    pub width: usize,
+}
+
+impl MsaResult {
+    /// The paper's avg-SP metric (penalty; lower is better).
+    pub fn avg_sp(&self) -> Result<f64> {
+        sp_score::avg_sp(&self.aligned)
+    }
+
+    /// Distributed avg-SP: per-partition column counts reduced over the
+    /// cluster, then folded column-by-column on the driver.  Exact (same
+    /// value as [`sp_score::avg_sp`]) but scales over rows.
+    pub fn avg_sp_distributed(&self, cluster: &Cluster) -> Result<f64> {
+        let n = self.aligned.len();
+        if n < 2 {
+            return Ok(0.0);
+        }
+        let alphabet = self.aligned[0].alphabet;
+        let width = self.width;
+        let alpha = alphabet.size();
+        let rows: Vec<Vec<u8>> = self.aligned.iter().map(|s| s.codes.clone()).collect();
+        let rdd = cluster.parallelize(rows, cluster.config().default_partitions);
+        // counts layout: width * (alpha + 1); the final slot per column is
+        // the gap count.
+        let gap = alphabet.gap();
+        let partials = rdd.map_partitions_with_index(move |_, rows| {
+            let mut counts = vec![0u64; width * (alpha + 1)];
+            for row in &rows {
+                for (col, &c) in row.iter().enumerate() {
+                    let slot = if c == gap { alpha } else { c as usize };
+                    counts[col * (alpha + 1) + slot] += 1;
+                }
+            }
+            vec![counts]
+        });
+        let totals = partials
+            .reduce(|mut a, b| {
+                for (x, y) in a.iter_mut().zip(&b) {
+                    *x += y;
+                }
+                a
+            })?
+            .unwrap_or_default();
+        let mut total = 0u64;
+        for col in 0..width {
+            let base = col * (alpha + 1);
+            let gaps = totals[base + alpha];
+            total += sp_score::column_sp(&totals[base..base + alpha], gaps);
+        }
+        Ok(total as f64 / (n as f64 * (n as f64 - 1.0) / 2.0))
+    }
+
+    /// Check structural invariants against the inputs.
+    pub fn validate(&self, inputs: &[Sequence]) -> Result<()> {
+        anyhow::ensure!(self.aligned.len() == inputs.len(), "row count mismatch");
+        for (row, orig) in self.aligned.iter().zip(inputs) {
+            anyhow::ensure!(row.len() == self.width, "ragged row {}", row.id);
+            let degapped: Vec<u8> = row
+                .codes
+                .iter()
+                .copied()
+                .filter(|&c| c != row.alphabet.gap())
+                .collect();
+            anyhow::ensure!(
+                degapped == orig.codes,
+                "row {} does not round-trip to its input",
+                row.id
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Convenience dispatcher: nucleotide sequences take the trie path,
+/// proteins the Smith-Waterman path (with optional XLA service).
+pub fn align_auto(
+    cluster: &Cluster,
+    seqs: &[Sequence],
+    svc: Option<&crate::runtime::XlaService>,
+) -> Result<MsaResult> {
+    anyhow::ensure!(!seqs.is_empty(), "no sequences");
+    match seqs[0].alphabet {
+        Alphabet::Dna => {
+            center_star::align_nucleotide(cluster, seqs, &center_star::CenterStarConfig::default())
+        }
+        Alphabet::Protein => {
+            protein::align_protein(cluster, seqs, svc, &protein::ProteinConfig::default())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetSpec;
+    use crate::engine::{Cluster, ClusterConfig};
+
+    #[test]
+    fn distributed_sp_equals_local() {
+        let spec = DatasetSpec { count: 16, ..DatasetSpec::mito(0.01, 2) };
+        let seqs = spec.generate();
+        let c = Cluster::new(ClusterConfig::spark(3));
+        let msa = center_star::align_nucleotide(
+            &c,
+            &seqs,
+            &center_star::CenterStarConfig::default(),
+        )
+        .unwrap();
+        let local = msa.avg_sp().unwrap();
+        let dist = msa.avg_sp_distributed(&c).unwrap();
+        assert!((local - dist).abs() < 1e-9, "{local} vs {dist}");
+    }
+
+    #[test]
+    fn align_auto_dispatches_dna() {
+        let spec = DatasetSpec { count: 6, ..DatasetSpec::mito(0.005, 4) };
+        let seqs = spec.generate();
+        let c = Cluster::new(ClusterConfig::spark(2));
+        let msa = align_auto(&c, &seqs, None).unwrap();
+        msa.validate(&seqs).unwrap();
+    }
+}

@@ -1,0 +1,360 @@
+//! Pairwise query-vs-center alignment and the edit-path algebra the
+//! center-star merge is built on.
+//!
+//! A pairwise alignment is a path of [`PathOp`]s over the *full* lengths
+//! of query and center (global span).  From the path we derive the
+//! "inserted space" profile — how many gap columns this pair forces
+//! before each center position — which is exactly the per-pair
+//! contribution reduced (element-wise max) in the paper's first
+//! MapReduce stage.
+//!
+//! Two aligners produce paths:
+//!  * [`anchored_align`] — trie-anchored: exact segment anchors from
+//!    [`super::trie::SegmentTrie`], Needleman-Wunsch only between anchors
+//!    (the similar-DNA/RNA fast path, linear-ish for similar sequences);
+//!  * [`global_dp`] — plain Needleman-Wunsch (used for anchor gaps and as
+//!    the small-input fallback).
+
+use super::sw::Op;
+use crate::fasta::Alphabet;
+
+/// Re-export the op type under the name the MSA layer uses.
+pub type PathOp = Op;
+
+/// Encode a path compactly for shuffling (one byte per op).
+pub fn encode_ops(ops: &[PathOp]) -> Vec<u8> {
+    ops.iter()
+        .map(|o| match o {
+            Op::Diag => 0u8,
+            Op::Up => 1,
+            Op::Left => 2,
+        })
+        .collect()
+}
+
+pub fn decode_ops(bytes: &[u8]) -> Vec<PathOp> {
+    bytes
+        .iter()
+        .map(|b| match b {
+            0 => Op::Diag,
+            1 => Op::Up,
+            _ => Op::Left,
+        })
+        .collect()
+}
+
+/// Validate that a path consumes exactly (query_len, center_len).
+pub fn path_consumes(ops: &[PathOp]) -> (usize, usize) {
+    let q = ops.iter().filter(|o| !matches!(o, Op::Left)).count();
+    let c = ops.iter().filter(|o| !matches!(o, Op::Up)).count();
+    (q, c)
+}
+
+/// Needleman-Wunsch global alignment (match/mismatch/linear gap), O(a*b).
+/// Scores: +1 match, -1 mismatch, -2 gap (relative costs only matter).
+pub fn global_dp(a: &[u8], b: &[u8]) -> Vec<PathOp> {
+    let (m, n) = (a.len(), b.len());
+    if m == 0 {
+        return vec![Op::Left; n];
+    }
+    if n == 0 {
+        return vec![Op::Up; m];
+    }
+    const GAP: i32 = -2;
+    let w = n + 1;
+    let mut score = vec![0i32; (m + 1) * w];
+    for j in 1..=n {
+        score[j] = j as i32 * GAP;
+    }
+    for i in 1..=m {
+        score[i * w] = i as i32 * GAP;
+        for j in 1..=n {
+            let s = if a[i - 1] == b[j - 1] { 1 } else { -1 };
+            let diag = score[(i - 1) * w + j - 1] + s;
+            let up = score[(i - 1) * w + j] + GAP;
+            let left = score[i * w + j - 1] + GAP;
+            score[i * w + j] = diag.max(up).max(left);
+        }
+    }
+    // Traceback.
+    let mut ops = Vec::with_capacity(m + n);
+    let (mut i, mut j) = (m, n);
+    while i > 0 || j > 0 {
+        let v = score[i * w + j];
+        if i > 0 && j > 0 {
+            let s = if a[i - 1] == b[j - 1] { 1 } else { -1 };
+            if v == score[(i - 1) * w + j - 1] + s {
+                ops.push(Op::Diag);
+                i -= 1;
+                j -= 1;
+                continue;
+            }
+        }
+        if i > 0 && v == score[(i - 1) * w + j] + GAP {
+            ops.push(Op::Up);
+            i -= 1;
+        } else {
+            ops.push(Op::Left);
+            j -= 1;
+        }
+    }
+    ops.reverse();
+    ops
+}
+
+/// Trie-anchored alignment: exact anchors contribute Diag runs; the gaps
+/// between anchors are closed with [`global_dp`].  `query` and `center`
+/// are residue codes of the same alphabet.
+pub fn anchored_align(
+    query: &[u8],
+    center: &[u8],
+    trie: &super::trie::SegmentTrie,
+) -> Vec<PathOp> {
+    let chain = trie.chain(query);
+    let mut ops = Vec::with_capacity(query.len().max(center.len()) + 16);
+    let (mut q, mut c) = (0usize, 0usize);
+    for a in &chain {
+        // Close the unanchored region before this anchor.
+        ops.extend(global_dp(&query[q..a.query_pos], &center[c..a.center_pos]));
+        // The anchor itself: exact match run.
+        ops.extend(std::iter::repeat(Op::Diag).take(a.len));
+        q = a.query_pos + a.len;
+        c = a.center_pos + a.len;
+    }
+    ops.extend(global_dp(&query[q..], &center[c..]));
+    ops
+}
+
+/// Number of gap columns this pair inserts before each center position:
+/// `spaces[j]` counts Up ops (query residue vs center gap) occurring when
+/// the center cursor is at `j` (0..=center_len).
+pub fn center_space_profile(ops: &[PathOp], center_len: usize) -> Vec<u32> {
+    let mut spaces = vec![0u32; center_len + 1];
+    let mut c = 0usize;
+    for op in ops {
+        match op {
+            Op::Up => spaces[c] += 1,
+            _ => c += 1,
+        }
+    }
+    debug_assert_eq!(c, center_len, "path must consume the whole center");
+    spaces
+}
+
+/// Element-wise max of two space profiles (the center-star reduction).
+pub fn merge_profiles(mut a: Vec<u32>, b: &[u32]) -> Vec<u32> {
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter_mut().zip(b) {
+        *x = (*x).max(*y);
+    }
+    a
+}
+
+/// Emit the final aligned query row under the *global* space profile.
+/// Within each center gap-block, this pair's own inserted residues come
+/// first, then padding gaps up to the global count (consistent across all
+/// rows, so columns stay aligned).
+pub fn render_query_row(
+    query: &[u8],
+    ops: &[PathOp],
+    global_spaces: &[u32],
+    own_spaces: &[u32],
+    alphabet: Alphabet,
+) -> Vec<u8> {
+    let gap = alphabet.gap();
+    let mut row = Vec::new();
+    let mut qi = 0usize;
+    let mut c = 0usize;
+    let pad = |row: &mut Vec<u8>, c: usize| {
+        let extra = (global_spaces[c] - own_spaces[c]) as usize;
+        row.extend(std::iter::repeat(gap).take(extra));
+    };
+    let mut idx = 0usize;
+    while idx < ops.len() {
+        match ops[idx] {
+            Op::Up => {
+                // All Ups at this center position form the pair's own
+                // inserted block; emit them then pad to the global count.
+                while idx < ops.len() && ops[idx] == Op::Up {
+                    row.push(query[qi]);
+                    qi += 1;
+                    idx += 1;
+                }
+                pad(&mut row, c);
+                // The following Diag/Left (if any) handles column c.
+            }
+            Op::Diag => {
+                if own_spaces[c] == 0 {
+                    pad(&mut row, c);
+                }
+                row.push(query[qi]);
+                qi += 1;
+                c += 1;
+                idx += 1;
+            }
+            Op::Left => {
+                if own_spaces[c] == 0 {
+                    pad(&mut row, c);
+                }
+                row.push(gap);
+                c += 1;
+                idx += 1;
+            }
+        }
+    }
+    // Trailing gap block at center end.
+    if ops.is_empty() || own_spaces[c] == 0 {
+        pad(&mut row, c);
+    }
+    debug_assert_eq!(qi, query.len());
+    row
+}
+
+/// Emit the final aligned center row under the global space profile.
+pub fn render_center_row(center: &[u8], global_spaces: &[u32], alphabet: Alphabet) -> Vec<u8> {
+    let gap = alphabet.gap();
+    let mut row = Vec::new();
+    for (j, &ch) in center.iter().enumerate() {
+        row.extend(std::iter::repeat(gap).take(global_spaces[j] as usize));
+        row.push(ch);
+    }
+    row.extend(std::iter::repeat(gap).take(global_spaces[center.len()] as usize));
+    row
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::align::trie::SegmentTrie;
+    use crate::fasta::Alphabet;
+
+    fn codes(s: &str) -> Vec<u8> {
+        s.bytes().map(|b| Alphabet::Dna.encode(b)).collect()
+    }
+
+    fn degap(row: &[u8]) -> Vec<u8> {
+        row.iter().copied().filter(|&c| c != Alphabet::Dna.gap()).collect()
+    }
+
+    #[test]
+    fn global_dp_identical_is_all_diag() {
+        let a = codes("ACGTACGT");
+        let ops = global_dp(&a, &a);
+        assert!(ops.iter().all(|o| *o == Op::Diag));
+    }
+
+    #[test]
+    fn global_dp_consumes_both_fully() {
+        let a = codes("ACGGT");
+        let b = codes("AGT");
+        let ops = global_dp(&a, &b);
+        assert_eq!(path_consumes(&ops), (5, 3));
+    }
+
+    #[test]
+    fn global_dp_empty_sides() {
+        assert_eq!(global_dp(&[], &codes("ACG")), vec![Op::Left; 3]);
+        assert_eq!(global_dp(&codes("AC"), &[]), vec![Op::Up; 2]);
+        assert!(global_dp(&[], &[]).is_empty());
+    }
+
+    #[test]
+    fn ops_codec_roundtrip() {
+        let ops = vec![Op::Diag, Op::Up, Op::Left, Op::Diag];
+        assert_eq!(decode_ops(&encode_ops(&ops)), ops);
+    }
+
+    #[test]
+    fn anchored_align_consumes_both_fully() {
+        let center = codes("ACGTACTTGGCATCAGGATCACGATCGA");
+        let query = codes("ACGTACTTGCATCAGGATCACGTTCGA"); // del + subst
+        let trie = SegmentTrie::build(&center, 5);
+        let ops = anchored_align(&query, &center, &trie);
+        assert_eq!(path_consumes(&ops), (query.len(), center.len()));
+    }
+
+    #[test]
+    fn space_profile_counts_insertions() {
+        // query=AXC vs center=AC: X inserted after center pos 1.
+        let ops = vec![Op::Diag, Op::Up, Op::Diag];
+        assert_eq!(center_space_profile(&ops, 2), vec![0, 1, 0]);
+    }
+
+    #[test]
+    fn merge_profiles_is_elementwise_max() {
+        assert_eq!(merge_profiles(vec![0, 2, 1], &[1, 1, 3]), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn render_center_and_query_rows_align() {
+        let center = codes("AC");
+        // Pair 1: query "AXC"  (insert X after A) -> ops D U D
+        // Pair 2: query "AC"   -> ops D D
+        let q1 = codes("ATC"); // using T as the inserted residue
+        let ops1 = vec![Op::Diag, Op::Up, Op::Diag];
+        let q2 = codes("AC");
+        let ops2 = vec![Op::Diag, Op::Diag];
+        let p1 = center_space_profile(&ops1, 2);
+        let p2 = center_space_profile(&ops2, 2);
+        let global = merge_profiles(p1.clone(), &p2);
+        assert_eq!(global, vec![0, 1, 0]);
+
+        let alpha = Alphabet::Dna;
+        let center_row = render_center_row(&center, &global, alpha);
+        let r1 = render_query_row(&q1, &ops1, &global, &p1, alpha);
+        let r2 = render_query_row(&q2, &ops2, &global, &p2, alpha);
+        assert_eq!(center_row.len(), 3);
+        assert_eq!(r1.len(), 3);
+        assert_eq!(r2.len(), 3);
+        // Center: A - C ; q1: A T C ; q2: A - C
+        assert_eq!(center_row, codes("A-C"));
+        assert_eq!(r1, codes("ATC"));
+        assert_eq!(r2, codes("A-C"));
+        assert_eq!(degap(&r1), q1);
+        assert_eq!(degap(&r2), q2);
+    }
+
+    #[test]
+    fn render_handles_leading_and_trailing_insertions() {
+        let center = codes("GG");
+        let q = codes("TTGGTT");
+        // T T (before center), G G, T T (after center)
+        let ops = vec![Op::Up, Op::Up, Op::Diag, Op::Diag, Op::Up, Op::Up];
+        let p = center_space_profile(&ops, 2);
+        assert_eq!(p, vec![2, 0, 2]);
+        let global = merge_profiles(p.clone(), &[3, 1, 2]);
+        let alpha = Alphabet::Dna;
+        let center_row = render_center_row(&center, &global, alpha);
+        let row = render_query_row(&q, &ops, &global, &p, alpha);
+        assert_eq!(center_row.len(), row.len());
+        assert_eq!(degap(&row), q);
+        // Width = center(2) + 3 + 1 + 2 gap slots.
+        assert_eq!(center_row.len(), 8);
+    }
+
+    #[test]
+    fn random_pairs_roundtrip_through_render() {
+        use crate::util::Rng;
+        let mut rng = Rng::seed_from_u64(99);
+        let alpha = Alphabet::Dna;
+        for trial in 0..50 {
+            let n = 1 + rng.below(30);
+            let m = 1 + rng.below(30);
+            let center: Vec<u8> = (0..n).map(|_| rng.below(4) as u8).collect();
+            let query: Vec<u8> = (0..m).map(|_| rng.below(4) as u8).collect();
+            let ops = global_dp(&query, &center);
+            assert_eq!(path_consumes(&ops), (m, n), "trial {trial}");
+            let p = center_space_profile(&ops, n);
+            // Global profile strictly larger in a few random slots.
+            let mut global = p.clone();
+            for _ in 0..3 {
+                let k = rng.below(n + 1);
+                global[k] += rng.below(3) as u32;
+            }
+            let row = render_query_row(&query, &ops, &global, &p, alpha);
+            let width = n + global.iter().sum::<u32>() as usize;
+            assert_eq!(row.len(), width, "trial {trial}");
+            assert_eq!(degap(&row), query, "trial {trial}");
+        }
+    }
+}

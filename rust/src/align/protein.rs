@@ -1,0 +1,294 @@
+//! Protein center-star MSA via Smith-Waterman (paper §Smith-Waterman
+//! algorithm for protein sequences with Spark).
+//!
+//! Same two-round pipeline as the nucleotide path, but the pairwise step
+//! is local SW against the broadcast center (proteins are too divergent
+//! for exact segment anchoring).  The SW scoring matrices come from the
+//! AOT XLA artifacts (batched wavefront kernel) when an [`XlaService`] is
+//! supplied and a shape bucket covers the pair; otherwise the native Rust
+//! DP computes the identical matrix (the runtime tests assert exact
+//! agreement).  Traceback and the local→global path extension always run
+//! in Rust.
+
+use anyhow::{ensure, Context as _, Result};
+
+use super::pairwise::{
+    center_space_profile, decode_ops, encode_ops, merge_profiles, render_query_row, PathOp,
+};
+use super::sw::{sw_align, sw_matrix, traceback, LocalAlignment, Op, SwParams};
+use super::MsaResult;
+use crate::engine::Cluster;
+use crate::fasta::{alphabet::substitution_matrix, Alphabet, Sequence};
+use crate::runtime::{batcher::SwBatcher, XlaService};
+
+#[derive(Debug, Clone)]
+pub struct ProteinConfig {
+    /// Linear gap penalty (positive, subtracted).
+    pub gap: f32,
+    /// Partitions for the sequence RDD (0 = cluster default).
+    pub partitions: usize,
+    /// Center strategy: pick the longest sequence (HAlign-II keeps the
+    /// longest center so every other sequence aligns within it).
+    pub center_longest: bool,
+}
+
+impl Default for ProteinConfig {
+    fn default() -> Self {
+        Self { gap: 5.0, partitions: 0, center_longest: true }
+    }
+}
+
+/// Extend a local SW alignment to a global edit path over the full pair:
+/// unaligned flanks are emitted as unmatched runs (query flank = Up,
+/// center flank = Left) — no claimed homology outside the local core.
+pub fn local_to_global(
+    al: &LocalAlignment,
+    query_len: usize,
+    center_len: usize,
+) -> Vec<PathOp> {
+    let mut ops = Vec::with_capacity(query_len + center_len);
+    ops.extend(std::iter::repeat(Op::Up).take(al.a_start));
+    ops.extend(std::iter::repeat(Op::Left).take(al.b_start));
+    ops.extend(al.ops.iter().copied());
+    ops.extend(std::iter::repeat(Op::Up).take(query_len - al.a_end));
+    ops.extend(std::iter::repeat(Op::Left).take(center_len - al.b_end));
+    ops
+}
+
+/// Pairwise-align one partition of queries against the center, via XLA
+/// batches where a bucket covers them, native SW otherwise.
+fn align_partition(
+    queries: &[(u64, Sequence)],
+    center: &[u8],
+    params: &SwParams,
+    svc: Option<&XlaService>,
+) -> Result<Vec<(u64, Sequence, Vec<u8>)>> {
+    let center_i32: Vec<i32> = center.iter().map(|&c| c as i32).collect();
+    let mut out = Vec::with_capacity(queries.len());
+
+    // Split into XLA-coverable and fallback sets to keep batches dense.
+    let mut xla_idx: Vec<usize> = Vec::new();
+    let mut native_idx: Vec<usize> = Vec::new();
+    let batcher = match svc {
+        Some(svc) => {
+            let b = SwBatcher::new(
+                svc,
+                center_i32.clone(),
+                params.subst.clone(),
+                params.alpha,
+                params.gap,
+            )?;
+            for (k, (_, s)) in queries.iter().enumerate() {
+                if b.covers(s.len()) {
+                    xla_idx.push(k);
+                } else {
+                    native_idx.push(k);
+                }
+            }
+            Some(b)
+        }
+        None => {
+            native_idx.extend(0..queries.len());
+            None
+        }
+    };
+
+    if let Some(b) = &batcher {
+        let q_codes: Vec<Vec<i32>> = xla_idx
+            .iter()
+            .map(|&k| queries[k].1.codes.iter().map(|&c| c as i32).collect())
+            .collect();
+        let hs = b.score(&q_codes).context("XLA SW batch")?;
+        for ((&k, q), h) in xla_idx.iter().zip(&q_codes).zip(hs) {
+            let (idx, seq) = &queries[k];
+            let local = traceback(&h, q, &center_i32, params);
+            let ops = local_to_global(&local, q.len(), center_i32.len());
+            out.push((*idx, seq.clone(), encode_ops(&ops)));
+        }
+    }
+    for &k in &native_idx {
+        let (idx, seq) = &queries[k];
+        let q: Vec<i32> = seq.codes.iter().map(|&c| c as i32).collect();
+        let local = sw_align(&q, &center_i32, params);
+        let ops = local_to_global(&local, q.len(), center_i32.len());
+        out.push((*idx, seq.clone(), encode_ops(&ops)));
+    }
+    Ok(out)
+}
+
+/// Distributed protein center-star MSA.
+pub fn align_protein(
+    cluster: &Cluster,
+    seqs: &[Sequence],
+    svc: Option<&XlaService>,
+    cfg: &ProteinConfig,
+) -> Result<MsaResult> {
+    ensure!(!seqs.is_empty(), "no sequences to align");
+    let alphabet = seqs[0].alphabet;
+    ensure!(alphabet == Alphabet::Protein, "protein pipeline needs protein sequences");
+    ensure!(
+        seqs.iter().all(|s| s.alphabet == alphabet && !s.is_empty()),
+        "sequences must share an alphabet and be non-empty"
+    );
+    if seqs.len() == 1 {
+        return Ok(MsaResult { aligned: seqs.to_vec(), center_index: 0, width: seqs[0].len() });
+    }
+
+    let center_index = if cfg.center_longest {
+        (0..seqs.len()).max_by_key(|&i| seqs[i].len()).unwrap()
+    } else {
+        0
+    };
+    let center_codes = seqs[center_index].codes.clone();
+    let center_len = center_codes.len();
+    let params = SwParams {
+        subst: substitution_matrix(alphabet),
+        alpha: alphabet.size(),
+        gap: cfg.gap,
+    };
+    let parts = if cfg.partitions == 0 {
+        cluster.config().default_partitions
+    } else {
+        cfg.partitions
+    };
+
+    // Round 1 map: SW vs broadcast center (XLA-batched per partition).
+    let center_bc = cluster.broadcast(center_codes.clone())?;
+    let indexed: Vec<(u64, Sequence)> =
+        seqs.iter().enumerate().map(|(i, s)| (i as u64, s.clone())).collect();
+    let rdd = cluster.parallelize(indexed, parts);
+    let center_for_map = center_bc.arc();
+    let params_map = params.clone();
+    let svc_map = svc.cloned();
+    let paths = rdd.map_partitions_with_index(move |_, items| {
+        align_partition(&items, &center_for_map, &params_map, svc_map.as_ref())
+            .expect("partition alignment failed")
+    });
+    let paths = paths.checkpoint().context("persisting pairwise paths")?;
+
+    // Round 1 reduce: merged space profile.
+    let global = paths
+        .map(move |(_, _, ops)| center_space_profile(&decode_ops(&ops), center_len))
+        .reduce(|a, b| merge_profiles(a, &b))?
+        .context("empty profile reduction")?;
+
+    // Round 2 map: render rows.
+    let global_bc = cluster.broadcast(global.clone())?;
+    let global_for_map = global_bc.arc();
+    let rows = paths.map(move |(idx, seq, ops)| {
+        let ops = decode_ops(&ops);
+        let own = center_space_profile(&ops, center_len);
+        let row = render_query_row(&seq.codes, &ops, &global_for_map, &own, seq.alphabet);
+        (idx, seq.id, row)
+    });
+    let mut collected = rows.collect()?;
+    collected.sort_by_key(|(idx, _, _)| *idx);
+
+    let width = center_len + global.iter().sum::<u32>() as usize;
+    let mut aligned = Vec::with_capacity(seqs.len());
+    for (idx, id, row) in collected {
+        ensure!(row.len() == width, "row {idx} width {} != {width}", row.len());
+        aligned.push(Sequence::new(id, row, alphabet));
+    }
+    Ok(MsaResult { aligned, center_index, width })
+}
+
+/// Native single-pair scoring entry (used by the SparkSW baseline and by
+/// benches comparing native vs XLA cells/second).
+pub fn native_pair_ops(query: &Sequence, center: &[u8], params: &SwParams) -> Vec<PathOp> {
+    let q: Vec<i32> = query.codes.iter().map(|&c| c as i32).collect();
+    let c: Vec<i32> = center.iter().map(|&x| x as i32).collect();
+    let h = sw_matrix(&q, &c, params);
+    let local = traceback(&h, &q, &c, params);
+    local_to_global(&local, q.len(), c.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetSpec;
+    use crate::engine::{Cluster, ClusterConfig};
+
+    fn degapped(s: &Sequence) -> Vec<u8> {
+        s.codes.iter().copied().filter(|&c| c != s.alphabet.gap()).collect()
+    }
+
+    fn check(seqs: &[Sequence], msa: &MsaResult) {
+        assert_eq!(msa.aligned.len(), seqs.len());
+        for (orig, row) in seqs.iter().zip(&msa.aligned) {
+            assert_eq!(row.len(), msa.width);
+            assert_eq!(degapped(row), orig.codes, "{} round-trip", orig.id);
+        }
+    }
+
+    fn prot(id: &str, text: &str) -> Sequence {
+        Sequence::from_text(id, text, Alphabet::Protein)
+    }
+
+    #[test]
+    fn local_to_global_consumes_everything() {
+        let al = LocalAlignment {
+            score: 10.0,
+            a_start: 2,
+            a_end: 5,
+            b_start: 1,
+            b_end: 4,
+            ops: vec![Op::Diag, Op::Diag, Op::Diag],
+        };
+        let ops = local_to_global(&al, 7, 6);
+        let q: usize = ops.iter().filter(|o| !matches!(o, Op::Left)).count();
+        let c: usize = ops.iter().filter(|o| !matches!(o, Op::Up)).count();
+        assert_eq!((q, c), (7, 6));
+    }
+
+    #[test]
+    fn identical_proteins_align_cleanly() {
+        let c = Cluster::new(ClusterConfig::spark(2));
+        let seqs = vec![prot("a", "MKVLATRSQW"); 4];
+        let msa = align_protein(&c, &seqs, None, &ProteinConfig::default()).unwrap();
+        check(&seqs, &msa);
+        assert_eq!(msa.width, 10);
+        assert_eq!(msa.avg_sp().unwrap(), 0.0);
+    }
+
+    #[test]
+    fn related_proteins_produce_valid_msa() {
+        let seqs = DatasetSpec::protein(24, 0.15, 7).generate();
+        let c = Cluster::new(ClusterConfig::spark(3));
+        let msa = align_protein(&c, &seqs, None, &ProteinConfig::default()).unwrap();
+        check(&seqs, &msa);
+        assert!(msa.width >= seqs.iter().map(Sequence::len).max().unwrap());
+    }
+
+    #[test]
+    fn center_is_longest_sequence() {
+        let seqs = vec![prot("s", "MKV"), prot("l", "MKVLATRSQWERTY"), prot("m", "MKVLAT")];
+        let c = Cluster::new(ClusterConfig::spark(2));
+        let msa = align_protein(&c, &seqs, None, &ProteinConfig::default()).unwrap();
+        assert_eq!(msa.center_index, 1);
+        check(&seqs, &msa);
+    }
+
+    #[test]
+    fn both_backends_agree() {
+        let seqs = DatasetSpec::protein(12, 0.1, 9).generate();
+        let a = align_protein(
+            &Cluster::new(ClusterConfig::spark(2)),
+            &seqs,
+            None,
+            &ProteinConfig::default(),
+        )
+        .unwrap();
+        let b = align_protein(
+            &Cluster::new(ClusterConfig::hadoop(2)),
+            &seqs,
+            None,
+            &ProteinConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(a.width, b.width);
+        for (x, y) in a.aligned.iter().zip(&b.aligned) {
+            assert_eq!(x.codes, y.codes);
+        }
+    }
+}

@@ -1,0 +1,232 @@
+//! Native Smith-Waterman: the same recurrence the Pallas kernel computes
+//! (linear gap penalty, substitution matrix), plus traceback.
+//!
+//! Used three ways: as the correctness oracle for the XLA artifacts
+//! (rust/tests/runtime_roundtrip.rs), as the fallback for sequences longer
+//! than every artifact bucket, and as the inner aligner of the SparkSW
+//! baseline.
+
+/// Scoring parameters; `subst` is alpha x alpha row-major (see
+/// [`crate::fasta::alphabet::substitution_matrix`]).
+#[derive(Debug, Clone)]
+pub struct SwParams {
+    pub subst: Vec<f32>,
+    pub alpha: usize,
+    pub gap: f32,
+}
+
+impl SwParams {
+    #[inline]
+    pub fn score(&self, a: i32, b: i32) -> f32 {
+        self.subst[a as usize * self.alpha + b as usize]
+    }
+}
+
+/// Row-major H matrix `(m+1) x (n+1)` with zero boundaries — shared with
+/// the runtime batcher, which fills it from the kernel's diagonal-major
+/// output.
+#[derive(Debug, Clone)]
+pub struct HMatrix {
+    pub m: usize,
+    pub n: usize,
+    data: Vec<f32>,
+}
+
+impl HMatrix {
+    pub fn from_data(m: usize, n: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), (m + 1) * (n + 1));
+        Self { m, n, data }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * (self.n + 1) + j]
+    }
+
+    #[inline]
+    fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * (self.n + 1) + j] = v;
+    }
+
+    /// Position and value of the maximum cell (ties: largest (i, j) in
+    /// row-major order, matching the batcher).
+    pub fn argmax(&self) -> (usize, usize, f32) {
+        let mut best = (0, 0, f32::NEG_INFINITY);
+        for i in 0..=self.m {
+            for j in 0..=self.n {
+                let v = self.at(i, j);
+                if v >= best.2 {
+                    best = (i, j, v);
+                }
+            }
+        }
+        best
+    }
+}
+
+/// Fill the SW matrix for query `a` vs subject `b`.
+pub fn sw_matrix(a: &[i32], b: &[i32], p: &SwParams) -> HMatrix {
+    let (m, n) = (a.len(), b.len());
+    let mut h = HMatrix::from_data(m, n, vec![0f32; (m + 1) * (n + 1)]);
+    for i in 1..=m {
+        let ai = a[i - 1] as usize;
+        let srow = &p.subst[ai * p.alpha..(ai + 1) * p.alpha];
+        let mut left = 0f32; // H[i][j-1]
+        for j in 1..=n {
+            let diag = h.at(i - 1, j - 1) + srow[b[j - 1] as usize];
+            let up = h.at(i - 1, j) - p.gap;
+            let v = diag.max(up).max(left - p.gap).max(0.0);
+            h.set(i, j, v);
+            left = v;
+        }
+    }
+    h
+}
+
+/// One step of a local alignment path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    /// Consume one residue of each sequence (match or mismatch).
+    Diag,
+    /// Consume a query residue against a gap in the subject.
+    Up,
+    /// Consume a subject residue against a gap in the query.
+    Left,
+}
+
+/// A local alignment: half-open residue ranges of the query/subject plus
+/// the operation path between them.
+#[derive(Debug, Clone)]
+pub struct LocalAlignment {
+    pub score: f32,
+    /// Query range [a_start, a_end) covered by the path.
+    pub a_start: usize,
+    pub a_end: usize,
+    /// Subject range [b_start, b_end).
+    pub b_start: usize,
+    pub b_end: usize,
+    pub ops: Vec<Op>,
+}
+
+/// Traceback from the argmax cell, re-deriving each predecessor from H
+/// (no pointer matrix — the XLA kernel only materializes H).
+pub fn traceback(h: &HMatrix, a: &[i32], b: &[i32], p: &SwParams) -> LocalAlignment {
+    let (mut i, mut j, score) = h.argmax();
+    let (a_end, b_end) = (i, j);
+    let mut ops = Vec::new();
+    const EPS: f32 = 1e-3;
+    while i > 0 && j > 0 && h.at(i, j) > 0.0 {
+        let v = h.at(i, j);
+        let diag = h.at(i - 1, j - 1) + p.score(a[i - 1], b[j - 1]);
+        if (v - diag).abs() <= EPS {
+            ops.push(Op::Diag);
+            i -= 1;
+            j -= 1;
+        } else if (v - (h.at(i - 1, j) - p.gap)).abs() <= EPS {
+            ops.push(Op::Up);
+            i -= 1;
+        } else {
+            debug_assert!((v - (h.at(i, j - 1) - p.gap)).abs() <= EPS);
+            ops.push(Op::Left);
+            j -= 1;
+        }
+    }
+    ops.reverse();
+    LocalAlignment { score, a_start: i, a_end, b_start: j, b_end, ops }
+}
+
+/// Convenience: fill + traceback.
+pub fn sw_align(a: &[i32], b: &[i32], p: &SwParams) -> LocalAlignment {
+    traceback(&sw_matrix(a, b, p), a, b, p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fasta::{alphabet::substitution_matrix, Alphabet};
+
+    fn dna_params() -> SwParams {
+        SwParams {
+            subst: substitution_matrix(Alphabet::Dna),
+            alpha: Alphabet::Dna.size(),
+            gap: 6.0,
+        }
+    }
+
+    fn codes(s: &str) -> Vec<i32> {
+        s.bytes().map(|b| Alphabet::Dna.encode(b) as i32).collect()
+    }
+
+    #[test]
+    fn identical_sequences_score_full_match() {
+        let p = dna_params();
+        let a = codes("ACGTACGT");
+        let al = sw_align(&a, &a, &p);
+        assert_eq!(al.score, 40.0); // 8 * +5
+        assert_eq!(al.ops.len(), 8);
+        assert!(al.ops.iter().all(|&o| o == Op::Diag));
+        assert_eq!((al.a_start, al.a_end), (0, 8));
+    }
+
+    #[test]
+    fn local_alignment_finds_embedded_motif() {
+        let p = dna_params();
+        let a = codes("TTTTACGTACGTTTTT");
+        let b = codes("GGGGACGTACGGGG");
+        let al = sw_align(&a, &b, &p);
+        // Common core ACGTACG scores 7 * 5 = 35.
+        assert_eq!(al.score, 35.0);
+        let aligned_a = &a[al.a_start..al.a_end];
+        assert_eq!(aligned_a, &codes("ACGTACG")[..]);
+    }
+
+    #[test]
+    fn gap_inserted_when_cheaper_than_mismatches() {
+        let mut p = dna_params();
+        p.gap = 2.0; // cheap gaps
+        let a = codes("ACGTCGT"); // missing the A in the middle
+        let b = codes("ACGTACGT");
+        let al = sw_align(&a, &b, &p);
+        assert!(al.ops.contains(&Op::Left), "expected subject-gap op: {:?}", al.ops);
+        assert_eq!(al.score, 7.0 * 5.0 - 2.0);
+    }
+
+    #[test]
+    fn empty_inputs_yield_zero_alignment() {
+        let p = dna_params();
+        let al = sw_align(&[], &codes("ACGT"), &p);
+        assert_eq!(al.score, 0.0);
+        assert!(al.ops.is_empty());
+    }
+
+    #[test]
+    fn unrelated_sequences_score_low() {
+        let p = dna_params();
+        let al = sw_align(&codes("AAAAAAA"), &codes("TTTTTTT"), &p);
+        assert_eq!(al.score, 0.0);
+    }
+
+    #[test]
+    fn h_matrix_matches_known_small_case() {
+        // Worked example: a=AC, b=AGC, match 5 / mismatch -4 / gap 6.
+        let p = dna_params();
+        let h = sw_matrix(&codes("AC"), &codes("AGC"), &p);
+        assert_eq!(h.at(1, 1), 5.0); // A-A
+        assert_eq!(h.at(1, 2), 0.0); // A-G after gap: 5-6 < 0 -> 0... max(diag -4, up/left) = 0
+        assert_eq!(h.at(2, 3), 5.0); // C aligned to C after G mismatch skip
+    }
+
+    #[test]
+    fn traceback_ops_are_consistent_with_ranges() {
+        let p = dna_params();
+        let a = codes("ACGGTACA");
+        let b = codes("TACGTAC");
+        let al = sw_align(&a, &b, &p);
+        let consumed_a: usize =
+            al.ops.iter().filter(|o| !matches!(o, Op::Left)).count();
+        let consumed_b: usize =
+            al.ops.iter().filter(|o| !matches!(o, Op::Up)).count();
+        assert_eq!(consumed_a, al.a_end - al.a_start);
+        assert_eq!(consumed_b, al.b_end - al.b_start);
+    }
+}

@@ -1,0 +1,287 @@
+//! Keyword tree (trie) with failure links over center-sequence segments —
+//! HAlign's acceleration for similar nucleotide sequences (paper §Trie
+//! trees method): the center sequence is cut into fixed-length segments,
+//! the segments go into a trie, and each query is scanned once (linear
+//! time via failure links, Aho-Corasick style) to find exact segment
+//! occurrences that anchor the pairwise alignment; DP only runs between
+//! anchors.
+
+use crate::util::hash::DetHashMap;
+
+/// One exact match of a center segment inside a query.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Anchor {
+    /// Start of the segment in the center sequence.
+    pub center_pos: usize,
+    /// Start of the occurrence in the query.
+    pub query_pos: usize,
+    /// Segment length (the trie's fixed segment length, except possibly
+    /// a shorter final segment).
+    pub len: usize,
+}
+
+#[derive(Debug, Clone)]
+struct Node {
+    children: DetHashMap<u8, u32>,
+    fail: u32,
+    /// Segment indices terminating at this node.
+    outputs: Vec<u32>,
+}
+
+impl Node {
+    fn new(_depth: u32) -> Self {
+        Self { children: DetHashMap::default(), fail: 0, outputs: Vec::new() }
+    }
+}
+
+/// Aho-Corasick automaton over the center's segments.
+#[derive(Debug, Clone)]
+pub struct SegmentTrie {
+    nodes: Vec<Node>,
+    /// (center_pos, len) per segment index.
+    segments: Vec<(usize, usize)>,
+    segment_len: usize,
+}
+
+impl SegmentTrie {
+    /// Cut `center` into consecutive `segment_len`-length segments (the
+    /// trailing partial segment is dropped — it would anchor weakly) and
+    /// build the automaton.
+    pub fn build(center: &[u8], segment_len: usize) -> Self {
+        assert!(segment_len >= 2, "segment_len must be >= 2");
+        let mut trie = Self {
+            nodes: vec![Node::new(0)],
+            segments: Vec::new(),
+            segment_len,
+        };
+        let mut start = 0;
+        while start + segment_len <= center.len() {
+            let seg = &center[start..start + segment_len];
+            let idx = trie.segments.len() as u32;
+            trie.segments.push((start, segment_len));
+            trie.insert(seg, idx);
+            start += segment_len;
+        }
+        trie.build_failure_links();
+        trie
+    }
+
+    fn insert(&mut self, seg: &[u8], idx: u32) {
+        let mut node = 0u32;
+        for (d, &c) in seg.iter().enumerate() {
+            let next = match self.nodes[node as usize].children.get(&c) {
+                Some(&n) => n,
+                None => {
+                    let n = self.nodes.len() as u32;
+                    self.nodes.push(Node::new(d as u32 + 1));
+                    self.nodes[node as usize].children.insert(c, n);
+                    n
+                }
+            };
+            node = next;
+        }
+        self.nodes[node as usize].outputs.push(idx);
+    }
+
+    /// BFS failure-link construction (classic Aho-Corasick).
+    fn build_failure_links(&mut self) {
+        let mut queue = std::collections::VecDeque::new();
+        let root_children: Vec<u32> = self.nodes[0].children.values().copied().collect();
+        for c in root_children {
+            self.nodes[c as usize].fail = 0;
+            queue.push_back(c);
+        }
+        while let Some(u) = queue.pop_front() {
+            let children: Vec<(u8, u32)> =
+                self.nodes[u as usize].children.iter().map(|(&c, &n)| (c, n)).collect();
+            for (c, v) in children {
+                // Follow fail links of u until a node with child c.
+                let mut f = self.nodes[u as usize].fail;
+                let fail_v = loop {
+                    if let Some(&w) = self.nodes[f as usize].children.get(&c) {
+                        if w != v {
+                            break w;
+                        }
+                    }
+                    if f == 0 {
+                        break 0;
+                    }
+                    f = self.nodes[f as usize].fail;
+                };
+                self.nodes[v as usize].fail = fail_v;
+                let inherited = self.nodes[fail_v as usize].outputs.clone();
+                self.nodes[v as usize].outputs.extend(inherited);
+                queue.push_back(v);
+            }
+        }
+    }
+
+    pub fn num_segments(&self) -> usize {
+        self.segments.len()
+    }
+
+    pub fn segment_len(&self) -> usize {
+        self.segment_len
+    }
+
+    pub fn segment(&self, idx: usize) -> (usize, usize) {
+        self.segments[idx]
+    }
+
+    /// Scan the query once, reporting every occurrence of every segment.
+    pub fn scan(&self, query: &[u8]) -> Vec<Anchor> {
+        let mut out = Vec::new();
+        let mut node = 0u32;
+        for (i, &c) in query.iter().enumerate() {
+            loop {
+                if let Some(&n) = self.nodes[node as usize].children.get(&c) {
+                    node = n;
+                    break;
+                }
+                if node == 0 {
+                    break;
+                }
+                node = self.nodes[node as usize].fail;
+            }
+            for &seg in &self.nodes[node as usize].outputs {
+                let (center_pos, len) = self.segments[seg as usize];
+                out.push(Anchor { center_pos, query_pos: i + 1 - len, len });
+            }
+        }
+        out
+    }
+
+    /// Greedy monotone chain of anchors: walk segments in center order,
+    /// taking for each the query occurrence (after the previous anchor's
+    /// end) that best preserves the running diagonal — i.e. minimizes the
+    /// indel imbalance `|(qp - q_cursor) - (cp - c_cursor)|` — and
+    /// skipping the segment entirely when even the best occurrence would
+    /// imply an imbalance of a full segment length (repetitive sequence
+    /// matching out of position).  Matches HAlign's "matched segments are
+    /// skipped" behaviour and is linear in the number of occurrences.
+    pub fn chain(&self, query: &[u8]) -> Vec<Anchor> {
+        let mut occs: Vec<Vec<usize>> = vec![Vec::new(); self.segments.len()];
+        let mut node = 0u32;
+        for (i, &c) in query.iter().enumerate() {
+            loop {
+                if let Some(&n) = self.nodes[node as usize].children.get(&c) {
+                    node = n;
+                    break;
+                }
+                if node == 0 {
+                    break;
+                }
+                node = self.nodes[node as usize].fail;
+            }
+            for &seg in &self.nodes[node as usize].outputs {
+                let len = self.segments[seg as usize].1;
+                occs[seg as usize].push(i + 1 - len);
+            }
+        }
+        let mut chain: Vec<Anchor> = Vec::new();
+        let mut q_cursor = 0usize;
+        let mut c_cursor = 0usize;
+        for (seg, seg_occs) in occs.iter().enumerate() {
+            let (center_pos, len) = self.segments[seg];
+            let best = seg_occs
+                .iter()
+                .filter(|&&q| q >= q_cursor)
+                .map(|&qp| {
+                    let dq = (qp - q_cursor) as i64;
+                    let dc = (center_pos - c_cursor) as i64;
+                    ((dq - dc).unsigned_abs() as usize, qp)
+                })
+                .min();
+            if let Some((imbalance, qp)) = best {
+                if imbalance >= len {
+                    continue; // out-of-position repeat; let DP handle it
+                }
+                chain.push(Anchor { center_pos, query_pos: qp, len });
+                q_cursor = qp + len;
+                c_cursor = center_pos + len;
+            }
+        }
+        chain
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fasta::Alphabet;
+
+    fn codes(s: &str) -> Vec<u8> {
+        s.bytes().map(|b| Alphabet::Dna.encode(b)).collect()
+    }
+
+    #[test]
+    fn finds_all_segment_occurrences() {
+        let center = codes("ACGTACGTTTTT"); // segments (len 4): ACGT, ACGT, TTTT
+        let trie = SegmentTrie::build(&center, 4);
+        assert_eq!(trie.num_segments(), 3);
+        let query = codes("GGACGTGG");
+        let anchors = trie.scan(&query);
+        // ACGT occurs once in the query but matches both segments 0 and 1.
+        assert_eq!(anchors.len(), 2);
+        assert!(anchors.iter().all(|a| a.query_pos == 2 && a.len == 4));
+    }
+
+    #[test]
+    fn overlapping_occurrences_found_via_failure_links() {
+        let center = codes("AAAA");
+        let trie = SegmentTrie::build(&center, 2); // segments AA, AA
+        let query = codes("AAA"); // AA occurs at 0 and 1
+        let anchors = trie.scan(&query);
+        let positions: Vec<usize> = anchors.iter().map(|a| a.query_pos).collect();
+        assert!(positions.contains(&0) && positions.contains(&1));
+    }
+
+    #[test]
+    fn identical_sequence_chains_every_segment() {
+        let center = codes("ACGTTGCAACGTGGCCTTAA");
+        let trie = SegmentTrie::build(&center, 5);
+        let chain = trie.chain(&center);
+        assert_eq!(chain.len(), trie.num_segments());
+        for a in &chain {
+            assert_eq!(a.center_pos, a.query_pos, "self-chain is the identity");
+        }
+    }
+
+    #[test]
+    fn chain_is_monotone_in_both_coordinates() {
+        let center = codes("ACGTACTTGGCATCAGGATC");
+        let trie = SegmentTrie::build(&center, 4);
+        // Query with a deletion and a substitution relative to center.
+        let query = codes("ACGTACTTGCATCAGGTC");
+        let chain = trie.chain(&query);
+        for w in chain.windows(2) {
+            assert!(w[1].center_pos > w[0].center_pos);
+            assert!(w[1].query_pos >= w[0].query_pos + w[0].len);
+        }
+    }
+
+    #[test]
+    fn mutated_sequence_still_anchors_most_segments() {
+        use crate::data::DatasetSpec;
+        let spec = DatasetSpec { count: 5, ..DatasetSpec::mito(0.05, 11) };
+        let seqs = spec.generate();
+        let trie = SegmentTrie::build(&seqs[0].codes, 16);
+        for s in &seqs[1..] {
+            let chain = trie.chain(&s.codes);
+            let anchored: usize = chain.iter().map(|a| a.len).sum();
+            assert!(
+                anchored * 2 > seqs[0].len(),
+                "similar genomes should anchor >50%: {} of {}",
+                anchored,
+                seqs[0].len()
+            );
+        }
+    }
+
+    #[test]
+    fn short_center_yields_empty_trie() {
+        let trie = SegmentTrie::build(&codes("ACG"), 8);
+        assert_eq!(trie.num_segments(), 0);
+        assert!(trie.chain(&codes("ACGTACGT")).is_empty());
+    }
+}

@@ -1,0 +1,49 @@
+//! HAlign v1 (Zou et al. 2015) emulation: the identical trie-accelerated
+//! center-star algorithm, but executed the Hadoop way — DiskKv shuffle
+//! backend, so the inter-job data (edit paths) round-trips through
+//! serialized spill files, and broadcasts go through the distributed
+//! cache.  The *algorithmic* work is shared with
+//! [`crate::align::center_star`]; only the engine configuration differs,
+//! which is precisely the paper's claim about where HAlign v1 loses time
+//! and memory.
+
+use anyhow::Result;
+
+use crate::align::center_star::{align_nucleotide, CenterStarConfig};
+use crate::align::MsaResult;
+use crate::engine::{Cluster, ClusterConfig};
+use crate::fasta::Sequence;
+
+/// Run HAlign-v1-style MSA: returns the result plus the Hadoop engine so
+/// callers can read its time/memory/IO stats.
+pub fn halign_v1_msa(
+    workers: usize,
+    seqs: &[Sequence],
+    cfg: &CenterStarConfig,
+) -> Result<(MsaResult, Cluster)> {
+    let engine = Cluster::new(ClusterConfig::hadoop(workers));
+    let msa = align_nucleotide(&engine, seqs, cfg)?;
+    Ok((msa, engine))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetSpec;
+
+    #[test]
+    fn produces_identical_msa_to_spark_mode() {
+        let seqs = DatasetSpec { count: 16, ..DatasetSpec::mito(0.01, 7) }.generate();
+        let cfg = CenterStarConfig::default();
+        let (hadoop_msa, hadoop_engine) = halign_v1_msa(3, &seqs, &cfg).unwrap();
+        let spark_engine = Cluster::new(ClusterConfig::spark(3));
+        let spark_msa = align_nucleotide(&spark_engine, &seqs, &cfg).unwrap();
+        assert_eq!(hadoop_msa.width, spark_msa.width);
+        for (a, b) in hadoop_msa.aligned.iter().zip(&spark_msa.aligned) {
+            assert_eq!(a.codes, b.codes);
+        }
+        // The point of the baseline: it hits disk where Spark does not.
+        assert!(hadoop_engine.stats().shuffle_bytes_written > 0);
+        assert_eq!(spark_engine.stats().shuffle_bytes_written, 0);
+    }
+}

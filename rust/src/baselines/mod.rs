@@ -1,0 +1,69 @@
+//! Comparator implementations for the paper's evaluation (DESIGN.md §3):
+//!
+//! * [`halign_v1`]   — HAlign (Hadoop): the same center-star code path on
+//!                     the DiskKv engine — every stage boundary pays the
+//!                     serialize/spill/read tax.
+//! * [`sparksw`]     — SparkSW: Smith-Waterman-only center star on the
+//!                     in-memory engine, no trie, per-pair full-matrix
+//!                     native DP (no XLA batching), no map-side combine.
+//! * [`progressive`] — MUSCLE/MAFFT-like single-node progressive MSA
+//!                     (k-mer guide tree + profile-profile alignment)
+//!                     with a memory budget that aborts like the paper's
+//!                     observed OOMs.
+//! * [`iqtree_like`] — single-node ML tree search (NJ start + NNI
+//!                     hill-climbing under JC69).
+//! * HPTree           — the paper's Hadoop tree pipeline: reuse
+//!                     [`crate::tree::build_tree`] on a DiskKv engine
+//!                     (see [`hptree_build`]).
+
+pub mod halign_v1;
+pub mod iqtree_like;
+pub mod progressive;
+pub mod sparksw;
+
+use anyhow::Result;
+
+use crate::engine::{Cluster, ClusterConfig};
+use crate::fasta::Sequence;
+use crate::tree::{TreeConfig, TreeResult};
+
+/// HPTree emulation: the clustered-NJ pipeline on a Hadoop-style engine.
+/// (HPTree predates HAlign-II and does not support proteins — Table 5's
+/// "not supported" entries.)
+pub fn hptree_build(
+    workers: usize,
+    rows: &[Sequence],
+    cfg: &TreeConfig,
+) -> Result<(TreeResult, Cluster)> {
+    anyhow::ensure!(
+        rows[0].alphabet == crate::fasta::Alphabet::Dna,
+        "HPTree does not support protein sequences"
+    );
+    let engine = Cluster::new(ClusterConfig::hadoop(workers));
+    let result = crate::tree::build_tree(&engine, rows, None, cfg)?;
+    Ok((result, engine))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::align::center_star::{align_nucleotide, CenterStarConfig};
+    use crate::data::DatasetSpec;
+    use crate::engine::{Cluster, ClusterConfig};
+
+    #[test]
+    fn hptree_runs_on_hadoop_engine_and_rejects_proteins() {
+        let seqs = DatasetSpec { count: 12, ..DatasetSpec::mito(0.01, 3) }.generate();
+        let engine = Cluster::new(ClusterConfig::spark(2));
+        let msa = align_nucleotide(&engine, &seqs, &CenterStarConfig::default()).unwrap();
+        let (result, hadoop) = hptree_build(2, &msa.aligned, &TreeConfig::default()).unwrap();
+        assert_eq!(result.tree.num_leaves(), 12);
+        assert!(
+            hadoop.stats().shuffle_bytes_written > 0 || hadoop.stats().shuffle_bytes_read > 0,
+            "hadoop engine must touch disk"
+        );
+
+        let prots = DatasetSpec::protein(4, 0.1, 1).generate();
+        assert!(hptree_build(2, &prots, &TreeConfig::default()).is_err());
+    }
+}

@@ -1,0 +1,443 @@
+//! Benchmark harness regenerating every table and figure of the paper's
+//! evaluation (DESIGN.md §5).  Shared by `halign2 bench-table ...` and the
+//! `rust/benches/*.rs` targets.
+//!
+//! Scaling: the paper's absolute dataset sizes (up to 15 GB / 17.8M
+//! sequences) don't fit a CI box; every workload here is the paper's
+//! *composition* at a configurable scale (default ≈1/10th counts and
+//! 1/10th genome length), and the claims checked are the relative ones —
+//! who wins, by what factor, who DNFs — as recorded in EXPERIMENTS.md.
+//! `--scale` raises the tiers toward paper scale on bigger machines.
+//!
+//! DNF handling: single-node baselines carry a *probe-and-extrapolate*
+//! guard — each runs on a small probe slice first, its full cost is
+//! extrapolated from the tool's complexity model, and runs whose estimate
+//! exceeds the time budget are recorded as DNF ("> budget"), mirroring
+//! the paper's "-" and "> 24 h" entries without burning hours.
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::align::center_star::{align_nucleotide, CenterStarConfig};
+use crate::align::protein::{align_protein, ProteinConfig};
+use crate::baselines::progressive::{estimated_bytes, progressive_msa, ProgressiveConfig};
+use crate::baselines::{halign_v1, hptree_build, iqtree_like, sparksw};
+use crate::data::DatasetSpec;
+use crate::engine::{Cluster, ClusterConfig};
+use crate::fasta::Sequence;
+use crate::metrics::RunReport;
+use crate::runtime::XlaService;
+use crate::tree::{build_tree, ClusterConfig as TreeClusterConfig, TreeConfig};
+
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub workers: usize,
+    /// Multiplies every dataset tier's sequence count (1.0 = defaults).
+    pub scale: f64,
+    /// Per-cell time budget; estimated-over-budget rows record DNF.
+    pub budget: Duration,
+    /// Quick mode shrinks tiers further (CI smoke).
+    pub quick: bool,
+    pub seed: u64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            workers: 8,
+            scale: 1.0,
+            budget: Duration::from_secs(120),
+            quick: false,
+            seed: 0xBEEF,
+        }
+    }
+}
+
+impl BenchConfig {
+    fn count(&self, base: usize) -> usize {
+        let c = (base as f64 * self.scale) as usize;
+        if self.quick {
+            (c / 8).max(8)
+        } else {
+            c.max(8)
+        }
+    }
+
+    /// Φ_DNA tiers: (label, spec). Counts: 168/1680/6720 at scale 1
+    /// (paper: 672/67k/672k), genome length 1/10th (1.66 kb).
+    pub fn dna_tiers(&self) -> Vec<(String, DatasetSpec)> {
+        let base = DatasetSpec {
+            count: 0,
+            ..DatasetSpec::mito(if self.quick { 0.02 } else { 0.1 }, self.seed)
+        };
+        [("dna_1x", 168), ("dna_20x", 1680), ("dna_80x", 6720)]
+            .into_iter()
+            .map(|(l, c)| (l.to_string(), DatasetSpec { count: self.count(c), ..base.clone() }))
+            .collect()
+    }
+
+    /// Φ_RNA tiers (paper: 108k/1M at ~1.4 kb).
+    pub fn rna_tiers(&self) -> Vec<(String, DatasetSpec)> {
+        let ls = if self.quick { 0.05 } else { 0.5 };
+        vec![
+            ("rna_small".into(), DatasetSpec::rrna(self.count(1200), ls, self.seed ^ 1)),
+            ("rna_large".into(), DatasetSpec::rrna(self.count(6000), ls, self.seed ^ 2)),
+        ]
+    }
+
+    /// Φ_Protein tiers (paper: 17.9k/1.79M/17.9M, avg 459 aa).
+    pub fn protein_tiers(&self) -> Vec<(String, DatasetSpec)> {
+        let ls = if self.quick { 0.15 } else { 0.6 };
+        [("prot_1x", 600), ("prot_10x", 3000), ("prot_40x", 12000)]
+            .into_iter()
+            .map(|(l, c)| (l.to_string(), DatasetSpec::protein(self.count(c), ls, self.seed ^ 3)))
+            .collect()
+    }
+}
+
+/// Time a run and fold in the engine stats.
+pub fn measure<T>(
+    tool: &str,
+    dataset: &str,
+    metric_name: &'static str,
+    f: impl FnOnce() -> Result<(T, Option<f64>, Option<Cluster>)>,
+) -> RunReport {
+    let start = Instant::now();
+    match f() {
+        Ok((_, metric, engine)) => {
+            let mut r = RunReport {
+                tool: tool.into(),
+                dataset: dataset.into(),
+                wall: start.elapsed(),
+                busy: None,
+                metric,
+                metric_name,
+                avg_max_memory_mb: None,
+                shuffle_mb: None,
+                dnf: None,
+            };
+            if let Some(engine) = engine {
+                r = r.with_stats(&engine.stats());
+            }
+            r
+        }
+        Err(e) => RunReport::dnf(tool, dataset, format!("{e}").chars().take(40).collect::<String>()),
+    }
+}
+
+/// Probe-and-extrapolate guard for a superlinear single-node tool:
+/// runs `f` on `probe` sequences, extrapolates with `cost(n)` and
+/// returns Err when the estimate blows the budget.
+fn guard_budget(
+    seqs: &[Sequence],
+    probe_n: usize,
+    budget: Duration,
+    cost: impl Fn(usize) -> f64,
+    probe_run: impl Fn(&[Sequence]) -> Result<()>,
+) -> Result<()> {
+    if seqs.len() <= probe_n {
+        return Ok(());
+    }
+    let probe = &seqs[..probe_n];
+    let t0 = Instant::now();
+    probe_run(probe)?;
+    let probe_time = t0.elapsed().as_secs_f64().max(1e-3);
+    let est = probe_time * cost(seqs.len()) / cost(probe_n);
+    if est > budget.as_secs_f64() {
+        anyhow::bail!("> budget (est {est:.0}s)");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Tables
+// ---------------------------------------------------------------------------
+
+/// Table 2 — genome MSA: MUSCLE/MAFFT-like progressive, HAlign (Hadoop),
+/// HAlign-II (Spark). Metric: avg SP (penalty, lower = better).
+pub fn table2_genome(cfg: &BenchConfig) -> Vec<RunReport> {
+    let mut out = Vec::new();
+    for (label, spec) in cfg.dna_tiers() {
+        let seqs = spec.generate();
+        // Progressive (single-node MUSCLE/MAFFT stand-in).
+        let pcfg = ProgressiveConfig::default();
+        let alpha = seqs[0].alphabet.residues();
+        let lmax = seqs.iter().map(Sequence::len).max().unwrap();
+        let oom = estimated_bytes(seqs.len(), lmax, alpha, &pcfg) > pcfg.memory_budget;
+        if oom {
+            out.push(RunReport::dnf("progressive", &label, "OOM"));
+        } else {
+            let guard = guard_budget(
+                &seqs,
+                12.min(seqs.len()),
+                cfg.budget,
+                |n| (n * n) as f64 * (lmax * lmax) as f64,
+                |probe| progressive_msa(probe, &pcfg).map(|_| ()),
+            );
+            match guard {
+                Err(e) => out.push(RunReport::dnf("progressive", &label, format!("{e}"))),
+                Ok(()) => out.push(measure("progressive", &label, "avgSP", || {
+                    let msa = progressive_msa(&seqs, &pcfg)?;
+                    let sp = msa.avg_sp()?;
+                    Ok((msa, Some(sp), None))
+                })),
+            }
+        }
+        // HAlign v1 (Hadoop).
+        out.push(measure("halign_v1", &label, "avgSP", || {
+            let (msa, engine) = halign_v1::halign_v1_msa(
+                cfg.workers,
+                &seqs,
+                &CenterStarConfig::default(),
+            )?;
+            let sp = msa.avg_sp_distributed(&engine)?;
+            Ok((msa, Some(sp), Some(engine)))
+        }));
+        // HAlign-II (Spark).
+        out.push(measure("halign2", &label, "avgSP", || {
+            let engine = Cluster::new(ClusterConfig::spark(cfg.workers));
+            let msa = align_nucleotide(&engine, &seqs, &CenterStarConfig::default())?;
+            let sp = msa.avg_sp_distributed(&engine)?;
+            Ok((msa, Some(sp), Some(engine)))
+        }));
+    }
+    out
+}
+
+/// Table 3 — RNA MSA (same tool set as Table 2, divergent sequences).
+pub fn table3_rna(cfg: &BenchConfig) -> Vec<RunReport> {
+    let mut out = Vec::new();
+    for (label, spec) in cfg.rna_tiers() {
+        let seqs = spec.generate();
+        let pcfg = ProgressiveConfig::default();
+        let lmax = seqs.iter().map(Sequence::len).max().unwrap();
+        let alpha = seqs[0].alphabet.residues();
+        if estimated_bytes(seqs.len(), lmax, alpha, &pcfg) > pcfg.memory_budget {
+            out.push(RunReport::dnf("progressive", &label, "OOM"));
+        } else {
+            match guard_budget(
+                &seqs,
+                10.min(seqs.len()),
+                cfg.budget,
+                |n| (n * n) as f64 * (lmax * lmax) as f64,
+                |probe| progressive_msa(probe, &pcfg).map(|_| ()),
+            ) {
+                Err(e) => out.push(RunReport::dnf("progressive", &label, format!("{e}"))),
+                Ok(()) => out.push(measure("progressive", &label, "avgSP", || {
+                    let msa = progressive_msa(&seqs, &pcfg)?;
+                    let sp = msa.avg_sp()?;
+                    Ok((msa, Some(sp), None))
+                })),
+            }
+        }
+        let cs_cfg = CenterStarConfig { segment_len: 10, ..Default::default() };
+        out.push(measure("halign_v1", &label, "avgSP", || {
+            let (msa, engine) = halign_v1::halign_v1_msa(cfg.workers, &seqs, &cs_cfg)?;
+            let sp = msa.avg_sp_distributed(&engine)?;
+            Ok((msa, Some(sp), Some(engine)))
+        }));
+        out.push(measure("halign2", &label, "avgSP", || {
+            let engine = Cluster::new(ClusterConfig::spark(cfg.workers));
+            let msa = align_nucleotide(&engine, &seqs, &cs_cfg)?;
+            let sp = msa.avg_sp_distributed(&engine)?;
+            Ok((msa, Some(sp), Some(engine)))
+        }));
+    }
+    out
+}
+
+/// Table 4 — protein MSA: progressive, SparkSW, HAlign-II (XLA-batched
+/// SW when a service is supplied).
+pub fn table4_protein(cfg: &BenchConfig, svc: Option<&XlaService>) -> Vec<RunReport> {
+    let mut out = Vec::new();
+    for (label, spec) in cfg.protein_tiers() {
+        let seqs = spec.generate();
+        let pcfg = ProgressiveConfig::default();
+        let lmax = seqs.iter().map(Sequence::len).max().unwrap();
+        if estimated_bytes(seqs.len(), lmax, 20, &pcfg) > pcfg.memory_budget {
+            out.push(RunReport::dnf("progressive", &label, "OOM"));
+        } else {
+            match guard_budget(
+                &seqs,
+                10.min(seqs.len()),
+                cfg.budget,
+                |n| (n * n) as f64 * (lmax * lmax) as f64,
+                |probe| progressive_msa(probe, &pcfg).map(|_| ()),
+            ) {
+                Err(e) => out.push(RunReport::dnf("progressive", &label, format!("{e}"))),
+                Ok(()) => out.push(measure("progressive", &label, "avgSP", || {
+                    let msa = progressive_msa(&seqs, &pcfg)?;
+                    let sp = msa.avg_sp()?;
+                    Ok((msa, Some(sp), None))
+                })),
+            }
+        }
+        // SparkSW — guard: full-matrix SW per pair; cost ~ n * lmax^2.
+        match guard_budget(
+            &seqs,
+            24.min(seqs.len()),
+            cfg.budget,
+            |n| n as f64,
+            |probe| sparksw::sparksw_msa(cfg.workers, probe, 5.0).map(|_| ()),
+        ) {
+            Err(e) => out.push(RunReport::dnf("sparksw", &label, format!("{e}"))),
+            Ok(()) => out.push(measure("sparksw", &label, "avgSP", || {
+                let (msa, engine) = sparksw::sparksw_msa(cfg.workers, &seqs, 5.0)?;
+                let sp = msa.avg_sp_distributed(&engine)?;
+                Ok((msa, Some(sp), Some(engine)))
+            })),
+        }
+        out.push(measure("halign2", &label, "avgSP", || {
+            let engine = Cluster::new(ClusterConfig::spark(cfg.workers));
+            let msa = align_protein(&engine, &seqs, svc, &ProteinConfig::default())?;
+            let sp = msa.avg_sp_distributed(&engine)?;
+            Ok((msa, Some(sp), Some(engine)))
+        }));
+    }
+    out
+}
+
+/// Table 5 — phylogenetic tree construction over the MSA outputs:
+/// IQ-TREE-like ML search, HPTree (Hadoop NJ), HAlign-II (Spark NJ).
+/// Metric: JC69 logML of the produced tree.
+pub fn table5_tree(cfg: &BenchConfig, svc: Option<&XlaService>) -> Vec<RunReport> {
+    let mut out = Vec::new();
+    let tree_cfg = TreeConfig {
+        clustering: TreeClusterConfig { max_cluster_size: 96, ..Default::default() },
+    };
+    // One dataset per family (the full 8-row sweep is the bench target's
+    // --full mode; wall-clock dominated by the MSA step otherwise).
+    let mut jobs: Vec<(String, Vec<Sequence>)> = Vec::new();
+    for (label, spec) in cfg.dna_tiers().into_iter().take(2) {
+        let seqs = spec.generate();
+        let engine = Cluster::new(ClusterConfig::spark(cfg.workers));
+        let msa = align_nucleotide(&engine, &seqs, &CenterStarConfig::default())
+            .expect("MSA for tree bench");
+        jobs.push((label, msa.aligned));
+    }
+    for (label, spec) in cfg.protein_tiers().into_iter().take(1) {
+        let seqs = spec.generate();
+        let engine = Cluster::new(ClusterConfig::spark(cfg.workers));
+        let msa = align_protein(&engine, &seqs, svc, &ProteinConfig::default())
+            .expect("protein MSA for tree bench");
+        jobs.push((label, msa.aligned));
+    }
+
+    for (label, rows) in &jobs {
+        let is_protein = rows[0].alphabet == crate::fasta::Alphabet::Protein;
+        // IQ-TREE-like: ML search is O(rounds * edges * n * width) — guard.
+        match guard_budget(
+            rows,
+            16.min(rows.len()),
+            cfg.budget,
+            |n| (n * n * n) as f64,
+            |probe| {
+                iqtree_like::iqtree_like_search(probe, &iqtree_like::IqTreeConfig::default())
+                    .map(|_| ())
+            },
+        ) {
+            Err(e) => out.push(RunReport::dnf("iqtree_like", label, format!("{e}"))),
+            Ok(()) => out.push(measure("iqtree_like", label, "logML", || {
+                let r = iqtree_like::iqtree_like_search(
+                    rows,
+                    &iqtree_like::IqTreeConfig::default(),
+                )?;
+                Ok(((), Some(r.log_likelihood), None))
+            })),
+        }
+        // HPTree (no protein support).
+        if is_protein {
+            out.push(RunReport::dnf("hptree", label, "not supported"));
+        } else {
+            out.push(measure("hptree", label, "logML", || {
+                let (r, engine) = hptree_build(cfg.workers, rows, &tree_cfg)?;
+                Ok(((), Some(r.log_likelihood), Some(engine)))
+            }));
+        }
+        // HAlign-II.
+        out.push(measure("halign2", label, "logML", || {
+            let engine = Cluster::new(ClusterConfig::spark(cfg.workers));
+            let r = build_tree(&engine, rows, svc, &tree_cfg)?;
+            Ok(((), Some(r.log_likelihood), Some(engine)))
+        }));
+    }
+    out
+}
+
+/// Figure 5 — average max per-worker memory: HAlign (Hadoop) vs SparkSW
+/// vs HAlign-II on a DNA tier and a protein tier.
+pub fn fig5_memory(cfg: &BenchConfig, svc: Option<&XlaService>) -> Vec<RunReport> {
+    let mut out = Vec::new();
+    let (dna_label, dna_spec) = cfg.dna_tiers().into_iter().nth(1).unwrap();
+    let dna = dna_spec.generate();
+    out.push(measure("halign_v1", &dna_label, "avgSP", || {
+        let (msa, engine) =
+            halign_v1::halign_v1_msa(cfg.workers, &dna, &CenterStarConfig::default())?;
+        Ok((msa, None, Some(engine)))
+    }));
+    out.push(measure("halign2", &dna_label, "avgSP", || {
+        let engine = Cluster::new(ClusterConfig::spark(cfg.workers));
+        let msa = align_nucleotide(&engine, &dna, &CenterStarConfig::default())?;
+        Ok((msa, None, Some(engine)))
+    }));
+
+    let (p_label, p_spec) = cfg.protein_tiers().into_iter().next().unwrap();
+    let prot = p_spec.generate();
+    out.push(measure("sparksw", &p_label, "avgSP", || {
+        let (msa, engine) = sparksw::sparksw_msa(cfg.workers, &prot, 5.0)?;
+        Ok((msa, None, Some(engine)))
+    }));
+    out.push(measure("halign2", &p_label, "avgSP", || {
+        let engine = Cluster::new(ClusterConfig::spark(cfg.workers));
+        let msa = align_protein(&engine, &prot, svc, &ProteinConfig::default())?;
+        Ok((msa, None, Some(engine)))
+    }));
+    out
+}
+
+/// Figure 6 — runtime and memory vs worker count on a DNA tier.
+pub fn fig6_scaling(cfg: &BenchConfig) -> Vec<RunReport> {
+    let (label, spec) = cfg.dna_tiers().into_iter().nth(1).unwrap();
+    let seqs = spec.generate();
+    let mut out = Vec::new();
+    for workers in [1usize, 2, 4, 8, 12] {
+        let name = format!("{label}@w{workers}");
+        out.push(measure("halign2", &name, "avgSP", || {
+            let engine = Cluster::new(ClusterConfig::spark(workers));
+            let msa = align_nucleotide(&engine, &seqs, &CenterStarConfig::default())?;
+            Ok((msa, None, Some(engine)))
+        }));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> BenchConfig {
+        BenchConfig { quick: true, workers: 2, budget: Duration::from_secs(10), ..Default::default() }
+    }
+
+    #[test]
+    fn table2_has_all_tools_and_halign2_wins_busy_time() {
+        let rows = table2_genome(&quick());
+        assert!(rows.iter().any(|r| r.tool == "halign2" && r.dnf.is_none()));
+        assert!(rows.iter().any(|r| r.tool == "halign_v1"));
+        assert!(rows.iter().any(|r| r.tool == "progressive"));
+        // HAlign v1 and HAlign-II report the same avg SP (same algorithm).
+        for d in ["dna_1x"] {
+            let v1 = rows.iter().find(|r| r.tool == "halign_v1" && r.dataset == d).unwrap();
+            let v2 = rows.iter().find(|r| r.tool == "halign2" && r.dataset == d).unwrap();
+            assert_eq!(v1.metric, v2.metric, "same center-star, same SP");
+        }
+    }
+
+    #[test]
+    fn fig6_produces_five_worker_counts() {
+        let rows = fig6_scaling(&quick());
+        assert_eq!(rows.len(), 5);
+        assert!(rows.iter().all(|r| r.dnf.is_none()));
+    }
+}

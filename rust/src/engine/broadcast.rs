@@ -1,0 +1,130 @@
+//! Broadcast variables — how the center-star sequence and inserted-space
+//! matrix reach every worker (paper Fig. 3: "the extracted center star
+//! sequence ... becomes a broadcast variable").
+//!
+//! Both backends replicate the value to every worker (memory is charged
+//! per replica); the DiskKv backend additionally round-trips the payload
+//! through an encoded scratch file, modelling Hadoop's distributed-cache
+//! distribution cost where Spark hands out an in-memory reference.
+
+use std::sync::Arc;
+
+use anyhow::{Context as _, Result};
+
+use super::context::Cluster;
+use super::memory::MemSize;
+use super::shuffle::Backend;
+use crate::util::{Decode, Encode};
+
+pub struct Broadcast<T> {
+    value: Arc<T>,
+    ctx: Cluster,
+    bytes_per_worker: usize,
+}
+
+impl<T> Clone for Broadcast<T> {
+    fn clone(&self) -> Self {
+        // Clones share the replicas; only the original releases on drop,
+        // enforced by reference counting on `value`.
+        Self {
+            value: self.value.clone(),
+            ctx: self.ctx.clone(),
+            bytes_per_worker: 0, // non-owning clone
+        }
+    }
+}
+
+impl<T> Broadcast<T> {
+    pub fn value(&self) -> &T {
+        &self.value
+    }
+
+    pub fn arc(&self) -> Arc<T> {
+        self.value.clone()
+    }
+}
+
+impl<T> Drop for Broadcast<T> {
+    fn drop(&mut self) {
+        if self.bytes_per_worker > 0 {
+            for w in 0..self.ctx.num_workers() {
+                self.ctx.memory().worker(w).release(self.bytes_per_worker);
+            }
+        }
+    }
+}
+
+impl Cluster {
+    /// Replicate `value` to every worker.
+    pub fn broadcast<T>(&self, value: T) -> Result<Broadcast<T>>
+    where
+        T: MemSize + Encode + Decode + Send + Sync + 'static,
+    {
+        let value = match self.backend() {
+            Backend::InMemory => value,
+            Backend::DiskKv => {
+                // Hadoop path: serialize to the distributed cache and read
+                // it back (cost scales with payload and worker count).
+                let path = self
+                    .scratch_dir()?
+                    .join(format!("broadcast-{}.kv", self.next_shuffle_id()));
+                let bytes = value.to_bytes();
+                std::fs::write(&path, &bytes)
+                    .with_context(|| format!("writing broadcast {}", path.display()))?;
+                let mut last = value;
+                for _ in 0..self.num_workers() {
+                    let read = std::fs::read(&path)?;
+                    self.io()
+                        .shuffle_bytes_read
+                        .fetch_add(read.len() as u64, std::sync::atomic::Ordering::Relaxed);
+                    last = T::from_bytes(&read)?;
+                }
+                let _ = std::fs::remove_file(&path);
+                last
+            }
+        };
+        let bytes_per_worker = value.mem_bytes();
+        for w in 0..self.num_workers() {
+            self.memory().worker(w).acquire(bytes_per_worker);
+        }
+        Ok(Broadcast { value: Arc::new(value), ctx: self.clone(), bytes_per_worker })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::context::ClusterConfig;
+
+    #[test]
+    fn value_accessible_and_memory_charged_per_worker() {
+        let c = Cluster::new(ClusterConfig::spark(4));
+        let payload = vec![0u8; 10_000];
+        let before = c.memory().total_current();
+        let b = c.broadcast(payload.clone()).unwrap();
+        assert_eq!(b.value(), &payload);
+        assert!(c.memory().total_current() >= before + 4 * 10_000);
+        drop(b);
+        assert_eq!(c.memory().total_current(), before);
+    }
+
+    #[test]
+    fn diskkv_broadcast_roundtrips_and_counts_io() {
+        let c = Cluster::new(ClusterConfig::hadoop(3));
+        let b = c.broadcast(vec![7u32; 100]).unwrap();
+        assert_eq!(b.value().len(), 100);
+        assert!(c.stats().shuffle_bytes_read >= 3 * 400);
+    }
+
+    #[test]
+    fn clones_do_not_double_release() {
+        let c = Cluster::new(ClusterConfig::spark(2));
+        let b = c.broadcast(String::from("center")).unwrap();
+        let snapshot = c.memory().total_current();
+        let b2 = b.clone();
+        drop(b2);
+        assert_eq!(c.memory().total_current(), snapshot, "clone drop is free");
+        drop(b);
+        assert!(c.memory().total_current() < snapshot);
+    }
+}

@@ -1,0 +1,246 @@
+//! Cluster context: configuration + shared services (executor, memory
+//! tracker, shuffle I/O counters) behind a cheaply clonable handle — the
+//! `SparkContext` analogue.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::executor::Executor;
+use super::fault::FaultPlan;
+use super::memory::MemoryTracker;
+use super::rdd::{Data, Rdd};
+use super::shuffle::Backend;
+
+/// Engine configuration — the knobs the paper's experiments sweep.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Simulated cluster nodes (paper: 12 workstations).
+    pub workers: usize,
+    /// Default partition count for `parallelize` (Spark: 2-4x cores).
+    pub default_partitions: usize,
+    /// Shuffle/job-boundary backend: `InMemory` = Spark, `DiskKv` = Hadoop.
+    pub backend: Backend,
+    /// Task retry budget (lineage recompute on failure).
+    pub max_retries: usize,
+    /// Fault injection plan.
+    pub fault: FaultPlan,
+    /// Base seed for engine-internal randomness (sampling etc.).
+    pub seed: u64,
+    /// DiskKv (Hadoop) only: HDFS-style block replication — every spill
+    /// is written this many times (dfs.replication defaults to 3).
+    pub disk_replication: usize,
+    /// DiskKv only: JVM Writable-object bloat factor applied to the
+    /// sort/merge buffers MapReduce materializes around each spill
+    /// ("many key-value pair conversion operators ... result in high
+    /// memory occupancy rate" — paper §Results).
+    pub kv_overhead: usize,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            workers: 4,
+            default_partitions: 8,
+            backend: Backend::InMemory,
+            max_retries: 2,
+            fault: FaultPlan::none(),
+            seed: 0x4A11C2,
+            disk_replication: 3,
+            kv_overhead: 3,
+        }
+    }
+}
+
+impl ClusterConfig {
+    pub fn spark(workers: usize) -> Self {
+        Self {
+            workers,
+            default_partitions: (workers * 2).max(4),
+            backend: Backend::InMemory,
+            ..Self::default()
+        }
+    }
+
+    /// Hadoop emulation: disk key-value shuffle + disk job boundaries.
+    pub fn hadoop(workers: usize) -> Self {
+        Self { backend: Backend::DiskKv, ..Self::spark(workers) }
+    }
+}
+
+/// Cluster-wide I/O counters (shuffle + checkpoint traffic).
+#[derive(Debug, Default)]
+pub struct IoCounters {
+    pub shuffle_bytes_written: AtomicU64,
+    pub shuffle_bytes_read: AtomicU64,
+    pub spill_files: AtomicUsize,
+    pub shuffles_executed: AtomicUsize,
+}
+
+pub(crate) struct ClusterInner {
+    pub config: ClusterConfig,
+    pub executor: Executor,
+    pub memory: MemoryTracker,
+    pub io: IoCounters,
+    pub shuffle_seq: AtomicUsize,
+    pub scratch_dir: PathBuf,
+}
+
+/// Handle to a running cluster; clone freely (all clones share state).
+#[derive(Clone)]
+pub struct Cluster {
+    pub(crate) inner: Arc<ClusterInner>,
+}
+
+impl Cluster {
+    pub fn new(config: ClusterConfig) -> Self {
+        let executor = Executor::new(config.workers, config.fault.clone());
+        let memory = MemoryTracker::new(config.workers);
+        let scratch_dir = std::env::temp_dir().join(format!(
+            "halign2-{}-{}",
+            std::process::id(),
+            NEXT_CLUSTER_ID.fetch_add(1, Ordering::Relaxed)
+        ));
+        Self {
+            inner: Arc::new(ClusterInner {
+                config,
+                executor,
+                memory,
+                io: IoCounters::default(),
+                shuffle_seq: AtomicUsize::new(0),
+                scratch_dir,
+            }),
+        }
+    }
+
+    pub fn config(&self) -> &ClusterConfig {
+        &self.inner.config
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.inner.config.workers
+    }
+
+    pub fn backend(&self) -> Backend {
+        self.inner.config.backend
+    }
+
+    pub fn memory(&self) -> &MemoryTracker {
+        &self.inner.memory
+    }
+
+    pub fn io(&self) -> &IoCounters {
+        &self.inner.io
+    }
+
+    pub(crate) fn executor(&self) -> &Executor {
+        &self.inner.executor
+    }
+
+    pub(crate) fn scratch_dir(&self) -> Result<PathBuf> {
+        std::fs::create_dir_all(&self.inner.scratch_dir)?;
+        Ok(self.inner.scratch_dir.clone())
+    }
+
+    pub(crate) fn next_shuffle_id(&self) -> usize {
+        self.inner.shuffle_seq.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Distribute a local collection across `parts` partitions
+    /// (round-robin chunks, Spark's `parallelize`).
+    pub fn parallelize<T: Data>(&self, items: Vec<T>, parts: usize) -> Rdd<T> {
+        Rdd::from_vec(self.clone(), items, parts.max(1))
+    }
+
+    pub fn parallelize_default<T: Data>(&self, items: Vec<T>) -> Rdd<T> {
+        self.parallelize(items, self.inner.config.default_partitions)
+    }
+
+    /// Dispatch `n` empty tasks through the executor (benchmarks the
+    /// scheduling overhead in isolation).
+    pub fn executor_probe(&self, n: usize) -> Result<()> {
+        self.inner.executor.run_tasks(n, 0, |_| Ok(()))
+    }
+
+    /// Snapshot of scheduling/IO/memory stats for reports.
+    pub fn stats(&self) -> ClusterStats {
+        let m = &self.inner.executor;
+        ClusterStats {
+            workers: self.num_workers(),
+            tasks_run: m
+                .metrics()
+                .iter()
+                .map(|w| w.tasks.load(Ordering::Relaxed))
+                .sum(),
+            injected_failures: m
+                .metrics()
+                .iter()
+                .map(|w| w.failures.load(Ordering::Relaxed))
+                .sum(),
+            total_busy: m.total_busy(),
+            shuffle_bytes_written: self.inner.io.shuffle_bytes_written.load(Ordering::Relaxed),
+            shuffle_bytes_read: self.inner.io.shuffle_bytes_read.load(Ordering::Relaxed),
+            shuffles_executed: self.inner.io.shuffles_executed.load(Ordering::Relaxed),
+            avg_max_memory_bytes: self.inner.memory.avg_max_bytes(),
+            max_peak_memory_bytes: self.inner.memory.max_peak_bytes(),
+        }
+    }
+}
+
+static NEXT_CLUSTER_ID: AtomicUsize = AtomicUsize::new(0);
+
+impl Drop for ClusterInner {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.scratch_dir);
+    }
+}
+
+/// Point-in-time engine statistics (consumed by metrics/ and the benches).
+#[derive(Debug, Clone)]
+pub struct ClusterStats {
+    pub workers: usize,
+    pub tasks_run: usize,
+    pub injected_failures: usize,
+    pub total_busy: Duration,
+    pub shuffle_bytes_written: u64,
+    pub shuffle_bytes_read: u64,
+    pub shuffles_executed: usize,
+    pub avg_max_memory_bytes: f64,
+    pub max_peak_memory_bytes: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spark_and_hadoop_presets() {
+        let s = ClusterConfig::spark(12);
+        assert_eq!(s.workers, 12);
+        assert_eq!(s.backend, Backend::InMemory);
+        let h = ClusterConfig::hadoop(12);
+        assert_eq!(h.backend, Backend::DiskKv);
+    }
+
+    #[test]
+    fn stats_start_clean() {
+        let c = Cluster::new(ClusterConfig::spark(2));
+        let st = c.stats();
+        assert_eq!(st.tasks_run, 0);
+        assert_eq!(st.shuffle_bytes_written, 0);
+    }
+
+    #[test]
+    fn scratch_dir_created_and_cleaned() {
+        let dir;
+        {
+            let c = Cluster::new(ClusterConfig::hadoop(2));
+            dir = c.scratch_dir().unwrap();
+            assert!(dir.exists());
+        }
+        assert!(!dir.exists(), "scratch dir should be removed on drop");
+    }
+}

@@ -1,0 +1,276 @@
+//! Worker-pool executor: N long-lived threads, one per simulated cluster
+//! node, each with its own task queue and busy-time/task metrics.
+//!
+//! Tasks are routed to workers by partition index (`part % workers`) —
+//! Spark-style stable placement so cached partitions and shuffle map
+//! outputs have an owning node, which the fault injector can then "kill".
+//!
+//! Wall-clock on a 1-core CI box timeshares, so the metrics also record
+//! per-worker *busy time*; Fig-6 reports both (see EXPERIMENTS.md).
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::fault::FaultPlan;
+
+type Job = Box<dyn FnOnce() -> Result<()> + Send>;
+
+struct WorkerState {
+    tx: Sender<Job>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Per-worker counters (busy nanos, tasks run, failures injected).
+#[derive(Debug, Default)]
+pub struct WorkerMetrics {
+    pub busy_nanos: AtomicU64,
+    pub tasks: AtomicUsize,
+    pub failures: AtomicUsize,
+}
+
+pub struct Executor {
+    workers: Vec<Mutex<WorkerState>>,
+    metrics: Vec<Arc<WorkerMetrics>>,
+    fault: FaultPlan,
+    task_counter: AtomicUsize,
+}
+
+impl Executor {
+    pub fn new(num_workers: usize, fault: FaultPlan) -> Self {
+        assert!(num_workers > 0);
+        let mut workers = Vec::with_capacity(num_workers);
+        let mut metrics = Vec::with_capacity(num_workers);
+        for w in 0..num_workers {
+            let (tx, rx): (Sender<Job>, Receiver<Job>) = channel();
+            let handle = std::thread::Builder::new()
+                .name(format!("worker-{w}"))
+                .spawn(move || {
+                    while let Ok(job) = rx.recv() {
+                        // Task panics are converted to Err at the submit
+                        // site; a panic escaping here would poison the node.
+                        let _ = job();
+                    }
+                })
+                .expect("spawning worker thread");
+            workers.push(Mutex::new(WorkerState { tx, handle: Some(handle) }));
+            metrics.push(Arc::new(WorkerMetrics::default()));
+        }
+        Self { workers, metrics, fault, task_counter: AtomicUsize::new(0) }
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn metrics(&self) -> &[Arc<WorkerMetrics>] {
+        &self.metrics
+    }
+
+    pub fn total_busy(&self) -> Duration {
+        Duration::from_nanos(
+            self.metrics.iter().map(|m| m.busy_nanos.load(Ordering::Relaxed)).sum(),
+        )
+    }
+
+    pub fn fault_plan(&self) -> &FaultPlan {
+        &self.fault
+    }
+
+    /// Which worker owns partition `part` (stable placement).
+    pub fn worker_for(&self, part: usize) -> usize {
+        part % self.workers.len()
+    }
+
+    /// Run one task set: task `i` executes `f(i)` on its owning worker;
+    /// blocks until all tasks finish.  Individual task errors (including
+    /// injected faults) are retried up to `max_retries` times by
+    /// re-invoking `f(i)` — lineage recompute happens naturally because
+    /// `f` recomputes its inputs.
+    pub fn run_tasks<F>(&self, num_tasks: usize, max_retries: usize, f: F) -> Result<()>
+    where
+        F: Fn(usize) -> Result<()> + Send + Sync + 'static,
+    {
+        if num_tasks == 0 {
+            return Ok(());
+        }
+        let f = Arc::new(f);
+        let (done_tx, done_rx) = channel::<(usize, Result<()>)>();
+
+        let submit = |task: usize, attempt: usize| -> Result<()> {
+            let w = self.worker_for(task + attempt); // retries migrate nodes
+            let metrics = self.metrics[w].clone();
+            let f = f.clone();
+            let done = done_tx.clone();
+            let fail_this = self.fault.should_fail(
+                w,
+                self.task_counter.fetch_add(1, Ordering::Relaxed),
+                attempt,
+            );
+            let job: Job = Box::new(move || {
+                let start = Instant::now();
+                let result = if fail_this {
+                    metrics.failures.fetch_add(1, Ordering::Relaxed);
+                    Err(anyhow!("injected fault on worker {w} (task {task})"))
+                } else {
+                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(task)))
+                        .unwrap_or_else(|p| {
+                            Err(anyhow!("task {task} panicked: {}", panic_msg(p.as_ref())))
+                        })
+                };
+                metrics
+                    .busy_nanos
+                    .fetch_add(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                metrics.tasks.fetch_add(1, Ordering::Relaxed);
+                let _ = done.send((task, result));
+                Ok(())
+            });
+            self.workers[w]
+                .lock()
+                .unwrap()
+                .tx
+                .send(job)
+                .map_err(|_| anyhow!("worker {w} is gone"))
+        };
+
+        let mut attempts = vec![0usize; num_tasks];
+        for t in 0..num_tasks {
+            submit(t, 0)?;
+        }
+        let mut remaining = num_tasks;
+        while remaining > 0 {
+            let (task, result) = done_rx
+                .recv()
+                .map_err(|_| anyhow!("all workers died mid-job"))?;
+            match result {
+                Ok(()) => remaining -= 1,
+                Err(e) => {
+                    attempts[task] += 1;
+                    if attempts[task] > max_retries {
+                        return Err(e.context(format!(
+                            "task {task} failed after {} attempts",
+                            attempts[task]
+                        )));
+                    }
+                    submit(task, attempts[task])?;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    p.downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| p.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "<non-string panic>".into())
+}
+
+impl Drop for Executor {
+    fn drop(&mut self) {
+        let me = std::thread::current().id();
+        for w in &self.workers {
+            let mut st = w.lock().unwrap();
+            // Dropping the sender closes the channel; join the thread.
+            let (dead_tx, _) = channel();
+            st.tx = dead_tx;
+            if let Some(h) = st.handle.take() {
+                // A task closure can hold the last Cluster handle, making
+                // a *worker* run this drop — never join yourself, detach.
+                if h.thread().id() != me {
+                    let _ = h.join();
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn runs_all_tasks_once() {
+        let ex = Executor::new(4, FaultPlan::none());
+        let count = Arc::new(AtomicUsize::new(0));
+        let c = count.clone();
+        ex.run_tasks(37, 0, move |_| {
+            c.fetch_add(1, Ordering::SeqCst);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(count.load(Ordering::SeqCst), 37);
+    }
+
+    #[test]
+    fn spreads_tasks_across_workers() {
+        let ex = Executor::new(3, FaultPlan::none());
+        ex.run_tasks(30, 0, |_| Ok(())).unwrap();
+        for m in ex.metrics() {
+            assert!(m.tasks.load(Ordering::SeqCst) >= 9);
+        }
+    }
+
+    #[test]
+    fn task_errors_are_retried() {
+        let ex = Executor::new(2, FaultPlan::none());
+        let tries = Arc::new(AtomicUsize::new(0));
+        let t = tries.clone();
+        ex.run_tasks(1, 3, move |_| {
+            if t.fetch_add(1, Ordering::SeqCst) < 2 {
+                anyhow::bail!("transient");
+            }
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(tries.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn exhausted_retries_propagate_error() {
+        let ex = Executor::new(2, FaultPlan::none());
+        let err = ex
+            .run_tasks(4, 1, |t| {
+                if t == 2 {
+                    anyhow::bail!("always fails")
+                }
+                Ok(())
+            })
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("task 2"));
+    }
+
+    #[test]
+    fn panics_become_errors_not_hangs() {
+        let ex = Executor::new(2, FaultPlan::none());
+        let err = ex
+            .run_tasks(1, 0, |_| panic!("boom"))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("boom"));
+    }
+
+    #[test]
+    fn injected_faults_recover_via_retry() {
+        // Fail every task's first attempt on worker 0.
+        let ex = Executor::new(2, FaultPlan::fail_first_attempt_on_worker(0));
+        let count = Arc::new(AtomicUsize::new(0));
+        let c = count.clone();
+        ex.run_tasks(8, 2, move |_| {
+            c.fetch_add(1, Ordering::SeqCst);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(count.load(Ordering::SeqCst), 8);
+        let injected: usize = ex
+            .metrics()
+            .iter()
+            .map(|m| m.failures.load(Ordering::SeqCst))
+            .sum();
+        assert!(injected > 0, "fault plan should have fired");
+    }
+}

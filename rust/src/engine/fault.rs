@@ -1,0 +1,120 @@
+//! Fault injection: deterministic plans describing which (worker, task,
+//! attempt) triples fail, used to exercise lineage recompute and retry
+//! paths (RDDs "will be recomputed after data loss" — paper §Methods).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+#[derive(Debug, Clone, Default)]
+enum Mode {
+    #[default]
+    None,
+    /// First attempt of any task placed on this worker fails.
+    FailFirstAttemptOnWorker(usize),
+    /// Fail the task with this global submission ordinal (first attempt).
+    FailNthTask(usize),
+    /// Fail every first attempt with probability p (seeded, deterministic
+    /// per submission ordinal).
+    RandomFirstAttempt { p_milli: usize, seed: u64 },
+}
+
+/// Shared, cheaply clonable fault plan.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    mode: Mode,
+    fired: Arc<AtomicUsize>,
+}
+
+impl FaultPlan {
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn fail_first_attempt_on_worker(w: usize) -> Self {
+        Self { mode: Mode::FailFirstAttemptOnWorker(w), fired: Default::default() }
+    }
+
+    pub fn fail_nth_task(n: usize) -> Self {
+        Self { mode: Mode::FailNthTask(n), fired: Default::default() }
+    }
+
+    pub fn random(p: f64, seed: u64) -> Self {
+        Self {
+            mode: Mode::RandomFirstAttempt {
+                p_milli: (p.clamp(0.0, 1.0) * 1000.0) as usize,
+                seed,
+            },
+            fired: Default::default(),
+        }
+    }
+
+    /// How many injections have fired so far.
+    pub fn fired(&self) -> usize {
+        self.fired.load(Ordering::Relaxed)
+    }
+
+    /// Decide whether this (worker, submission ordinal, attempt) fails.
+    pub fn should_fail(&self, worker: usize, ordinal: usize, attempt: usize) -> bool {
+        let hit = match self.mode {
+            Mode::None => false,
+            Mode::FailFirstAttemptOnWorker(w) => attempt == 0 && worker == w,
+            Mode::FailNthTask(n) => attempt == 0 && ordinal == n,
+            Mode::RandomFirstAttempt { p_milli, seed } => {
+                if attempt != 0 {
+                    false
+                } else {
+                    // SplitMix64 hash of the ordinal — deterministic replay.
+                    let mut z = (ordinal as u64).wrapping_add(seed).wrapping_add(0x9E3779B97F4A7C15);
+                    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+                    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+                    ((z >> 33) % 1000) < p_milli as u64
+                }
+            }
+        };
+        if hit {
+            self.fired.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_never_fires() {
+        let p = FaultPlan::none();
+        for i in 0..100 {
+            assert!(!p.should_fail(i % 4, i, 0));
+        }
+        assert_eq!(p.fired(), 0);
+    }
+
+    #[test]
+    fn worker_plan_only_hits_first_attempts_of_that_worker() {
+        let p = FaultPlan::fail_first_attempt_on_worker(2);
+        assert!(p.should_fail(2, 0, 0));
+        assert!(!p.should_fail(2, 1, 1));
+        assert!(!p.should_fail(1, 2, 0));
+    }
+
+    #[test]
+    fn nth_task_plan_is_one_shot_per_ordinal() {
+        let p = FaultPlan::fail_nth_task(5);
+        assert!(!p.should_fail(0, 4, 0));
+        assert!(p.should_fail(0, 5, 0));
+        assert!(!p.should_fail(0, 6, 0));
+    }
+
+    #[test]
+    fn random_plan_is_deterministic() {
+        let a = FaultPlan::random(0.3, 9);
+        let b = FaultPlan::random(0.3, 9);
+        for i in 0..200 {
+            assert_eq!(a.should_fail(0, i, 0), b.should_fail(0, i, 0));
+        }
+        assert!(a.fired() > 20, "p=0.3 over 200 should fire often");
+        assert!(a.fired() < 120);
+    }
+}

@@ -1,0 +1,22 @@
+//! The mini-Spark substrate: lazy RDDs with lineage, a DAG-cut scheduler,
+//! a worker-pool executor, swappable shuffle backends (in-memory Spark vs
+//! disk key-value Hadoop), broadcast variables, per-worker memory
+//! accounting, and deterministic fault injection.
+//!
+//! See DESIGN.md §4 for how each piece maps onto the paper's system.
+
+pub mod broadcast;
+pub mod context;
+pub mod executor;
+pub mod fault;
+pub mod memory;
+pub mod pair;
+pub mod rdd;
+pub mod shuffle;
+
+pub use broadcast::Broadcast;
+pub use context::{Cluster, ClusterConfig, ClusterStats};
+pub use fault::FaultPlan;
+pub use memory::{MemSize, MemoryTracker};
+pub use rdd::{Data, Rdd};
+pub use shuffle::Backend;

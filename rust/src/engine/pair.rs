@@ -1,0 +1,459 @@
+//! Keyed (wide) operations: `group_by_key`, `reduce_by_key`,
+//! `count_by_key`, `join` — each introduces a shuffle stage boundary.
+//!
+//! The map stage hash-partitions every parent partition's pairs into
+//! reduce buckets through the cluster's [`ShuffleStore`] (in-memory or
+//! disk per backend); `reduce_by_key` additionally map-side combines,
+//! Spark's combiner optimization, which is what keeps the center-star
+//! space-matrix reduction cheap.
+//!
+//! Lineage recovery: a reduce task first checks that every map partition's
+//! outputs are present; missing ones (lost worker) are recomputed inline
+//! from the parent lineage before reading — the "RDDs will be recomputed
+//! after data loss" behaviour of the paper.
+
+use std::hash::Hash;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use anyhow::Result;
+
+use super::context::Cluster;
+use super::rdd::{Data, PartSrc, Rdd, ShuffleNode};
+use super::shuffle::ShuffleStore;
+use crate::util::hash::{partition_for, DetHashMap};
+use crate::util::{Decode, Encode};
+
+/// Key/value bounds for shuffled data (must cross the serialization
+/// boundary in DiskKv mode).
+pub trait KeyBound: Data + Hash + Eq + Encode + Decode {}
+impl<T: Data + Hash + Eq + Encode + Decode> KeyBound for T {}
+
+pub trait ValBound: Data + Encode + Decode {}
+impl<T: Data + Encode + Decode> ValBound for T {}
+
+/// Shared shuffle machinery for both keyed nodes.
+struct ShuffleStage<K: KeyBound, V: ValBound> {
+    ctx: Cluster,
+    parent: Arc<dyn PartSrc<(K, V)>>,
+    num_reduce: usize,
+    /// Map-side combiner (reduce_by_key); None groups raw pairs.
+    combiner: Option<Arc<dyn Fn(V, V) -> V + Send + Sync>>,
+    store: OnceLock<Arc<ShuffleStore<(K, V)>>>,
+    done: Mutex<bool>,
+}
+
+impl<K: KeyBound, V: ValBound> ShuffleStage<K, V> {
+    fn new(
+        ctx: Cluster,
+        parent: Arc<dyn PartSrc<(K, V)>>,
+        num_reduce: usize,
+        combiner: Option<Arc<dyn Fn(V, V) -> V + Send + Sync>>,
+    ) -> Self {
+        Self { ctx, parent, num_reduce, combiner, store: OnceLock::new(), done: Mutex::new(false) }
+    }
+
+    fn store(&self) -> Result<&Arc<ShuffleStore<(K, V)>>> {
+        if let Some(s) = self.store.get() {
+            return Ok(s);
+        }
+        let s = Arc::new(ShuffleStore::new(&self.ctx, self.num_reduce)?);
+        let _ = self.store.set(s);
+        Ok(self.store.get().unwrap())
+    }
+
+    fn materialize(&self) -> Result<()> {
+        let mut done = self.done.lock().unwrap();
+        if *done {
+            return Ok(());
+        }
+        for dep in self.parent.shuffle_deps() {
+            dep.ensure_materialized()?;
+        }
+        self.store()?; // create before tasks race to it
+        let num_map = self.parent.num_parts();
+        // Tasks need 'static captures: clone the stage pieces individually.
+        let parent = self.parent.clone();
+        let store = self.store()?.clone();
+        let num_reduce = self.num_reduce;
+        let combiner = self.combiner.clone();
+        self.ctx.executor().run_tasks(
+            num_map,
+            self.ctx.config().max_retries,
+            move |p| map_task(&parent, &store, num_reduce, &combiner, p),
+        )?;
+        *done = true;
+        Ok(())
+    }
+
+    /// Reduce-side read with lineage recovery for missing map outputs.
+    fn read_with_recovery(&self, reduce_part: usize) -> Result<Vec<(K, V)>> {
+        let store = self.store()?;
+        let num_map = self.parent.num_parts();
+        let present = store.present_map_parts(num_map);
+        for (m, ok) in present.iter().enumerate() {
+            if !ok {
+                // Lost output: recompute map task m from lineage, inline.
+                map_task(&self.parent, store, self.num_reduce, &self.combiner, m)?;
+            }
+        }
+        store.read_reduce(reduce_part, num_map)
+    }
+}
+
+/// Free-function map task so both `materialize` and recovery share it.
+fn map_task<K: KeyBound, V: ValBound>(
+    parent: &Arc<dyn PartSrc<(K, V)>>,
+    store: &Arc<ShuffleStore<(K, V)>>,
+    num_reduce: usize,
+    combiner: &Option<Arc<dyn Fn(V, V) -> V + Send + Sync>>,
+    p: usize,
+) -> Result<()> {
+    let data = parent.compute(p)?;
+    let mut buckets: Vec<Vec<(K, V)>> = (0..num_reduce).map(|_| Vec::new()).collect();
+    match combiner {
+        None => {
+            for (k, v) in data {
+                let r = partition_for(&k, num_reduce);
+                buckets[r].push((k, v));
+            }
+        }
+        Some(f) => {
+            let mut combined: DetHashMap<K, V> = DetHashMap::default();
+            for (k, v) in data {
+                match combined.remove(&k) {
+                    None => {
+                        combined.insert(k, v);
+                    }
+                    Some(prev) => {
+                        combined.insert(k, f(prev, v));
+                    }
+                }
+            }
+            for (k, v) in combined {
+                let r = partition_for(&k, num_reduce);
+                buckets[r].push((k, v));
+            }
+        }
+    }
+    for (r, bucket) in buckets.into_iter().enumerate() {
+        store.put(p, r, bucket)?;
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// group_by_key
+// ---------------------------------------------------------------------------
+
+struct GroupByNode<K: KeyBound, V: ValBound> {
+    stage: ShuffleStage<K, V>,
+    self_arc: OnceLock<Arc<dyn ShuffleNode>>,
+}
+
+impl<K: KeyBound, V: ValBound> PartSrc<(K, Vec<V>)> for GroupByNode<K, V> {
+    fn num_parts(&self) -> usize {
+        self.stage.num_reduce
+    }
+
+    fn compute(&self, part: usize) -> Result<Vec<(K, Vec<V>)>> {
+        let pairs = self.stage.read_with_recovery(part)?;
+        let mut groups: DetHashMap<K, Vec<V>> = DetHashMap::default();
+        for (k, v) in pairs {
+            groups.entry(k).or_default().push(v);
+        }
+        Ok(groups.into_iter().collect())
+    }
+
+    fn shuffle_deps(&self) -> Vec<Arc<dyn ShuffleNode>> {
+        vec![self.self_arc.get().expect("node registered").clone()]
+    }
+}
+
+// A node must hand out an Arc of itself as a ShuffleNode; OnceLock filled
+// right after construction (see group_by_key).
+impl<K: KeyBound, V: ValBound> GroupByNode<K, V> {
+    fn new(stage: ShuffleStage<K, V>) -> Arc<Self> {
+        let node = Arc::new(Self { stage, self_arc: OnceLock::new() });
+        let _ = node.self_arc.set(node.clone() as Arc<dyn ShuffleNode>);
+        node
+    }
+}
+
+impl<K: KeyBound, V: ValBound> ShuffleNode for GroupByNode<K, V> {
+    fn ensure_materialized(&self) -> Result<()> {
+        self.stage.materialize()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// reduce_by_key
+// ---------------------------------------------------------------------------
+
+struct ReduceByNode<K: KeyBound, V: ValBound> {
+    stage: ShuffleStage<K, V>,
+    f: Arc<dyn Fn(V, V) -> V + Send + Sync>,
+    self_arc: OnceLock<Arc<dyn ShuffleNode>>,
+}
+
+impl<K: KeyBound, V: ValBound> ReduceByNode<K, V> {
+    fn new(stage: ShuffleStage<K, V>, f: Arc<dyn Fn(V, V) -> V + Send + Sync>) -> Arc<Self> {
+        let node = Arc::new(Self { stage, f, self_arc: OnceLock::new() });
+        let _ = node.self_arc.set(node.clone() as Arc<dyn ShuffleNode>);
+        node
+    }
+}
+
+impl<K: KeyBound, V: ValBound> PartSrc<(K, V)> for ReduceByNode<K, V> {
+    fn num_parts(&self) -> usize {
+        self.stage.num_reduce
+    }
+
+    fn compute(&self, part: usize) -> Result<Vec<(K, V)>> {
+        let pairs = self.stage.read_with_recovery(part)?;
+        let mut acc: DetHashMap<K, V> = DetHashMap::default();
+        for (k, v) in pairs {
+            match acc.remove(&k) {
+                None => {
+                    acc.insert(k, v);
+                }
+                Some(prev) => {
+                    acc.insert(k, (self.f)(prev, v));
+                }
+            }
+        }
+        Ok(acc.into_iter().collect())
+    }
+
+    fn shuffle_deps(&self) -> Vec<Arc<dyn ShuffleNode>> {
+        vec![self.self_arc.get().expect("node registered").clone()]
+    }
+}
+
+impl<K: KeyBound, V: ValBound> ShuffleNode for ReduceByNode<K, V> {
+    fn ensure_materialized(&self) -> Result<()> {
+        self.stage.materialize()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Public pair API
+// ---------------------------------------------------------------------------
+
+impl<K: KeyBound, V: ValBound> Rdd<(K, V)> {
+    /// Hash-shuffle into `num_reduce` partitions, grouping values per key.
+    pub fn group_by_key(&self, num_reduce: usize) -> Rdd<(K, Vec<V>)> {
+        let stage = ShuffleStage::new(self.ctx.clone(), self.src.clone(), num_reduce.max(1), None);
+        let node = GroupByNode::new(stage);
+        Rdd::from_src(self.ctx.clone(), node)
+    }
+
+    /// Shuffle with map-side combining, then reduce per key.
+    pub fn reduce_by_key(
+        &self,
+        num_reduce: usize,
+        f: impl Fn(V, V) -> V + Send + Sync + 'static,
+    ) -> Rdd<(K, V)> {
+        let f: Arc<dyn Fn(V, V) -> V + Send + Sync> = Arc::new(f);
+        let stage = ShuffleStage::new(
+            self.ctx.clone(),
+            self.src.clone(),
+            num_reduce.max(1),
+            Some(f.clone()),
+        );
+        let node = ReduceByNode::new(stage, f);
+        Rdd::from_src(self.ctx.clone(), node)
+    }
+
+    pub fn count_by_key(&self, num_reduce: usize) -> Result<Vec<(K, usize)>> {
+        self.map(|(k, _)| (k, 1usize))
+            .reduce_by_key(num_reduce, |a, b| a + b)
+            .collect()
+    }
+
+    /// Inner hash join (both sides shuffled to `num_reduce` partitions).
+    pub fn join<W: ValBound>(&self, other: &Rdd<(K, W)>, num_reduce: usize) -> Rdd<(K, (V, W))> {
+        let left = self.group_by_key(num_reduce);
+        let right = other.group_by_key(num_reduce);
+        // Zip matching reduce partitions: same hash partitioner => same
+        // keys land in the same partition index on both sides.
+        let rs = right.src.clone();
+        Rdd::from_src(
+            self.ctx.clone(),
+            Arc::new(JoinNode { left: left.src.clone(), right: rs }),
+        )
+    }
+}
+
+struct JoinNode<K: KeyBound, V: ValBound, W: ValBound> {
+    left: Arc<dyn PartSrc<(K, Vec<V>)>>,
+    right: Arc<dyn PartSrc<(K, Vec<W>)>>,
+}
+
+impl<K: KeyBound, V: ValBound, W: ValBound> PartSrc<(K, (V, W))> for JoinNode<K, V, W> {
+    fn num_parts(&self) -> usize {
+        self.left.num_parts()
+    }
+
+    fn compute(&self, part: usize) -> Result<Vec<(K, (V, W))>> {
+        let mut rights: DetHashMap<K, Vec<W>> = DetHashMap::default();
+        for (k, ws) in self.right.compute(part)? {
+            rights.insert(k, ws);
+        }
+        let mut out = Vec::new();
+        for (k, vs) in self.left.compute(part)? {
+            if let Some(ws) = rights.get(&k) {
+                for v in &vs {
+                    for w in ws {
+                        out.push((k.clone(), (v.clone(), w.clone())));
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn shuffle_deps(&self) -> Vec<Arc<dyn ShuffleNode>> {
+        let mut deps = self.left.shuffle_deps();
+        deps.extend(self.right.shuffle_deps());
+        deps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::context::{Cluster, ClusterConfig};
+    use crate::engine::shuffle::Backend;
+
+    fn both_backends() -> Vec<Cluster> {
+        vec![
+            Cluster::new(ClusterConfig::spark(3)),
+            Cluster::new(ClusterConfig::hadoop(3)),
+        ]
+    }
+
+    #[test]
+    fn group_by_key_collects_all_values() {
+        for c in both_backends() {
+            let pairs: Vec<(u32, u32)> = (0..60).map(|i| (i % 5, i)).collect();
+            let mut groups = c.parallelize(pairs, 4).group_by_key(3).collect().unwrap();
+            groups.sort_by_key(|(k, _)| *k);
+            assert_eq!(groups.len(), 5);
+            for (k, vs) in groups {
+                assert_eq!(vs.len(), 12, "key {k}");
+                assert!(vs.iter().all(|v| v % 5 == k));
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_by_key_sums() {
+        for c in both_backends() {
+            let pairs: Vec<(String, u64)> =
+                (0..100).map(|i| (format!("k{}", i % 3), i)).collect();
+            let mut out = c.parallelize(pairs, 5).reduce_by_key(2, |a, b| a + b).collect().unwrap();
+            out.sort();
+            let expect = |r: u64| (0..100).filter(|i| i % 3 == r).sum::<u64>();
+            assert_eq!(
+                out,
+                vec![
+                    ("k0".to_string(), expect(0)),
+                    ("k1".to_string(), expect(1)),
+                    ("k2".to_string(), expect(2)),
+                ]
+            );
+        }
+    }
+
+    #[test]
+    fn count_by_key_counts() {
+        let c = Cluster::new(ClusterConfig::spark(2));
+        let pairs: Vec<(u8, u8)> = vec![(1, 0), (2, 0), (1, 0), (1, 0)];
+        let mut out = c.parallelize(pairs, 2).count_by_key(2).unwrap();
+        out.sort();
+        assert_eq!(out, vec![(1, 3), (2, 1)]);
+    }
+
+    #[test]
+    fn join_matches_keys() {
+        let c = Cluster::new(ClusterConfig::spark(3));
+        let left = c.parallelize(vec![(1u32, "a".to_string()), (2, "b".into()), (1, "c".into())], 2);
+        let right = c.parallelize(vec![(1u32, 10u32), (3, 30)], 2);
+        let mut out = left.join(&right, 2).collect().unwrap();
+        out.sort();
+        assert_eq!(
+            out,
+            vec![(1, ("a".to_string(), 10)), (1, ("c".to_string(), 10))]
+        );
+    }
+
+    #[test]
+    fn chained_shuffles_materialize_in_order() {
+        for c in both_backends() {
+            let pairs: Vec<(u32, u32)> = (0..40).map(|i| (i % 8, i)).collect();
+            // shuffle -> narrow -> shuffle
+            let out = c
+                .parallelize(pairs, 4)
+                .reduce_by_key(3, |a, b| a + b)
+                .map(|(k, v)| (k % 2, v))
+                .reduce_by_key(2, |a, b| a + b)
+                .collect()
+                .unwrap();
+            let total: u32 = out.iter().map(|(_, v)| v).sum();
+            assert_eq!(total, (0..40).sum());
+        }
+    }
+
+    #[test]
+    fn shuffle_is_lazy_until_action() {
+        let c = Cluster::new(ClusterConfig::spark(2));
+        let pairs: Vec<(u32, u32)> = (0..10).map(|i| (i, i)).collect();
+        let _grouped = c.parallelize(pairs, 2).group_by_key(2);
+        assert_eq!(c.stats().shuffles_executed, 0, "no action, no shuffle");
+    }
+
+    #[test]
+    fn shuffle_materializes_once_across_actions() {
+        let c = Cluster::new(ClusterConfig::spark(2));
+        let pairs: Vec<(u32, u32)> = (0..10).map(|i| (i % 2, i)).collect();
+        let grouped = c.parallelize(pairs, 2).group_by_key(2);
+        grouped.collect().unwrap();
+        grouped.count().unwrap();
+        assert_eq!(c.stats().shuffles_executed, 1);
+    }
+
+    #[test]
+    fn diskkv_shuffle_writes_and_reads_bytes() {
+        let c = Cluster::new(ClusterConfig::hadoop(2));
+        let pairs: Vec<(u32, u32)> = (0..50).map(|i| (i % 4, i)).collect();
+        c.parallelize(pairs, 3).group_by_key(2).collect().unwrap();
+        let st = c.stats();
+        assert!(st.shuffle_bytes_written > 0);
+        // Writes include the HDFS-style replication copies.
+        assert!(
+            st.shuffle_bytes_written
+                >= st.shuffle_bytes_read * c.config().disk_replication as u64
+        );
+    }
+
+    #[test]
+    fn inmemory_shuffle_holds_memory_diskkv_does_not() {
+        let make_pairs =
+            || -> Vec<(u32, Vec<u8>)> { (0..64).map(|i| (i % 4, vec![0u8; 4096])).collect() };
+        let spark = Cluster::new(ClusterConfig::spark(2));
+        let grouped = spark.parallelize(make_pairs(), 4).group_by_key(2);
+        grouped.collect().unwrap();
+        let spark_peak = spark.memory().max_peak_bytes();
+
+        let hadoop = Cluster::new(ClusterConfig::hadoop(2));
+        let grouped = hadoop.parallelize(make_pairs(), 4).group_by_key(2);
+        grouped.collect().unwrap();
+        let _ = hadoop.memory().max_peak_bytes();
+        // Spark's resident shuffle buffers must show up as extra peak
+        // memory relative to its own baseline input.
+        assert!(
+            spark_peak > 64 * 4096,
+            "spark peak {spark_peak} should include shuffle buffers"
+        );
+    }
+}

@@ -1,0 +1,634 @@
+//! Lazy, lineage-tracked RDDs (paper §Overview of Apache Spark).
+//!
+//! *Transformations* (`map`, `filter`, `flat_map`, `map_partitions`,
+//! `sample`, `union`, keyed ops in [`super::pair`]) only build the lineage
+//! graph; *actions* (`collect`, `count`, `reduce`, ...) materialize
+//! upstream shuffle stages first (wide dependencies = stage boundaries,
+//! exactly Spark's DAG scheduler cut) and then run the final narrow stage
+//! as one task set.  Narrow chains fuse: a task computes its partition by
+//! recursing through its parents in a single pass, which is Spark's
+//! pipelined-stage execution.
+//!
+//! Fault tolerance is lineage-based: a failed task retries by recomputing
+//! its parent partitions; lost shuffle map outputs are detected by reduce
+//! tasks and recomputed from the parent lineage (see `pair.rs`).
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Result};
+
+use super::context::Cluster;
+use super::memory::{slice_bytes, MemSize};
+use super::shuffle::Backend;
+use crate::util::{Decode, Encode, Rng};
+
+/// Element bound for everything that flows through the engine.
+pub trait Data: Clone + Send + Sync + MemSize + 'static {}
+impl<T: Clone + Send + Sync + MemSize + 'static> Data for T {}
+
+/// A node that can produce the contents of one partition.
+pub trait PartSrc<T: Data>: Send + Sync {
+    fn num_parts(&self) -> usize;
+    fn compute(&self, part: usize) -> Result<Vec<T>>;
+    /// Wide dependencies that must be materialized before this node's
+    /// partitions can be computed (transitively closed by recursion).
+    fn shuffle_deps(&self) -> Vec<Arc<dyn ShuffleNode>>;
+}
+
+/// Object-safe view of a shuffle stage for the pre-action scheduler walk.
+pub trait ShuffleNode: Send + Sync {
+    /// Run the map stage if not already done (idempotent, thread-safe);
+    /// materializes upstream shuffles first.
+    fn ensure_materialized(&self) -> Result<()>;
+}
+
+/// A distributed dataset handle.
+pub struct Rdd<T: Data> {
+    pub(crate) ctx: Cluster,
+    pub(crate) src: Arc<dyn PartSrc<T>>,
+}
+
+impl<T: Data> Clone for Rdd<T> {
+    fn clone(&self) -> Self {
+        Self { ctx: self.ctx.clone(), src: self.src.clone() }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Source node
+// ---------------------------------------------------------------------------
+
+struct SourceNode<T: Data> {
+    ctx: Cluster,
+    parts: Vec<Arc<Vec<T>>>,
+    charged: Vec<(usize, usize)>, // (worker, bytes) released on drop
+}
+
+impl<T: Data> PartSrc<T> for SourceNode<T> {
+    fn num_parts(&self) -> usize {
+        self.parts.len()
+    }
+
+    fn compute(&self, part: usize) -> Result<Vec<T>> {
+        Ok(self.parts[part].as_ref().clone())
+    }
+
+    fn shuffle_deps(&self) -> Vec<Arc<dyn ShuffleNode>> {
+        Vec::new()
+    }
+}
+
+impl<T: Data> Drop for SourceNode<T> {
+    fn drop(&mut self) {
+        for &(w, b) in &self.charged {
+            self.ctx.memory().worker(w).release(b);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Narrow transformation nodes
+// ---------------------------------------------------------------------------
+
+/// map_partitions_with_index — the one narrow primitive every other narrow
+/// op lowers to (matching Spark's `MapPartitionsRDD`).
+struct MapPartsNode<U: Data, T: Data> {
+    parent: Arc<dyn PartSrc<U>>,
+    #[allow(clippy::type_complexity)]
+    f: Arc<dyn Fn(usize, Vec<U>) -> Vec<T> + Send + Sync>,
+}
+
+impl<U: Data, T: Data> PartSrc<T> for MapPartsNode<U, T> {
+    fn num_parts(&self) -> usize {
+        self.parent.num_parts()
+    }
+
+    fn compute(&self, part: usize) -> Result<Vec<T>> {
+        Ok((self.f)(part, self.parent.compute(part)?))
+    }
+
+    fn shuffle_deps(&self) -> Vec<Arc<dyn ShuffleNode>> {
+        self.parent.shuffle_deps()
+    }
+}
+
+struct UnionNode<T: Data> {
+    left: Arc<dyn PartSrc<T>>,
+    right: Arc<dyn PartSrc<T>>,
+}
+
+impl<T: Data> PartSrc<T> for UnionNode<T> {
+    fn num_parts(&self) -> usize {
+        self.left.num_parts() + self.right.num_parts()
+    }
+
+    fn compute(&self, part: usize) -> Result<Vec<T>> {
+        let nl = self.left.num_parts();
+        if part < nl {
+            self.left.compute(part)
+        } else {
+            self.right.compute(part - nl)
+        }
+    }
+
+    fn shuffle_deps(&self) -> Vec<Arc<dyn ShuffleNode>> {
+        let mut deps = self.left.shuffle_deps();
+        deps.extend(self.right.shuffle_deps());
+        deps
+    }
+}
+
+/// Cached node: first computation per partition is stored (and charged to
+/// the owning worker); later computations clone from cache — Spark's
+/// `persist(MEMORY_ONLY)`.
+struct CacheNode<T: Data> {
+    ctx: Cluster,
+    parent: Arc<dyn PartSrc<T>>,
+    slots: Vec<Mutex<Option<Arc<Vec<T>>>>>,
+}
+
+impl<T: Data> PartSrc<T> for CacheNode<T> {
+    fn num_parts(&self) -> usize {
+        self.parent.num_parts()
+    }
+
+    fn compute(&self, part: usize) -> Result<Vec<T>> {
+        let mut slot = self.slots[part].lock().unwrap();
+        if let Some(cached) = slot.as_ref() {
+            return Ok(cached.as_ref().clone());
+        }
+        let data = self.parent.compute(part)?;
+        let worker = self.ctx.executor().worker_for(part);
+        self.ctx.memory().worker(worker).acquire(slice_bytes(&data));
+        *slot = Some(Arc::new(data.clone()));
+        Ok(data)
+    }
+
+    fn shuffle_deps(&self) -> Vec<Arc<dyn ShuffleNode>> {
+        self.parent.shuffle_deps()
+    }
+}
+
+impl<T: Data> Drop for CacheNode<T> {
+    fn drop(&mut self) {
+        for (part, slot) in self.slots.iter().enumerate() {
+            if let Some(data) = slot.lock().unwrap().take() {
+                let worker = self.ctx.executor().worker_for(part);
+                self.ctx.memory().worker(worker).release(slice_bytes(&data));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rdd API
+// ---------------------------------------------------------------------------
+
+impl<T: Data> Rdd<T> {
+    pub(crate) fn from_src(ctx: Cluster, src: Arc<dyn PartSrc<T>>) -> Self {
+        Self { ctx, src }
+    }
+
+    /// `Cluster::parallelize` — chunk a local vec into `parts` partitions
+    /// and charge them to their owning workers (they are "cached input").
+    pub(crate) fn from_vec(ctx: Cluster, items: Vec<T>, parts: usize) -> Self {
+        let n = items.len();
+        let per = n.div_ceil(parts.max(1)).max(1);
+        let mut chunks: Vec<Arc<Vec<T>>> = Vec::new();
+        let mut iter = items.into_iter();
+        loop {
+            let chunk: Vec<T> = iter.by_ref().take(per).collect();
+            if chunk.is_empty() && !chunks.is_empty() {
+                break;
+            }
+            let done = chunk.len() < per;
+            chunks.push(Arc::new(chunk));
+            if done {
+                break;
+            }
+        }
+        let mut charged = Vec::new();
+        for (p, c) in chunks.iter().enumerate() {
+            let worker = ctx.executor().worker_for(p);
+            let bytes = slice_bytes(c.as_ref());
+            ctx.memory().worker(worker).acquire(bytes);
+            charged.push((worker, bytes));
+        }
+        let node = SourceNode { ctx: ctx.clone(), parts: chunks, charged };
+        Self::from_src(ctx, Arc::new(node))
+    }
+
+    pub fn context(&self) -> &Cluster {
+        &self.ctx
+    }
+
+    pub fn num_partitions(&self) -> usize {
+        self.src.num_parts()
+    }
+
+    // -- transformations ---------------------------------------------------
+
+    pub fn map_partitions_with_index<U: Data>(
+        &self,
+        f: impl Fn(usize, Vec<T>) -> Vec<U> + Send + Sync + 'static,
+    ) -> Rdd<U> {
+        Rdd::from_src(
+            self.ctx.clone(),
+            Arc::new(MapPartsNode { parent: self.src.clone(), f: Arc::new(f) }),
+        )
+    }
+
+    pub fn map<U: Data>(&self, f: impl Fn(T) -> U + Send + Sync + 'static) -> Rdd<U> {
+        self.map_partitions_with_index(move |_, xs| xs.into_iter().map(&f).collect())
+    }
+
+    pub fn filter(&self, f: impl Fn(&T) -> bool + Send + Sync + 'static) -> Rdd<T> {
+        self.map_partitions_with_index(move |_, xs| xs.into_iter().filter(|x| f(x)).collect())
+    }
+
+    pub fn flat_map<U: Data>(
+        &self,
+        f: impl Fn(T) -> Vec<U> + Send + Sync + 'static,
+    ) -> Rdd<U> {
+        self.map_partitions_with_index(move |_, xs| xs.into_iter().flat_map(&f).collect())
+    }
+
+    pub fn key_by<K: Data>(&self, f: impl Fn(&T) -> K + Send + Sync + 'static) -> Rdd<(K, T)> {
+        self.map(move |x| (f(&x), x))
+    }
+
+    /// Bernoulli sample without replacement; deterministic per (seed, part).
+    pub fn sample(&self, fraction: f64, seed: u64) -> Rdd<T> {
+        self.map_partitions_with_index(move |part, xs| {
+            let mut rng = Rng::seed_from_u64(seed ^ (part as u64).wrapping_mul(0x9E37));
+            xs.into_iter().filter(|_| rng.chance(fraction)).collect()
+        })
+    }
+
+    pub fn union(&self, other: &Rdd<T>) -> Rdd<T> {
+        Rdd::from_src(
+            self.ctx.clone(),
+            Arc::new(UnionNode { left: self.src.clone(), right: other.src.clone() }),
+        )
+    }
+
+    /// Persist partitions in worker memory after first computation.
+    pub fn cache(&self) -> Rdd<T> {
+        let slots = (0..self.src.num_parts()).map(|_| Mutex::new(None)).collect();
+        Rdd::from_src(
+            self.ctx.clone(),
+            Arc::new(CacheNode { ctx: self.ctx.clone(), parent: self.src.clone(), slots }),
+        )
+    }
+
+    /// Pair each element with a global index (two-pass, like Spark's
+    /// `zipWithIndex`: a count job then an offset map).
+    pub fn zip_with_index(&self) -> Result<Rdd<(u64, T)>> {
+        let lens = self.partition_lengths()?;
+        let mut offsets = vec![0u64; lens.len() + 1];
+        for (i, l) in lens.iter().enumerate() {
+            offsets[i + 1] = offsets[i] + *l as u64;
+        }
+        Ok(self.map_partitions_with_index(move |part, xs| {
+            xs.into_iter()
+                .enumerate()
+                .map(|(i, x)| (offsets[part] + i as u64, x))
+                .collect()
+        }))
+    }
+
+    // -- actions -----------------------------------------------------------
+
+    fn prepare(&self) -> Result<()> {
+        for dep in self.src.shuffle_deps() {
+            dep.ensure_materialized()?;
+        }
+        Ok(())
+    }
+
+    /// Run one task per partition, handing each task its computed
+    /// partition. The fundamental action the others build on.
+    pub fn run_partitions<R: Send + 'static>(
+        &self,
+        f: impl Fn(usize, Vec<T>) -> Result<R> + Send + Sync + 'static,
+    ) -> Result<Vec<R>> {
+        self.prepare()?;
+        let n = self.src.num_parts();
+        let out: Arc<Mutex<Vec<Option<R>>>> =
+            Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+        let src = self.src.clone();
+        let ctx = self.ctx.clone();
+        let out2 = out.clone();
+        self.ctx.executor().run_tasks(
+            n,
+            self.ctx.config().max_retries,
+            move |part| {
+                let data = src.compute(part)?;
+                // Charge the in-flight partition to the worker for the
+                // task's duration (transient stage memory).
+                let worker = ctx.executor().worker_for(part);
+                let bytes = slice_bytes(&data);
+                ctx.memory().worker(worker).acquire(bytes);
+                let result = f(part, data);
+                ctx.memory().worker(worker).release(bytes);
+                out2.lock().unwrap()[part] = Some(result?);
+                Ok(())
+            },
+        )?;
+        let collected = std::mem::take(&mut *out.lock().unwrap());
+        collected
+            .into_iter()
+            .enumerate()
+            .map(|(i, r)| r.ok_or_else(|| anyhow!("partition {i} produced no result")))
+            .collect()
+    }
+
+    pub fn collect(&self) -> Result<Vec<T>> {
+        let parts = self.run_partitions(|_, xs| Ok(xs))?;
+        Ok(parts.into_iter().flatten().collect())
+    }
+
+    pub fn count(&self) -> Result<usize> {
+        Ok(self.run_partitions(|_, xs| Ok(xs.len()))?.into_iter().sum())
+    }
+
+    fn partition_lengths(&self) -> Result<Vec<usize>> {
+        self.run_partitions(|_, xs| Ok(xs.len()))
+    }
+
+    pub fn first(&self) -> Result<Option<T>> {
+        // Cheap for sources; computes all partitions otherwise (fine for
+        // our workloads, which call this on small RDDs).
+        Ok(self.collect()?.into_iter().next())
+    }
+
+    pub fn reduce(&self, f: impl Fn(T, T) -> T + Send + Sync + 'static) -> Result<Option<T>> {
+        let f = Arc::new(f);
+        let g = f.clone();
+        let partials = self.run_partitions(move |_, xs| Ok(xs.into_iter().reduce(|a, b| g(a, b))))?;
+        Ok(partials.into_iter().flatten().reduce(|a, b| f(a, b)))
+    }
+
+    /// Job-boundary materialization. In `DiskKv` (Hadoop) mode the
+    /// partitions are encoded and written to the scratch dir, then read
+    /// back lazily — the inter-job HDFS round trip of a MapReduce chain.
+    /// In `InMemory` (Spark) mode this is `cache()`.
+    pub fn checkpoint(&self) -> Result<Rdd<T>>
+    where
+        T: Encode + Decode,
+    {
+        match self.ctx.backend() {
+            Backend::InMemory => {
+                let cached = self.cache();
+                // Materialize now (a job boundary is eager in Hadoop, so
+                // keep the comparison honest).
+                cached.run_partitions(|_, _| Ok(()))?;
+                Ok(cached)
+            }
+            Backend::DiskKv => {
+                let dir = self
+                    .ctx
+                    .scratch_dir()?
+                    .join(format!("checkpoint-{}", self.ctx.next_shuffle_id()));
+                std::fs::create_dir_all(&dir)?;
+                let dir2 = dir.clone();
+                let ctx = self.ctx.clone();
+                self.run_partitions(move |part, xs| {
+                    // Job-boundary write pays the same taxes as a shuffle
+                    // spill: serialization buffers with JVM KV bloat, and
+                    // HDFS-style block replication.
+                    let bytes = xs.to_bytes();
+                    let worker = ctx.executor().worker_for(part);
+                    let charge = bytes.len() * 2 * ctx.config().kv_overhead.max(1);
+                    ctx.memory().worker(worker).acquire(charge);
+                    let result = (|| -> Result<()> {
+                        for copy in 0..ctx.config().disk_replication.max(1) {
+                            let name = if copy == 0 {
+                                format!("part-{part:05}.kv")
+                            } else {
+                                format!("part-{part:05}.kv.r{copy}")
+                            };
+                            std::fs::write(dir2.join(name), &bytes)?;
+                            ctx.io().shuffle_bytes_written.fetch_add(
+                                bytes.len() as u64,
+                                std::sync::atomic::Ordering::Relaxed,
+                            );
+                        }
+                        Ok(())
+                    })();
+                    ctx.memory().worker(worker).release(charge);
+                    result?;
+                    Ok(())
+                })?;
+                let n = self.src.num_parts();
+                let ctx = self.ctx.clone();
+                Ok(Rdd::from_src(
+                    self.ctx.clone(),
+                    Arc::new(DiskPartsNode { ctx, dir, parts: n, _marker: std::marker::PhantomData }),
+                ))
+            }
+        }
+    }
+}
+
+/// Partitions persisted as encoded files (checkpoint outputs).
+struct DiskPartsNode<T> {
+    ctx: Cluster,
+    dir: std::path::PathBuf,
+    parts: usize,
+    _marker: std::marker::PhantomData<fn() -> T>,
+}
+
+impl<T: Data + Encode + Decode> PartSrc<T> for DiskPartsNode<T> {
+    fn num_parts(&self) -> usize {
+        self.parts
+    }
+
+    fn compute(&self, part: usize) -> Result<Vec<T>> {
+        let path = self.dir.join(format!("part-{part:05}.kv"));
+        let bytes = std::fs::read(&path)?;
+        self.ctx
+            .io()
+            .shuffle_bytes_read
+            .fetch_add(bytes.len() as u64, std::sync::atomic::Ordering::Relaxed);
+        // Reduce-side deserialization buffer with the JVM KV bloat —
+        // every downstream job re-pays this at the boundary (the paper's
+        // "key-value pair conversion operators").
+        let worker = self.ctx.executor().worker_for(part);
+        let charge = bytes.len() * self.ctx.config().kv_overhead.max(1);
+        self.ctx.memory().worker(worker).acquire(charge);
+        let out = Vec::<T>::from_bytes(&bytes);
+        self.ctx.memory().worker(worker).release(charge);
+        out
+    }
+
+    fn shuffle_deps(&self) -> Vec<Arc<dyn ShuffleNode>> {
+        Vec::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::context::{Cluster, ClusterConfig};
+
+    fn cluster() -> Cluster {
+        Cluster::new(ClusterConfig::spark(3))
+    }
+
+    #[test]
+    fn parallelize_partitions_evenly() {
+        let c = cluster();
+        let rdd = c.parallelize((0..100u32).collect(), 7);
+        assert_eq!(rdd.num_partitions(), 7);
+        let mut all = rdd.collect().unwrap();
+        all.sort();
+        assert_eq!(all, (0..100).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn parallelize_empty_is_single_empty_partition() {
+        let c = cluster();
+        let rdd = c.parallelize(Vec::<u32>::new(), 4);
+        assert_eq!(rdd.count().unwrap(), 0);
+    }
+
+    #[test]
+    fn map_filter_flatmap_chain() {
+        let c = cluster();
+        let out = c
+            .parallelize((1..=10u32).collect(), 3)
+            .map(|x| x * 2)
+            .filter(|x| x % 3 == 0)
+            .flat_map(|x| vec![x, x + 1])
+            .collect()
+            .unwrap();
+        let mut sorted = out.clone();
+        sorted.sort();
+        assert_eq!(sorted, vec![6, 7, 12, 13, 18, 19]);
+    }
+
+    #[test]
+    fn count_and_reduce() {
+        let c = cluster();
+        let rdd = c.parallelize((1..=100u64).collect(), 8);
+        assert_eq!(rdd.count().unwrap(), 100);
+        assert_eq!(rdd.reduce(|a, b| a + b).unwrap(), Some(5050));
+    }
+
+    #[test]
+    fn reduce_empty_is_none() {
+        let c = cluster();
+        assert_eq!(
+            c.parallelize(Vec::<u32>::new(), 2).reduce(|a, b| a + b).unwrap(),
+            None
+        );
+    }
+
+    #[test]
+    fn sample_is_deterministic_and_rough() {
+        let c = cluster();
+        let rdd = c.parallelize((0..2000u32).collect(), 5);
+        let a = rdd.sample(0.1, 7).collect().unwrap();
+        let b = rdd.sample(0.1, 7).collect().unwrap();
+        assert_eq!(a, b);
+        assert!(a.len() > 120 && a.len() < 300, "got {}", a.len());
+    }
+
+    #[test]
+    fn union_concatenates() {
+        let c = cluster();
+        let a = c.parallelize(vec![1u32, 2], 2);
+        let b = c.parallelize(vec![3u32], 1);
+        let mut out = a.union(&b).collect().unwrap();
+        out.sort();
+        assert_eq!(out, vec![1, 2, 3]);
+        assert_eq!(a.union(&b).num_partitions(), 3);
+    }
+
+    #[test]
+    fn zip_with_index_is_globally_contiguous() {
+        let c = cluster();
+        let rdd = c.parallelize((10..60u32).collect(), 4).zip_with_index().unwrap();
+        let mut out = rdd.collect().unwrap();
+        out.sort_by_key(|(i, _)| *i);
+        assert_eq!(out.len(), 50);
+        assert_eq!(out[0], (0, 10));
+        assert_eq!(out[49], (49, 59));
+    }
+
+    #[test]
+    fn cache_computes_parent_once() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let c = cluster();
+        let calls = Arc::new(AtomicUsize::new(0));
+        let k = calls.clone();
+        let rdd = c
+            .parallelize((0..20u32).collect(), 4)
+            .map(move |x| {
+                k.fetch_add(1, Ordering::SeqCst);
+                x
+            })
+            .cache();
+        rdd.collect().unwrap();
+        rdd.collect().unwrap();
+        rdd.count().unwrap();
+        assert_eq!(calls.load(Ordering::SeqCst), 20, "parent ran once");
+    }
+
+    #[test]
+    fn cache_charges_worker_memory_until_drop() {
+        let c = cluster();
+        let before = c.memory().total_current();
+        {
+            let rdd = c.parallelize(vec![vec![0u8; 1000]; 12], 3).cache();
+            rdd.collect().unwrap();
+            assert!(c.memory().total_current() >= before + 12_000);
+            drop(rdd);
+        }
+        assert!(c.memory().total_current() <= before + 1000);
+    }
+
+    #[test]
+    fn checkpoint_roundtrips_in_both_backends() {
+        for cfg in [ClusterConfig::spark(2), ClusterConfig::hadoop(2)] {
+            let is_disk = cfg.backend == Backend::DiskKv;
+            let c = Cluster::new(cfg);
+            let rdd = c.parallelize((0..50u32).collect(), 4).map(|x| x + 1);
+            let ck = rdd.checkpoint().unwrap();
+            let mut out = ck.collect().unwrap();
+            out.sort();
+            assert_eq!(out, (1..=50).collect::<Vec<u32>>());
+            if is_disk {
+                assert!(c.stats().shuffle_bytes_written > 0);
+            } else {
+                assert_eq!(c.stats().shuffle_bytes_written, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn run_partitions_preserves_order() {
+        let c = cluster();
+        let rdd = c.parallelize((0..40u32).collect(), 5);
+        let sums = rdd.run_partitions(|_, xs| Ok(xs.iter().sum::<u32>())).unwrap();
+        assert_eq!(sums.len(), 5);
+        assert_eq!(sums.iter().sum::<u32>(), (0..40).sum());
+    }
+
+    #[test]
+    fn failing_partition_surfaces_error() {
+        let c = cluster();
+        let rdd = c.parallelize((0..10u32).collect(), 2);
+        let err = rdd
+            .run_partitions(|p, _| {
+                if p == 1 {
+                    anyhow::bail!("bad partition")
+                } else {
+                    Ok(())
+                }
+            })
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("bad partition"));
+    }
+}

@@ -1,0 +1,341 @@
+//! Shuffle backends — the architectural difference the paper measures.
+//!
+//! * [`Backend::InMemory`] (Spark): map-side buckets stay resident as
+//!   native `Vec<T>`s until the consuming stage finishes.  No
+//!   serialization, no disk; memory is charged to the map-side worker for
+//!   the store's lifetime.
+//! * [`Backend::DiskKv`] (Hadoop): every bucket is length-prefix encoded
+//!   and spilled to a per-shuffle directory; reducers read the files back
+//!   and decode.  Memory stays flat but each record pays the
+//!   encode+write+read+decode "key-value pair conversion" tax the paper
+//!   blames for HAlign v1's slowdown and HPTree's memory spikes.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context as _, Result};
+
+use super::context::Cluster;
+use crate::util::{Decode, Encode};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    InMemory,
+    DiskKv,
+}
+
+impl std::fmt::Display for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Backend::InMemory => write!(f, "spark/in-memory"),
+            Backend::DiskKv => write!(f, "hadoop/disk-kv"),
+        }
+    }
+}
+
+/// Map-output store for one shuffle: buckets indexed by (map, reduce)
+/// partition. Thread-safe; map tasks `put` concurrently, reduce tasks
+/// `read_reduce` after the map stage completes.
+pub struct ShuffleStore<T> {
+    backend: Backend,
+    cluster: Cluster,
+    num_reduce: usize,
+    /// In-memory buckets; also used by DiskKv for nothing (kept empty).
+    mem: Mutex<HashMap<(usize, usize), Arc<Vec<T>>>>,
+    /// Bytes charged per map worker (released on drop).
+    charged: Mutex<Vec<(usize, usize)>>,
+    dir: Option<PathBuf>,
+}
+
+impl<T: Clone + Encode + Decode + crate::engine::memory::MemSize> ShuffleStore<T> {
+    pub fn new(cluster: &Cluster, num_reduce: usize) -> Result<Self> {
+        let backend = cluster.backend();
+        let dir = match backend {
+            Backend::InMemory => None,
+            Backend::DiskKv => {
+                let d = cluster
+                    .scratch_dir()?
+                    .join(format!("shuffle-{}", cluster.next_shuffle_id()));
+                std::fs::create_dir_all(&d)?;
+                Some(d)
+            }
+        };
+        cluster.io().shuffles_executed.fetch_add(1, Ordering::Relaxed);
+        Ok(Self {
+            backend,
+            cluster: cluster.clone(),
+            num_reduce,
+            mem: Mutex::new(HashMap::new()),
+            charged: Mutex::new(Vec::new()),
+            dir: None.or(dir),
+        })
+    }
+
+    pub fn num_reduce(&self) -> usize {
+        self.num_reduce
+    }
+
+    fn bucket_path(&self, map_part: usize, reduce_part: usize) -> PathBuf {
+        self.dir
+            .as_ref()
+            .expect("disk path only in DiskKv mode")
+            .join(format!("m{map_part}-r{reduce_part}.kv"))
+    }
+
+    /// Store one map task's bucket for a reduce partition.
+    pub fn put(&self, map_part: usize, reduce_part: usize, data: Vec<T>) -> Result<()> {
+        debug_assert!(reduce_part < self.num_reduce);
+        let worker = self.cluster.executor().worker_for(map_part);
+        match self.backend {
+            Backend::InMemory => {
+                let bytes = crate::engine::memory::slice_bytes(&data);
+                self.cluster.memory().worker(worker).acquire(bytes);
+                self.charged.lock().unwrap().push((worker, bytes));
+                self.mem
+                    .lock()
+                    .unwrap()
+                    .insert((map_part, reduce_part), Arc::new(data));
+            }
+            Backend::DiskKv => {
+                // Hadoop path: MapReduce's sort-merge shuffle — every
+                // record is serialized, records are sorted (the framework
+                // always sorts map outputs), the sort buffer pays the JVM
+                // Writable-object bloat, and the spill is replicated like
+                // an HDFS block (dfs.replication).
+                let cfg = self.cluster.config();
+                let mut records: Vec<Vec<u8>> =
+                    data.iter().map(|item| item.to_bytes()).collect();
+                let payload: usize = records.iter().map(Vec::len).sum();
+                let mem = self.cluster.memory().worker(worker);
+                // Sort buffer + merge scratch, bloated by the KV factor.
+                let charge = payload * 2 * cfg.kv_overhead.max(1);
+                mem.acquire(charge);
+                records.sort_unstable();
+                let mut buf = Vec::with_capacity(payload + 8 * records.len() + 8);
+                (records.len() as u64).encode(&mut buf);
+                for r in &records {
+                    (r.len() as u64).encode(&mut buf);
+                    buf.extend_from_slice(r);
+                }
+                let result = (|| -> Result<()> {
+                    for copy in 0..cfg.disk_replication.max(1) {
+                        let path = self.bucket_path(map_part, reduce_part);
+                        let path = if copy == 0 {
+                            path
+                        } else {
+                            path.with_extension(format!("kv.r{copy}"))
+                        };
+                        std::fs::File::create(&path)
+                            .and_then(|mut f| f.write_all(&buf))
+                            .with_context(|| format!("spilling {}", path.display()))?;
+                        self.cluster
+                            .io()
+                            .shuffle_bytes_written
+                            .fetch_add(buf.len() as u64, Ordering::Relaxed);
+                        self.cluster.io().spill_files.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Ok(())
+                })();
+                mem.release(charge);
+                result?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Gather every map task's bucket for `reduce_part` (map stage must be
+    /// complete). `num_map` tells the reader how many files to expect.
+    pub fn read_reduce(&self, reduce_part: usize, num_map: usize) -> Result<Vec<T>> {
+        let mut out = Vec::new();
+        match self.backend {
+            Backend::InMemory => {
+                let mem = self.mem.lock().unwrap();
+                for m in 0..num_map {
+                    if let Some(bucket) = mem.get(&(m, reduce_part)) {
+                        out.extend(bucket.iter().cloned());
+                    }
+                }
+            }
+            Backend::DiskKv => {
+                let worker = self.cluster.executor().worker_for(reduce_part);
+                for m in 0..num_map {
+                    let path = self.bucket_path(m, reduce_part);
+                    if !path.exists() {
+                        continue; // empty bucket was never written
+                    }
+                    let mut buf = Vec::new();
+                    std::fs::File::open(&path)
+                        .and_then(|mut f| f.read_to_end(&mut buf))
+                        .with_context(|| format!("reading {}", path.display()))?;
+                    self.cluster
+                        .io()
+                        .shuffle_bytes_read
+                        .fetch_add(buf.len() as u64, Ordering::Relaxed);
+                    // Reduce-side merge buffer, with the JVM KV bloat.
+                    let mem = self.cluster.memory().worker(worker);
+                    let charge = buf.len() * self.cluster.config().kv_overhead.max(1);
+                    mem.acquire(charge);
+                    let decoded = decode_framed::<T>(&buf);
+                    mem.release(charge);
+                    out.extend(decoded?);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Drop map outputs for partitions owned by `worker` — simulates losing
+    /// that node after the map stage; the scheduler must recompute them.
+    pub fn drop_worker_outputs(&self, worker: usize, num_map: usize) {
+        match self.backend {
+            Backend::InMemory => {
+                let mut mem = self.mem.lock().unwrap();
+                mem.retain(|(m, _), _| self.cluster.executor().worker_for(*m) != worker);
+            }
+            Backend::DiskKv => {
+                for m in 0..num_map {
+                    if self.cluster.executor().worker_for(m) == worker {
+                        for r in 0..self.num_reduce {
+                            let _ = std::fs::remove_file(self.bucket_path(m, r));
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Which map partitions currently have outputs present for all their
+    /// reduce buckets (used by recompute-after-loss).
+    pub fn present_map_parts(&self, num_map: usize) -> Vec<bool> {
+        let mut present = vec![false; num_map];
+        match self.backend {
+            Backend::InMemory => {
+                let mem = self.mem.lock().unwrap();
+                for ((m, _), _) in mem.iter() {
+                    present[*m] = true;
+                }
+            }
+            Backend::DiskKv => {
+                for (m, p) in present.iter_mut().enumerate() {
+                    *p = (0..self.num_reduce).any(|r| self.bucket_path(m, r).exists());
+                }
+            }
+        }
+        present
+    }
+}
+
+impl<T> Drop for ShuffleStore<T> {
+    fn drop(&mut self) {
+        for (worker, bytes) in self.charged.lock().unwrap().drain(..) {
+            self.cluster.memory().worker(worker).release(bytes);
+        }
+        if let Some(dir) = &self.dir {
+            let _ = std::fs::remove_dir_all(dir);
+        }
+    }
+}
+
+/// Decode the sort-merge spill framing: u64 count, then per record a u64
+/// length prefix + encoded bytes (records were sorted lexicographically
+/// by encoding on the map side).
+fn decode_framed<T: Decode>(mut bytes: &[u8]) -> Result<Vec<T>> {
+    let input = &mut bytes;
+    let count = u64::decode(input)? as usize;
+    let mut out = Vec::with_capacity(count.min(1 << 20));
+    for _ in 0..count {
+        let len = u64::decode(input)? as usize;
+        anyhow::ensure!(input.len() >= len, "spill record truncated");
+        let (head, tail) = input.split_at(len);
+        let mut head = head;
+        out.push(T::decode(&mut head)?);
+        anyhow::ensure!(head.is_empty(), "spill record has trailing bytes");
+        *input = tail;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::context::{Cluster, ClusterConfig};
+
+    fn mk(backend: Backend) -> Cluster {
+        let mut cfg = ClusterConfig::spark(3);
+        cfg.backend = backend;
+        Cluster::new(cfg)
+    }
+
+    fn roundtrip(backend: Backend) {
+        let c = mk(backend);
+        let store: ShuffleStore<(u32, String)> = ShuffleStore::new(&c, 2).unwrap();
+        store.put(0, 0, vec![(1, "a".into()), (2, "b".into())]).unwrap();
+        store.put(1, 0, vec![(3, "c".into())]).unwrap();
+        store.put(1, 1, vec![(4, "d".into())]).unwrap();
+        let r0 = store.read_reduce(0, 2).unwrap();
+        assert_eq!(r0.len(), 3);
+        let r1 = store.read_reduce(1, 2).unwrap();
+        assert_eq!(r1, vec![(4, "d".to_string())]);
+        assert!(store.read_reduce(0, 2).unwrap().len() == 3, "re-read ok");
+    }
+
+    #[test]
+    fn inmemory_roundtrip() {
+        roundtrip(Backend::InMemory);
+    }
+
+    #[test]
+    fn diskkv_roundtrip_and_counters() {
+        let c = mk(Backend::DiskKv);
+        let store: ShuffleStore<(u32, u32)> = ShuffleStore::new(&c, 2).unwrap();
+        store.put(0, 0, vec![(1, 10), (2, 20)]).unwrap();
+        store.put(0, 1, vec![(3, 30)]).unwrap();
+        assert_eq!(store.read_reduce(0, 1).unwrap(), vec![(1, 10), (2, 20)]);
+        let st = c.stats();
+        assert!(st.shuffle_bytes_written > 0, "disk mode must spill");
+        assert!(st.shuffle_bytes_read > 0);
+    }
+
+    #[test]
+    fn inmemory_never_touches_disk() {
+        let c = mk(Backend::InMemory);
+        let store: ShuffleStore<(u32, u32)> = ShuffleStore::new(&c, 2).unwrap();
+        store.put(0, 0, vec![(1, 10)]).unwrap();
+        store.read_reduce(0, 1).unwrap();
+        assert_eq!(c.stats().shuffle_bytes_written, 0);
+        assert_eq!(c.stats().shuffle_bytes_read, 0);
+    }
+
+    #[test]
+    fn inmemory_charges_and_releases_memory() {
+        let c = mk(Backend::InMemory);
+        {
+            let store: ShuffleStore<(u64, u64)> = ShuffleStore::new(&c, 1).unwrap();
+            store.put(0, 0, vec![(1, 1); 100]).unwrap();
+            assert!(c.memory().total_current() >= 1600);
+        }
+        assert_eq!(c.memory().total_current(), 0, "drop releases charges");
+    }
+
+    #[test]
+    fn worker_loss_drops_only_that_workers_outputs() {
+        let c = mk(Backend::InMemory); // 3 workers: parts 0,3 -> w0; 1,4 -> w1...
+        let store: ShuffleStore<(u32, u32)> = ShuffleStore::new(&c, 1).unwrap();
+        for m in 0..4 {
+            store.put(m, 0, vec![(m as u32, 0)]).unwrap();
+        }
+        store.drop_worker_outputs(0, 4);
+        let present = store.present_map_parts(4);
+        assert_eq!(present, vec![false, true, true, false]); // w0 owned 0 and 3
+    }
+
+    #[test]
+    fn missing_buckets_read_as_empty() {
+        let c = mk(Backend::DiskKv);
+        let store: ShuffleStore<(u32, u32)> = ShuffleStore::new(&c, 2).unwrap();
+        assert!(store.read_reduce(1, 3).unwrap().is_empty());
+    }
+}

@@ -1,0 +1,245 @@
+//! Alphabets and the byte<->code mappings shared with the python kernels.
+
+use anyhow::{bail, Result};
+
+pub const DNA_ALPHA: usize = 6;
+pub const PROTEIN_ALPHA: usize = 25;
+
+/// Canonical amino-acid order for codes 0..19.
+pub const AMINO_ACIDS: &[u8; 20] = b"ARNDCQEGHILKMFPSTWYV";
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Alphabet {
+    Dna = 0,
+    Protein = 1,
+}
+
+impl Alphabet {
+    pub fn from_u8(v: u8) -> Result<Self> {
+        Ok(match v {
+            0 => Alphabet::Dna,
+            1 => Alphabet::Protein,
+            other => bail!("bad alphabet tag {other}"),
+        })
+    }
+
+    /// Number of codes including gap and sentinel.
+    pub fn size(self) -> usize {
+        match self {
+            Alphabet::Dna => DNA_ALPHA,
+            Alphabet::Protein => PROTEIN_ALPHA,
+        }
+    }
+
+    /// The gap code ('-').
+    pub fn gap(self) -> u8 {
+        match self {
+            Alphabet::Dna => 5,
+            Alphabet::Protein => 23,
+        }
+    }
+
+    /// Padding sentinel used by the XLA batcher (never a real residue).
+    pub fn sentinel(self) -> u8 {
+        (self.size() - 1) as u8
+    }
+
+    /// Unknown-residue code.
+    pub fn unknown(self) -> u8 {
+        match self {
+            Alphabet::Dna => 4,  // N
+            Alphabet::Protein => 22, // X
+        }
+    }
+
+    /// Number of *residue* codes (excluding gap/sentinel) — what the
+    /// dataset generators draw from.
+    pub fn residues(self) -> usize {
+        match self {
+            Alphabet::Dna => 4,
+            Alphabet::Protein => 20,
+        }
+    }
+
+    pub fn encode(self, b: u8) -> u8 {
+        match self {
+            Alphabet::Dna => match b.to_ascii_uppercase() {
+                b'A' => 0,
+                b'C' => 1,
+                b'G' => 2,
+                b'T' | b'U' => 3,
+                b'-' | b'.' => 5,
+                _ => 4, // N and all ambiguity codes
+            },
+            Alphabet::Protein => match b.to_ascii_uppercase() {
+                b'-' | b'.' => 23,
+                b'B' => 20,
+                b'Z' => 21,
+                up => AMINO_ACIDS
+                    .iter()
+                    .position(|&a| a == up)
+                    .map(|i| i as u8)
+                    .unwrap_or(22), // X
+            },
+        }
+    }
+
+    pub fn decode(self, code: u8) -> u8 {
+        match self {
+            Alphabet::Dna => match code {
+                0 => b'A',
+                1 => b'C',
+                2 => b'G',
+                3 => b'T',
+                4 => b'N',
+                _ => b'-',
+            },
+            Alphabet::Protein => match code {
+                0..=19 => AMINO_ACIDS[code as usize],
+                20 => b'B',
+                21 => b'Z',
+                22 => b'X',
+                _ => b'-',
+            },
+        }
+    }
+}
+
+/// Flattened substitution matrix (alpha x alpha, row-major f32) for the SW
+/// kernels and native DP.
+///
+/// DNA: +5 match / -4 mismatch (HAlign's defaults); protein: BLOSUM62-like
+/// structure — identity-dominant with chemically-similar off-diagonals.
+/// Gap and sentinel rows/columns are strongly negative so alignments never
+/// extend through padding.
+pub fn substitution_matrix(alphabet: Alphabet) -> Vec<f32> {
+    let n = alphabet.size();
+    let mut m = vec![0f32; n * n];
+    match alphabet {
+        Alphabet::Dna => {
+            for i in 0..4 {
+                for j in 0..4 {
+                    m[i * n + j] = if i == j { 5.0 } else { -4.0 };
+                }
+            }
+            // N matches anything weakly.
+            for i in 0..5 {
+                m[i * n + 4] = -1.0;
+                m[4 * n + i] = -1.0;
+            }
+        }
+        Alphabet::Protein => {
+            // BLOSUM62 upper triangle over the AMINO_ACIDS order.
+            const B62: [[i8; 20]; 20] = [
+                [4, -1, -2, -2, 0, -1, -1, 0, -2, -1, -1, -1, -1, -2, -1, 1, 0, -3, -2, 0],
+                [-1, 5, 0, -2, -3, 1, 0, -2, 0, -3, -2, 2, -1, -3, -2, -1, -1, -3, -2, -3],
+                [-2, 0, 6, 1, -3, 0, 0, 0, 1, -3, -3, 0, -2, -3, -2, 1, 0, -4, -2, -3],
+                [-2, -2, 1, 6, -3, 0, 2, -1, -1, -3, -4, -1, -3, -3, -1, 0, -1, -4, -3, -3],
+                [0, -3, -3, -3, 9, -3, -4, -3, -3, -1, -1, -3, -1, -2, -3, -1, -1, -2, -2, -1],
+                [-1, 1, 0, 0, -3, 5, 2, -2, 0, -3, -2, 1, 0, -3, -1, 0, -1, -2, -1, -2],
+                [-1, 0, 0, 2, -4, 2, 5, -2, 0, -3, -3, 1, -2, -3, -1, 0, -1, -3, -2, -2],
+                [0, -2, 0, -1, -3, -2, -2, 6, -2, -4, -4, -2, -3, -3, -2, 0, -2, -2, -3, -3],
+                [-2, 0, 1, -1, -3, 0, 0, -2, 8, -3, -3, -1, -2, -1, -2, -1, -2, -2, 2, -3],
+                [-1, -3, -3, -3, -1, -3, -3, -4, -3, 4, 2, -3, 1, 0, -3, -2, -1, -3, -1, 3],
+                [-1, -2, -3, -4, -1, -2, -3, -4, -3, 2, 4, -2, 2, 0, -3, -2, -1, -2, -1, 1],
+                [-1, 2, 0, -1, -3, 1, 1, -2, -1, -3, -2, 5, -1, -3, -1, 0, -1, -3, -2, -2],
+                [-1, -1, -2, -3, -1, 0, -2, -3, -2, 1, 2, -1, 5, 0, -2, -1, -1, -1, -1, 1],
+                [-2, -3, -3, -3, -2, -3, -3, -3, -1, 0, 0, -3, 0, 6, -4, -2, -2, 1, 3, -1],
+                [-1, -2, -2, -1, -3, -1, -1, -2, -2, -3, -3, -1, -2, -4, 7, -1, -1, -4, -3, -2],
+                [1, -1, 1, 0, -1, 0, 0, 0, -1, -2, -2, 0, -1, -2, -1, 4, 1, -3, -2, -2],
+                [0, -1, 0, -1, -1, -1, -1, -2, -2, -1, -1, -1, -1, -2, -1, 1, 5, -2, -2, 0],
+                [-3, -3, -4, -4, -2, -2, -3, -2, -2, -3, -2, -3, -1, 1, -4, -3, -2, 11, 2, -3],
+                [-2, -2, -2, -3, -2, -1, -2, -3, 2, -1, -1, -2, -1, 3, -3, -2, -2, 2, 7, -1],
+                [0, -3, -3, -3, -1, -2, -2, -3, -3, 3, 1, -2, 1, -1, -2, -2, 0, -3, -1, 4],
+            ];
+            for i in 0..20 {
+                for j in 0..20 {
+                    m[i * n + j] = B62[i][j] as f32;
+                }
+            }
+            // Ambiguity codes: mild penalty against everything.
+            for amb in 20..23 {
+                for j in 0..23 {
+                    m[amb * n + j] = -1.0;
+                    m[j * n + amb] = -1.0;
+                }
+            }
+        }
+    }
+    // Gap + sentinel rows/columns: forbidden in substitution context.
+    let gap = alphabet.gap() as usize;
+    let sent = alphabet.sentinel() as usize;
+    for k in [gap, sent] {
+        for j in 0..n {
+            m[k * n + j] = -1e4;
+            m[j * n + k] = -1e4;
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dna_encode_decode_roundtrip() {
+        for b in [b'A', b'C', b'G', b'T', b'N', b'-'] {
+            let a = Alphabet::Dna;
+            assert_eq!(a.decode(a.encode(b)), b);
+        }
+    }
+
+    #[test]
+    fn protein_all_residues_roundtrip() {
+        let a = Alphabet::Protein;
+        for &b in AMINO_ACIDS.iter() {
+            assert_eq!(a.decode(a.encode(b)), b);
+        }
+        assert_eq!(a.decode(a.encode(b'-')), b'-');
+        assert_eq!(a.encode(b'J'), 22); // unknown -> X
+    }
+
+    #[test]
+    fn lowercase_accepted() {
+        assert_eq!(Alphabet::Dna.encode(b'a'), 0);
+        assert_eq!(Alphabet::Protein.encode(b'm'), 12);
+    }
+
+    #[test]
+    fn blosum_symmetric_and_identity_dominant() {
+        let m = substitution_matrix(Alphabet::Protein);
+        let n = PROTEIN_ALPHA;
+        for i in 0..20 {
+            for j in 0..20 {
+                assert_eq!(m[i * n + j], m[j * n + i], "({i},{j})");
+                if i != j {
+                    assert!(m[i * n + i] > m[i * n + j]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gap_and_sentinel_forbidden() {
+        for alpha in [Alphabet::Dna, Alphabet::Protein] {
+            let m = substitution_matrix(alpha);
+            let n = alpha.size();
+            let gap = alpha.gap() as usize;
+            let sent = alpha.sentinel() as usize;
+            for j in 0..n {
+                assert!(m[gap * n + j] <= -1e4);
+                assert!(m[sent * n + j] <= -1e4);
+                assert!(m[j * n + sent] <= -1e4);
+            }
+        }
+    }
+
+    #[test]
+    fn sentinel_distinct_from_gap_for_protein() {
+        assert_ne!(Alphabet::Protein.gap(), Alphabet::Protein.sentinel());
+        // For DNA the gap doubles as sentinel (alpha=6), by design.
+        assert_eq!(Alphabet::Dna.gap(), Alphabet::Dna.sentinel());
+    }
+}

@@ -1,0 +1,109 @@
+//! FASTA reading/writing (plain text, wrapped at 70 columns).
+
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{Alphabet, Sequence};
+
+/// Parse FASTA from any reader.
+pub fn read_fasta(reader: impl Read, alphabet: Alphabet) -> Result<Vec<Sequence>> {
+    let mut out = Vec::new();
+    let mut id: Option<String> = None;
+    let mut codes: Vec<u8> = Vec::new();
+    for (lineno, line) in BufReader::new(reader).lines().enumerate() {
+        let line = line.with_context(|| format!("reading FASTA line {}", lineno + 1))?;
+        let line = line.trim_end();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(header) = line.strip_prefix('>') {
+            if let Some(prev) = id.take() {
+                out.push(Sequence::new(prev, std::mem::take(&mut codes), alphabet));
+            }
+            id = Some(header.split_whitespace().next().unwrap_or(header).to_string());
+        } else {
+            if id.is_none() {
+                bail!("FASTA line {} has residues before any '>' header", lineno + 1);
+            }
+            codes.extend(line.bytes().map(|b| alphabet.encode(b)));
+        }
+    }
+    if let Some(prev) = id {
+        out.push(Sequence::new(prev, codes, alphabet));
+    }
+    Ok(out)
+}
+
+pub fn read_fasta_file(path: impl AsRef<Path>, alphabet: Alphabet) -> Result<Vec<Sequence>> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening {}", path.as_ref().display()))?;
+    read_fasta(f, alphabet)
+}
+
+/// Write FASTA, 70 columns per line.
+pub fn write_fasta(writer: impl Write, seqs: &[Sequence]) -> Result<()> {
+    let mut w = BufWriter::new(writer);
+    for s in seqs {
+        writeln!(w, ">{}", s.id)?;
+        let text = s.text();
+        for chunk in text.as_bytes().chunks(70) {
+            w.write_all(chunk)?;
+            w.write_all(b"\n")?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+pub fn write_fasta_file(path: impl AsRef<Path>, seqs: &[Sequence]) -> Result<()> {
+    let f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("creating {}", path.as_ref().display()))?;
+    write_fasta(f, seqs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = ">seq1 human mito\nACGTAC\nGTN\n>seq2\nTTTT\n";
+
+    #[test]
+    fn parses_multi_record() {
+        let seqs = read_fasta(SAMPLE.as_bytes(), Alphabet::Dna).unwrap();
+        assert_eq!(seqs.len(), 2);
+        assert_eq!(seqs[0].id, "seq1"); // first token only
+        assert_eq!(seqs[0].text(), "ACGTACGTN");
+        assert_eq!(seqs[1].text(), "TTTT");
+    }
+
+    #[test]
+    fn roundtrip_through_bytes() {
+        let seqs = read_fasta(SAMPLE.as_bytes(), Alphabet::Dna).unwrap();
+        let mut buf = Vec::new();
+        write_fasta(&mut buf, &seqs).unwrap();
+        let back = read_fasta(&buf[..], Alphabet::Dna).unwrap();
+        assert_eq!(back, seqs);
+    }
+
+    #[test]
+    fn long_sequences_wrap() {
+        let s = Sequence::from_text("x", &"A".repeat(200), Alphabet::Dna);
+        let mut buf = Vec::new();
+        write_fasta(&mut buf, &[s.clone()]).unwrap();
+        let text = String::from_utf8(buf.clone()).unwrap();
+        assert!(text.lines().all(|l| l.len() <= 70));
+        assert_eq!(read_fasta(&buf[..], Alphabet::Dna).unwrap()[0], s);
+    }
+
+    #[test]
+    fn rejects_headerless_residues() {
+        assert!(read_fasta("ACGT\n".as_bytes(), Alphabet::Dna).is_err());
+    }
+
+    #[test]
+    fn empty_input_ok() {
+        assert!(read_fasta("".as_bytes(), Alphabet::Dna).unwrap().is_empty());
+    }
+}

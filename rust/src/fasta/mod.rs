@@ -1,0 +1,94 @@
+//! Sequence types, alphabets and FASTA I/O.
+//!
+//! Integer code spaces (shared with the python kernels — see
+//! `python/compile/model.py`):
+//!
+//! * DNA/RNA: `A=0 C=1 G=2 T/U=3 N=4 gap/sentinel=5` (`DNA_ALPHA = 6`)
+//! * Protein: 20 amino acids `ARNDCQEGHILKMFPSTWYV = 0..19`, ambiguity
+//!   `B=20 Z=21 X=22`, gap `23`, padding sentinel `24` (`PROTEIN_ALPHA=25`)
+
+pub mod alphabet;
+pub mod io;
+
+pub use alphabet::{Alphabet, DNA_ALPHA, PROTEIN_ALPHA};
+
+/// A named biological sequence with its integer-coded residues.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Sequence {
+    pub id: String,
+    pub codes: Vec<u8>,
+    pub alphabet: Alphabet,
+}
+
+impl Sequence {
+    pub fn new(id: impl Into<String>, codes: Vec<u8>, alphabet: Alphabet) -> Self {
+        Self { id: id.into(), codes, alphabet }
+    }
+
+    /// Parse residue text (e.g. "ACGT") under the given alphabet.
+    pub fn from_text(id: impl Into<String>, text: &str, alphabet: Alphabet) -> Self {
+        let codes = text.bytes().map(|b| alphabet.encode(b)).collect();
+        Self::new(id, codes, alphabet)
+    }
+
+    pub fn len(&self) -> usize {
+        self.codes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.codes.is_empty()
+    }
+
+    /// Residue text (gaps render as '-').
+    pub fn text(&self) -> String {
+        self.codes.iter().map(|&c| self.alphabet.decode(c) as char).collect()
+    }
+
+    /// Approximate resident bytes (id + codes) for memory accounting.
+    pub fn approx_bytes(&self) -> usize {
+        self.id.len() + self.codes.len() + 48
+    }
+}
+
+impl crate::util::Encode for Sequence {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.id.encode(out);
+        self.codes.encode(out);
+        (self.alphabet as u8).encode(out);
+    }
+}
+
+impl crate::util::Decode for Sequence {
+    fn decode(input: &mut &[u8]) -> anyhow::Result<Self> {
+        let id = String::decode(input)?;
+        let codes = Vec::<u8>::decode(input)?;
+        let alphabet = Alphabet::from_u8(u8::decode(input)?)?;
+        Ok(Self { id, codes, alphabet })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{Decode, Encode};
+
+    #[test]
+    fn text_roundtrip_dna() {
+        let s = Sequence::from_text("s1", "ACGTN-", Alphabet::Dna);
+        assert_eq!(s.codes, vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(s.text(), "ACGTN-");
+    }
+
+    #[test]
+    fn rna_u_maps_to_t_code() {
+        let s = Sequence::from_text("r", "ACGU", Alphabet::Dna);
+        assert_eq!(s.codes, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn codec_roundtrip() {
+        let s = Sequence::from_text("seq with spaces", "MKV", Alphabet::Protein);
+        let back = Sequence::from_bytes(&s.to_bytes()).unwrap();
+        assert_eq!(back, s);
+    }
+}

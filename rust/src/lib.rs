@@ -1,0 +1,45 @@
+//! # halign2 — HAlign-II reproduction
+//!
+//! Distributed ultra-large multiple sequence alignment (MSA) and
+//! phylogenetic tree reconstruction, after *Wan & Zou, 2017*:
+//! center-star MSA (trie-accelerated for similar DNA/RNA, Smith-Waterman
+//! for proteins) and sampling-clustered neighbor-joining trees, running on
+//! an in-process Spark-like dataflow engine with swappable in-memory
+//! (Spark) and disk key-value (Hadoop) shuffle backends.
+//!
+//! The compute hot spots (batched Smith-Waterman wavefront, Gram-matrix
+//! distances) execute as AOT-compiled XLA programs authored in JAX/Pallas
+//! (`python/compile/`) and served by [`runtime`]; Python never runs at
+//! request time.
+//!
+//! Layering (bottom-up):
+//! * [`util`]    — PRNG, binary codec, timing (std-only substitutes for the
+//!                 usual crates; this build is fully offline).
+//! * [`engine`]  — the mini-Spark substrate: lazy RDDs with lineage, DAG
+//!                 scheduler, worker executor, shuffles, broadcast, memory
+//!                 accounting, fault injection.
+//! * [`fasta`]   — sequence types, alphabets, FASTA I/O.
+//! * [`data`]    — deterministic synthetic dataset generators standing in
+//!                 for the paper's mito-genome / 16S rRNA / BAliBASE data.
+//! * [`align`]   — center-star MSA: trie, pairwise DP, space merging,
+//!                 SP scoring, the DNA and protein pipelines.
+//! * [`tree`]    — distances, sampling clustering, neighbor-joining, tree
+//!                 merge, Newick, JC69 likelihood.
+//! * [`baselines`] — HAlign-v1 (Hadoop mode), SparkSW, MUSCLE/MAFFT-like
+//!                 progressive, IQ-TREE-like ML search.
+//! * [`runtime`] — PJRT service + shape-bucket batcher over the artifacts.
+//! * [`metrics`] — wall-clock/memory reporting, paper-table printers.
+//! * [`bench`]   — the in-tree benchmark harness regenerating every table
+//!                 and figure of the paper's evaluation.
+
+pub mod align;
+pub mod baselines;
+pub mod bench;
+pub mod data;
+pub mod engine;
+pub mod fasta;
+pub mod metrics;
+pub mod runtime;
+pub mod server;
+pub mod tree;
+pub mod util;

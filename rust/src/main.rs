@@ -1,0 +1,295 @@
+//! `halign2` — command-line launcher for the HAlign-II reproduction.
+//!
+//! Subcommands:
+//!   gen         generate a synthetic dataset (mito / rrna / protein)
+//!   align       distributed center-star MSA over a FASTA file
+//!   tree        build a phylogenetic tree from an aligned FASTA
+//!   bench-table regenerate a paper table/figure (t2 t3 t4 t5 f5 f6)
+//!   info        show compiled XLA artifacts
+//!
+//! Argument parsing is hand-rolled (offline build: no clap); every flag
+//! is `--key value`.
+
+use std::collections::HashMap;
+use std::process::ExitCode;
+use std::time::Duration;
+
+use anyhow::{bail, Context as _, Result};
+
+use halign2::align::center_star::{align_nucleotide, CenterStarConfig};
+use halign2::align::protein::{align_protein, ProteinConfig};
+use halign2::bench::{self, BenchConfig};
+use halign2::data::DatasetSpec;
+use halign2::engine::{Cluster, ClusterConfig};
+use halign2::fasta::{io as fio, Alphabet};
+use halign2::metrics::{print_table, tsv_line};
+use halign2::runtime::XlaService;
+use halign2::tree::{build_tree, TreeConfig};
+use halign2::util::timer::fmt_duration;
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+struct Args {
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self> {
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            let Some(key) = a.strip_prefix("--") else {
+                bail!("unexpected argument {a:?} (flags are --key value)");
+            };
+            let val = argv
+                .get(i + 1)
+                .with_context(|| format!("--{key} needs a value"))?;
+            flags.insert(key.to_string(), val.clone());
+            i += 2;
+        }
+        Ok(Self { flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{key} {v:?}: {e}")),
+        }
+    }
+
+    fn alphabet(&self) -> Result<Alphabet> {
+        Ok(match self.get("alphabet").unwrap_or("dna") {
+            "dna" | "rna" => Alphabet::Dna,
+            "protein" => Alphabet::Protein,
+            other => bail!("--alphabet must be dna|rna|protein, got {other:?}"),
+        })
+    }
+
+    fn cluster(&self) -> Result<Cluster> {
+        let workers = self.parse_or("workers", 8usize)?;
+        let cfg = match self.get("backend").unwrap_or("spark") {
+            "spark" => ClusterConfig::spark(workers),
+            "hadoop" => ClusterConfig::hadoop(workers),
+            other => bail!("--backend must be spark|hadoop, got {other:?}"),
+        };
+        Ok(Cluster::new(cfg))
+    }
+
+    fn service(&self) -> Option<XlaService> {
+        let dir = self.get("artifacts").unwrap_or("artifacts");
+        if !std::path::Path::new(dir).join("manifest.txt").exists() {
+            return None;
+        }
+        match XlaService::start(dir) {
+            Ok(svc) => Some(svc),
+            Err(e) => {
+                eprintln!("warning: XLA artifacts unavailable ({e}); using native fallback");
+                None
+            }
+        }
+    }
+}
+
+fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+    match cmd.as_str() {
+        "gen" => cmd_gen(&args),
+        "align" => cmd_align(&args),
+        "tree" => cmd_tree(&args),
+        "bench-table" => cmd_bench(&args),
+        "serve" => cmd_serve(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?} (try `halign2 help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "halign2 — ultra-large MSA + phylogenetic trees (HAlign-II reproduction)\n\n\
+         USAGE:\n  halign2 gen --family mito|rrna|protein --count N [--length-scale F] [--seed S] --out data.fasta\n  \
+         halign2 align --in data.fasta [--alphabet dna|protein] [--workers N] [--backend spark|hadoop]\n               [--artifacts DIR] [--out msa.fasta] [--tree tree.nwk]\n  \
+         halign2 tree --in msa.fasta [--alphabet dna|protein] [--workers N] [--out tree.nwk]\n  \
+         halign2 bench-table --table t2|t3|t4|t5|f5|f6 [--quick true] [--scale F] [--workers N]\n  \
+         halign2 serve [--addr 127.0.0.1:8080] [--workers N] [--backend spark|hadoop]\n  \
+         halign2 info [--artifacts DIR]"
+    );
+}
+
+fn cmd_gen(args: &Args) -> Result<()> {
+    let family = args.get("family").unwrap_or("mito");
+    let count = args.parse_or("count", 100usize)?;
+    let ls = args.parse_or("length-scale", 0.1f64)?;
+    let seed = args.parse_or("seed", 7u64)?;
+    let out = args.get("out").context("--out required")?;
+    let spec = match family {
+        "mito" => DatasetSpec { count, ..DatasetSpec::mito(ls, seed) },
+        "rrna" => DatasetSpec::rrna(count, ls, seed),
+        "protein" => DatasetSpec::protein(count, ls, seed),
+        other => bail!("--family must be mito|rrna|protein, got {other:?}"),
+    };
+    let seqs = spec.generate();
+    fio::write_fasta_file(out, &seqs)?;
+    println!("wrote {} sequences to {out}", seqs.len());
+    Ok(())
+}
+
+fn cmd_align(args: &Args) -> Result<()> {
+    let input = args.get("in").context("--in required")?;
+    let alphabet = args.alphabet()?;
+    let seqs = fio::read_fasta_file(input, alphabet)?;
+    anyhow::ensure!(!seqs.is_empty(), "no sequences in {input}");
+    let cluster = args.cluster()?;
+    let svc = args.service();
+    let sw = std::time::Instant::now();
+    let msa = match alphabet {
+        Alphabet::Dna => align_nucleotide(&cluster, &seqs, &CenterStarConfig::default())?,
+        Alphabet::Protein => {
+            align_protein(&cluster, &seqs, svc.as_ref(), &ProteinConfig::default())?
+        }
+    };
+    let wall = sw.elapsed();
+    let sp = msa.avg_sp_distributed(&cluster)?;
+    let stats = cluster.stats();
+    println!(
+        "aligned {} sequences (width {}) in {} | avg SP {:.2} | {} workers, {} tasks, avg max mem {:.1} MB",
+        msa.aligned.len(),
+        msa.width,
+        fmt_duration(wall),
+        sp,
+        stats.workers,
+        stats.tasks_run,
+        stats.avg_max_memory_bytes / (1 << 20) as f64
+    );
+    if let Some(out) = args.get("out") {
+        fio::write_fasta_file(out, &msa.aligned)?;
+        println!("MSA written to {out}");
+    }
+    if let Some(tree_out) = args.get("tree") {
+        let result = build_tree(&cluster, &msa.aligned, svc.as_ref(), &TreeConfig::default())?;
+        std::fs::write(tree_out, result.tree.to_newick())?;
+        println!(
+            "tree with {} leaves (logML {:.1}, {} clusters) written to {tree_out}",
+            result.tree.num_leaves(),
+            result.log_likelihood,
+            result.num_clusters
+        );
+    }
+    Ok(())
+}
+
+fn cmd_tree(args: &Args) -> Result<()> {
+    let input = args.get("in").context("--in required")?;
+    let alphabet = args.alphabet()?;
+    let rows = fio::read_fasta_file(input, alphabet)?;
+    let cluster = args.cluster()?;
+    let svc = args.service();
+    let sw = std::time::Instant::now();
+    let result = build_tree(&cluster, &rows, svc.as_ref(), &TreeConfig::default())?;
+    println!(
+        "tree over {} taxa in {} | logML {:.1} | {} clusters",
+        result.tree.num_leaves(),
+        fmt_duration(sw.elapsed()),
+        result.log_likelihood,
+        result.num_clusters
+    );
+    match args.get("out") {
+        Some(out) => {
+            std::fs::write(out, result.tree.to_newick())?;
+            println!("newick written to {out}");
+        }
+        None => println!("{}", result.tree.to_newick()),
+    }
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let table = args.get("table").context("--table t2|t3|t4|t5|f5|f6 required")?;
+    let cfg = BenchConfig {
+        workers: args.parse_or("workers", 8usize)?,
+        scale: args.parse_or("scale", 1.0f64)?,
+        budget: Duration::from_secs(args.parse_or("budget-secs", 120u64)?),
+        quick: args.parse_or("quick", false)?,
+        seed: args.parse_or("seed", 0xBEEFu64)?,
+    };
+    let svc = args.service();
+    let (title, rows) = match table {
+        "t2" => ("Table 2 — genome MSA (time + avg SP)", bench::table2_genome(&cfg)),
+        "t3" => ("Table 3 — RNA MSA (time + avg SP)", bench::table3_rna(&cfg)),
+        "t4" => (
+            "Table 4 — protein MSA (time + avg SP)",
+            bench::table4_protein(&cfg, svc.as_ref()),
+        ),
+        "t5" => (
+            "Table 5 — tree construction (time + logML)",
+            bench::table5_tree(&cfg, svc.as_ref()),
+        ),
+        "f5" => (
+            "Figure 5 — avg max per-worker memory",
+            bench::fig5_memory(&cfg, svc.as_ref()),
+        ),
+        "f6" => ("Figure 6 — scaling with worker count", bench::fig6_scaling(&cfg)),
+        other => bail!("unknown table {other:?}"),
+    };
+    print_table(title, &rows);
+    println!("\n# tool\tdataset\twall_s\tbusy_s\tmetric\tavg_max_mem_mb\tstatus");
+    for r in &rows {
+        println!("{}", tsv_line(r));
+    }
+    Ok(())
+}
+
+/// The paper's web-server contribution: POST /align and /tree over HTTP.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cluster = args.cluster()?;
+    let svc = args.service();
+    let addr = args.get("addr").unwrap_or("127.0.0.1:8080").to_string();
+    let server = halign2::server::Server::new(cluster, svc);
+    let running = server.serve(&addr)?;
+    println!("halign2 web server listening on {addr} (port {})", running.port);
+    println!("  GET  /          status    |  GET /health");
+    println!("  POST /align     FASTA in, aligned FASTA out (?alphabet=dna|protein)");
+    println!("  POST /tree      aligned FASTA in, Newick out");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    match args.service() {
+        None => println!("no artifacts found (run `make artifacts`)"),
+        Some(svc) => {
+            println!("compiled executables:");
+            for name in svc.executables() {
+                println!("  {name}");
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,136 @@
+//! Reporting: run summaries and paper-style table printers shared by the
+//! CLI, examples and benches.
+
+use std::time::Duration;
+
+use crate::engine::ClusterStats;
+use crate::util::timer::fmt_duration;
+
+/// One benchmark row: a (tool, dataset) cell of a paper table.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub tool: String,
+    pub dataset: String,
+    pub wall: Duration,
+    /// Engine busy time summed over workers (CPU-seconds proxy; on a
+    /// 1-core CI box this is the scale-free signal — see EXPERIMENTS.md).
+    pub busy: Option<Duration>,
+    /// avg SP (MSA tables) or logML (tree table).
+    pub metric: Option<f64>,
+    pub metric_name: &'static str,
+    pub avg_max_memory_mb: Option<f64>,
+    pub shuffle_mb: Option<f64>,
+    /// "-" rows: tool did not finish (OOM / unsupported / over budget).
+    pub dnf: Option<String>,
+}
+
+impl RunReport {
+    pub fn dnf(tool: &str, dataset: &str, reason: impl Into<String>) -> Self {
+        Self {
+            tool: tool.into(),
+            dataset: dataset.into(),
+            wall: Duration::ZERO,
+            busy: None,
+            metric: None,
+            metric_name: "",
+            avg_max_memory_mb: None,
+            shuffle_mb: None,
+            dnf: Some(reason.into()),
+        }
+    }
+
+    pub fn with_stats(mut self, stats: &ClusterStats) -> Self {
+        self.busy = Some(stats.total_busy);
+        self.avg_max_memory_mb = Some(stats.avg_max_memory_bytes / (1 << 20) as f64);
+        self.shuffle_mb = Some(
+            (stats.shuffle_bytes_written + stats.shuffle_bytes_read) as f64 / (1 << 20) as f64,
+        );
+        self
+    }
+}
+
+/// Print a paper-style table: rows = tools, columns = datasets.
+pub fn print_table(title: &str, reports: &[RunReport]) {
+    println!("\n=== {title} ===");
+    let mut datasets: Vec<&str> = Vec::new();
+    let mut tools: Vec<&str> = Vec::new();
+    for r in reports {
+        if !datasets.contains(&r.dataset.as_str()) {
+            datasets.push(&r.dataset);
+        }
+        if !tools.contains(&r.tool.as_str()) {
+            tools.push(&r.tool);
+        }
+    }
+    print!("{:<14}", "");
+    for d in &datasets {
+        print!("| {d:<26}");
+    }
+    println!();
+    for t in &tools {
+        print!("{t:<14}");
+        for d in &datasets {
+            let cell = reports
+                .iter()
+                .find(|r| r.tool == *t && r.dataset == *d)
+                .map(|r| match &r.dnf {
+                    Some(reason) => format!("- ({reason})"),
+                    None => {
+                        let metric = r
+                            .metric
+                            .map(|m| format!(" {}={m:.1}", r.metric_name))
+                            .unwrap_or_default();
+                        let mem = r
+                            .avg_max_memory_mb
+                            .map(|m| format!(" mem={m:.1}MB"))
+                            .unwrap_or_default();
+                        format!("{}{}{}", fmt_duration(r.wall), metric, mem)
+                    }
+                })
+                .unwrap_or_else(|| "·".to_string());
+            print!("| {cell:<26}");
+        }
+        println!();
+    }
+}
+
+/// Machine-readable one-line record (appended to bench logs).
+pub fn tsv_line(r: &RunReport) -> String {
+    format!(
+        "{}\t{}\t{:.3}\t{}\t{}\t{}\t{}",
+        r.tool,
+        r.dataset,
+        r.wall.as_secs_f64(),
+        r.busy.map(|b| format!("{:.3}", b.as_secs_f64())).unwrap_or_else(|| "-".into()),
+        r.metric.map(|m| format!("{m:.3}")).unwrap_or_else(|| "-".into()),
+        r.avg_max_memory_mb.map(|m| format!("{m:.2}")).unwrap_or_else(|| "-".into()),
+        r.dnf.clone().unwrap_or_else(|| "ok".into()),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tsv_has_seven_fields() {
+        let r = RunReport {
+            tool: "halign2".into(),
+            dataset: "dna1x".into(),
+            wall: Duration::from_secs(14),
+            busy: Some(Duration::from_secs(50)),
+            metric: Some(195.0),
+            metric_name: "avgSP",
+            avg_max_memory_mb: Some(100.0),
+            shuffle_mb: Some(0.0),
+            dnf: None,
+        };
+        assert_eq!(tsv_line(&r).split('\t').count(), 7);
+    }
+
+    #[test]
+    fn dnf_renders_reason() {
+        let r = RunReport::dnf("muscle", "dna100x", "OOM");
+        assert!(tsv_line(&r).ends_with("OOM"));
+    }
+}

@@ -1,0 +1,187 @@
+//! Artifact registry: parses `artifacts/manifest.txt` (written by
+//! `python/compile/aot.py`) into typed shape-bucket metadata.
+//!
+//! The manifest format is one tab-separated line per executable:
+//!
+//! ```text
+//! name<TAB>file<TAB>kind<TAB>k=v,k=v,...
+//! ```
+//!
+//! Shape buckets are the contract between the Rust batcher (which pads
+//! requests up to a bucket) and the fixed-shape PJRT executables.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// What computation an artifact implements (mirrors aot.py's `kind` column).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    /// Batched Smith-Waterman wavefront: params b, m (query), n (center), alpha.
+    Sw,
+    /// k-mer profile squared distances: params n, d.
+    KmerDist,
+    /// Match counts over aligned DNA codes: params n, l, alpha.
+    MatchDna,
+    /// Match counts over aligned protein codes: params n, l, alpha.
+    MatchProtein,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "sw" => ArtifactKind::Sw,
+            "kmerdist" => ArtifactKind::KmerDist,
+            "match_dna" => ArtifactKind::MatchDna,
+            "match_protein" => ArtifactKind::MatchProtein,
+            other => bail!("unknown artifact kind {other:?}"),
+        })
+    }
+}
+
+/// One manifest line.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub kind: ArtifactKind,
+    pub params: HashMap<String, usize>,
+}
+
+impl ArtifactMeta {
+    pub fn param(&self, key: &str) -> Result<usize> {
+        self.params
+            .get(key)
+            .copied()
+            .with_context(|| format!("artifact {} missing param {key}", self.name))
+    }
+}
+
+/// Parsed manifest with kind-indexed lookup.
+#[derive(Debug, Default)]
+pub struct Manifest {
+    entries: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut entries = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 4 {
+                bail!("manifest line {}: expected 4 tab-separated columns", lineno + 1);
+            }
+            let mut params = HashMap::new();
+            for kv in cols[3].split(',').filter(|s| !s.is_empty()) {
+                let (k, v) = kv
+                    .split_once('=')
+                    .with_context(|| format!("manifest line {}: bad param {kv:?}", lineno + 1))?;
+                params.insert(
+                    k.to_string(),
+                    v.parse::<usize>()
+                        .with_context(|| format!("manifest line {}: non-integer {v:?}", lineno + 1))?,
+                );
+            }
+            entries.push(ArtifactMeta {
+                name: cols[0].to_string(),
+                file: cols[1].to_string(),
+                kind: ArtifactKind::parse(cols[2])?,
+                params,
+            });
+        }
+        Ok(Self { entries })
+    }
+
+    pub fn entries(&self) -> &[ArtifactMeta] {
+        &self.entries
+    }
+
+    pub fn of_kind(&self, kind: ArtifactKind) -> impl Iterator<Item = &ArtifactMeta> {
+        self.entries.iter().filter(move |m| m.kind == kind)
+    }
+
+    /// Smallest SW bucket whose (m, n) covers the given query/center
+    /// lengths, by padded-cell count.
+    pub fn sw_bucket(&self, query_len: usize, center_len: usize) -> Option<&ArtifactMeta> {
+        self.of_kind(ArtifactKind::Sw)
+            .filter(|m| {
+                m.params.get("m").copied().unwrap_or(0) >= query_len
+                    && m.params.get("n").copied().unwrap_or(0) >= center_len
+            })
+            .min_by_key(|m| m.params["m"] * m.params["n"])
+    }
+
+    /// Smallest match-count bucket covering `rows` x `cols` for the given
+    /// alignment kind.
+    pub fn match_bucket(
+        &self,
+        kind: ArtifactKind,
+        rows: usize,
+        cols: usize,
+    ) -> Option<&ArtifactMeta> {
+        self.of_kind(kind)
+            .filter(|m| m.params["n"] >= rows && m.params["l"] >= cols)
+            .min_by_key(|m| m.params["n"] * m.params["l"])
+    }
+
+    pub fn kmer_bucket(&self, rows: usize, dim: usize) -> Option<&ArtifactMeta> {
+        self.of_kind(ArtifactKind::KmerDist)
+            .filter(|m| m.params["n"] >= rows && m.params["d"] >= dim)
+            .min_by_key(|m| m.params["n"] * m.params["d"])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "sw_b8_q128_c128\tsw_b8_q128_c128.hlo.txt\tsw\tb=8,m=128,n=128,alpha=25\n\
+kmerdist_n128_d256\tkmerdist_n128_d256.hlo.txt\tkmerdist\tn=128,d=256\n\
+matchdna_n128_l2048\tmatchdna_n128_l2048.hlo.txt\tmatch_dna\tn=128,l=2048,alpha=6\n";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.entries().len(), 3);
+        assert_eq!(m.entries()[0].kind, ArtifactKind::Sw);
+        assert_eq!(m.entries()[0].param("alpha").unwrap(), 25);
+    }
+
+    #[test]
+    fn bucket_selection_prefers_smallest_cover() {
+        let text = "sw_small\ta\tsw\tb=8,m=128,n=128\nsw_big\tb\tsw\tb=8,m=512,n=512\n";
+        let m = Manifest::parse(text).unwrap();
+        assert_eq!(m.sw_bucket(100, 100).unwrap().name, "sw_small");
+        assert_eq!(m.sw_bucket(200, 100).unwrap().name, "sw_big");
+        assert!(m.sw_bucket(600, 600).is_none());
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(Manifest::parse("only\tthree\tcols\n").is_err());
+        assert!(Manifest::parse("a\tb\tsw\tnotkv\n").is_err());
+        assert!(Manifest::parse("a\tb\tbadkind\tk=1\n").is_err());
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let m = Manifest::parse("# comment\n\nsw_x\tf\tsw\tb=1,m=2,n=3\n").unwrap();
+        assert_eq!(m.entries().len(), 1);
+    }
+}

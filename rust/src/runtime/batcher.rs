@@ -1,0 +1,186 @@
+//! Shape-bucket batcher: pads variable-length requests up to the fixed
+//! shapes of the AOT executables, runs them through the [`XlaService`], and
+//! slices the padded results back out.
+//!
+//! Padding contracts (must match python/compile/aot.py + the kernels):
+//!  * SW queries pad with the sentinel code `alpha - 1`; the substitution
+//!    matrix holds a large negative score on the sentinel row/column, so
+//!    padded tails can never extend an alignment (tested on the python side
+//!    by `test_padding_sentinel_never_extends` and here by the runtime
+//!    integration tests).
+//!  * Match-count rows pad columns with a shared fill code, adding a
+//!    constant `width - L` to every count, which the caller subtracts.
+//!  * Gram rows pad with zeros (exact).
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::align::sw::HMatrix;
+
+use super::{ArtifactKind, HostTensor, XlaService};
+
+/// Batches SW scoring requests against one center sequence.
+pub struct SwBatcher<'a> {
+    svc: &'a XlaService,
+    center: Vec<i32>,
+    subst: Vec<f32>,
+    alpha: usize,
+    gap: f32,
+}
+
+impl<'a> SwBatcher<'a> {
+    pub fn new(
+        svc: &'a XlaService,
+        center: Vec<i32>,
+        subst: Vec<f32>,
+        alpha: usize,
+        gap: f32,
+    ) -> Result<Self> {
+        anyhow::ensure!(subst.len() == alpha * alpha, "subst must be alpha^2");
+        Ok(Self { svc, center, subst, alpha, gap })
+    }
+
+    /// True if some artifact bucket covers a query of `len` vs this center.
+    pub fn covers(&self, len: usize) -> bool {
+        self.svc.manifest().sw_bucket(len, self.center.len()).is_some()
+    }
+
+    /// Score `queries` against the center; returns one H matrix per query
+    /// trimmed to its true lengths. Queries beyond every bucket error out —
+    /// callers route those to the native Rust SW fallback.
+    pub fn score(&self, queries: &[Vec<i32>]) -> Result<Vec<HMatrix>> {
+        if queries.is_empty() {
+            return Ok(Vec::new());
+        }
+        let n = self.center.len();
+        let max_q = queries.iter().map(|q| q.len()).max().unwrap();
+        let meta = self
+            .svc
+            .manifest()
+            .sw_bucket(max_q, n)
+            .ok_or_else(|| anyhow!("no SW bucket covers query={max_q} center={n}"))?;
+        let (bb, bm, bn) = (meta.param("b")?, meta.param("m")?, meta.param("n")?);
+        anyhow::ensure!(
+            meta.param("alpha")? == self.alpha,
+            "artifact alpha {} != batcher alpha {}",
+            meta.param("alpha")?,
+            self.alpha
+        );
+
+        // Pad the center once per call.
+        let sentinel = (self.alpha - 1) as i32;
+        let mut center_pad = self.center.clone();
+        center_pad.resize(bn, sentinel);
+
+        let mut out = Vec::with_capacity(queries.len());
+        for chunk in queries.chunks(bb) {
+            let mut a = vec![sentinel; bb * bm];
+            for (k, q) in chunk.iter().enumerate() {
+                anyhow::ensure!(q.len() <= bm, "query overflows bucket");
+                a[k * bm..k * bm + q.len()].copy_from_slice(q);
+            }
+            let result = self
+                .svc
+                .execute(
+                    &meta.name,
+                    vec![
+                        HostTensor::I32(a, vec![bb, bm]),
+                        HostTensor::I32(center_pad.clone(), vec![bn]),
+                        HostTensor::F32(self.subst.clone(), vec![self.alpha, self.alpha]),
+                        HostTensor::F32(vec![self.gap], vec![1]),
+                    ],
+                )
+                .context("executing SW artifact")?;
+            let hd = result.as_f32()?;
+            // hd layout: (bb, bm+bn+1, bm+1), diagonal-major per element.
+            let dlen = bm + bn + 1;
+            let lanes = bm + 1;
+            for (k, q) in chunk.iter().enumerate() {
+                let (m, nn) = (q.len(), n);
+                let base = k * dlen * lanes;
+                let mut data = vec![0f32; (m + 1) * (nn + 1)];
+                for i in 0..=m {
+                    for j in 0..=nn {
+                        // H[i][j] = hd[i+j][i]
+                        data[i * (nn + 1) + j] = hd[base + (i + j) * lanes + i];
+                    }
+                }
+                out.push(HMatrix::from_data(m, nn, data));
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Batched pairwise match counts over aligned integer codes.
+///
+/// `codes` are N aligned rows of equal length L with values in [0, alpha-1);
+/// rows/columns are padded to the bucket with `alpha - 1` (shared fill), and
+/// the constant padding contribution is subtracted before returning.
+/// Rows beyond the largest bucket must be split by the caller.
+pub fn match_counts(
+    svc: &XlaService,
+    kind: ArtifactKind,
+    codes: &[Vec<i32>],
+    alpha: usize,
+) -> Result<Vec<Vec<f32>>> {
+    let rows = codes.len();
+    if rows == 0 {
+        return Ok(Vec::new());
+    }
+    let cols = codes[0].len();
+    anyhow::ensure!(
+        codes.iter().all(|r| r.len() == cols),
+        "match_counts requires equal-length aligned rows"
+    );
+    let meta = svc
+        .manifest()
+        .match_bucket(kind, rows, cols)
+        .ok_or_else(|| anyhow!("no match bucket covers {rows}x{cols}"))?;
+    let (bn, bl) = (meta.param("n")?, meta.param("l")?);
+    let fill = (alpha - 1) as i32;
+    let mut buf = vec![fill; bn * bl];
+    for (i, row) in codes.iter().enumerate() {
+        buf[i * bl..i * bl + cols].copy_from_slice(row);
+    }
+    let result = svc
+        .execute(&meta.name, vec![HostTensor::I32(buf, vec![bn, bl])])
+        .context("executing match-count artifact")?;
+    let g = result.as_f32()?;
+    let pad_const = (bl - cols) as f32;
+    let mut out = vec![vec![0f32; rows]; rows];
+    for i in 0..rows {
+        for j in 0..rows {
+            out[i][j] = g[i * bn + j] - pad_const;
+        }
+    }
+    Ok(out)
+}
+
+/// Batched k-mer profile squared distances. Rows pad with zeros (exact for
+/// the Gram matrix; the padded rows' distances are sliced away).
+pub fn kmer_sqdist(svc: &XlaService, profiles: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+    let rows = profiles.len();
+    if rows == 0 {
+        return Ok(Vec::new());
+    }
+    let dim = profiles[0].len();
+    anyhow::ensure!(profiles.iter().all(|r| r.len() == dim));
+    let meta = svc
+        .manifest()
+        .kmer_bucket(rows, dim)
+        .ok_or_else(|| anyhow!("no kmer bucket covers {rows}x{dim}"))?;
+    let (bn, bd) = (meta.param("n")?, meta.param("d")?);
+    let mut buf = vec![0f32; bn * bd];
+    for (i, row) in profiles.iter().enumerate() {
+        buf[i * bd..i * bd + dim].copy_from_slice(row);
+    }
+    let result = svc.execute(&meta.name, vec![HostTensor::F32(buf, vec![bn, bd])])?;
+    let d2 = result.as_f32()?;
+    let mut out = vec![vec![0f32; rows]; rows];
+    for i in 0..rows {
+        for j in 0..rows {
+            out[i][j] = d2[i * bn + j];
+        }
+    }
+    Ok(out)
+}

@@ -1,0 +1,235 @@
+//! Runtime: loads the AOT artifacts (HLO text emitted by `python/compile/aot.py`)
+//! and serves fixed-shape PJRT executions to the coordinator hot path.
+//!
+//! Python never runs here — `make artifacts` happens once at build time, and
+//! this module is the only place the process touches XLA.
+//!
+//! Threading: the `xla` crate's client/executable wrappers are raw C++
+//! pointers without `Send`/`Sync` guarantees, so a dedicated **service
+//! thread** owns the `PjRtClient` and every compiled executable; callers talk
+//! to it through an mpsc channel with plain host buffers (`HostTensor`).
+//! A `XlaService` handle is cheaply cloneable and can be shared across all
+//! engine workers.
+
+pub mod artifacts;
+pub mod batcher;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+pub use artifacts::{ArtifactKind, ArtifactMeta, Manifest};
+
+/// A host-side tensor crossing the service-channel boundary.
+#[derive(Debug, Clone)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl HostTensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(_, s) | HostTensor::I32(_, s) => s,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32(v, _) => v.len(),
+            HostTensor::I32(v, _) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(v, _) => Ok(v),
+            HostTensor::I32(..) => bail!("expected f32 tensor, got i32"),
+        }
+    }
+}
+
+enum Command {
+    Execute {
+        name: String,
+        inputs: Vec<HostTensor>,
+        resp: mpsc::Sender<Result<HostTensor>>,
+    },
+    ListExecutables {
+        resp: mpsc::Sender<Vec<String>>,
+    },
+    Shutdown,
+}
+
+/// Handle to the PJRT service thread; clone freely and share across
+/// workers (`std::sync::mpsc::Sender` is `!Sync`, so it sits behind a
+/// mutex that is held only long enough to clone a sender).
+#[derive(Clone)]
+pub struct XlaService {
+    tx: Arc<Mutex<mpsc::Sender<Command>>>,
+    manifest: Arc<Manifest>,
+    // Serializes shutdown; the service thread exits when the last sender drops
+    // or an explicit Shutdown arrives.
+    _guard: Arc<ServiceGuard>,
+}
+
+struct ServiceGuard {
+    tx: Mutex<Option<mpsc::Sender<Command>>>,
+    join: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl Drop for ServiceGuard {
+    fn drop(&mut self) {
+        if let Some(tx) = self.tx.lock().unwrap().take() {
+            let _ = tx.send(Command::Shutdown);
+        }
+        if let Some(j) = self.join.lock().unwrap().take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl XlaService {
+    /// Start the service: compile every artifact in `dir`'s manifest on the
+    /// PJRT CPU client (one executable per shape bucket).
+    pub fn start(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Arc::new(Manifest::load(&dir)?);
+        Self::start_with_manifest(dir, manifest)
+    }
+
+    pub fn start_with_manifest(dir: PathBuf, manifest: Arc<Manifest>) -> Result<Self> {
+        let (tx, rx) = mpsc::channel::<Command>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let metas: Vec<ArtifactMeta> = manifest.entries().to_vec();
+        let join = std::thread::Builder::new()
+            .name("xla-service".into())
+            .spawn(move || service_main(dir, metas, rx, ready_tx))
+            .context("spawning xla service thread")?;
+        ready_rx
+            .recv()
+            .context("xla service thread died during startup")??;
+        Ok(Self {
+            tx: Arc::new(Mutex::new(tx.clone())),
+            manifest,
+            _guard: Arc::new(ServiceGuard {
+                tx: Mutex::new(Some(tx)),
+                join: Mutex::new(Some(join)),
+            }),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Execute artifact `name` with `inputs`; blocks until the result is
+    /// back on the host. All our programs return a 1-tuple of one f32 array.
+    pub fn execute(&self, name: &str, inputs: Vec<HostTensor>) -> Result<HostTensor> {
+        let (resp_tx, resp_rx) = mpsc::channel();
+        let tx = self.tx.lock().unwrap().clone();
+        tx.send(Command::Execute {
+            name: name.to_string(),
+            inputs,
+            resp: resp_tx,
+        })
+        .map_err(|_| anyhow!("xla service thread is gone"))?;
+        resp_rx
+            .recv()
+            .map_err(|_| anyhow!("xla service dropped the response"))?
+    }
+
+    pub fn executables(&self) -> Vec<String> {
+        let (resp_tx, resp_rx) = mpsc::channel();
+        let tx = self.tx.lock().unwrap().clone();
+        if tx.send(Command::ListExecutables { resp: resp_tx }).is_err() {
+            return Vec::new();
+        }
+        resp_rx.recv().unwrap_or_default()
+    }
+}
+
+fn host_to_literal(t: &HostTensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    let lit = match t {
+        HostTensor::F32(v, _) => xla::Literal::vec1(v),
+        HostTensor::I32(v, _) => xla::Literal::vec1(v),
+    };
+    Ok(lit.reshape(&dims)?)
+}
+
+fn service_main(
+    dir: PathBuf,
+    metas: Vec<ArtifactMeta>,
+    rx: mpsc::Receiver<Command>,
+    ready: mpsc::Sender<Result<()>>,
+) {
+    let setup = (|| -> Result<(xla::PjRtClient, HashMap<String, xla::PjRtLoadedExecutable>)> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut exes = HashMap::new();
+        for meta in &metas {
+            let path = dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact {}", meta.name))?;
+            exes.insert(meta.name.clone(), exe);
+        }
+        Ok((client, exes))
+    })();
+
+    let (client, exes) = match setup {
+        Ok(v) => {
+            let _ = ready.send(Ok(()));
+            v
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    let _client = client; // keep the client alive for the executables
+
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            Command::Shutdown => break,
+            Command::ListExecutables { resp } => {
+                let mut names: Vec<String> = exes.keys().cloned().collect();
+                names.sort();
+                let _ = resp.send(names);
+            }
+            Command::Execute { name, inputs, resp } => {
+                let result = (|| -> Result<HostTensor> {
+                    let exe = exes
+                        .get(&name)
+                        .ok_or_else(|| anyhow!("no artifact named {name}"))?;
+                    let lits: Vec<xla::Literal> = inputs
+                        .iter()
+                        .map(host_to_literal)
+                        .collect::<Result<_>>()?;
+                    let out = exe.execute::<xla::Literal>(&lits)?[0][0]
+                        .to_literal_sync()?;
+                    // aot.py lowers with return_tuple=True -> 1-tuple.
+                    let inner = out.to_tuple1()?;
+                    let shape = inner.array_shape()?;
+                    let dims: Vec<usize> =
+                        shape.dims().iter().map(|&d| d as usize).collect();
+                    let vals = inner.to_vec::<f32>()?;
+                    Ok(HostTensor::F32(vals, dims))
+                })();
+                let _ = resp.send(result);
+            }
+        }
+    }
+}

@@ -1,0 +1,119 @@
+//! Minimal HTTP/1.1 request parsing + response serialization (std-only).
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Read};
+use std::net::TcpStream;
+
+use anyhow::{bail, Context as _, Result};
+
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub query: HashMap<String, String>,
+    pub headers: HashMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    pub fn read_from(stream: &mut TcpStream) -> Result<Request> {
+        let mut reader = BufReader::new(stream.try_clone()?);
+        let mut line = String::new();
+        reader.read_line(&mut line).context("reading request line")?;
+        let mut parts = line.split_whitespace();
+        let method = parts.next().context("missing method")?.to_string();
+        let target = parts.next().context("missing path")?.to_string();
+        let (path, query_str) = match target.split_once('?') {
+            Some((p, q)) => (p.to_string(), q.to_string()),
+            None => (target, String::new()),
+        };
+        let mut query = HashMap::new();
+        for kv in query_str.split('&').filter(|s| !s.is_empty()) {
+            let (k, v) = kv.split_once('=').unwrap_or((kv, ""));
+            query.insert(k.to_string(), v.to_string());
+        }
+        let mut headers = HashMap::new();
+        loop {
+            let mut h = String::new();
+            reader.read_line(&mut h)?;
+            let h = h.trim_end();
+            if h.is_empty() {
+                break;
+            }
+            let Some((k, v)) = h.split_once(':') else {
+                bail!("malformed header {h:?}");
+            };
+            headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+        }
+        let len: usize = headers
+            .get("content-length")
+            .map(|v| v.parse())
+            .transpose()
+            .context("bad content-length")?
+            .unwrap_or(0);
+        if len > 256 << 20 {
+            bail!("body too large ({len} bytes)");
+        }
+        let mut body = vec![0u8; len];
+        reader.read_exact(&mut body).context("reading body")?;
+        Ok(Request { method, path, query, headers, body })
+    }
+}
+
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn text(status: u16, body: &str) -> Self {
+        Self::bytes(status, "text/plain; charset=utf-8", body.as_bytes().to_vec())
+    }
+
+    pub fn bytes(status: u16, content_type: &str, body: Vec<u8>) -> Self {
+        Self { status, content_type: content_type.to_string(), headers: Vec::new(), body }
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let reason = match self.status {
+            200 => "OK",
+            400 => "Bad Request",
+            404 => "Not Found",
+            500 => "Internal Server Error",
+            _ => "Unknown",
+        };
+        let mut out = format!(
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n",
+            self.status,
+            reason,
+            self.content_type,
+            self.body.len()
+        );
+        for (k, v) in &self.headers {
+            out.push_str(&format!("{k}: {v}\r\n"));
+        }
+        out.push_str("\r\n");
+        let mut bytes = out.into_bytes();
+        bytes.extend_from_slice(&self.body);
+        bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn response_serializes_headers_and_body() {
+        let mut r = Response::text(200, "hello");
+        r.headers.push(("X-Test".into(), "1".into()));
+        let s = String::from_utf8(r.to_bytes()).unwrap();
+        assert!(s.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(s.contains("Content-Length: 5\r\n"));
+        assert!(s.contains("X-Test: 1\r\n"));
+        assert!(s.ends_with("\r\n\r\nhello"));
+    }
+}

@@ -1,0 +1,273 @@
+//! Web server — the paper's third headline contribution ("HAlign-II
+//! provides a user-friendly web server based on our distributed computing
+//! infrastructure", cf. http://lab.malab.cn/soft/halign).
+//!
+//! A dependency-free HTTP/1.1 server on `std::net::TcpListener`: each
+//! request is parsed, dispatched to the shared [`Cluster`] (and optional
+//! [`XlaService`]), and answered with plain text / FASTA / Newick.
+//!
+//! Endpoints:
+//!   GET  /            — status page (cluster config, stats, artifacts)
+//!   GET  /health      — liveness probe ("ok")
+//!   POST /align       — body: FASTA; query: ?alphabet=dna|protein
+//!                       returns the aligned FASTA + an X-Avg-SP header
+//!   POST /tree        — body: aligned FASTA; returns Newick +
+//!                       X-Log-Likelihood header
+//!
+//! One OS thread per connection (the engine inside serializes onto the
+//! worker pool); requests are independent jobs, which is exactly the
+//! paper's deployment model.
+
+mod http;
+
+use std::io::Write as _;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context as _, Result};
+
+use crate::align::center_star::{align_nucleotide, CenterStarConfig};
+use crate::align::protein::{align_protein, ProteinConfig};
+use crate::engine::Cluster;
+use crate::fasta::{io as fio, Alphabet};
+use crate::runtime::XlaService;
+use crate::tree::{build_tree, TreeConfig};
+
+use http::{Request, Response};
+
+pub struct Server {
+    cluster: Cluster,
+    svc: Option<XlaService>,
+    requests: AtomicUsize,
+    shutdown: AtomicBool,
+}
+
+/// Handle for a running server (port + stop control).
+pub struct RunningServer {
+    pub port: u16,
+    inner: Arc<Server>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl RunningServer {
+    pub fn stop(mut self) {
+        self.inner.shutdown.store(true, Ordering::SeqCst);
+        // Nudge the accept loop.
+        let _ = TcpStream::connect(("127.0.0.1", self.port));
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Server {
+    pub fn new(cluster: Cluster, svc: Option<XlaService>) -> Arc<Self> {
+        Arc::new(Self {
+            cluster,
+            svc,
+            requests: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+        })
+    }
+
+    /// Bind to `addr` (use port 0 for an ephemeral port) and serve on a
+    /// background thread.
+    pub fn serve(self: Arc<Self>, addr: &str) -> Result<RunningServer> {
+        let listener = TcpListener::bind(addr).context("binding server socket")?;
+        let port = listener.local_addr()?.port();
+        let inner = self.clone();
+        let join = std::thread::Builder::new()
+            .name("halign2-http".into())
+            .spawn(move || {
+                for stream in listener.incoming() {
+                    if inner.shutdown.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(stream) = stream else { continue };
+                    let server = inner.clone();
+                    std::thread::spawn(move || {
+                        let _ = server.handle(stream);
+                    });
+                }
+            })?;
+        Ok(RunningServer { port, inner: self, join: Some(join) })
+    }
+
+    fn handle(&self, mut stream: TcpStream) -> Result<()> {
+        let request = match Request::read_from(&mut stream) {
+            Ok(r) => r,
+            Err(e) => {
+                let resp = Response::text(400, &format!("bad request: {e}\n"));
+                stream.write_all(&resp.to_bytes())?;
+                return Ok(());
+            }
+        };
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        let resp = self.route(&request).unwrap_or_else(|e| {
+            Response::text(500, &format!("error: {e:#}\n"))
+        });
+        stream.write_all(&resp.to_bytes())?;
+        Ok(())
+    }
+
+    fn route(&self, req: &Request) -> Result<Response> {
+        match (req.method.as_str(), req.path.as_str()) {
+            ("GET", "/health") => Ok(Response::text(200, "ok\n")),
+            ("GET", "/") => Ok(self.status_page()),
+            ("POST", "/align") => self.do_align(req),
+            ("POST", "/tree") => self.do_tree(req),
+            _ => Ok(Response::text(404, "not found\n")),
+        }
+    }
+
+    fn alphabet_of(req: &Request) -> Alphabet {
+        match req.query.get("alphabet").map(String::as_str) {
+            Some("protein") => Alphabet::Protein,
+            _ => Alphabet::Dna,
+        }
+    }
+
+    fn do_align(&self, req: &Request) -> Result<Response> {
+        let alphabet = Self::alphabet_of(req);
+        let seqs = fio::read_fasta(req.body.as_slice(), alphabet)?;
+        anyhow::ensure!(!seqs.is_empty(), "empty FASTA body");
+        let msa = match alphabet {
+            Alphabet::Dna => {
+                align_nucleotide(&self.cluster, &seqs, &CenterStarConfig::default())?
+            }
+            Alphabet::Protein => {
+                align_protein(&self.cluster, &seqs, self.svc.as_ref(), &ProteinConfig::default())?
+            }
+        };
+        let sp = msa.avg_sp_distributed(&self.cluster)?;
+        let mut body = Vec::new();
+        fio::write_fasta(&mut body, &msa.aligned)?;
+        let mut resp = Response::bytes(200, "text/x-fasta", body);
+        resp.headers.push(("X-Avg-SP".into(), format!("{sp:.4}")));
+        resp.headers.push(("X-Width".into(), msa.width.to_string()));
+        Ok(resp)
+    }
+
+    fn do_tree(&self, req: &Request) -> Result<Response> {
+        let alphabet = Self::alphabet_of(req);
+        let rows = fio::read_fasta(req.body.as_slice(), alphabet)?;
+        let result = build_tree(&self.cluster, &rows, self.svc.as_ref(), &TreeConfig::default())?;
+        let mut resp = Response::text(200, &format!("{}\n", result.tree.to_newick()));
+        resp.headers.push((
+            "X-Log-Likelihood".into(),
+            format!("{:.4}", result.log_likelihood),
+        ));
+        resp.headers
+            .push(("X-Clusters".into(), result.num_clusters.to_string()));
+        Ok(resp)
+    }
+
+    fn status_page(&self) -> Response {
+        let stats = self.cluster.stats();
+        let artifacts = self
+            .svc
+            .as_ref()
+            .map(|s| s.executables().join(", "))
+            .unwrap_or_else(|| "(native fallback)".into());
+        Response::text(
+            200,
+            &format!(
+                "halign2 web server\n\
+                 ==================\n\
+                 workers:        {}\n\
+                 backend:        {}\n\
+                 requests:       {}\n\
+                 tasks run:      {}\n\
+                 shuffle bytes:  {} written / {} read\n\
+                 avg max memory: {:.2} MB/worker\n\
+                 artifacts:      {}\n\n\
+                 POST /align (FASTA body, ?alphabet=dna|protein)\n\
+                 POST /tree  (aligned FASTA body)\n",
+                stats.workers,
+                self.cluster.backend(),
+                self.requests.load(Ordering::Relaxed),
+                stats.tasks_run,
+                stats.shuffle_bytes_written,
+                stats.shuffle_bytes_read,
+                stats.avg_max_memory_bytes / (1 << 20) as f64,
+                artifacts,
+            ),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::ClusterConfig;
+    use std::io::{Read, Write};
+
+    fn start() -> RunningServer {
+        let cluster = Cluster::new(ClusterConfig::spark(2));
+        Server::new(cluster, None).serve("127.0.0.1:0").unwrap()
+    }
+
+    fn talk(port: u16, raw: &str) -> String {
+        let mut s = TcpStream::connect(("127.0.0.1", port)).unwrap();
+        s.write_all(raw.as_bytes()).unwrap();
+        s.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn health_and_status() {
+        let srv = start();
+        let resp = talk(srv.port, "GET /health HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(resp.starts_with("HTTP/1.1 200"));
+        assert!(resp.ends_with("ok\n"));
+        let status = talk(srv.port, "GET / HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(status.contains("halign2 web server"));
+        assert!(status.contains("workers:        2"));
+        srv.stop();
+    }
+
+    #[test]
+    fn align_roundtrip_over_http() {
+        let srv = start();
+        let fasta = ">a\nACGTACGTAA\n>b\nACGTACGTA\n>c\nACGTACGTAA\n";
+        let req = format!(
+            "POST /align?alphabet=dna HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{}",
+            fasta.len(),
+            fasta
+        );
+        let resp = talk(srv.port, &req);
+        assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+        assert!(resp.contains("X-Avg-SP:"));
+        assert!(resp.contains(">a\n"), "aligned FASTA returned");
+        srv.stop();
+    }
+
+    #[test]
+    fn tree_endpoint_returns_newick() {
+        let srv = start();
+        let fasta = ">a\nACGTACGTAA\n>b\nACGTACGTTA\n>c\nACGAACGTAA\n>d\nACGTACGGAA\n";
+        let req = format!(
+            "POST /tree HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{}",
+            fasta.len(),
+            fasta
+        );
+        let resp = talk(srv.port, &req);
+        assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+        assert!(resp.contains("X-Log-Likelihood:"));
+        assert!(resp.trim_end().ends_with(");"), "newick body: {resp}");
+        srv.stop();
+    }
+
+    #[test]
+    fn bad_requests_get_4xx() {
+        let srv = start();
+        let resp = talk(srv.port, "POST /align HTTP/1.1\r\nHost: x\r\nContent-Length: 4\r\n\r\nACGT");
+        assert!(resp.starts_with("HTTP/1.1 500"), "{resp}"); // headerless FASTA
+        let resp = talk(srv.port, "GET /nope HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(resp.starts_with("HTTP/1.1 404"));
+        srv.stop();
+    }
+}

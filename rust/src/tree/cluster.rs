@@ -1,0 +1,280 @@
+//! Sampling-based initial clustering (paper §NJ method): "approximately
+//! 10% of all sequences are selected by random sampling for initial
+//! clustering ... then sequences are clustered and labeled until all
+//! sequences are identified", with rebalancing of degenerate clusters.
+//!
+//! Implementation: k-center (farthest-point) medoid selection over the
+//! sample's k-mer distance matrix (XLA Gram kernel when available), then
+//! a distributed map assigns every sequence to its nearest medoid;
+//! clusters below the minimum size are merged into their nearest larger
+//! cluster, clusters above the maximum are split around a secondary
+//! medoid.
+
+use anyhow::{ensure, Result};
+
+use super::distance::{kmer_distance_matrix, kmer_profile};
+use crate::engine::Cluster as Engine;
+use crate::fasta::Sequence;
+use crate::runtime::XlaService;
+use crate::util::Rng;
+
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Sampling fraction for medoid selection (paper: ~10%).
+    pub sample_fraction: f64,
+    /// Target number of clusters (0 = derive from max_cluster_size).
+    pub num_clusters: usize,
+    /// Hard cap per cluster (NJ matrix bucket size).
+    pub max_cluster_size: usize,
+    /// Clusters smaller than this merge into their nearest neighbour.
+    pub min_cluster_size: usize,
+    /// k-mer length / profile dimension for the distance signal.
+    pub k: usize,
+    pub profile_dim: usize,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            sample_fraction: 0.10,
+            num_clusters: 0,
+            max_cluster_size: 96,
+            min_cluster_size: 3,
+            k: 4,
+            profile_dim: 256,
+        }
+    }
+}
+
+/// Cluster assignment: `members[c]` = indices of sequences in cluster c.
+#[derive(Debug, Clone)]
+pub struct Clustering {
+    pub members: Vec<Vec<usize>>,
+    /// Index (into the input) of each cluster's medoid.
+    pub medoids: Vec<usize>,
+}
+
+impl Clustering {
+    pub fn num_clusters(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn assert_partition(&self, n: usize) -> Result<()> {
+        let mut seen = vec![false; n];
+        for m in &self.members {
+            for &i in m {
+                ensure!(!seen[i], "sequence {i} in two clusters");
+                seen[i] = true;
+            }
+        }
+        ensure!(seen.iter().all(|&s| s), "not all sequences clustered");
+        Ok(())
+    }
+}
+
+/// Farthest-point medoid selection over a distance matrix.
+fn k_center(dist: &[Vec<f32>], k: usize, rng: &mut Rng) -> Vec<usize> {
+    let n = dist.len();
+    let k = k.min(n).max(1);
+    let mut medoids = vec![rng.below(n)];
+    let mut mind: Vec<f32> = dist[medoids[0]].clone();
+    while medoids.len() < k {
+        let (far, _) = mind
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        if mind[far] <= 0.0 {
+            break; // no more distinct points
+        }
+        medoids.push(far);
+        for i in 0..n {
+            mind[i] = mind[i].min(dist[far][i]);
+        }
+    }
+    medoids
+}
+
+/// Distributed clustering of `seqs` (gaps in rows are ignored by the
+/// profile, so this works on raw or aligned sequences).
+pub fn cluster_sequences(
+    engine: &Engine,
+    seqs: &[Sequence],
+    svc: Option<&XlaService>,
+    cfg: &ClusterConfig,
+) -> Result<Clustering> {
+    let n = seqs.len();
+    ensure!(n > 0, "nothing to cluster");
+    let gap = seqs[0].alphabet.gap();
+    let target_clusters = if cfg.num_clusters > 0 {
+        cfg.num_clusters
+    } else {
+        n.div_ceil(cfg.max_cluster_size).max(1)
+    };
+    if n <= cfg.max_cluster_size.min(3) || target_clusters == 1 {
+        return Ok(Clustering { members: vec![(0..n).collect()], medoids: vec![0] });
+    }
+
+    // --- Sample ~10% and pick medoids from the sample ---------------------
+    let mut rng = Rng::seed_from_u64(engine.config().seed ^ 0xC1u64);
+    let sample_size = ((n as f64 * cfg.sample_fraction).ceil() as usize)
+        .clamp(target_clusters.min(n), 1024.min(n));
+    let sample = rng.sample_indices(n, sample_size);
+    let sample_profiles: Vec<Vec<f32>> = sample
+        .iter()
+        .map(|&i| kmer_profile(&seqs[i].codes, cfg.k, cfg.profile_dim, gap))
+        .collect();
+    let sample_dist = kmer_distance_matrix(&sample_profiles, svc)?;
+    let medoid_sample_idx = k_center(&sample_dist, target_clusters, &mut rng);
+    let medoids: Vec<usize> = medoid_sample_idx.iter().map(|&s| sample[s]).collect();
+
+    // --- Distributed assignment: nearest medoid per sequence --------------
+    let medoid_profiles: Vec<Vec<f32>> = medoids
+        .iter()
+        .map(|&m| kmer_profile(&seqs[m].codes, cfg.k, cfg.profile_dim, gap))
+        .collect();
+    let med_bc = engine.broadcast(medoid_profiles)?;
+    let med_arc = med_bc.arc();
+    let (k, dim) = (cfg.k, cfg.profile_dim);
+    let indexed: Vec<(u64, Sequence)> =
+        seqs.iter().enumerate().map(|(i, s)| (i as u64, s.clone())).collect();
+    let assignments = engine
+        .parallelize(indexed, engine.config().default_partitions)
+        .map(move |(idx, s)| {
+            let p = kmer_profile(&s.codes, k, dim, s.alphabet.gap());
+            let mut best = (0usize, f32::INFINITY);
+            for (c, mp) in med_arc.iter().enumerate() {
+                let d: f32 = p.iter().zip(mp).map(|(a, b)| (a - b) * (a - b)).sum();
+                if d < best.1 {
+                    best = (c, d);
+                }
+            }
+            (idx, best.0 as u64)
+        })
+        .collect()?;
+
+    let mut members: Vec<Vec<usize>> = vec![Vec::new(); medoids.len()];
+    for (idx, c) in assignments {
+        members[c as usize].push(idx as usize);
+    }
+
+    // --- Rebalance ---------------------------------------------------------
+    // Merge undersized clusters into the nearest medoid's cluster.
+    let medoid_dist = kmer_distance_matrix(
+        &medoids
+            .iter()
+            .map(|&m| kmer_profile(&seqs[m].codes, cfg.k, cfg.profile_dim, gap))
+            .collect::<Vec<_>>(),
+        svc,
+    )?;
+    let mut keep: Vec<bool> = members.iter().map(|m| m.len() >= cfg.min_cluster_size).collect();
+    if keep.iter().all(|k| !k) {
+        keep[0] = true; // degenerate: keep the first
+    }
+    for c in 0..members.len() {
+        if keep[c] || members[c].is_empty() {
+            continue;
+        }
+        let target = (0..members.len())
+            .filter(|&o| o != c && keep[o])
+            .min_by(|&a, &b| medoid_dist[c][a].partial_cmp(&medoid_dist[c][b]).unwrap())
+            .unwrap_or(0);
+        let moved = std::mem::take(&mut members[c]);
+        members[target].extend(moved);
+    }
+    // Split oversized clusters round-robin (preserving medoid first).
+    let mut final_members = Vec::new();
+    let mut final_medoids = Vec::new();
+    for (c, m) in members.into_iter().enumerate() {
+        if m.is_empty() {
+            continue;
+        }
+        if m.len() <= cfg.max_cluster_size {
+            final_medoids.push(medoids[c].min(n - 1));
+            final_members.push(m);
+        } else {
+            let chunks = m.len().div_ceil(cfg.max_cluster_size);
+            let per = m.len().div_ceil(chunks);
+            for chunk in m.chunks(per) {
+                final_medoids.push(chunk[0]);
+                final_members.push(chunk.to_vec());
+            }
+        }
+    }
+    let clustering = Clustering { members: final_members, medoids: final_medoids };
+    clustering.assert_partition(n)?;
+    Ok(clustering)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetSpec;
+    use crate::engine::{Cluster as Engine, ClusterConfig as EngineConfig};
+
+    #[test]
+    fn partitions_all_sequences() {
+        let seqs = DatasetSpec::rrna(60, 0.1, 3).generate();
+        let engine = Engine::new(EngineConfig::spark(3));
+        let c = cluster_sequences(
+            &engine,
+            &seqs,
+            None,
+            &ClusterConfig { max_cluster_size: 16, ..Default::default() },
+        )
+        .unwrap();
+        c.assert_partition(60).unwrap();
+        assert!(c.num_clusters() >= 2);
+        assert!(c.members.iter().all(|m| m.len() <= 16));
+    }
+
+    #[test]
+    fn small_input_single_cluster() {
+        let seqs = DatasetSpec::rrna(3, 0.05, 1).generate();
+        let engine = Engine::new(EngineConfig::spark(2));
+        let c = cluster_sequences(&engine, &seqs, None, &ClusterConfig::default()).unwrap();
+        assert_eq!(c.num_clusters(), 1);
+        c.assert_partition(3).unwrap();
+    }
+
+    #[test]
+    fn clusters_respect_clade_structure() {
+        // Two very distinct families: mito-like and a shuffled rrna set —
+        // k-mer profiles should separate them cleanly.
+        let mut seqs = DatasetSpec { count: 20, ..DatasetSpec::mito(0.01, 2) }.generate();
+        let other = DatasetSpec::rrna(20, 0.25, 9).generate();
+        seqs.extend(other);
+        let engine = Engine::new(EngineConfig::spark(3));
+        let c = cluster_sequences(
+            &engine,
+            &seqs,
+            None,
+            &ClusterConfig { num_clusters: 2, max_cluster_size: 40, ..Default::default() },
+        )
+        .unwrap();
+        c.assert_partition(40).unwrap();
+        // Every cluster should be (nearly) pure: members all < 20 or all >= 20.
+        for m in &c.members {
+            let fam0 = m.iter().filter(|&&i| i < 20).count();
+            let purity = fam0.max(m.len() - fam0) as f64 / m.len() as f64;
+            assert!(purity > 0.9, "impure cluster: {purity}");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let seqs = DatasetSpec::rrna(40, 0.1, 4).generate();
+        let mk = || {
+            let engine = Engine::new(EngineConfig::spark(2));
+            cluster_sequences(
+                &engine,
+                &seqs,
+                None,
+                &ClusterConfig { max_cluster_size: 12, ..Default::default() },
+            )
+            .unwrap()
+            .members
+        };
+        assert_eq!(mk(), mk());
+    }
+}

@@ -1,0 +1,223 @@
+//! Distance computations for clustering and neighbor-joining.
+//!
+//! * [`kmer_profile`] / [`kmer_distance_matrix`] — alignment-free hashed
+//!   k-mer count profiles (the sampling-clustering signal).  Batched
+//!   through the AOT Gram-matrix kernel when an [`XlaService`] is
+//!   available, native otherwise.
+//! * [`pdistance_matrix`] — p-distances over *aligned* rows (the NJ
+//!   input).  The XLA path runs the match-count kernel twice — once on
+//!   residue codes, once on gap indicators — and solves exactly for the
+//!   residue-match and comparable-column counts (see the algebra below);
+//!   the native path counts directly.  Both paths agree exactly (tested).
+//!
+//! Gap algebra for a pair (i, j) over width L with g_i/g_j gap columns:
+//! let G = #(both gap), C = #(both non-gap), M = kernel match count over
+//! codes (counts gap-gap as a match since gap is a shared code), and
+//! B = kernel match count over gap indicators = G + C.  Then
+//! `G = (B - L + g_i + g_j) / 2`, `C = L - g_i - g_j + G`, residue
+//! matches = M - G, and p = 1 - (M - G)/C.
+
+use anyhow::{ensure, Result};
+
+use crate::fasta::{Alphabet, Sequence};
+use crate::runtime::{batcher, ArtifactKind, XlaService};
+
+/// Hashed k-mer count profile of a (degapped) sequence.
+pub fn kmer_profile(codes: &[u8], k: usize, dim: usize, gap: u8) -> Vec<f32> {
+    let mut profile = vec![0f32; dim];
+    let clean: Vec<u8> = codes.iter().copied().filter(|&c| c != gap).collect();
+    if clean.len() < k {
+        return profile;
+    }
+    for w in clean.windows(k) {
+        let h = crate::util::hash::det_hash(&w);
+        profile[(h % dim as u64) as usize] += 1.0;
+    }
+    profile
+}
+
+/// Squared-euclidean distances between k-mer profiles (native).
+pub fn kmer_distance_native(profiles: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    let n = profiles.len();
+    let mut d = vec![vec![0f32; n]; n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let s: f32 = profiles[i]
+                .iter()
+                .zip(&profiles[j])
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            d[i][j] = s;
+            d[j][i] = s;
+        }
+    }
+    d
+}
+
+/// Squared-euclidean k-mer distances, XLA-batched when possible.
+pub fn kmer_distance_matrix(
+    profiles: &[Vec<f32>],
+    svc: Option<&XlaService>,
+) -> Result<Vec<Vec<f32>>> {
+    if let Some(svc) = svc {
+        if !profiles.is_empty()
+            && svc
+                .manifest()
+                .kmer_bucket(profiles.len(), profiles[0].len())
+                .is_some()
+        {
+            return batcher::kmer_sqdist(svc, profiles);
+        }
+    }
+    Ok(kmer_distance_native(profiles))
+}
+
+/// Pairwise p-distances over aligned rows (native path).
+pub fn pdistance_native(rows: &[Sequence]) -> Result<Vec<Vec<f64>>> {
+    let n = rows.len();
+    let mut d = vec![vec![0f64; n]; n];
+    if n == 0 {
+        return Ok(d);
+    }
+    let gap = rows[0].alphabet.gap();
+    let width = rows[0].len();
+    ensure!(rows.iter().all(|r| r.len() == width), "rows must be aligned");
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let (mut compared, mut mismatch) = (0u64, 0u64);
+            for k in 0..width {
+                let (a, b) = (rows[i].codes[k], rows[j].codes[k]);
+                if a == gap || b == gap {
+                    continue;
+                }
+                compared += 1;
+                if a != b {
+                    mismatch += 1;
+                }
+            }
+            let p = if compared == 0 { 0.0 } else { mismatch as f64 / compared as f64 };
+            d[i][j] = p;
+            d[j][i] = p;
+        }
+    }
+    Ok(d)
+}
+
+/// Pairwise p-distances, via the XLA match-count kernel when a bucket
+/// covers (rows, width); exact native fallback otherwise.
+pub fn pdistance_matrix(rows: &[Sequence], svc: Option<&XlaService>) -> Result<Vec<Vec<f64>>> {
+    let n = rows.len();
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    let alphabet = rows[0].alphabet;
+    let width = rows[0].len();
+    let kind = match alphabet {
+        Alphabet::Dna => ArtifactKind::MatchDna,
+        Alphabet::Protein => ArtifactKind::MatchProtein,
+    };
+    let Some(svc) = svc else { return pdistance_native(rows) };
+    if svc.manifest().match_bucket(kind, n, width).is_none() {
+        return pdistance_native(rows);
+    }
+
+    let gap = alphabet.gap();
+    let codes: Vec<Vec<i32>> = rows
+        .iter()
+        .map(|r| r.codes.iter().map(|&c| c as i32).collect())
+        .collect();
+    // Gap indicators expressed in the same alphabet (codes 0/1 are valid
+    // residue codes, so the same artifact serves).
+    let indicators: Vec<Vec<i32>> = rows
+        .iter()
+        .map(|r| r.codes.iter().map(|&c| (c == gap) as i32).collect())
+        .collect();
+    let m = batcher::match_counts(svc, kind, &codes, alphabet.size())?;
+    let b = batcher::match_counts(svc, kind, &indicators, alphabet.size())?;
+    let gaps_per_row: Vec<f64> = rows
+        .iter()
+        .map(|r| r.codes.iter().filter(|&&c| c == gap).count() as f64)
+        .collect();
+
+    let l = width as f64;
+    let mut d = vec![vec![0f64; n]; n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let g = (b[i][j] as f64 - l + gaps_per_row[i] + gaps_per_row[j]) / 2.0;
+            let c = l - gaps_per_row[i] - gaps_per_row[j] + g;
+            let matches = m[i][j] as f64 - g;
+            let p = if c <= 0.0 { 0.0 } else { ((c - matches) / c).clamp(0.0, 1.0) };
+            d[i][j] = p;
+            d[j][i] = p;
+        }
+    }
+    Ok(d)
+}
+
+/// Jukes-Cantor correction of a p-distance (DNA: 4 states; proteins use
+/// the same family with 20 states).  Saturated distances clamp to a cap.
+pub fn jc_distance(p: f64, states: usize) -> f64 {
+    let b = (states as f64 - 1.0) / states as f64;
+    let x = 1.0 - p / b;
+    if x <= 1e-9 {
+        return 5.0; // saturation cap
+    }
+    (-b * x.ln()).min(5.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fasta::Alphabet;
+
+    fn seq(id: &str, t: &str) -> Sequence {
+        Sequence::from_text(id, t, Alphabet::Dna)
+    }
+
+    #[test]
+    fn kmer_profile_counts_windows() {
+        let s = seq("x", "ACGTACGT");
+        let p = kmer_profile(&s.codes, 4, 64, Alphabet::Dna.gap());
+        let total: f32 = p.iter().sum();
+        assert_eq!(total, 5.0); // 8 - 4 + 1 windows
+    }
+
+    #[test]
+    fn kmer_profile_ignores_gaps() {
+        let a = kmer_profile(&seq("x", "AC-GT").codes, 2, 32, Alphabet::Dna.gap());
+        let b = kmer_profile(&seq("x", "ACGT").codes, 2, 32, Alphabet::Dna.gap());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn identical_profiles_zero_distance() {
+        let p = kmer_profile(&seq("x", "ACGTACGTAA").codes, 3, 64, 5);
+        let d = kmer_distance_native(&[p.clone(), p]);
+        assert_eq!(d[0][1], 0.0);
+    }
+
+    #[test]
+    fn pdistance_hand_case() {
+        // ACGT vs AC-T: compared cols = 3 (skip the gap), mismatches = 0.
+        // ACGT vs AGGT: compared = 4, mismatch = 1 -> 0.25.
+        let rows = vec![seq("a", "ACGT"), seq("b", "AC-T"), seq("c", "AGGT")];
+        let d = pdistance_native(&rows).unwrap();
+        assert_eq!(d[0][1], 0.0);
+        assert_eq!(d[0][2], 0.25);
+        assert_eq!(d[1][2], 1.0 / 3.0);
+    }
+
+    #[test]
+    fn pdistance_all_gap_pair_is_zero() {
+        let rows = vec![seq("a", "--"), seq("b", "--")];
+        assert_eq!(pdistance_native(&rows).unwrap()[0][1], 0.0);
+    }
+
+    #[test]
+    fn jc_distance_monotone_and_clamped() {
+        assert_eq!(jc_distance(0.0, 4), 0.0);
+        assert!(jc_distance(0.1, 4) > 0.1); // correction expands
+        assert!(jc_distance(0.1, 4) < jc_distance(0.2, 4));
+        assert_eq!(jc_distance(0.9, 4), 5.0); // saturated
+    }
+}

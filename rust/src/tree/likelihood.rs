@@ -1,0 +1,215 @@
+//! Log maximum-likelihood value of a tree + alignment under JC69 — the
+//! paper's tree-quality metric ("phylogenetic tree performance is
+//! evaluated by maximum likelihood value under log functions"; HPTree
+//! reports -21,954,385 on Φ_DNA).
+//!
+//! Felsenstein pruning with per-column partials; JC69 transition
+//! probability `P(same) = 1/s + (1-1/s) e^{-s/(s-1) t}`, uniform base
+//! frequencies, gaps treated as missing data (partial = 1 for every
+//! state).  DNA uses s=4 over A/C/G/T; proteins s=20.  Branch lengths
+//! come from the NJ tree; we do not re-optimize them (neither does the
+//! paper's NJ pipeline — it reports the likelihood of the NJ tree).
+
+use anyhow::{ensure, Result};
+
+use super::newick::Tree;
+use crate::fasta::Sequence;
+
+/// JC69 probability of observing the *same* state across branch t.
+#[inline]
+fn p_same(t: f64, s: f64) -> f64 {
+    (1.0 / s) + (1.0 - 1.0 / s) * (-s / (s - 1.0) * t).exp()
+}
+
+/// JC69 probability of a *specific different* state across branch t.
+#[inline]
+fn p_diff(t: f64, s: f64) -> f64 {
+    (1.0 / s) * (1.0 - (-s / (s - 1.0) * t).exp())
+}
+
+/// Compute the log-likelihood of `tree` given aligned `rows` (leaf labels
+/// must match row ids one-to-one).
+pub fn log_likelihood(tree: &Tree, rows: &[Sequence]) -> Result<f64> {
+    ensure!(!rows.is_empty(), "no rows");
+    let alphabet = rows[0].alphabet;
+    let states = alphabet.residues(); // 4 or 20
+    let s = states as f64;
+    let width = rows[0].len();
+    ensure!(rows.iter().all(|r| r.len() == width), "rows must be aligned");
+
+    // Map each leaf node to its alignment row once (O(n) lookups, not
+    // O(n) per column).
+    let mut by_id: crate::util::hash::DetHashMap<&str, usize> =
+        crate::util::hash::DetHashMap::default();
+    for (i, r) in rows.iter().enumerate() {
+        by_id.insert(r.id.as_str(), i);
+    }
+    let mut leaf_row: Vec<Option<usize>> = vec![None; tree.nodes.len()];
+    for (i, n) in tree.nodes.iter().enumerate() {
+        if n.children.is_empty() {
+            let l = n.label.as_deref().unwrap_or("");
+            let row = by_id
+                .get(l)
+                .copied()
+                .ok_or_else(|| anyhow::anyhow!("tree leaf {l:?} missing from alignment"))?;
+            leaf_row[i] = Some(row);
+        }
+    }
+
+    // Post-order traversal (children before parents).
+    let mut order = Vec::with_capacity(tree.nodes.len());
+    let mut stack = vec![(tree.root, false)];
+    while let Some((i, expanded)) = stack.pop() {
+        if expanded {
+            order.push(i);
+        } else {
+            stack.push((i, true));
+            for &c in &tree.nodes[i].children {
+                stack.push((c, false));
+            }
+        }
+    }
+
+    // Branch-length floor: a zero branch makes identical-leaf columns
+    // singular; NJ can emit zeros for identical sequences.
+    const T_MIN: f64 = 1e-6;
+    let gap = alphabet.gap();
+    let unknown = alphabet.unknown();
+
+    // Hoist the per-branch JC69 transition probabilities out of the
+    // column loop (they depend only on branch length), and flatten the
+    // per-node partials into one buffer (no per-column allocations) —
+    // see EXPERIMENTS.md §Perf for the before/after.
+    let probs: Vec<(f64, f64)> = tree
+        .nodes
+        .iter()
+        .map(|n| {
+            let t = n.branch.max(T_MIN);
+            (p_same(t, s), p_diff(t, s))
+        })
+        .collect();
+
+    let n_nodes = tree.nodes.len();
+    let mut total = 0.0f64;
+    let mut partials = vec![0.0f64; n_nodes * states];
+    let mut child_buf = vec![0.0f64; states];
+    for col in 0..width {
+        for &i in &order {
+            let node = &tree.nodes[i];
+            let base = i * states;
+            if node.children.is_empty() {
+                let row = &rows[leaf_row[i].unwrap()];
+                let c = row.codes[col];
+                let p = &mut partials[base..base + states];
+                if c == gap || c == unknown || c as usize >= states {
+                    p.fill(1.0); // missing data
+                } else {
+                    p.fill(0.0);
+                    p[c as usize] = 1.0;
+                }
+            } else {
+                partials[base..base + states].fill(1.0);
+                for &c in &node.children {
+                    let (ps, pd) = probs[c];
+                    let cbase = c * states;
+                    child_buf.copy_from_slice(&partials[cbase..cbase + states]);
+                    let child_sum: f64 = child_buf.iter().sum();
+                    let parent = &mut partials[base..base + states];
+                    for x in 0..states {
+                        // sum_y P(x->y) * child[y]
+                        //   = pd * (sum_y child[y]) + (ps - pd) * child[x]
+                        parent[x] *= pd * child_sum + (ps - pd) * child_buf[x];
+                    }
+                }
+            }
+        }
+        let rbase = tree.root * states;
+        let root_sum: f64 = partials[rbase..rbase + states].iter().sum::<f64>() / s;
+        total += root_sum.max(f64::MIN_POSITIVE).ln();
+    }
+    Ok(total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fasta::Alphabet;
+
+    fn seqs(rows: &[(&str, &str)]) -> Vec<Sequence> {
+        rows.iter()
+            .map(|(id, t)| Sequence::from_text(*id, t, Alphabet::Dna))
+            .collect()
+    }
+
+    #[test]
+    fn two_identical_leaves_likelihood_matches_closed_form() {
+        let rows = seqs(&[("a", "A"), ("b", "A")]);
+        let tree = Tree::from_newick("(a:0.1,b:0.1);").unwrap();
+        let ll = log_likelihood(&tree, &rows).unwrap();
+        // L = sum_x pi_x P(x->A,0.1)^2 ; pi = 1/4.
+        let s = 4.0;
+        let mut expect = 0.0;
+        for x in 0..4 {
+            let p = if x == 0 { p_same(0.1, s) } else { p_diff(0.1, s) };
+            expect += 0.25 * p * p;
+        }
+        assert!((ll - expect.ln()).abs() < 1e-12, "{ll} vs {}", expect.ln());
+    }
+
+    #[test]
+    fn likelihood_prefers_short_branches_for_identical_data() {
+        let rows = seqs(&[("a", "ACGTACGT"), ("b", "ACGTACGT")]);
+        let short = Tree::from_newick("(a:0.01,b:0.01);").unwrap();
+        let long = Tree::from_newick("(a:1.5,b:1.5);").unwrap();
+        let ls = log_likelihood(&short, &rows).unwrap();
+        let ll = log_likelihood(&long, &rows).unwrap();
+        assert!(ls > ll, "identical data favours short branches");
+    }
+
+    #[test]
+    fn likelihood_prefers_long_branches_for_divergent_data() {
+        let rows = seqs(&[("a", "AAAAAAAA"), ("b", "CCGGTTGG")]);
+        let short = Tree::from_newick("(a:0.01,b:0.01);").unwrap();
+        let long = Tree::from_newick("(a:1.0,b:1.0);").unwrap();
+        assert!(
+            log_likelihood(&long, &rows).unwrap() > log_likelihood(&short, &rows).unwrap()
+        );
+    }
+
+    #[test]
+    fn gaps_are_missing_data() {
+        let with_gap = seqs(&[("a", "A-"), ("b", "AC")]);
+        let no_gap = seqs(&[("a", "A"), ("b", "A")]);
+        let t2 = Tree::from_newick("(a:0.1,b:0.1);").unwrap();
+        // Column 2 is (gap, C): with the gap marginalized out, its
+        // likelihood factor is just the single observation's marginal
+        // probability pi_C = 1/4.
+        let ll_gap = log_likelihood(&t2, &with_gap).unwrap();
+        let ll_plain = log_likelihood(&t2, &no_gap).unwrap();
+        assert!((ll_gap - (ll_plain + (0.25f64).ln())).abs() < 1e-12);
+    }
+
+    #[test]
+    fn four_taxon_topology_ranking() {
+        // Data strongly pairs (a,b) and (c,d).
+        let rows = seqs(&[
+            ("a", "AAAACCCC"),
+            ("b", "AAAACCCC"),
+            ("c", "GGGGTTTT"),
+            ("d", "GGGGTTTT"),
+        ]);
+        let good = Tree::from_newick("((a:0.05,b:0.05):0.5,(c:0.05,d:0.05):0.5);").unwrap();
+        let bad = Tree::from_newick("((a:0.05,c:0.05):0.5,(b:0.05,d:0.05):0.5);").unwrap();
+        assert!(
+            log_likelihood(&good, &rows).unwrap() > log_likelihood(&bad, &rows).unwrap(),
+            "correct topology must score higher"
+        );
+    }
+
+    #[test]
+    fn missing_leaf_errors() {
+        let rows = seqs(&[("a", "A")]);
+        let t = Tree::from_newick("(a:0.1,zz:0.1);").unwrap();
+        assert!(log_likelihood(&t, &rows).is_err());
+    }
+}

@@ -1,0 +1,131 @@
+//! Merging per-cluster NJ trees into the final evolution tree (paper
+//! Fig. 4: "all phylogenetic trees are merged on clusters into the final
+//! evolution tree").
+//!
+//! A backbone NJ tree is built over the cluster medoids; each backbone
+//! leaf is then replaced by its cluster's subtree (grafted at the leaf's
+//! parent with the leaf's branch length).
+
+use anyhow::{ensure, Result};
+
+use super::newick::Tree;
+use super::nj::neighbor_joining;
+
+/// Merge cluster subtrees given the medoid-to-medoid distance matrix.
+/// `subtrees[c]` is cluster c's tree; `medoid_dist` is square over
+/// clusters.
+pub fn merge_cluster_trees(subtrees: &[Tree], medoid_dist: &[Vec<f64>]) -> Result<Tree> {
+    ensure!(!subtrees.is_empty(), "no subtrees to merge");
+    if subtrees.len() == 1 {
+        return Ok(subtrees[0].clone());
+    }
+    ensure!(
+        medoid_dist.len() == subtrees.len(),
+        "medoid matrix must match cluster count"
+    );
+    // Backbone over pseudo-taxa "#0", "#1", ...
+    let labels: Vec<String> = (0..subtrees.len()).map(|c| format!("#{c}")).collect();
+    let mut backbone = neighbor_joining(&labels, medoid_dist)?;
+
+    // Replace each backbone leaf "#c" with subtree c.
+    for c in 0..subtrees.len() {
+        let leaf = backbone
+            .nodes
+            .iter()
+            .position(|n| n.children.is_empty() && n.label.as_deref() == Some(&format!("#{c}")))
+            .expect("backbone leaf must exist");
+        let parent = backbone.nodes[leaf].parent;
+        let branch = backbone.nodes[leaf].branch;
+        match parent {
+            Some(p) => {
+                // Drop the placeholder leaf, graft the subtree in its place.
+                backbone.nodes[p].children.retain(|&ch| ch != leaf);
+                backbone.nodes[leaf].label = None; // orphaned placeholder
+                backbone.graft(&subtrees[c], p, branch);
+            }
+            None => {
+                // Backbone was a single leaf (can't happen for >= 2
+                // clusters, guarded above).
+                unreachable!("backbone root cannot be a placeholder leaf");
+            }
+        }
+    }
+    // Orphaned placeholder nodes remain in the arena but unreachable;
+    // compact the tree for cleanliness.
+    let compacted = compact(&backbone)?;
+    compacted.validate()?;
+    Ok(compacted)
+}
+
+/// Rebuild the node arena keeping only nodes reachable from the root.
+fn compact(tree: &Tree) -> Result<Tree> {
+    let mut map = vec![usize::MAX; tree.nodes.len()];
+    let mut order = Vec::new();
+    let mut stack = vec![tree.root];
+    while let Some(i) = stack.pop() {
+        if map[i] != usize::MAX {
+            continue;
+        }
+        map[i] = order.len();
+        order.push(i);
+        for &c in &tree.nodes[i].children {
+            stack.push(c);
+        }
+    }
+    let mut nodes = Vec::with_capacity(order.len());
+    for &old in &order {
+        let n = &tree.nodes[old];
+        nodes.push(super::newick::TreeNode {
+            parent: n.parent.and_then(|p| (map[p] != usize::MAX).then_some(map[p])),
+            children: n.children.iter().map(|&c| map[c]).collect(),
+            branch: n.branch,
+            label: n.label.clone(),
+        });
+    }
+    Ok(Tree { nodes, root: map[tree.root] })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merges_two_clusters_keeping_all_leaves() {
+        let t1 = Tree::from_newick("(a:1,b:1);").unwrap();
+        let t2 = Tree::from_newick("(c:1,(d:1,e:1):0.5);").unwrap();
+        let dist = vec![vec![0.0, 2.0], vec![2.0, 0.0]];
+        let merged = merge_cluster_trees(&[t1, t2], &dist).unwrap();
+        merged.validate().unwrap();
+        let mut leaves = merged.leaf_labels();
+        leaves.sort();
+        assert_eq!(leaves, vec!["a", "b", "c", "d", "e"]);
+    }
+
+    #[test]
+    fn single_cluster_passthrough() {
+        let t = Tree::from_newick("(a:1,b:2);").unwrap();
+        let merged = merge_cluster_trees(&[t.clone()], &[vec![0.0]]).unwrap();
+        assert_eq!(merged, t);
+    }
+
+    #[test]
+    fn three_clusters_no_placeholders_survive() {
+        let ts = vec![
+            Tree::from_newick("(a:1,b:1);").unwrap(),
+            Tree::from_newick("(c:1,d:1);").unwrap(),
+            Tree::from_newick("(e:1,f:1);").unwrap(),
+        ];
+        let d = vec![
+            vec![0.0, 1.0, 4.0],
+            vec![1.0, 0.0, 4.0],
+            vec![4.0, 4.0, 0.0],
+        ];
+        let merged = merge_cluster_trees(&ts, &d).unwrap();
+        assert_eq!(merged.num_leaves(), 6);
+        assert!(!merged.to_newick().contains('#'), "placeholders removed");
+        // Close clusters (0,1) should be nearer each other than to 2.
+        let ab = super::super::nj::tree_distance(&merged, "a", "c").unwrap();
+        let ae = super::super::nj::tree_distance(&merged, "a", "e").unwrap();
+        assert!(ab < ae);
+    }
+}

@@ -1,0 +1,188 @@
+//! Phylogenetic tree reconstruction (paper §NJ method, Fig. 4):
+//! sampling-based clustering → per-cluster NJ trees built in parallel on
+//! the engine → merge into the final evolution tree; quality evaluated as
+//! the JC69 log maximum-likelihood value of the result.
+
+pub mod cluster;
+pub mod compare;
+pub mod distance;
+pub mod likelihood;
+pub mod merge;
+pub mod newick;
+pub mod nj;
+
+use anyhow::{Context as _, Result};
+
+use crate::engine::Cluster as Engine;
+use crate::fasta::Sequence;
+use crate::runtime::XlaService;
+
+pub use cluster::{cluster_sequences, ClusterConfig, Clustering};
+pub use newick::Tree;
+pub use nj::neighbor_joining;
+
+#[derive(Debug, Clone, Default)]
+pub struct TreeConfig {
+    pub clustering: ClusterConfig,
+}
+
+/// Outcome of the distributed pipeline, with the stats the paper reports.
+#[derive(Debug, Clone)]
+pub struct TreeResult {
+    pub tree: Tree,
+    pub num_clusters: usize,
+    /// JC69 log-likelihood of the final tree given the alignment.
+    pub log_likelihood: f64,
+}
+
+/// Build a phylogenetic tree from *aligned* rows (an MSA — the paper:
+/// "for our HAlign-II method, we initially align multiple sequences and
+/// then build phylogenetic trees").
+pub fn build_tree(
+    engine: &Engine,
+    rows: &[Sequence],
+    svc: Option<&XlaService>,
+    cfg: &TreeConfig,
+) -> Result<TreeResult> {
+    anyhow::ensure!(!rows.is_empty(), "empty alignment");
+    anyhow::ensure!(rows.len() >= 2, "need at least two taxa");
+
+    // --- Stage 1: sampling clustering (paper Fig. 4 left) -----------------
+    let clustering = cluster_sequences(engine, rows, svc, &cfg.clustering)
+        .context("initial clustering")?;
+
+    // --- Stage 2: per-cluster NJ trees, in parallel ------------------------
+    // Each task gets (cluster_id, member rows); computes p-distances
+    // (XLA match-count kernel when a bucket covers the cluster) and runs
+    // NJ locally — "calculate individual phylogenetic tree based on
+    // individual clusters".
+    let groups: Vec<(u64, Vec<Sequence>)> = clustering
+        .members
+        .iter()
+        .enumerate()
+        .map(|(c, m)| (c as u64, m.iter().map(|&i| rows[i].clone()).collect()))
+        .collect();
+    let svc_map = svc.cloned();
+    let parts = engine.config().default_partitions.min(groups.len().max(1));
+    // Job boundary between the clustering job and the tree job (HPTree's
+    // chained MapReduce; a no-op cache on the Spark backend).
+    let groups_rdd = engine.parallelize(groups, parts).checkpoint()?;
+    let subtrees_rdd = groups_rdd.map(move |(c, members)| {
+        let tree = subtree_for_cluster(&members, svc_map.as_ref())
+            .expect("cluster subtree construction failed");
+        (c, tree)
+    });
+    let mut subtrees = subtrees_rdd.collect()?;
+    subtrees.sort_by_key(|(c, _)| *c);
+    let subtrees: Vec<Tree> = subtrees.into_iter().map(|(_, t)| t).collect();
+
+    // --- Stage 3: merge (paper Fig. 4 right) -------------------------------
+    let gap = rows[0].alphabet.gap();
+    let medoid_profiles: Vec<Vec<f32>> = clustering
+        .medoids
+        .iter()
+        .map(|&m| {
+            distance::kmer_profile(
+                &rows[m].codes,
+                cfg.clustering.k,
+                cfg.clustering.profile_dim,
+                gap,
+            )
+        })
+        .collect();
+    let medoid_dist_f32 = distance::kmer_distance_matrix(&medoid_profiles, svc)?;
+    // Normalize squared-euclid profile distances to a tree-scale metric.
+    let norm = (rows[0].len().max(1)) as f64;
+    let medoid_dist: Vec<Vec<f64>> = medoid_dist_f32
+        .iter()
+        .map(|r| r.iter().map(|&v| (v as f64).sqrt() / norm).collect())
+        .collect();
+    let tree = merge::merge_cluster_trees(&subtrees, &medoid_dist)?;
+
+    let log_likelihood =
+        likelihood::log_likelihood(&tree, rows).context("evaluating log-likelihood")?;
+    Ok(TreeResult { tree, num_clusters: clustering.num_clusters(), log_likelihood })
+}
+
+/// NJ tree for one cluster's aligned rows.
+fn subtree_for_cluster(members: &[Sequence], svc: Option<&XlaService>) -> Result<Tree> {
+    anyhow::ensure!(!members.is_empty(), "empty cluster");
+    if members.len() == 1 {
+        return Ok(Tree::leaf(members[0].id.clone()));
+    }
+    let p = distance::pdistance_matrix(members, svc)?;
+    let states = members[0].alphabet.residues();
+    let d: Vec<Vec<f64>> = p
+        .iter()
+        .map(|row| row.iter().map(|&x| distance::jc_distance(x, states)).collect())
+        .collect();
+    let labels: Vec<String> = members.iter().map(|s| s.id.clone()).collect();
+    neighbor_joining(&labels, &d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::align::center_star::{align_nucleotide, CenterStarConfig};
+    use crate::data::DatasetSpec;
+    use crate::engine::{Cluster as Engine, ClusterConfig as EngineConfig};
+
+    fn aligned_mito(count: usize, seed: u64) -> (Engine, Vec<Sequence>) {
+        let spec = DatasetSpec { count, ..DatasetSpec::mito(0.015, seed) };
+        let seqs = spec.generate();
+        let engine = Engine::new(EngineConfig::spark(3));
+        let msa = align_nucleotide(&engine, &seqs, &CenterStarConfig::default()).unwrap();
+        (engine, msa.aligned)
+    }
+
+    #[test]
+    fn full_pipeline_produces_valid_tree() {
+        let (engine, rows) = aligned_mito(30, 6);
+        let cfg = TreeConfig {
+            clustering: ClusterConfig { max_cluster_size: 12, ..Default::default() },
+        };
+        let result = build_tree(&engine, &rows, None, &cfg).unwrap();
+        result.tree.validate().unwrap();
+        assert_eq!(result.tree.num_leaves(), 30);
+        assert!(result.num_clusters >= 2);
+        assert!(result.log_likelihood < 0.0, "logML must be negative");
+        // Every input id appears exactly once.
+        let mut leaves: Vec<&str> = result.tree.leaf_labels();
+        leaves.sort();
+        let mut ids: Vec<&str> = rows.iter().map(|r| r.id.as_str()).collect();
+        ids.sort();
+        assert_eq!(leaves, ids);
+    }
+
+    #[test]
+    fn clustered_tree_close_to_single_nj_in_likelihood() {
+        let (engine, rows) = aligned_mito(24, 7);
+        // Single-cluster (plain NJ over everything).
+        let single_cfg = TreeConfig {
+            clustering: ClusterConfig { num_clusters: 1, max_cluster_size: 1000, ..Default::default() },
+        };
+        let single = build_tree(&engine, &rows, None, &single_cfg).unwrap();
+        // Multi-cluster.
+        let multi_cfg = TreeConfig {
+            clustering: ClusterConfig { max_cluster_size: 8, ..Default::default() },
+        };
+        let multi = build_tree(&engine, &rows, None, &multi_cfg).unwrap();
+        assert_eq!(single.tree.num_leaves(), multi.tree.num_leaves());
+        // The clustered approximation should be within a few percent of
+        // the full-NJ likelihood (both negative; larger is better).
+        let rel = (multi.log_likelihood - single.log_likelihood).abs()
+            / single.log_likelihood.abs();
+        assert!(rel < 0.10, "clustered NJ degraded logML by {rel:.3}");
+    }
+
+    #[test]
+    fn deterministic_output() {
+        let (engine, rows) = aligned_mito(16, 8);
+        let cfg = TreeConfig {
+            clustering: ClusterConfig { max_cluster_size: 6, ..Default::default() },
+        };
+        let a = build_tree(&engine, &rows, None, &cfg).unwrap();
+        let b = build_tree(&engine, &rows, None, &cfg).unwrap();
+        assert_eq!(a.tree.to_newick(), b.tree.to_newick());
+    }
+}

@@ -1,0 +1,274 @@
+//! Phylogenetic tree representation + Newick serialization.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::engine::MemSize;
+use crate::util::{Decode, Encode};
+
+/// An unrooted-tree-as-rooted-DAG: node 0..n, `root` has no parent.
+/// Leaves carry taxon labels; branch lengths live on the edge to the
+/// parent.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tree {
+    pub nodes: Vec<TreeNode>,
+    pub root: usize,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TreeNode {
+    pub parent: Option<usize>,
+    pub children: Vec<usize>,
+    /// Length of the edge to the parent (0 for the root).
+    pub branch: f64,
+    /// Leaf label (None for internal nodes).
+    pub label: Option<String>,
+}
+
+impl Tree {
+    /// Single-leaf tree.
+    pub fn leaf(label: impl Into<String>) -> Self {
+        Self {
+            nodes: vec![TreeNode {
+                parent: None,
+                children: Vec::new(),
+                branch: 0.0,
+                label: Some(label.into()),
+            }],
+            root: 0,
+        }
+    }
+
+    pub fn num_leaves(&self) -> usize {
+        self.nodes.iter().filter(|n| n.children.is_empty()).count()
+    }
+
+    pub fn leaf_labels(&self) -> Vec<&str> {
+        self.nodes
+            .iter()
+            .filter(|n| n.children.is_empty())
+            .filter_map(|n| n.label.as_deref())
+            .collect()
+    }
+
+    /// Attach `child` (a whole tree) under node `at` with branch length.
+    pub fn graft(&mut self, subtree: &Tree, at: usize, branch: f64) -> usize {
+        let offset = self.nodes.len();
+        for (i, n) in subtree.nodes.iter().enumerate() {
+            let mut n = n.clone();
+            n.parent = n.parent.map(|p| p + offset);
+            n.children = n.children.iter().map(|c| c + offset).collect();
+            if i == subtree.root {
+                n.parent = Some(at);
+                n.branch = branch;
+            }
+            self.nodes.push(n);
+        }
+        let new_root = subtree.root + offset;
+        self.nodes[at].children.push(new_root);
+        new_root
+    }
+
+    /// Sum of all branch lengths.
+    pub fn total_length(&self) -> f64 {
+        self.nodes.iter().map(|n| n.branch).sum()
+    }
+
+    /// Serialize to Newick (labels quoted only if needed; lengths with 6
+    /// significant digits).
+    pub fn to_newick(&self) -> String {
+        let mut s = String::new();
+        self.write_node(self.root, &mut s);
+        s.push(';');
+        s
+    }
+
+    fn write_node(&self, idx: usize, out: &mut String) {
+        let n = &self.nodes[idx];
+        if n.children.is_empty() {
+            out.push_str(n.label.as_deref().unwrap_or("?"));
+        } else {
+            out.push('(');
+            for (i, &c) in n.children.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                self.write_node(c, out);
+            }
+            out.push(')');
+        }
+        if idx != self.root {
+            out.push_str(&format!(":{:.6}", n.branch));
+        }
+    }
+
+    /// Parse Newick (subset: labels, branch lengths, nesting).
+    pub fn from_newick(text: &str) -> Result<Self> {
+        let text = text.trim().trim_end_matches(';');
+        let mut nodes: Vec<TreeNode> = Vec::new();
+        let chars: Vec<char> = text.chars().collect();
+        let mut pos = 0usize;
+        let root = parse_node(&chars, &mut pos, &mut nodes, None)?;
+        ensure!(pos == chars.len(), "trailing characters at {pos}");
+        Ok(Self { nodes, root })
+    }
+
+    /// Structural sanity: parent/child symmetry, single root, all
+    /// reachable.
+    pub fn validate(&self) -> Result<()> {
+        let mut seen = vec![false; self.nodes.len()];
+        let mut stack = vec![self.root];
+        ensure!(self.nodes[self.root].parent.is_none(), "root has a parent");
+        while let Some(i) = stack.pop() {
+            ensure!(!seen[i], "cycle at node {i}");
+            seen[i] = true;
+            for &c in &self.nodes[i].children {
+                ensure!(self.nodes[c].parent == Some(i), "broken parent link {c}");
+                stack.push(c);
+            }
+        }
+        ensure!(seen.iter().all(|&s| s), "unreachable nodes");
+        for n in &self.nodes {
+            if n.children.is_empty() {
+                ensure!(n.label.is_some(), "unlabeled leaf");
+            }
+        }
+        Ok(())
+    }
+}
+
+fn parse_node(
+    chars: &[char],
+    pos: &mut usize,
+    nodes: &mut Vec<TreeNode>,
+    parent: Option<usize>,
+) -> Result<usize> {
+    let idx = nodes.len();
+    nodes.push(TreeNode { parent, children: Vec::new(), branch: 0.0, label: None });
+    if *pos < chars.len() && chars[*pos] == '(' {
+        *pos += 1; // consume '('
+        loop {
+            let child = parse_node(chars, pos, nodes, Some(idx))?;
+            nodes[idx].children.push(child);
+            match chars.get(*pos) {
+                Some(',') => *pos += 1,
+                Some(')') => {
+                    *pos += 1;
+                    break;
+                }
+                other => bail!("expected ',' or ')' at {pos}, got {other:?}"),
+            }
+        }
+    }
+    // Label.
+    let start = *pos;
+    while *pos < chars.len() && !matches!(chars[*pos], ',' | ')' | ':' | '(') {
+        *pos += 1;
+    }
+    if *pos > start {
+        nodes[idx].label = Some(chars[start..*pos].iter().collect());
+    }
+    // Branch length.
+    if chars.get(*pos) == Some(&':') {
+        *pos += 1;
+        let start = *pos;
+        while *pos < chars.len() && !matches!(chars[*pos], ',' | ')' | '(') {
+            *pos += 1;
+        }
+        let txt: String = chars[start..*pos].iter().collect();
+        nodes[idx].branch = txt.parse::<f64>().map_err(|e| anyhow::anyhow!("bad branch {txt:?}: {e}"))?;
+    }
+    Ok(idx)
+}
+
+impl MemSize for Tree {
+    fn mem_bytes(&self) -> usize {
+        self.nodes
+            .iter()
+            .map(|n| {
+                48 + n.children.len() * 8
+                    + n.label.as_ref().map(|l| l.len()).unwrap_or(0)
+            })
+            .sum::<usize>()
+            + 24
+    }
+}
+
+impl Encode for Tree {
+    fn encode(&self, out: &mut Vec<u8>) {
+        (self.root as u64).encode(out);
+        (self.nodes.len() as u64).encode(out);
+        for n in &self.nodes {
+            n.parent.map(|p| p as u64).encode(out);
+            n.children.iter().map(|&c| c as u64).collect::<Vec<_>>().encode(out);
+            n.branch.encode(out);
+            n.label.clone().encode(out);
+        }
+    }
+}
+
+impl Decode for Tree {
+    fn decode(input: &mut &[u8]) -> Result<Self> {
+        let root = u64::decode(input)? as usize;
+        let n = u64::decode(input)? as usize;
+        let mut nodes = Vec::with_capacity(n.min(1 << 20));
+        for _ in 0..n {
+            let parent = Option::<u64>::decode(input)?.map(|p| p as usize);
+            let children = Vec::<u64>::decode(input)?.into_iter().map(|c| c as usize).collect();
+            let branch = f64::decode(input)?;
+            let label = Option::<String>::decode(input)?;
+            nodes.push(TreeNode { parent, children, branch, label });
+        }
+        Ok(Self { nodes, root })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn newick_roundtrip() {
+        let text = "((a:1.000000,b:2.000000):0.500000,c:3.000000);";
+        let t = Tree::from_newick(text).unwrap();
+        t.validate().unwrap();
+        assert_eq!(t.num_leaves(), 3);
+        assert_eq!(t.to_newick(), text);
+    }
+
+    #[test]
+    fn single_leaf() {
+        let t = Tree::leaf("x");
+        assert_eq!(t.to_newick(), "x;");
+        assert_eq!(t.num_leaves(), 1);
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn graft_preserves_validity() {
+        let mut t = Tree::from_newick("(a:1,b:1);").unwrap();
+        let sub = Tree::from_newick("(c:1,d:1);").unwrap();
+        t.graft(&sub, t.root, 0.7);
+        t.validate().unwrap();
+        assert_eq!(t.num_leaves(), 4);
+        assert!(t.to_newick().contains("(c:1.000000,d:1.000000):0.700000"));
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Tree::from_newick("((a,b)").is_err());
+        assert!(Tree::from_newick("(a:x,b:1);").is_err());
+    }
+
+    #[test]
+    fn codec_roundtrip() {
+        let t = Tree::from_newick("((a:1,b:2):0.5,(c:1,d:1):0.25);").unwrap();
+        let back = Tree::from_bytes(&t.to_bytes()).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn total_length_sums_branches() {
+        let t = Tree::from_newick("((a:1,b:2):0.5,c:3);").unwrap();
+        assert!((t.total_length() - 6.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,239 @@
+//! Neighbor-joining (Saitou & Nei 1987) — the paper's distance-based tree
+//! method ("time-efficient and suitable for ultra-large sequences data").
+//!
+//! Classic O(n³)-time / O(n²)-space implementation with an active-node
+//! list and incrementally maintained row sums (the O(n²) update the
+//! HPTree line of work relies on).
+
+use anyhow::{ensure, Result};
+
+use super::newick::{Tree, TreeNode};
+
+/// Build an NJ tree over `labels` with the given symmetric distance
+/// matrix.  Returns a rooted binary-ish tree (the final join becomes the
+/// root's children).
+pub fn neighbor_joining(labels: &[String], dist: &[Vec<f64>]) -> Result<Tree> {
+    let n = labels.len();
+    ensure!(n > 0, "empty taxon set");
+    ensure!(dist.len() == n && dist.iter().all(|r| r.len() == n), "bad matrix shape");
+    if n == 1 {
+        return Ok(Tree::leaf(labels[0].clone()));
+    }
+
+    // Working copy of the distance matrix; grows as joins add nodes.
+    let mut d: Vec<Vec<f64>> = dist.to_vec();
+    // node id of each working row (tree node indices).
+    let mut nodes: Vec<TreeNode> = labels
+        .iter()
+        .map(|l| TreeNode {
+            parent: None,
+            children: Vec::new(),
+            branch: 0.0,
+            label: Some(l.clone()),
+        })
+        .collect();
+    let mut active: Vec<usize> = (0..n).collect(); // indices into d/nodes
+
+    // Row sums over active set.
+    let mut rowsum: Vec<f64> = (0..n)
+        .map(|i| (0..n).map(|j| d[i][j]).sum())
+        .collect();
+
+    while active.len() > 2 {
+        let r = active.len() as f64;
+        // Find the pair minimizing the Q criterion.
+        let (mut best_q, mut bi, mut bj) = (f64::INFINITY, 0usize, 1usize);
+        for (ai, &i) in active.iter().enumerate() {
+            for &j in active.iter().skip(ai + 1) {
+                let q = (r - 2.0) * d[i][j] - rowsum[i] - rowsum[j];
+                if q < best_q {
+                    best_q = q;
+                    bi = i;
+                    bj = j;
+                }
+            }
+        }
+        // Branch lengths to the new internal node.
+        let dij = d[bi][bj];
+        let li = 0.5 * dij + (rowsum[bi] - rowsum[bj]) / (2.0 * (r - 2.0));
+        let li = li.clamp(0.0, dij.max(0.0));
+        let lj = (dij - li).max(0.0);
+
+        let u = nodes.len();
+        nodes.push(TreeNode { parent: None, children: vec![bi, bj], branch: 0.0, label: None });
+        nodes[bi].parent = Some(u);
+        nodes[bi].branch = li;
+        nodes[bj].parent = Some(u);
+        nodes[bj].branch = lj;
+
+        // New distance row: d(u, k) = (d(i,k) + d(j,k) - d(i,j)) / 2.
+        let mut du = vec![0f64; u + 1];
+        for &k in &active {
+            if k == bi || k == bj {
+                continue;
+            }
+            du[k] = ((d[bi][k] + d[bj][k] - dij) / 2.0).max(0.0);
+        }
+        for row in d.iter_mut() {
+            row.push(0.0);
+        }
+        d.push(du.clone());
+        for &k in &active {
+            if k != bi && k != bj {
+                d[k][u] = du[k];
+                d[u][k] = du[k];
+            }
+        }
+        // Update active set and row sums.
+        active.retain(|&k| k != bi && k != bj);
+        for &k in &active {
+            rowsum[k] -= d[bi][k] + d[bj][k];
+            rowsum[k] += d[u][k];
+        }
+        let su: f64 = active.iter().map(|&k| d[u][k]).sum();
+        rowsum.push(su);
+        active.push(u);
+    }
+
+    // Join the final two under a root.
+    let (a, b) = (active[0], active[1]);
+    let root = nodes.len();
+    let dab = d[a][b].max(0.0);
+    nodes.push(TreeNode { parent: None, children: vec![a, b], branch: 0.0, label: None });
+    nodes[a].parent = Some(root);
+    nodes[a].branch = dab / 2.0;
+    nodes[b].parent = Some(root);
+    nodes[b].branch = dab / 2.0;
+
+    let tree = Tree { nodes, root };
+    tree.validate()?;
+    Ok(tree)
+}
+
+/// Leaf-to-leaf path distance in a tree (test helper for the 4-point
+/// consistency of NJ on additive matrices).
+pub fn tree_distance(tree: &Tree, a: &str, b: &str) -> Option<f64> {
+    let find = |lbl: &str| {
+        tree.nodes
+            .iter()
+            .position(|n| n.label.as_deref() == Some(lbl) && n.children.is_empty())
+    };
+    let (mut x, mut y) = (find(a)?, find(b)?);
+    // Collect depth paths to root.
+    let depth = |mut i: usize| {
+        let mut d = 0;
+        while let Some(p) = tree.nodes[i].parent {
+            i = p;
+            d += 1;
+        }
+        d
+    };
+    let (mut dx, mut dy) = (depth(x), depth(y));
+    let mut total = 0.0;
+    while dx > dy {
+        total += tree.nodes[x].branch;
+        x = tree.nodes[x].parent.unwrap();
+        dx -= 1;
+    }
+    while dy > dx {
+        total += tree.nodes[y].branch;
+        y = tree.nodes[y].parent.unwrap();
+        dy -= 1;
+    }
+    while x != y {
+        total += tree.nodes[x].branch + tree.nodes[y].branch;
+        x = tree.nodes[x].parent.unwrap();
+        y = tree.nodes[y].parent.unwrap();
+    }
+    Some(total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn labels(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("t{i}")).collect()
+    }
+
+    #[test]
+    fn two_taxa() {
+        let t = neighbor_joining(&labels(2), &[vec![0.0, 1.0], vec![1.0, 0.0]]).unwrap();
+        assert_eq!(t.num_leaves(), 2);
+        assert!((tree_distance(&t, "t0", "t1").unwrap() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn recovers_additive_tree_distances() {
+        // Tree: ((A:2,B:3):1,(C:4,D:5):1) — additive matrix below.
+        let d = vec![
+            vec![0.0, 5.0, 7.0, 8.0],
+            vec![5.0, 0.0, 8.0, 9.0],
+            vec![7.0, 8.0, 0.0, 9.0],
+            vec![8.0, 9.0, 9.0, 0.0],
+        ];
+        let lbl = vec!["A".into(), "B".into(), "C".into(), "D".into()];
+        let t = neighbor_joining(&lbl, &d).unwrap();
+        t.validate().unwrap();
+        assert_eq!(t.num_leaves(), 4);
+        // NJ is consistent on additive matrices: path lengths match input.
+        for (i, a) in ["A", "B", "C", "D"].iter().enumerate() {
+            for (j, b) in ["A", "B", "C", "D"].iter().enumerate() {
+                if i < j {
+                    let td = tree_distance(&t, a, b).unwrap();
+                    assert!(
+                        (td - d[i][j]).abs() < 1e-6,
+                        "d({a},{b}) = {td}, want {}",
+                        d[i][j]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn correct_topology_for_clustered_taxa() {
+        // Two tight pairs far apart: (A,B) and (C,D) must be siblings.
+        let d = vec![
+            vec![0.0, 0.1, 2.0, 2.0],
+            vec![0.1, 0.0, 2.0, 2.0],
+            vec![2.0, 2.0, 0.0, 0.1],
+            vec![2.0, 2.0, 0.1, 0.0],
+        ];
+        let lbl = vec!["A".into(), "B".into(), "C".into(), "D".into()];
+        let t = neighbor_joining(&lbl, &d).unwrap();
+        let ab = tree_distance(&t, "A", "B").unwrap();
+        let ac = tree_distance(&t, "A", "C").unwrap();
+        assert!(ab < ac, "A-B ({ab}) should be closer than A-C ({ac})");
+    }
+
+    #[test]
+    fn handles_moderate_sizes() {
+        use crate::util::Rng;
+        let n = 64;
+        let mut rng = Rng::seed_from_u64(5);
+        let mut d = vec![vec![0f64; n]; n];
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let v = 0.1 + rng.f64();
+                d[i][j] = v;
+                d[j][i] = v;
+            }
+        }
+        let t = neighbor_joining(&labels(n), &d).unwrap();
+        t.validate().unwrap();
+        assert_eq!(t.num_leaves(), n);
+        assert!(t.total_length() > 0.0);
+    }
+
+    #[test]
+    fn single_taxon_is_leaf() {
+        let t = neighbor_joining(&labels(1), &[vec![0.0]]).unwrap();
+        assert_eq!(t.num_leaves(), 1);
+    }
+
+    #[test]
+    fn rejects_ragged_matrix() {
+        assert!(neighbor_joining(&labels(2), &[vec![0.0, 1.0]]).is_err());
+    }
+}

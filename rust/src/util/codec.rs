@@ -1,0 +1,201 @@
+//! Tiny binary codec for the disk (Hadoop-mode) shuffle and broadcast
+//! spill files — the offline stand-in for serde/bincode.
+//!
+//! Little-endian, length-prefixed, no schema evolution (spill files never
+//! outlive a job). The engine requires `Encode + Decode` on any element
+//! type that crosses a DiskKv stage boundary, which is exactly the
+//! serialization tax Hadoop pays and Spark's in-memory cache avoids — the
+//! mechanism behind the paper's Tables 2-4 speedups.
+
+use anyhow::{bail, Context, Result};
+
+pub trait Encode {
+    fn encode(&self, out: &mut Vec<u8>);
+
+    fn to_bytes(&self) -> Vec<u8> {
+        let mut v = Vec::new();
+        self.encode(&mut v);
+        v
+    }
+}
+
+pub trait Decode: Sized {
+    fn decode(input: &mut &[u8]) -> Result<Self>;
+
+    fn from_bytes(mut bytes: &[u8]) -> Result<Self> {
+        let v = Self::decode(&mut bytes)?;
+        if !bytes.is_empty() {
+            bail!("{} trailing bytes after decode", bytes.len());
+        }
+        Ok(v)
+    }
+}
+
+fn take<'a>(input: &mut &'a [u8], n: usize) -> Result<&'a [u8]> {
+    if input.len() < n {
+        bail!("codec underrun: need {n} bytes, have {}", input.len());
+    }
+    let (head, tail) = input.split_at(n);
+    *input = tail;
+    Ok(head)
+}
+
+macro_rules! impl_prim {
+    ($($t:ty),*) => {$(
+        impl Encode for $t {
+            fn encode(&self, out: &mut Vec<u8>) {
+                out.extend_from_slice(&self.to_le_bytes());
+            }
+        }
+        impl Decode for $t {
+            fn decode(input: &mut &[u8]) -> Result<Self> {
+                let bytes = take(input, std::mem::size_of::<$t>())?;
+                Ok(<$t>::from_le_bytes(bytes.try_into().unwrap()))
+            }
+        }
+    )*};
+}
+
+impl_prim!(u8, u16, u32, u64, i8, i16, i32, i64, f32, f64, usize, isize);
+
+impl Encode for bool {
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.push(*self as u8);
+    }
+}
+
+impl Decode for bool {
+    fn decode(input: &mut &[u8]) -> Result<Self> {
+        Ok(take(input, 1)?[0] != 0)
+    }
+}
+
+impl Encode for String {
+    fn encode(&self, out: &mut Vec<u8>) {
+        (self.len() as u64).encode(out);
+        out.extend_from_slice(self.as_bytes());
+    }
+}
+
+impl Decode for String {
+    fn decode(input: &mut &[u8]) -> Result<Self> {
+        let len = u64::decode(input)? as usize;
+        let bytes = take(input, len)?;
+        String::from_utf8(bytes.to_vec()).context("invalid utf-8 in codec")
+    }
+}
+
+impl<T: Encode> Encode for Vec<T> {
+    fn encode(&self, out: &mut Vec<u8>) {
+        (self.len() as u64).encode(out);
+        for item in self {
+            item.encode(out);
+        }
+    }
+}
+
+impl<T: Decode> Decode for Vec<T> {
+    fn decode(input: &mut &[u8]) -> Result<Self> {
+        let len = u64::decode(input)? as usize;
+        // Guard absurd lengths so corrupt files fail fast, not OOM.
+        if len > input.len() + (1 << 24) {
+            bail!("codec: implausible vec length {len}");
+        }
+        let mut v = Vec::with_capacity(len.min(1 << 20));
+        for _ in 0..len {
+            v.push(T::decode(input)?);
+        }
+        Ok(v)
+    }
+}
+
+impl<T: Encode> Encode for Option<T> {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            None => out.push(0),
+            Some(v) => {
+                out.push(1);
+                v.encode(out);
+            }
+        }
+    }
+}
+
+impl<T: Decode> Decode for Option<T> {
+    fn decode(input: &mut &[u8]) -> Result<Self> {
+        match take(input, 1)?[0] {
+            0 => Ok(None),
+            1 => Ok(Some(T::decode(input)?)),
+            other => bail!("codec: bad Option tag {other}"),
+        }
+    }
+}
+
+macro_rules! impl_tuple {
+    ($($name:ident : $idx:tt),+) => {
+        impl<$($name: Encode),+> Encode for ($($name,)+) {
+            fn encode(&self, out: &mut Vec<u8>) {
+                $(self.$idx.encode(out);)+
+            }
+        }
+        impl<$($name: Decode),+> Decode for ($($name,)+) {
+            fn decode(input: &mut &[u8]) -> Result<Self> {
+                Ok(($($name::decode(input)?,)+))
+            }
+        }
+    };
+}
+
+impl_tuple!(A: 0);
+impl_tuple!(A: 0, B: 1);
+impl_tuple!(A: 0, B: 1, C: 2);
+impl_tuple!(A: 0, B: 1, C: 2, D: 3);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip<T: Encode + Decode + PartialEq + std::fmt::Debug>(v: T) {
+        let bytes = v.to_bytes();
+        assert_eq!(T::from_bytes(&bytes).unwrap(), v);
+    }
+
+    #[test]
+    fn primitives() {
+        roundtrip(42u8);
+        roundtrip(-7i64);
+        roundtrip(3.25f64);
+        roundtrip(usize::MAX);
+        roundtrip(true);
+    }
+
+    #[test]
+    fn strings_and_vecs() {
+        roundtrip(String::from("ACGT-N ≈ ülträ"));
+        roundtrip(vec![1u32, 2, 3]);
+        roundtrip(Vec::<String>::new());
+        roundtrip(vec![vec![1u8, 2], vec![], vec![3]]);
+    }
+
+    #[test]
+    fn tuples_and_options() {
+        roundtrip((1u32, String::from("x"), vec![2u64]));
+        roundtrip(Option::<u32>::None);
+        roundtrip(Some(vec![(1u8, 2u8)]));
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let mut bytes = 5u32.to_bytes();
+        bytes.push(0);
+        assert!(u32::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn rejects_underrun_and_bad_tags() {
+        assert!(u64::from_bytes(&[1, 2, 3]).is_err());
+        assert!(Option::<u8>::from_bytes(&[9]).is_err());
+        let huge = (u64::MAX).to_bytes();
+        assert!(Vec::<u8>::from_bytes(&huge).is_err());
+    }
+}

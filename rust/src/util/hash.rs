@@ -1,0 +1,78 @@
+//! Deterministic hashing for shuffle partitioning and grouping maps.
+//!
+//! `std::collections::HashMap`'s default `RandomState` is seeded per
+//! process, which would make partition contents (and therefore task
+//! timings and spill sizes) non-reproducible across runs; every map the
+//! engine uses for keyed data is a [`DetHashMap`] instead (FNV-1a, fixed
+//! offset basis).
+
+use std::hash::{BuildHasherDefault, Hash, Hasher};
+
+/// FNV-1a 64-bit.
+#[derive(Debug, Default, Clone)]
+pub struct FnvHasher(u64);
+
+const OFFSET: u64 = 0xcbf29ce484222325;
+const PRIME: u64 = 0x100000001b3;
+
+impl Hasher for FnvHasher {
+    fn finish(&self) -> u64 {
+        if self.0 == 0 {
+            OFFSET
+        } else {
+            self.0
+        }
+    }
+
+    fn write(&mut self, bytes: &[u8]) {
+        let mut h = if self.0 == 0 { OFFSET } else { self.0 };
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(PRIME);
+        }
+        self.0 = h;
+    }
+}
+
+pub type DetState = BuildHasherDefault<FnvHasher>;
+pub type DetHashMap<K, V> = std::collections::HashMap<K, V, DetState>;
+pub type DetHashSet<K> = std::collections::HashSet<K, DetState>;
+
+/// Deterministic 64-bit hash of any `Hash` value.
+pub fn det_hash<T: Hash>(value: &T) -> u64 {
+    let mut h = FnvHasher::default();
+    value.hash(&mut h);
+    h.finish()
+}
+
+/// Stable reduce-partition assignment for a key.
+pub fn partition_for<T: Hash>(key: &T, num_partitions: usize) -> usize {
+    (det_hash(key) % num_partitions as u64) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stable_across_calls() {
+        assert_eq!(det_hash(&"abc"), det_hash(&"abc"));
+        assert_ne!(det_hash(&"abc"), det_hash(&"abd"));
+    }
+
+    #[test]
+    fn partitions_in_range_and_spread() {
+        let mut counts = vec![0usize; 7];
+        for i in 0..700u64 {
+            counts[partition_for(&i, 7)] += 1;
+        }
+        assert!(counts.iter().all(|&c| c > 50), "skewed: {counts:?}");
+    }
+
+    #[test]
+    fn det_map_is_usable() {
+        let mut m: DetHashMap<String, u32> = DetHashMap::default();
+        m.insert("x".into(), 1);
+        assert_eq!(m["x"], 1);
+    }
+}

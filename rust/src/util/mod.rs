@@ -1,0 +1,12 @@
+//! Std-only substitutes for the usual crate ecosystem (offline build):
+//! deterministic PRNG, binary codec for the disk shuffle, and a tiny
+//! stopwatch.
+
+pub mod codec;
+pub mod hash;
+pub mod rng;
+pub mod timer;
+
+pub use codec::{Decode, Encode};
+pub use rng::Rng;
+pub use timer::Stopwatch;

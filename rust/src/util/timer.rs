@@ -1,0 +1,76 @@
+//! Minimal stopwatch + duration formatting in the paper's "1 h 25 m" style.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+    laps: Vec<(String, Duration)>,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self { start: Instant::now(), laps: Vec::new() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Record a named lap measured from the previous lap (or start).
+    pub fn lap(&mut self, name: &str) -> Duration {
+        let total: Duration = self.laps.iter().map(|(_, d)| *d).sum();
+        let d = self.elapsed().saturating_sub(total);
+        self.laps.push((name.to_string(), d));
+        d
+    }
+
+    pub fn laps(&self) -> &[(String, Duration)] {
+        &self.laps
+    }
+}
+
+/// Format like the paper's tables: "14 s", "10 m 24 s", "1 h 25 m".
+pub fn fmt_duration(d: Duration) -> String {
+    let secs = d.as_secs_f64();
+    if secs < 1.0 {
+        format!("{:.0} ms", secs * 1e3)
+    } else if secs < 60.0 {
+        format!("{secs:.1} s")
+    } else if secs < 3600.0 {
+        format!("{} m {} s", (secs as u64) / 60, (secs as u64) % 60)
+    } else {
+        format!("{} h {} m", (secs as u64) / 3600, ((secs as u64) % 3600) / 60)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn formats_paper_style() {
+        assert_eq!(fmt_duration(Duration::from_millis(250)), "250 ms");
+        assert_eq!(fmt_duration(Duration::from_secs(14)), "14.0 s");
+        assert_eq!(fmt_duration(Duration::from_secs(624)), "10 m 24 s");
+        assert_eq!(fmt_duration(Duration::from_secs(5100)), "1 h 25 m");
+    }
+
+    #[test]
+    fn laps_partition_elapsed() {
+        let mut sw = Stopwatch::new();
+        std::thread::sleep(Duration::from_millis(5));
+        sw.lap("a");
+        std::thread::sleep(Duration::from_millis(5));
+        sw.lap("b");
+        let total: Duration = sw.laps().iter().map(|(_, d)| *d).sum();
+        assert!(total <= sw.elapsed());
+        assert_eq!(sw.laps().len(), 2);
+    }
+}

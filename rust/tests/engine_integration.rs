@@ -1,0 +1,124 @@
+//! Engine integration: multi-stage jobs across both shuffle backends,
+//! fault recovery through real pipelines, memory-accounting invariants.
+
+use halign2::engine::{Backend, Cluster, ClusterConfig, FaultPlan};
+
+fn wordcount(c: &Cluster, text: &[&str]) -> Vec<(String, usize)> {
+    let lines: Vec<String> = text.iter().map(|s| s.to_string()).collect();
+    let mut counts = c
+        .parallelize(lines, 4)
+        .flat_map(|line| line.split_whitespace().map(|w| w.to_string()).collect::<Vec<_>>())
+        .map(|w| (w, 1usize))
+        .reduce_by_key(3, |a, b| a + b)
+        .collect()
+        .unwrap();
+    counts.sort();
+    counts
+}
+
+#[test]
+fn wordcount_identical_across_backends() {
+    let text = ["a b a", "c b a", "c c c c", "", "b"];
+    let spark = wordcount(&Cluster::new(ClusterConfig::spark(3)), &text);
+    let hadoop = wordcount(&Cluster::new(ClusterConfig::hadoop(3)), &text);
+    assert_eq!(spark, hadoop);
+    assert_eq!(
+        spark,
+        vec![("a".into(), 3), ("b".into(), 3), ("c".into(), 5)]
+    );
+}
+
+#[test]
+fn multi_stage_pipeline_with_joins() {
+    let c = Cluster::new(ClusterConfig::spark(4));
+    let users: Vec<(u32, String)> = (0..50).map(|i| (i, format!("user{i}"))).collect();
+    let purchases: Vec<(u32, u64)> = (0..200).map(|i| (i % 50, (i * 3) as u64)).collect();
+    let spend = c.parallelize(purchases, 6).reduce_by_key(4, |a, b| a + b);
+    let joined = c.parallelize(users, 5).join(&spend, 4);
+    let total: u64 = joined.collect().unwrap().iter().map(|(_, (_, s))| s).sum();
+    let expect: u64 = (0..200u64).map(|i| i * 3).sum();
+    assert_eq!(total, expect);
+}
+
+#[test]
+fn random_faults_do_not_change_results() {
+    let clean = {
+        let c = Cluster::new(ClusterConfig::spark(3));
+        wordcount(&c, &["x y z", "x x", "z"])
+    };
+    for seed in 0..5 {
+        let mut cfg = ClusterConfig::spark(3);
+        cfg.fault = FaultPlan::random(0.4, seed);
+        cfg.max_retries = 10;
+        let c = Cluster::new(cfg);
+        assert_eq!(wordcount(&c, &["x y z", "x x", "z"]), clean, "seed {seed}");
+    }
+}
+
+#[test]
+fn diskkv_pays_io_inmemory_pays_memory() {
+    let payload: Vec<(u32, Vec<u8>)> = (0..256).map(|i| (i % 16, vec![7u8; 2048])).collect();
+
+    let spark = Cluster::new(ClusterConfig::spark(4));
+    spark.parallelize(payload.clone(), 8).group_by_key(4).count().unwrap();
+    let s = spark.stats();
+    assert_eq!(s.shuffle_bytes_written, 0, "spark shuffles stay in memory");
+    assert!(s.avg_max_memory_bytes > 0.0);
+
+    let hadoop = Cluster::new(ClusterConfig::hadoop(4));
+    hadoop.parallelize(payload, 8).group_by_key(4).count().unwrap();
+    let h = hadoop.stats();
+    assert!(h.shuffle_bytes_written as f64 > 256.0 * 2048.0 * 0.9, "hadoop spills");
+}
+
+#[test]
+fn results_independent_of_parallelism() {
+    let job = |workers: usize| {
+        let c = Cluster::new(ClusterConfig::spark(workers));
+        let data: Vec<u64> = (0..64).collect();
+        c.parallelize(data, 16)
+            .map(|x| {
+                let mut acc = x;
+                for i in 0..20_000u64 {
+                    acc = acc.wrapping_mul(6364136223846793005).wrapping_add(i);
+                }
+                acc
+            })
+            .reduce(|a, b| a ^ b)
+            .unwrap()
+    };
+    assert_eq!(job(1), job(4));
+}
+
+#[test]
+fn checkpoint_chain_across_backends() {
+    for cfg in [ClusterConfig::spark(2), ClusterConfig::hadoop(2)] {
+        let is_disk = cfg.backend == Backend::DiskKv;
+        let c = Cluster::new(cfg);
+        let r1 = c.parallelize((0..100u64).collect(), 5).map(|x| x * 2);
+        let ck1 = r1.checkpoint().unwrap();
+        let r2 = ck1.filter(|x| x % 4 == 0);
+        let ck2 = r2.checkpoint().unwrap();
+        let sum: u64 = ck2.collect().unwrap().iter().sum();
+        assert_eq!(sum, (0..100u64).map(|x| x * 2).filter(|x| x % 4 == 0).sum());
+        if is_disk {
+            assert!(c.stats().shuffle_bytes_written > 0);
+        }
+    }
+}
+
+#[test]
+fn broadcast_reaches_all_tasks() {
+    let c = Cluster::new(ClusterConfig::spark(4));
+    let table: Vec<u64> = (0..1000).map(|i| i * i).collect();
+    let bc = c.broadcast(table).unwrap();
+    let arc = bc.arc();
+    let out = c
+        .parallelize((0..100u64).collect(), 8)
+        .map(move |i| arc[i as usize])
+        .collect()
+        .unwrap();
+    let mut sorted = out;
+    sorted.sort();
+    assert_eq!(sorted, (0..100u64).map(|i| i * i).collect::<Vec<_>>());
+}

@@ -1,0 +1,129 @@
+//! Full-stack integration: dataset → MSA → SP score → tree, across
+//! alphabets, backends, and (when artifacts exist) the XLA service.
+
+use halign2::align::center_star::{align_nucleotide, CenterStarConfig};
+use halign2::align::protein::{align_protein, ProteinConfig};
+use halign2::align::sp_score;
+use halign2::baselines::progressive::{progressive_msa, ProgressiveConfig};
+use halign2::baselines::sparksw::sparksw_msa;
+use halign2::data::DatasetSpec;
+use halign2::engine::{Cluster, ClusterConfig};
+use halign2::fasta::Sequence;
+use halign2::runtime::XlaService;
+use halign2::tree::{build_tree, ClusterConfig as TreeClusterConfig, TreeConfig};
+
+fn service() -> Option<XlaService> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(dir).join("manifest.txt").exists() {
+        return None;
+    }
+    XlaService::start(dir).ok()
+}
+
+#[test]
+fn dna_msa_to_tree_end_to_end() {
+    let seqs = DatasetSpec { count: 40, ..DatasetSpec::mito(0.02, 17) }.generate();
+    let cluster = Cluster::new(ClusterConfig::spark(4));
+    let msa = align_nucleotide(&cluster, &seqs, &CenterStarConfig::default()).unwrap();
+    msa.validate(&seqs).unwrap();
+
+    let sp = msa.avg_sp_distributed(&cluster).unwrap();
+    assert!(sp >= 0.0 && sp.is_finite());
+
+    let tree = build_tree(
+        &cluster,
+        &msa.aligned,
+        None,
+        &TreeConfig {
+            clustering: TreeClusterConfig { max_cluster_size: 16, ..Default::default() },
+        },
+    )
+    .unwrap();
+    assert_eq!(tree.tree.num_leaves(), 40);
+    assert!(tree.log_likelihood.is_finite() && tree.log_likelihood < 0.0);
+}
+
+#[test]
+fn protein_msa_with_xla_matches_native() {
+    let seqs: Vec<Sequence> = DatasetSpec::protein(20, 0.2, 23)
+        .generate()
+        .into_iter()
+        .filter(|s| s.len() <= 500) // keep within the 512 SW bucket
+        .take(12)
+        .collect();
+    assert!(seqs.len() >= 8, "dataset should have short proteins");
+    let native = align_protein(
+        &Cluster::new(ClusterConfig::spark(2)),
+        &seqs,
+        None,
+        &ProteinConfig::default(),
+    )
+    .unwrap();
+    native.validate(&seqs).unwrap();
+
+    if let Some(svc) = service() {
+        let xla = align_protein(
+            &Cluster::new(ClusterConfig::spark(2)),
+            &seqs,
+            Some(&svc),
+            &ProteinConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(native.width, xla.width, "XLA and native SW must agree");
+        for (a, b) in native.aligned.iter().zip(&xla.aligned) {
+            assert_eq!(a.codes, b.codes, "row {}", a.id);
+        }
+    } else {
+        eprintln!("skipping XLA comparison (no artifacts)");
+    }
+}
+
+#[test]
+fn rna_divergent_pipeline_holds_invariants() {
+    let seqs = DatasetSpec::rrna(30, 0.1, 29).generate();
+    let cluster = Cluster::new(ClusterConfig::hadoop(3));
+    let msa = align_nucleotide(
+        &cluster,
+        &seqs,
+        &CenterStarConfig { segment_len: 10, ..Default::default() },
+    )
+    .unwrap();
+    msa.validate(&seqs).unwrap();
+    // Hadoop mode must have spilled the edit paths.
+    assert!(cluster.stats().shuffle_bytes_written > 0);
+}
+
+#[test]
+fn all_aligners_agree_on_column_conservation() {
+    // Different aligners produce different MSAs, but de-gapped rows must
+    // always round-trip and SP must stay finite.
+    let seqs = DatasetSpec::protein(10, 0.15, 31).generate();
+    let engine = Cluster::new(ClusterConfig::spark(2));
+
+    let cs = align_protein(&engine, &seqs, None, &ProteinConfig::default()).unwrap();
+    let (sw, _) = sparksw_msa(2, &seqs, 5.0).unwrap();
+    let prog = progressive_msa(&seqs, &ProgressiveConfig::default()).unwrap();
+
+    for msa in [&cs, &sw, &prog] {
+        msa.validate(&seqs).unwrap();
+        let sp = sp_score::avg_sp(&msa.aligned).unwrap();
+        assert!(sp.is_finite() && sp >= 0.0);
+    }
+}
+
+#[test]
+fn tree_quality_consistent_between_backends() {
+    let seqs = DatasetSpec { count: 20, ..DatasetSpec::mito(0.02, 37) }.generate();
+    let spark = Cluster::new(ClusterConfig::spark(3));
+    let msa = align_nucleotide(&spark, &seqs, &CenterStarConfig::default()).unwrap();
+
+    let cfg = TreeConfig {
+        clustering: TreeClusterConfig { max_cluster_size: 8, ..Default::default() },
+    };
+    let t_spark = build_tree(&spark, &msa.aligned, None, &cfg).unwrap();
+    let hadoop = Cluster::new(ClusterConfig::hadoop(3));
+    let t_hadoop = build_tree(&hadoop, &msa.aligned, None, &cfg).unwrap();
+    // Same deterministic algorithm, same seed -> identical trees.
+    assert_eq!(t_spark.tree.to_newick(), t_hadoop.tree.to_newick());
+    assert!((t_spark.log_likelihood - t_hadoop.log_likelihood).abs() < 1e-9);
+}

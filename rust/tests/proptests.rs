@@ -1,0 +1,233 @@
+//! Property tests (hand-rolled generators on the deterministic PRNG —
+//! the offline build has no proptest).  Each property runs across many
+//! random cases; failures print the seed for replay.
+
+use halign2::align::pairwise::{
+    center_space_profile, decode_ops, encode_ops, global_dp, merge_profiles, path_consumes,
+    render_center_row, render_query_row,
+};
+use halign2::align::sp_score::{sp_columnwise, sp_pairwise};
+use halign2::align::sw::{sw_align, sw_matrix, SwParams};
+use halign2::align::trie::SegmentTrie;
+use halign2::engine::{Cluster, ClusterConfig};
+use halign2::fasta::{alphabet::substitution_matrix, Alphabet, Sequence};
+use halign2::tree::nj::neighbor_joining;
+use halign2::util::codec::{Decode, Encode};
+use halign2::util::Rng;
+
+const CASES: usize = 60;
+
+fn rand_codes(rng: &mut Rng, len: usize, alpha: usize) -> Vec<u8> {
+    (0..len).map(|_| rng.below(alpha) as u8).collect()
+}
+
+/// Property: every center-star path algebra invariant holds for random
+/// pairs — full consumption, profile consistency, render round-trip,
+/// equal widths.
+#[test]
+fn prop_pairwise_algebra() {
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(1000 + case as u64);
+        let n = 1 + rng.below(40);
+        let m = 1 + rng.below(40);
+        let center = rand_codes(&mut rng, n, 4);
+        let query = rand_codes(&mut rng, m, 4);
+        let ops = global_dp(&query, &center);
+        assert_eq!(path_consumes(&ops), (m, n), "case {case}");
+        assert_eq!(decode_ops(&encode_ops(&ops)), ops, "case {case}");
+
+        let own = center_space_profile(&ops, n);
+        let mut global = own.clone();
+        for _ in 0..rng.below(4) {
+            let k = rng.below(n + 1);
+            global[k] += rng.below(3) as u32;
+        }
+        let global = merge_profiles(global, &own);
+        let row = render_query_row(&query, &ops, &global, &own, Alphabet::Dna);
+        let center_row = render_center_row(&center, &global, Alphabet::Dna);
+        assert_eq!(row.len(), center_row.len(), "case {case}");
+        let degapped: Vec<u8> =
+            row.iter().copied().filter(|&c| c != Alphabet::Dna.gap()).collect();
+        assert_eq!(degapped, query, "case {case}");
+    }
+}
+
+/// Property: trie chains are monotone, anchors are exact matches, and a
+/// sequence always fully chains against itself.
+#[test]
+fn prop_trie_chain_soundness() {
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(2000 + case as u64);
+        let n = 30 + rng.below(200);
+        let seg = 4 + rng.below(8);
+        let center = rand_codes(&mut rng, n, 4);
+        let trie = SegmentTrie::build(&center, seg);
+        // Mutate a copy lightly.
+        let mut query = center.clone();
+        for _ in 0..rng.below(6) {
+            let k = rng.below(query.len());
+            query[k] = rng.below(4) as u8;
+        }
+        let chain = trie.chain(&query);
+        let mut prev_c = 0usize;
+        let mut prev_q = 0usize;
+        for (i, a) in chain.iter().enumerate() {
+            if i > 0 {
+                assert!(a.center_pos >= prev_c, "case {case}: center monotone");
+                assert!(a.query_pos >= prev_q, "case {case}: query monotone");
+            }
+            assert_eq!(
+                &query[a.query_pos..a.query_pos + a.len],
+                &center[a.center_pos..a.center_pos + a.len],
+                "case {case}: anchors must be exact matches"
+            );
+            prev_c = a.center_pos + a.len;
+            prev_q = a.query_pos + a.len;
+        }
+        // Self-chain covers every full segment.
+        let self_chain = trie.chain(&center);
+        assert_eq!(self_chain.len(), trie.num_segments(), "case {case}");
+    }
+}
+
+/// Property: SW H-matrix cells are within valid bounds and the traceback
+/// path's score equals H's maximum.
+#[test]
+fn prop_sw_score_consistency() {
+    let alpha = Alphabet::Dna;
+    let params = SwParams {
+        subst: substitution_matrix(alpha),
+        alpha: alpha.size(),
+        gap: 4.0,
+    };
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(3000 + case as u64);
+        let a: Vec<i32> = (0..1 + rng.below(30)).map(|_| rng.below(4) as i32).collect();
+        let b: Vec<i32> = (0..1 + rng.below(30)).map(|_| rng.below(4) as i32).collect();
+        let h = sw_matrix(&a, &b, &params);
+        let (_, _, best) = h.argmax();
+        assert!(best >= 0.0, "case {case}: SW is non-negative");
+        let al = sw_align(&a, &b, &params);
+        assert_eq!(al.score, best, "case {case}");
+        // Re-score the path manually.
+        let (mut i, mut j, mut score) = (al.a_start, al.b_start, 0f32);
+        for op in &al.ops {
+            match op {
+                halign2::align::sw::Op::Diag => {
+                    score += params.score(a[i], b[j]);
+                    i += 1;
+                    j += 1;
+                }
+                halign2::align::sw::Op::Up => {
+                    score -= params.gap;
+                    i += 1;
+                }
+                halign2::align::sw::Op::Left => {
+                    score -= params.gap;
+                    j += 1;
+                }
+            }
+        }
+        assert!(
+            (score - al.score).abs() < 1e-3,
+            "case {case}: path score {score} vs H max {}",
+            al.score
+        );
+    }
+}
+
+/// Property: column-wise SP equals the O(n^2 L) pairwise definition.
+#[test]
+fn prop_sp_columnwise_matches_pairwise() {
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(4000 + case as u64);
+        let n = 2 + rng.below(7);
+        let w = 1 + rng.below(30);
+        let rows: Vec<Sequence> = (0..n)
+            .map(|i| {
+                Sequence::new(format!("r{i}"), rand_codes(&mut rng, w, 6), Alphabet::Dna)
+            })
+            .collect();
+        assert_eq!(
+            sp_columnwise(&rows).unwrap(),
+            sp_pairwise(&rows),
+            "case {case}"
+        );
+    }
+}
+
+/// Property: codec round-trips arbitrary nested structures.
+#[test]
+fn prop_codec_roundtrip() {
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(5000 + case as u64);
+        let value: Vec<(u64, String, Vec<u8>)> = (0..rng.below(10))
+            .map(|_| {
+                let s: String = (0..rng.below(12))
+                    .map(|_| (b'a' + rng.below(26) as u8) as char)
+                    .collect();
+                let len = rng.below(20);
+                (rng.next_u64(), s, rand_codes(&mut rng, len, 255))
+            })
+            .collect();
+        let bytes = value.to_bytes();
+        let back = Vec::<(u64, String, Vec<u8>)>::from_bytes(&bytes).unwrap();
+        assert_eq!(back, value, "case {case}");
+    }
+}
+
+/// Property: NJ trees preserve leaf sets and have non-negative branches
+/// for arbitrary (noisy, non-additive) distance matrices.
+#[test]
+fn prop_nj_structural() {
+    for case in 0..30 {
+        let mut rng = Rng::seed_from_u64(6000 + case as u64);
+        let n = 3 + rng.below(20);
+        let labels: Vec<String> = (0..n).map(|i| format!("t{i}")).collect();
+        let mut d = vec![vec![0f64; n]; n];
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let v = rng.f64() + 0.01;
+                d[i][j] = v;
+                d[j][i] = v;
+            }
+        }
+        let t = neighbor_joining(&labels, &d).unwrap();
+        t.validate().unwrap();
+        assert_eq!(t.num_leaves(), n, "case {case}");
+        assert!(t.nodes.iter().all(|nd| nd.branch >= 0.0), "case {case}");
+        let mut leaves: Vec<&str> = t.leaf_labels();
+        leaves.sort();
+        let mut want: Vec<String> = labels.clone();
+        want.sort();
+        assert_eq!(leaves, want.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    }
+}
+
+/// Property: engine shuffles conserve elements for random pair datasets
+/// on both backends.
+#[test]
+fn prop_shuffle_conserves_elements() {
+    for case in 0..10 {
+        let mut rng = Rng::seed_from_u64(7000 + case as u64);
+        let n = 1 + rng.below(300);
+        let pairs: Vec<(u32, u32)> =
+            (0..n).map(|i| (rng.below(17) as u32, i as u32)).collect();
+        for cfg in [ClusterConfig::spark(3), ClusterConfig::hadoop(3)] {
+            let c = Cluster::new(cfg);
+            let grouped = c
+                .parallelize(pairs.clone(), 1 + rng.below(6))
+                .group_by_key(1 + rng.below(5))
+                .collect()
+                .unwrap();
+            let total: usize = grouped.iter().map(|(_, vs)| vs.len()).sum();
+            assert_eq!(total, n, "case {case}");
+            let mut all: Vec<u32> =
+                grouped.into_iter().flat_map(|(_, vs)| vs).collect();
+            all.sort();
+            let mut want: Vec<u32> = (0..n as u32).collect();
+            want.sort();
+            assert_eq!(all, want, "case {case}");
+        }
+    }
+}

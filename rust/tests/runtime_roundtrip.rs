@@ -1,0 +1,144 @@
+//! Integration tests: AOT artifacts (built by `make artifacts QUICK=1`)
+//! loaded and executed through the PJRT runtime, checked against native
+//! Rust oracles. Requires `artifacts/manifest.txt`; tests self-skip when
+//! artifacts are absent so `cargo test` stays green pre-`make artifacts`.
+
+use halign2::align::sw::{sw_matrix, SwParams};
+use halign2::runtime::{batcher, ArtifactKind, XlaService};
+
+fn service() -> Option<XlaService> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(dir).join("manifest.txt").exists() {
+        eprintln!("skipping runtime test: run `make artifacts` first");
+        return None;
+    }
+    Some(XlaService::start(dir).expect("starting XLA service"))
+}
+
+/// Deterministic LCG for test inputs.
+fn lcg(seed: &mut u64) -> u64 {
+    *seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+    *seed >> 33
+}
+
+fn random_codes(len: usize, alpha: usize, seed: &mut u64) -> Vec<i32> {
+    (0..len).map(|_| (lcg(seed) % (alpha as u64 - 1)) as i32).collect()
+}
+
+fn test_subst(alpha: usize) -> Vec<f32> {
+    // +5 match / -3 mismatch, sentinel row & column strongly negative.
+    let mut s = vec![-3f32; alpha * alpha];
+    for i in 0..alpha {
+        s[i * alpha + i] = 5.0;
+        s[i * alpha + alpha - 1] = -1e4;
+        s[(alpha - 1) * alpha + i] = -1e4;
+    }
+    s
+}
+
+#[test]
+fn sw_artifact_matches_native_dp() {
+    let Some(svc) = service() else { return };
+    let alpha = 25usize;
+    let gap = 3.0f32;
+    let mut seed = 42u64;
+    let center = random_codes(100, alpha, &mut seed);
+    let queries: Vec<Vec<i32>> = (0..10)
+        .map(|k| random_codes(40 + 7 * k, alpha, &mut seed))
+        .collect();
+
+    let subst = test_subst(alpha);
+    let b = batcher::SwBatcher::new(&svc, center.clone(), subst.clone(), alpha, gap).unwrap();
+    let hs = b.score(&queries).unwrap();
+    assert_eq!(hs.len(), queries.len());
+
+    let params = SwParams { subst: subst.clone(), alpha, gap };
+    for (q, h) in queries.iter().zip(&hs) {
+        let native = sw_matrix(q, &center, &params);
+        assert_eq!(h.m, q.len());
+        assert_eq!(h.n, center.len());
+        for i in 0..=h.m {
+            for j in 0..=h.n {
+                assert_eq!(
+                    h.at(i, j),
+                    native.at(i, j),
+                    "H[{i}][{j}] mismatch (query len {})",
+                    q.len()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sw_batcher_spans_multiple_chunks() {
+    let Some(svc) = service() else { return };
+    let alpha = 25usize;
+    let mut seed = 7u64;
+    let center = random_codes(64, alpha, &mut seed);
+    // 19 queries forces 3 chunks at bucket batch 8.
+    let queries: Vec<Vec<i32>> = (0..19).map(|_| random_codes(50, alpha, &mut seed)).collect();
+    let subst = test_subst(alpha);
+    let b = batcher::SwBatcher::new(&svc, center.clone(), subst.clone(), alpha, 2.0).unwrap();
+    let hs = b.score(&queries).unwrap();
+    let params = SwParams { subst, alpha, gap: 2.0 };
+    for (q, h) in queries.iter().zip(&hs) {
+        let native = sw_matrix(q, &center, &params);
+        let (_, _, best) = h.argmax();
+        let (_, _, best_native) = native.argmax();
+        assert_eq!(best, best_native);
+    }
+}
+
+#[test]
+fn match_counts_artifact_exact() {
+    let Some(svc) = service() else { return };
+    let alpha = 6usize; // DNA
+    let mut seed = 9u64;
+    let rows: Vec<Vec<i32>> = (0..20).map(|_| random_codes(90, alpha, &mut seed)).collect();
+    let mc = batcher::match_counts(&svc, ArtifactKind::MatchDna, &rows, alpha).unwrap();
+    for i in 0..rows.len() {
+        for j in 0..rows.len() {
+            let expect = rows[i]
+                .iter()
+                .zip(&rows[j])
+                .filter(|(a, b)| a == b)
+                .count() as f32;
+            assert_eq!(mc[i][j], expect, "pair ({i},{j})");
+        }
+    }
+}
+
+#[test]
+fn kmer_sqdist_artifact_close() {
+    let Some(svc) = service() else { return };
+    let mut seed = 5u64;
+    let profiles: Vec<Vec<f32>> = (0..30)
+        .map(|_| (0..256).map(|_| (lcg(&mut seed) % 7) as f32).collect())
+        .collect();
+    let d2 = batcher::kmer_sqdist(&svc, &profiles).unwrap();
+    for i in 0..profiles.len() {
+        assert_eq!(d2[i][i], 0.0);
+        for j in 0..profiles.len() {
+            let expect: f32 = profiles[i]
+                .iter()
+                .zip(&profiles[j])
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            assert!(
+                (d2[i][j] - expect).abs() <= 1e-2 * expect.max(1.0),
+                "pair ({i},{j}): {} vs {}",
+                d2[i][j],
+                expect
+            );
+        }
+    }
+}
+
+#[test]
+fn service_lists_compiled_executables() {
+    let Some(svc) = service() else { return };
+    let names = svc.executables();
+    assert!(!names.is_empty());
+    assert!(names.iter().any(|n| n.starts_with("sw_")));
+}
