@@ -45,7 +45,7 @@ pub fn service_forced() -> Option<XlaService> {
 
 pub fn emit(title: &str, rows: Vec<RunReport>) {
     print_table(title, &rows);
-    println!("\n# tool\tdataset\twall_s\tbusy_s\tmetric\tavg_max_mem_mb\tstatus");
+    println!("\n# {}", halign2::metrics::TSV_HEADER);
     for r in &rows {
         println!("{}", tsv_line(r));
     }

@@ -1,12 +1,17 @@
-//! Regenerates Figure 6 — running time and memory with increasing worker
-//! nodes (1, 2, 4, 8, 12).
+//! Regenerates Figure 6 — running time, memory and busy-time skew with
+//! increasing worker nodes (1, 2, 4, 8, 12), work stealing on vs off,
+//! plus the skewed-partition straggler scenario.
 #[allow(dead_code)]
 mod common;
 
 fn main() {
     let cfg = common::config_from_env();
     common::emit(
-        "Figure 6 — scaling with worker count",
+        "Figure 6 — scaling with worker count (steal on vs off)",
         halign2::bench::fig6_scaling(&cfg),
+    );
+    common::emit(
+        "Figure 6b — skewed partitions (straggler scenario)",
+        halign2::bench::fig6_skew(&cfg),
     );
 }

@@ -38,12 +38,32 @@ pub struct CenterStarConfig {
     /// similar sequences); k > 1 = sample k candidates and pick the one
     /// with the highest anchored coverage against a probe sample.
     pub center_sample: usize,
+    /// When `partitions == 0`, the pipeline is repartitioned so each task
+    /// holds roughly this many residues: long-sequence inputs get split
+    /// into finer-grained tasks the work-stealing executor can balance
+    /// (a straggler partition of long genomes no longer pins a stage to
+    /// one node).
+    pub target_residues_per_task: usize,
 }
 
 impl Default for CenterStarConfig {
     fn default() -> Self {
-        Self { segment_len: 16, partitions: 0, center_sample: 1 }
+        Self {
+            segment_len: 16,
+            partitions: 0,
+            center_sample: 1,
+            target_residues_per_task: 32 * 1024,
+        }
     }
+}
+
+/// Residue-aware task count: enough partitions that a task holds about
+/// `target` residues, at least the cluster default (capped at one task
+/// per sequence so no partition is empty).
+fn adaptive_partitions(seqs: &[Sequence], default_parts: usize, target: usize) -> usize {
+    let total: usize = seqs.iter().map(Sequence::len).sum();
+    let by_residues = total.div_ceil(target.max(1));
+    by_residues.max(default_parts).min(seqs.len()).max(1)
 }
 
 /// Pick the center sequence index.
@@ -92,7 +112,11 @@ pub fn align_nucleotide(
     let center_codes = seqs[center_index].codes.clone();
     let segment_len = cfg.segment_len;
     let parts = if cfg.partitions == 0 {
-        cluster.config().default_partitions
+        adaptive_partitions(
+            seqs,
+            cluster.config().default_partitions,
+            cfg.target_residues_per_task,
+        )
     } else {
         cfg.partitions
     };
@@ -271,9 +295,37 @@ mod tests {
         let mut seqs = spec.generate();
         // Make sequence 0 junk so "first" would be a bad center.
         seqs[0] = seq("junk", &"T".repeat(seqs[1].len()));
-        let cfg = CenterStarConfig { segment_len: 12, center_sample: 8, partitions: 0 };
+        let cfg =
+            CenterStarConfig { segment_len: 12, center_sample: 8, ..Default::default() };
         let picked = choose_center(&seqs, &cfg, 1);
         assert_ne!(picked, 0, "sampling should avoid the junk sequence");
+    }
+
+    #[test]
+    fn adaptive_partitioning_scales_with_residues() {
+        let spec = DatasetSpec { count: 64, ..DatasetSpec::mito(0.05, 11) };
+        let seqs = spec.generate();
+        let coarse = adaptive_partitions(&seqs, 8, 1 << 30);
+        assert_eq!(coarse, 8, "huge target falls back to the cluster default");
+        let fine = adaptive_partitions(&seqs, 8, 1024);
+        assert!(fine > coarse, "long sequences must split finer (got {fine})");
+        assert!(fine <= seqs.len(), "never more tasks than sequences");
+    }
+
+    #[test]
+    fn skewed_length_dataset_still_aligns_correctly() {
+        // A few sequences 5x longer than the rest: the fine-grained
+        // repartitioning plus work stealing must not change the result.
+        let mut seqs = DatasetSpec { count: 12, ..DatasetSpec::mito(0.01, 21) }.generate();
+        seqs.extend(DatasetSpec { count: 3, ..DatasetSpec::mito(0.05, 22) }.generate());
+        let c = Cluster::new(ClusterConfig::spark(3));
+        let cfg = CenterStarConfig {
+            segment_len: 12,
+            target_residues_per_task: 512,
+            ..Default::default()
+        };
+        let msa = align_nucleotide(&c, &seqs, &cfg).unwrap();
+        check_msa(&seqs, &msa);
     }
 
     #[test]

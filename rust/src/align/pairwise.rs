@@ -332,6 +332,73 @@ mod tests {
         assert_eq!(center_row.len(), 8);
     }
 
+    /// Property (≥100 seeded cases): for a random pair aligned with
+    /// [`global_dp`], rendering query and center rows under a merged
+    /// profile yields rows of equal length, and degapping each row
+    /// recovers the original sequence exactly.
+    #[test]
+    fn prop_degap_recovers_originals_and_rows_align() {
+        use crate::util::Rng;
+        let alpha = Alphabet::Dna;
+        for case in 0..120u64 {
+            let mut rng = Rng::seed_from_u64(0xA11E5 + case);
+            let n = 1 + rng.below(60);
+            let m = 1 + rng.below(60);
+            let center: Vec<u8> = (0..n).map(|_| rng.below(4) as u8).collect();
+            let query: Vec<u8> = (0..m).map(|_| rng.below(4) as u8).collect();
+            let ops = global_dp(&query, &center);
+            assert_eq!(path_consumes(&ops), (m, n), "case {case}");
+
+            let own = center_space_profile(&ops, n);
+            // A second random pair contributes to the merged profile, as
+            // in the real reduction.
+            let m2 = 1 + rng.below(60);
+            let query2: Vec<u8> = (0..m2).map(|_| rng.below(4) as u8).collect();
+            let ops2 = global_dp(&query2, &center);
+            let own2 = center_space_profile(&ops2, n);
+            let global = merge_profiles(own.clone(), &own2);
+
+            let row_q = render_query_row(&query, &ops, &global, &own, alpha);
+            let row_q2 = render_query_row(&query2, &ops2, &global, &own2, alpha);
+            let row_c = render_center_row(&center, &global, alpha);
+            assert_eq!(row_q.len(), row_c.len(), "case {case}: aligned rows equal length");
+            assert_eq!(row_q2.len(), row_c.len(), "case {case}: aligned rows equal length");
+
+            let degap = |row: &[u8]| -> Vec<u8> {
+                row.iter().copied().filter(|&c| c != alpha.gap()).collect()
+            };
+            assert_eq!(degap(&row_q), query, "case {case}: query round-trips");
+            assert_eq!(degap(&row_q2), query2, "case {case}: query2 round-trips");
+            assert_eq!(degap(&row_c), center, "case {case}: center round-trips");
+        }
+    }
+
+    /// Property (≥100 seeded cases): anchored alignment consumes both
+    /// sequences fully and its encoded path round-trips the codec.
+    #[test]
+    fn prop_anchored_align_consumes_and_encodes() {
+        use crate::util::Rng;
+        for case in 0..100u64 {
+            let mut rng = Rng::seed_from_u64(0x7A1E + case);
+            let n = 20 + rng.below(120);
+            let center: Vec<u8> = (0..n).map(|_| rng.below(4) as u8).collect();
+            // Mutate a copy so anchors exist but are imperfect.
+            let mut query = center.clone();
+            for _ in 0..rng.below(8) {
+                let k = rng.below(query.len());
+                query[k] = rng.below(4) as u8;
+            }
+            if rng.chance(0.5) && query.len() > 2 {
+                let k = rng.below(query.len() - 1);
+                query.remove(k);
+            }
+            let trie = SegmentTrie::build(&center, 4 + rng.below(6));
+            let ops = anchored_align(&query, &center, &trie);
+            assert_eq!(path_consumes(&ops), (query.len(), center.len()), "case {case}");
+            assert_eq!(decode_ops(&encode_ops(&ops)), ops, "case {case}");
+        }
+    }
+
     #[test]
     fn random_pairs_roundtrip_through_render() {
         use crate::util::Rng;

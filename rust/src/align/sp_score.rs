@@ -157,6 +157,59 @@ mod tests {
         }
     }
 
+    /// Property (≥100 seeded cases): SP is symmetric — swapping any two
+    /// sequences (indeed any permutation of the rows) leaves both the
+    /// pairwise and the column-count score unchanged.
+    #[test]
+    fn prop_sp_symmetric_under_row_swap() {
+        use crate::util::Rng;
+        for case in 0..120u64 {
+            let mut rng = Rng::seed_from_u64(0x5B00 + case);
+            let n = 2 + rng.below(6);
+            let w = 1 + rng.below(24);
+            let mut r: Vec<Sequence> = (0..n)
+                .map(|i| {
+                    let codes: Vec<u8> = (0..w).map(|_| rng.below(6) as u8).collect();
+                    Sequence::new(format!("r{i}"), codes, Alphabet::Dna)
+                })
+                .collect();
+            let base = sp_columnwise(&r).unwrap();
+            assert_eq!(sp_pairwise(&r), base, "case {case}: columnwise == pairwise");
+            // Swap a random pair of rows.
+            let (i, j) = (rng.below(n), rng.below(n));
+            r.swap(i, j);
+            assert_eq!(sp_columnwise(&r).unwrap(), base, "case {case}: swap invariant");
+            // Any full permutation too.
+            rng.shuffle(&mut r);
+            assert_eq!(sp_columnwise(&r).unwrap(), base, "case {case}: permutation invariant");
+            assert_eq!(sp_pairwise(&r), base, "case {case}");
+        }
+    }
+
+    /// Property (≥100 seeded cases): block decomposition sums to the
+    /// whole-alignment score at any random split point.
+    #[test]
+    fn prop_block_sp_splits_anywhere() {
+        use crate::util::Rng;
+        for case in 0..100u64 {
+            let mut rng = Rng::seed_from_u64(0xB10C + case);
+            let n = 2 + rng.below(5);
+            let w = 2 + rng.below(30);
+            let rows: Vec<Sequence> = (0..n)
+                .map(|i| {
+                    let codes: Vec<u8> = (0..w).map(|_| rng.below(6) as u8).collect();
+                    Sequence::new(format!("r{i}"), codes, Alphabet::Dna)
+                })
+                .collect();
+            let raw: Vec<Vec<u8>> = rows.iter().map(|s| s.codes.clone()).collect();
+            let total = sp_columnwise(&rows).unwrap() as u64;
+            let cut = rng.below(w + 1);
+            let split = block_sp(&raw, Alphabet::Dna, 0, cut)
+                + block_sp(&raw, Alphabet::Dna, cut, w);
+            assert_eq!(split, total, "case {case}: cut at {cut}");
+        }
+    }
+
     #[test]
     fn gap_vs_gap_is_free() {
         let r = rows(&["A-T", "A-T"]);

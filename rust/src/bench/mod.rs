@@ -115,6 +115,9 @@ pub fn measure<T>(
                 metric_name,
                 avg_max_memory_mb: None,
                 shuffle_mb: None,
+                busy_skew: None,
+                tasks_stolen: None,
+                speculative_launches: None,
                 dnf: None,
             };
             if let Some(engine) = engine {
@@ -396,17 +399,50 @@ pub fn fig5_memory(cfg: &BenchConfig, svc: Option<&XlaService>) -> Vec<RunReport
     out
 }
 
-/// Figure 6 — runtime and memory vs worker count on a DNA tier.
+/// Figure 6 — runtime and memory vs worker count on a DNA tier, with the
+/// work-stealing scheduler on ("halign2") and off ("halign2_nosteal") so
+/// the busy-time skew column shows the load-balance win directly.
 pub fn fig6_scaling(cfg: &BenchConfig) -> Vec<RunReport> {
     let (label, spec) = cfg.dna_tiers().into_iter().nth(1).unwrap();
     let seqs = spec.generate();
     let mut out = Vec::new();
     for workers in [1usize, 2, 4, 8, 12] {
         let name = format!("{label}@w{workers}");
-        out.push(measure("halign2", &name, "avgSP", || {
-            let engine = Cluster::new(ClusterConfig::spark(workers));
+        for (tool, steal) in [("halign2", true), ("halign2_nosteal", false)] {
+            out.push(measure(tool, &name, "avgSP", || {
+                let mut ccfg = ClusterConfig::spark(workers);
+                ccfg.scheduler.work_stealing = steal;
+                ccfg.scheduler.speculation = steal;
+                let engine = Cluster::new(ccfg);
+                let msa = align_nucleotide(&engine, &seqs, &CenterStarConfig::default())?;
+                Ok((msa, None, Some(engine)))
+            }));
+        }
+    }
+    out
+}
+
+/// Figure 6 companion — a deliberately skewed workload (one in eight
+/// sequences is ~5x longer), the straggler scenario the fixed modulo
+/// placement handled worst: compare busy skew with stealing+speculation
+/// on vs off.
+pub fn fig6_skew(cfg: &BenchConfig) -> Vec<RunReport> {
+    let ls = if cfg.quick { 0.02 } else { 0.1 };
+    let short = DatasetSpec { count: cfg.count(147), ..DatasetSpec::mito(ls, cfg.seed ^ 5) };
+    let long =
+        DatasetSpec { count: cfg.count(147) / 7, ..DatasetSpec::mito(ls * 5.0, cfg.seed ^ 6) };
+    let mut seqs = short.generate();
+    seqs.extend(long.generate());
+    let mut out = Vec::new();
+    for (tool, steal) in [("halign2", true), ("halign2_nosteal", false)] {
+        out.push(measure(tool, "dna_skewed", "avgSP", || {
+            let mut ccfg = ClusterConfig::spark(cfg.workers);
+            ccfg.scheduler.work_stealing = steal;
+            ccfg.scheduler.speculation = steal;
+            let engine = Cluster::new(ccfg);
             let msa = align_nucleotide(&engine, &seqs, &CenterStarConfig::default())?;
-            Ok((msa, None, Some(engine)))
+            let sp = msa.avg_sp_distributed(&engine)?;
+            Ok((msa, Some(sp), Some(engine)))
         }));
     }
     out
@@ -435,9 +471,27 @@ mod tests {
     }
 
     #[test]
-    fn fig6_produces_five_worker_counts() {
+    fn fig6_covers_both_schedulers_per_worker_count() {
         let rows = fig6_scaling(&quick());
-        assert_eq!(rows.len(), 5);
+        assert_eq!(rows.len(), 10, "5 worker counts x steal on/off");
         assert!(rows.iter().all(|r| r.dnf.is_none()));
+        assert!(rows.iter().any(|r| r.tool == "halign2_nosteal"));
+        assert!(rows.iter().all(|r| r.busy_skew.is_some()));
+        // Identical results regardless of scheduler.
+        for w in ["1", "2"] {
+            let name = format!("dna_20x@w{w}");
+            let pair: Vec<_> = rows.iter().filter(|r| r.dataset == name).collect();
+            assert_eq!(pair.len(), 2);
+        }
+    }
+
+    #[test]
+    fn fig6_skew_compares_schedulers_on_skewed_data() {
+        let rows = fig6_skew(&quick());
+        assert_eq!(rows.len(), 2);
+        assert!(rows.iter().all(|r| r.dnf.is_none()));
+        // Same deterministic MSA: the SP metric must agree exactly.
+        assert_eq!(rows[0].metric, rows[1].metric, "scheduler must not change results");
+        assert!(rows.iter().all(|r| r.busy_skew.unwrap() >= 1.0));
     }
 }

@@ -9,7 +9,7 @@ use std::time::Duration;
 
 use anyhow::Result;
 
-use super::executor::Executor;
+use super::executor::{Executor, ExecutorOptions};
 use super::fault::FaultPlan;
 use super::memory::MemoryTracker;
 use super::rdd::{Data, Rdd};
@@ -28,6 +28,8 @@ pub struct ClusterConfig {
     pub max_retries: usize,
     /// Fault injection plan.
     pub fault: FaultPlan,
+    /// Work-stealing / speculative-execution scheduler knobs.
+    pub scheduler: ExecutorOptions,
     /// Base seed for engine-internal randomness (sampling etc.).
     pub seed: u64,
     /// DiskKv (Hadoop) only: HDFS-style block replication — every spill
@@ -48,6 +50,7 @@ impl Default for ClusterConfig {
             backend: Backend::InMemory,
             max_retries: 2,
             fault: FaultPlan::none(),
+            scheduler: ExecutorOptions::default(),
             seed: 0x4A11C2,
             disk_replication: 3,
             kv_overhead: 3,
@@ -97,7 +100,11 @@ pub struct Cluster {
 
 impl Cluster {
     pub fn new(config: ClusterConfig) -> Self {
-        let executor = Executor::new(config.workers, config.fault.clone());
+        let executor = Executor::with_options(
+            config.workers,
+            config.fault.clone(),
+            config.scheduler.clone(),
+        );
         let memory = MemoryTracker::new(config.workers);
         let scratch_dir = std::env::temp_dir().join(format!(
             "halign2-{}-{}",
@@ -180,7 +187,18 @@ impl Cluster {
                 .iter()
                 .map(|w| w.failures.load(Ordering::Relaxed))
                 .sum(),
+            tasks_stolen: m
+                .metrics()
+                .iter()
+                .map(|w| w.steals.load(Ordering::Relaxed))
+                .sum(),
+            speculative_launches: m
+                .metrics()
+                .iter()
+                .map(|w| w.speculations.load(Ordering::Relaxed))
+                .sum(),
             total_busy: m.total_busy(),
+            busy_skew: m.busy_skew(),
             shuffle_bytes_written: self.inner.io.shuffle_bytes_written.load(Ordering::Relaxed),
             shuffle_bytes_read: self.inner.io.shuffle_bytes_read.load(Ordering::Relaxed),
             shuffles_executed: self.inner.io.shuffles_executed.load(Ordering::Relaxed),
@@ -204,7 +222,13 @@ pub struct ClusterStats {
     pub workers: usize,
     pub tasks_run: usize,
     pub injected_failures: usize,
+    /// Tasks executed by a worker other than the one they were queued on.
+    pub tasks_stolen: usize,
+    /// Speculative straggler duplicates launched.
+    pub speculative_launches: usize,
     pub total_busy: Duration,
+    /// Max/mean per-worker busy nanos (1.0 = perfectly balanced).
+    pub busy_skew: f64,
     pub shuffle_bytes_written: u64,
     pub shuffle_bytes_read: u64,
     pub shuffles_executed: usize,
@@ -231,6 +255,19 @@ mod tests {
         let st = c.stats();
         assert_eq!(st.tasks_run, 0);
         assert_eq!(st.shuffle_bytes_written, 0);
+        assert_eq!(st.tasks_stolen, 0);
+        assert_eq!(st.speculative_launches, 0);
+        assert_eq!(st.busy_skew, 1.0, "idle cluster is trivially balanced");
+    }
+
+    #[test]
+    fn scheduler_options_reach_the_executor() {
+        let mut cfg = ClusterConfig::spark(2);
+        cfg.scheduler.work_stealing = false;
+        cfg.scheduler.speculation = false;
+        let c = Cluster::new(cfg);
+        assert!(!c.executor().options().work_stealing);
+        assert!(!c.executor().options().speculation);
     }
 
     #[test]

@@ -1,95 +1,277 @@
-//! Worker-pool executor: N long-lived threads, one per simulated cluster
-//! node, each with its own task queue and busy-time/task metrics.
+//! Work-stealing executor: N long-lived threads, one per simulated cluster
+//! node, each with its own deque plus the ability to steal from the
+//! busiest peer when idle.
 //!
-//! Tasks are routed to workers by partition index (`part % workers`) —
-//! Spark-style stable placement so cached partitions and shuffle map
-//! outputs have an owning node, which the fault injector can then "kill".
+//! Placement is still locality-preferred: task `i` of a stage is enqueued
+//! on worker `i % workers` (the partition's *owning* node, so cached
+//! partitions and shuffle map outputs keep a stable home the fault
+//! injector can target), but any idle worker may steal queued tasks from
+//! the back of another worker's deque — the delay/speculative scheduling
+//! story of Spark, which is what keeps one slow node from stalling a
+//! whole stage.
+//!
+//! Straggler mitigation: once a stage is past its speculation quantile
+//! (default 75% of tasks complete), tasks that have been running much
+//! longer than the average completed task are re-submitted as speculative
+//! duplicates on another node; the first completion wins and the
+//! duplicate's result is discarded.  Task closures therefore run with
+//! *at-least-once* semantics and must be idempotent — every engine task
+//! is (they recompute deterministic partitions and write keyed slots).
+//!
+//! Fault kills: [`Executor::kill_worker`] (usually driven by a
+//! [`FaultPlan`] kill rule) marks a node dead and drains its deque back
+//! into the steal pool, so queued tasks migrate instead of being lost.
 //!
 //! Wall-clock on a 1-core CI box timeshares, so the metrics also record
-//! per-worker *busy time*; Fig-6 reports both (see EXPERIMENTS.md).
+//! per-worker *busy time*; Fig-6 reports both plus the busy-time skew
+//! (max/mean busy nanos), the load-balance signal the stealer improves.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, RecvTimeoutError};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
 use super::fault::FaultPlan;
 
-type Job = Box<dyn FnOnce() -> Result<()> + Send>;
+/// A unit of queued work; receives the id of the worker that executes it.
+type Job = Box<dyn FnOnce(usize) + Send>;
 
-struct WorkerState {
-    tx: Sender<Job>,
-    handle: Option<std::thread::JoinHandle<()>>,
+/// Scheduler tuning knobs (see [`super::context::ClusterConfig`]).
+#[derive(Debug, Clone)]
+pub struct ExecutorOptions {
+    /// Idle workers steal from the busiest peer's deque.
+    pub work_stealing: bool,
+    /// Re-execute stragglers speculatively near the end of a stage.
+    pub speculation: bool,
+    /// Fraction of a stage that must be complete before speculating.
+    pub speculation_quantile: f64,
+    /// Stages smaller than this never speculate.
+    pub speculation_min_tasks: usize,
 }
 
-/// Per-worker counters (busy nanos, tasks run, failures injected).
+impl Default for ExecutorOptions {
+    fn default() -> Self {
+        Self {
+            work_stealing: true,
+            speculation: true,
+            speculation_quantile: 0.75,
+            speculation_min_tasks: 4,
+        }
+    }
+}
+
+/// Per-worker counters (busy nanos, tasks run, failures injected, tasks
+/// stolen from peers, speculative duplicates enqueued on this worker).
 #[derive(Debug, Default)]
 pub struct WorkerMetrics {
     pub busy_nanos: AtomicU64,
     pub tasks: AtomicUsize,
     pub failures: AtomicUsize,
+    pub steals: AtomicUsize,
+    pub speculations: AtomicUsize,
+}
+
+struct SchedState {
+    queues: Vec<VecDeque<Job>>,
+    alive: Vec<bool>,
+    shutdown: bool,
+}
+
+impl SchedState {
+    /// Least-loaded alive worker — the single placement fallback shared
+    /// by dead-owner reroutes and kill-drain redistribution.
+    fn least_loaded_alive(&self) -> Option<usize> {
+        (0..self.queues.len())
+            .filter(|&v| self.alive[v])
+            .min_by_key(|&v| self.queues[v].len())
+    }
+}
+
+struct Shared {
+    state: Mutex<SchedState>,
+    cv: Condvar,
+    metrics: Vec<Arc<WorkerMetrics>>,
+    steal: bool,
+}
+
+struct TaskDone {
+    task: usize,
+    speculative: bool,
+    result: Result<()>,
 }
 
 pub struct Executor {
-    workers: Vec<Mutex<WorkerState>>,
-    metrics: Vec<Arc<WorkerMetrics>>,
+    shared: Arc<Shared>,
+    handles: Vec<Option<std::thread::JoinHandle<()>>>,
     fault: FaultPlan,
+    opts: ExecutorOptions,
     task_counter: AtomicUsize,
+}
+
+fn worker_loop(w: usize, shared: Arc<Shared>) {
+    loop {
+        let (job, stolen) = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown || !st.alive[w] {
+                    return;
+                }
+                if let Some(job) = st.queues[w].pop_front() {
+                    break (job, false);
+                }
+                if shared.steal {
+                    // Steal from the back of the busiest non-empty deque.
+                    let victim = (0..st.queues.len())
+                        .filter(|&v| v != w && !st.queues[v].is_empty())
+                        .max_by_key(|&v| st.queues[v].len());
+                    if let Some(v) = victim {
+                        let job = st.queues[v].pop_back().expect("victim checked non-empty");
+                        break (job, true);
+                    }
+                }
+                st = shared.cv.wait(st).unwrap();
+            }
+        };
+        if stolen {
+            shared.metrics[w].steals.fetch_add(1, Ordering::Relaxed);
+        }
+        job(w);
+    }
 }
 
 impl Executor {
     pub fn new(num_workers: usize, fault: FaultPlan) -> Self {
+        Self::with_options(num_workers, fault, ExecutorOptions::default())
+    }
+
+    pub fn with_options(num_workers: usize, fault: FaultPlan, opts: ExecutorOptions) -> Self {
         assert!(num_workers > 0);
-        let mut workers = Vec::with_capacity(num_workers);
-        let mut metrics = Vec::with_capacity(num_workers);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(SchedState {
+                queues: (0..num_workers).map(|_| VecDeque::new()).collect(),
+                alive: vec![true; num_workers],
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+            metrics: (0..num_workers).map(|_| Arc::new(WorkerMetrics::default())).collect(),
+            steal: opts.work_stealing,
+        });
+        let mut handles = Vec::with_capacity(num_workers);
         for w in 0..num_workers {
-            let (tx, rx): (Sender<Job>, Receiver<Job>) = channel();
+            let shared = shared.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("worker-{w}"))
-                .spawn(move || {
-                    while let Ok(job) = rx.recv() {
-                        // Task panics are converted to Err at the submit
-                        // site; a panic escaping here would poison the node.
-                        let _ = job();
-                    }
-                })
+                .spawn(move || worker_loop(w, shared))
                 .expect("spawning worker thread");
-            workers.push(Mutex::new(WorkerState { tx, handle: Some(handle) }));
-            metrics.push(Arc::new(WorkerMetrics::default()));
+            handles.push(Some(handle));
         }
-        Self { workers, metrics, fault, task_counter: AtomicUsize::new(0) }
+        Self { shared, handles, fault, opts, task_counter: AtomicUsize::new(0) }
     }
 
     pub fn num_workers(&self) -> usize {
-        self.workers.len()
+        self.shared.metrics.len()
     }
 
     pub fn metrics(&self) -> &[Arc<WorkerMetrics>] {
-        &self.metrics
+        &self.shared.metrics
+    }
+
+    pub fn options(&self) -> &ExecutorOptions {
+        &self.opts
     }
 
     pub fn total_busy(&self) -> Duration {
         Duration::from_nanos(
-            self.metrics.iter().map(|m| m.busy_nanos.load(Ordering::Relaxed)).sum(),
+            self.shared
+                .metrics
+                .iter()
+                .map(|m| m.busy_nanos.load(Ordering::Relaxed))
+                .sum(),
         )
+    }
+
+    /// Busy-time skew: max over workers of busy nanos divided by the mean
+    /// (1.0 = perfectly balanced; large = one node did all the work).
+    pub fn busy_skew(&self) -> f64 {
+        let busy: Vec<u64> =
+            self.shared.metrics.iter().map(|m| m.busy_nanos.load(Ordering::Relaxed)).collect();
+        let total: u64 = busy.iter().sum();
+        if total == 0 {
+            return 1.0;
+        }
+        let mean = total as f64 / busy.len() as f64;
+        *busy.iter().max().expect("at least one worker") as f64 / mean
     }
 
     pub fn fault_plan(&self) -> &FaultPlan {
         &self.fault
     }
 
-    /// Which worker owns partition `part` (stable placement).
+    /// Which worker owns partition `part` (stable placement for caches,
+    /// shuffle map outputs and the fault injector; execution may migrate).
     pub fn worker_for(&self, part: usize) -> usize {
-        part % self.workers.len()
+        part % self.num_workers()
     }
 
-    /// Run one task set: task `i` executes `f(i)` on its owning worker;
-    /// blocks until all tasks finish.  Individual task errors (including
-    /// injected faults) are retried up to `max_retries` times by
-    /// re-invoking `f(i)` — lineage recompute happens naturally because
-    /// `f` recomputes its inputs.
+    /// Number of workers still alive (not killed by a fault plan).
+    pub fn alive_workers(&self) -> usize {
+        self.shared.state.lock().unwrap().alive.iter().filter(|&&a| a).count()
+    }
+
+    /// Kill a worker: mark it dead and drain its deque back into the
+    /// steal pool (queued tasks are redistributed to the least-loaded
+    /// alive workers).  The last alive worker can never be killed, so a
+    /// stage always retains capacity to finish.  Returns whether the kill
+    /// happened.
+    pub fn kill_worker(&self, w: usize) -> bool {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            if w >= st.alive.len() || !st.alive[w] {
+                return false;
+            }
+            if st.alive.iter().filter(|&&a| a).count() <= 1 {
+                return false;
+            }
+            st.alive[w] = false;
+            let drained: Vec<Job> = st.queues[w].drain(..).collect();
+            for job in drained {
+                let target =
+                    st.least_loaded_alive().expect("at least one alive worker remains");
+                st.queues[target].push_back(job);
+            }
+        }
+        self.shared.cv.notify_all();
+        true
+    }
+
+    /// Enqueue a job with locality preference `owner`; falls back to the
+    /// least-loaded alive worker when the owner is dead.  Returns the
+    /// worker the job actually landed on.
+    fn enqueue(&self, owner: usize, job: Job) -> Result<usize> {
+        let target = {
+            let mut st = self.shared.state.lock().unwrap();
+            let target = if st.alive[owner] {
+                owner
+            } else {
+                st.least_loaded_alive().ok_or_else(|| anyhow!("all workers are dead"))?
+            };
+            st.queues[target].push_back(job);
+            target
+        };
+        self.shared.cv.notify_all();
+        Ok(target)
+    }
+
+    /// Run one task set: task `i` executes `f(i)`, preferring its owning
+    /// worker; blocks until every task has completed at least once.
+    /// Individual task errors (including injected faults) are retried up
+    /// to `max_retries` times by re-invoking `f(i)` — lineage recompute
+    /// happens naturally because `f` recomputes its inputs.  Near the end
+    /// of the stage, stragglers may be duplicated speculatively; `f` must
+    /// therefore be idempotent (every engine task is).
     pub fn run_tasks<F>(&self, num_tasks: usize, max_retries: usize, f: F) -> Result<()>
     where
         F: Fn(usize) -> Result<()> + Send + Sync + 'static,
@@ -98,65 +280,144 @@ impl Executor {
             return Ok(());
         }
         let f = Arc::new(f);
-        let (done_tx, done_rx) = channel::<(usize, Result<()>)>();
+        let (done_tx, done_rx) = channel::<TaskDone>();
+        let completed: Arc<Vec<AtomicBool>> =
+            Arc::new((0..num_tasks).map(|_| AtomicBool::new(false)).collect());
 
-        let submit = |task: usize, attempt: usize| -> Result<()> {
-            let w = self.worker_for(task + attempt); // retries migrate nodes
-            let metrics = self.metrics[w].clone();
+        let submit = |task: usize, attempt: usize, speculative: bool| -> Result<()> {
+            let owner = self.worker_for(task + attempt); // retries migrate nodes
+            let ordinal = self.task_counter.fetch_add(1, Ordering::Relaxed);
+            if let Some(kw) = self.fault.should_kill(ordinal) {
+                self.kill_worker(kw);
+            }
+            // Fault decisions key off the *owning* node, not the executing
+            // one, so worker-keyed plans are unaffected by stealing.
+            // Ordinal-keyed plans (fail_nth_task, random) replay exactly
+            // only while the submission order does: retries and
+            // speculative duplicates also consume ordinals, so under
+            // races those plans may hit different submissions run-to-run
+            // (results stay correct either way — only which attempts
+            // fail varies).
+            let fail_this = self.fault.should_fail(owner, ordinal, attempt);
             let f = f.clone();
             let done = done_tx.clone();
-            let fail_this = self.fault.should_fail(
-                w,
-                self.task_counter.fetch_add(1, Ordering::Relaxed),
-                attempt,
-            );
-            let job: Job = Box::new(move || {
+            let completed = completed.clone();
+            let shared = self.shared.clone();
+            let job: Job = Box::new(move |exec_w: usize| {
+                if completed[task].load(Ordering::Acquire) {
+                    return; // first completion already won; drop the duplicate
+                }
+                let m = &shared.metrics[exec_w];
                 let start = Instant::now();
                 let result = if fail_this {
-                    metrics.failures.fetch_add(1, Ordering::Relaxed);
-                    Err(anyhow!("injected fault on worker {w} (task {task})"))
+                    m.failures.fetch_add(1, Ordering::Relaxed);
+                    Err(anyhow!("injected fault on worker {owner} (task {task})"))
                 } else {
                     std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(task)))
                         .unwrap_or_else(|p| {
                             Err(anyhow!("task {task} panicked: {}", panic_msg(p.as_ref())))
                         })
                 };
-                metrics
-                    .busy_nanos
+                m.busy_nanos
                     .fetch_add(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
-                metrics.tasks.fetch_add(1, Ordering::Relaxed);
-                let _ = done.send((task, result));
-                Ok(())
+                m.tasks.fetch_add(1, Ordering::Relaxed);
+                let _ = done.send(TaskDone { task, speculative, result });
             });
-            self.workers[w]
-                .lock()
-                .unwrap()
-                .tx
-                .send(job)
-                .map_err(|_| anyhow!("worker {w} is gone"))
+            let target = self.enqueue(owner, job)?;
+            if speculative {
+                // Counted against the worker the duplicate actually
+                // landed on (the preferred owner may be dead).
+                self.shared.metrics[target].speculations.fetch_add(1, Ordering::Relaxed);
+            }
+            Ok(())
         };
 
         let mut attempts = vec![0usize; num_tasks];
+        let mut speculated = vec![false; num_tasks];
+        let mut submit_time = Vec::with_capacity(num_tasks);
         for t in 0..num_tasks {
-            submit(t, 0)?;
+            submit_time.push(Instant::now());
+            submit(t, 0, false)?;
         }
-        let mut remaining = num_tasks;
-        while remaining > 0 {
-            let (task, result) = done_rx
-                .recv()
-                .map_err(|_| anyhow!("all workers died mid-job"))?;
-            match result {
-                Ok(()) => remaining -= 1,
-                Err(e) => {
-                    attempts[task] += 1;
-                    if attempts[task] > max_retries {
-                        return Err(e.context(format!(
-                            "task {task} failed after {} attempts",
-                            attempts[task]
-                        )));
+
+        let spec_enabled = self.opts.speculation && num_tasks >= self.opts.speculation_min_tasks;
+        let spec_threshold = ((num_tasks as f64) * self.opts.speculation_quantile).ceil() as usize;
+        let spec_threshold = spec_threshold.clamp(1, num_tasks);
+        let mut done_count = 0usize;
+        let mut sum_done_nanos = 0u64;
+        // Straggler candidates, built lazily when the stage first crosses
+        // the speculation quantile (so the scan is bounded by the tail of
+        // the stage, not by num_tasks).
+        let mut spec_candidates: Option<Vec<usize>> = None;
+
+        while done_count < num_tasks {
+            // The speculation quantile can only be crossed by a done
+            // message, so until then (and always when speculation is off)
+            // block on the channel instead of polling.
+            let msg = if spec_enabled && done_count >= spec_threshold {
+                match done_rx.recv_timeout(Duration::from_millis(25)) {
+                    Ok(msg) => Some(msg),
+                    Err(RecvTimeoutError::Timeout) => None,
+                    Err(RecvTimeoutError::Disconnected) => {
+                        return Err(anyhow!("all workers died mid-job"));
                     }
-                    submit(task, attempts[task])?;
                 }
+            } else {
+                Some(done_rx.recv().map_err(|_| anyhow!("all workers died mid-job"))?)
+            };
+
+            if let Some(TaskDone { task, speculative, result }) = msg {
+                if !completed[task].load(Ordering::Acquire) {
+                    match result {
+                        Ok(()) => {
+                            completed[task].store(true, Ordering::Release);
+                            done_count += 1;
+                            sum_done_nanos += submit_time[task].elapsed().as_nanos() as u64;
+                        }
+                        Err(e) => {
+                            if speculative {
+                                // A failed duplicate never burns the
+                                // original's retry budget.
+                            } else {
+                                attempts[task] += 1;
+                                if attempts[task] > max_retries {
+                                    return Err(e.context(format!(
+                                        "task {task} failed after {} attempts",
+                                        attempts[task]
+                                    )));
+                                }
+                                submit_time[task] = Instant::now();
+                                submit(task, attempts[task], false)?;
+                            }
+                        }
+                    }
+                }
+            }
+
+            // Speculative re-execution: past the quantile, duplicate tasks
+            // that have been in flight much longer than the average
+            // completed task (first completion wins).
+            if spec_enabled && done_count >= spec_threshold && done_count < num_tasks {
+                let candidates = spec_candidates.get_or_insert_with(|| {
+                    (0..num_tasks)
+                        .filter(|&t| !completed[t].load(Ordering::Acquire))
+                        .collect()
+                });
+                let avg = sum_done_nanos / done_count.max(1) as u64;
+                let deadline = Duration::from_nanos((4 * avg).max(100_000_000));
+                let mut still_waiting = Vec::with_capacity(candidates.len());
+                for &t in candidates.iter() {
+                    if completed[t].load(Ordering::Acquire) || speculated[t] {
+                        continue; // finished or already duplicated: drop
+                    }
+                    if submit_time[t].elapsed() >= deadline {
+                        speculated[t] = true;
+                        submit(t, attempts[t] + 1, true)?;
+                    } else {
+                        still_waiting.push(t);
+                    }
+                }
+                *candidates = still_waiting;
             }
         }
         Ok(())
@@ -172,13 +433,14 @@ fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
 
 impl Drop for Executor {
     fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.cv.notify_all();
         let me = std::thread::current().id();
-        for w in &self.workers {
-            let mut st = w.lock().unwrap();
-            // Dropping the sender closes the channel; join the thread.
-            let (dead_tx, _) = channel();
-            st.tx = dead_tx;
-            if let Some(h) = st.handle.take() {
+        for h in &mut self.handles {
+            if let Some(h) = h.take() {
                 // A task closure can hold the last Cluster handle, making
                 // a *worker* run this drop — never join yourself, detach.
                 if h.thread().id() != me {
@@ -194,9 +456,14 @@ mod tests {
     use super::*;
     use std::sync::atomic::AtomicUsize;
 
+    fn no_spec() -> ExecutorOptions {
+        ExecutorOptions { speculation: false, ..ExecutorOptions::default() }
+    }
+
     #[test]
     fn runs_all_tasks_once() {
-        let ex = Executor::new(4, FaultPlan::none());
+        // Speculation off: exactly-once execution of the happy path.
+        let ex = Executor::with_options(4, FaultPlan::none(), no_spec());
         let count = Arc::new(AtomicUsize::new(0));
         let c = count.clone();
         ex.run_tasks(37, 0, move |_| {
@@ -208,17 +475,150 @@ mod tests {
     }
 
     #[test]
-    fn spreads_tasks_across_workers() {
-        let ex = Executor::new(3, FaultPlan::none());
+    fn no_steal_mode_preserves_modulo_placement() {
+        let opts = ExecutorOptions { work_stealing: false, speculation: false, ..Default::default() };
+        let ex = Executor::with_options(3, FaultPlan::none(), opts);
         ex.run_tasks(30, 0, |_| Ok(())).unwrap();
         for m in ex.metrics() {
-            assert!(m.tasks.load(Ordering::SeqCst) >= 9);
+            assert_eq!(m.tasks.load(Ordering::SeqCst), 10, "static placement is exact");
+            assert_eq!(m.steals.load(Ordering::SeqCst), 0);
         }
     }
 
     #[test]
-    fn task_errors_are_retried() {
+    fn idle_worker_steals_from_busy_queue() {
+        // Worker 0's first task blocks until every other task has run.
+        // Tasks 2,4,6,8 are queued behind it on worker 0's deque, so the
+        // stage can only finish if worker 1 steals them.
+        let ex = Executor::with_options(2, FaultPlan::none(), ExecutorOptions::default());
+        let sync = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let s = sync.clone();
+        ex.run_tasks(10, 0, move |task| {
+            let (count, cv) = &*s;
+            if task == 0 {
+                let done = count.lock().unwrap();
+                let (done, timeout) = cv
+                    .wait_timeout_while(done, Duration::from_secs(20), |c| *c < 9)
+                    .unwrap();
+                anyhow::ensure!(
+                    !timeout.timed_out(),
+                    "only {} of 9 peer tasks ran: stealing is broken",
+                    *done
+                );
+            } else {
+                *count.lock().unwrap() += 1;
+                cv.notify_all();
+            }
+            Ok(())
+        })
+        .unwrap();
+        let stolen: usize =
+            ex.metrics().iter().map(|m| m.steals.load(Ordering::SeqCst)).sum();
+        assert!(stolen >= 4, "tasks 2,4,6,8 must have been stolen (got {stolen})");
+    }
+
+    #[test]
+    fn straggler_is_speculatively_reexecuted() {
+        // Task 0's first execution blocks until a speculative duplicate
+        // has run; the stage can only finish because the duplicate's
+        // completion wins.  Without speculation this test would error out
+        // after the 20s guard instead of hanging.
+        let ex = Executor::with_options(2, FaultPlan::none(), ExecutorOptions::default());
+        let sync = Arc::new((Mutex::new(false), Condvar::new()));
+        let execs = Arc::new(AtomicUsize::new(0));
+        let s = sync.clone();
+        let e = execs.clone();
+        ex.run_tasks(8, 0, move |task| {
+            if task != 0 {
+                return Ok(());
+            }
+            let (dup_ran, cv) = &*s;
+            if e.fetch_add(1, Ordering::SeqCst) == 0 {
+                // Original attempt: straggle until the duplicate runs.
+                let flag = dup_ran.lock().unwrap();
+                let (_, timeout) = cv
+                    .wait_timeout_while(flag, Duration::from_secs(20), |ran| !*ran)
+                    .unwrap();
+                anyhow::ensure!(!timeout.timed_out(), "no speculative duplicate was launched");
+            } else {
+                // Speculative duplicate: finish fast and release the original.
+                *dup_ran.lock().unwrap() = true;
+                cv.notify_all();
+            }
+            Ok(())
+        })
+        .unwrap();
+        assert!(execs.load(Ordering::SeqCst) >= 2, "task 0 must have been duplicated");
+        let specs: usize =
+            ex.metrics().iter().map(|m| m.speculations.load(Ordering::SeqCst)).sum();
+        assert!(specs >= 1, "speculation counter must have fired");
+    }
+
+    #[test]
+    fn kill_drains_deque_back_into_steal_pool() {
+        // Three workers all blocked in their first task; worker 0 is then
+        // killed while its deque still holds queued tasks, which must be
+        // redistributed and completed by the survivors.
+        let ex = Arc::new(Executor::with_options(3, FaultPlan::none(), no_spec()));
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let count = Arc::new(AtomicUsize::new(0));
+
+        let opener = {
+            let ex = ex.clone();
+            let gate = gate.clone();
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(150));
+                assert!(ex.kill_worker(0), "kill must succeed");
+                let (open, cv) = &*gate;
+                *open.lock().unwrap() = true;
+                cv.notify_all();
+            })
+        };
+
+        let g = gate.clone();
+        let c = count.clone();
+        ex.run_tasks(12, 0, move |task| {
+            if task < 3 {
+                // One gate task per worker keeps all deques populated
+                // until the kill has happened.
+                let (open, cv) = &*g;
+                let opened = open.lock().unwrap();
+                let (_, timeout) = cv
+                    .wait_timeout_while(opened, Duration::from_secs(20), |o| !*o)
+                    .unwrap();
+                anyhow::ensure!(!timeout.timed_out(), "gate never opened");
+            }
+            c.fetch_add(1, Ordering::SeqCst);
+            Ok(())
+        })
+        .unwrap();
+        opener.join().unwrap();
+
+        assert_eq!(count.load(Ordering::SeqCst), 12, "drained tasks must not be lost");
+        assert_eq!(ex.alive_workers(), 2);
+        // New work keeps flowing around the dead node.
+        let c2 = Arc::new(AtomicUsize::new(0));
+        let c2c = c2.clone();
+        ex.run_tasks(9, 0, move |_| {
+            c2c.fetch_add(1, Ordering::SeqCst);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(c2.load(Ordering::SeqCst), 9);
+    }
+
+    #[test]
+    fn last_alive_worker_cannot_be_killed() {
         let ex = Executor::new(2, FaultPlan::none());
+        assert!(ex.kill_worker(1));
+        assert!(!ex.kill_worker(0), "the last worker must survive");
+        assert_eq!(ex.alive_workers(), 1);
+        ex.run_tasks(4, 0, |_| Ok(())).unwrap();
+    }
+
+    #[test]
+    fn task_errors_are_retried() {
+        let ex = Executor::with_options(2, FaultPlan::none(), no_spec());
         let tries = Arc::new(AtomicUsize::new(0));
         let t = tries.clone();
         ex.run_tasks(1, 3, move |_| {
@@ -248,16 +648,18 @@ mod tests {
     #[test]
     fn panics_become_errors_not_hangs() {
         let ex = Executor::new(2, FaultPlan::none());
-        let err = ex
-            .run_tasks(1, 0, |_| panic!("boom"))
-            .unwrap_err();
+        let err = ex.run_tasks(1, 0, |_| panic!("boom")).unwrap_err();
         assert!(format!("{err:#}").contains("boom"));
     }
 
     #[test]
     fn injected_faults_recover_via_retry() {
-        // Fail every task's first attempt on worker 0.
-        let ex = Executor::new(2, FaultPlan::fail_first_attempt_on_worker(0));
+        // Fail every task's first attempt whose owner is worker 0.
+        let ex = Executor::with_options(
+            2,
+            FaultPlan::fail_first_attempt_on_worker(0),
+            no_spec(),
+        );
         let count = Arc::new(AtomicUsize::new(0));
         let c = count.clone();
         ex.run_tasks(8, 2, move |_| {
@@ -272,5 +674,28 @@ mod tests {
             .map(|m| m.failures.load(Ordering::SeqCst))
             .sum();
         assert!(injected > 0, "fault plan should have fired");
+    }
+
+    #[test]
+    fn fault_plan_kill_drains_and_stage_completes() {
+        // A kill rule in the fault plan fires mid-submission; the stage
+        // must still complete on the surviving worker.
+        let plan = FaultPlan::kill_worker_at(0, 5);
+        let ex = Executor::with_options(2, plan, no_spec());
+        let count = Arc::new(AtomicUsize::new(0));
+        let c = count.clone();
+        ex.run_tasks(16, 0, move |_| {
+            c.fetch_add(1, Ordering::SeqCst);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(count.load(Ordering::SeqCst), 16);
+        assert_eq!(ex.alive_workers(), 1);
+    }
+
+    #[test]
+    fn busy_skew_is_unity_when_idle() {
+        let ex = Executor::new(3, FaultPlan::none());
+        assert_eq!(ex.busy_skew(), 1.0);
     }
 }

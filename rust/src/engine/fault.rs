@@ -1,8 +1,14 @@
 //! Fault injection: deterministic plans describing which (worker, task,
-//! attempt) triples fail, used to exercise lineage recompute and retry
-//! paths (RDDs "will be recomputed after data loss" — paper §Methods).
+//! attempt) triples fail — or which worker is killed outright — used to
+//! exercise lineage recompute, retry, and deque-drain paths (RDDs "will
+//! be recomputed after data loss" — paper §Methods).
+//!
+//! Kills are consumed by the executor: when [`FaultPlan::should_kill`]
+//! fires during task submission, the executor marks the node dead and
+//! drains its deque back into the steal pool (see
+//! [`super::executor::Executor::kill_worker`]).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 
 #[derive(Debug, Clone, Default)]
@@ -16,6 +22,9 @@ enum Mode {
     /// Fail every first attempt with probability p (seeded, deterministic
     /// per submission ordinal).
     RandomFirstAttempt { p_milli: usize, seed: u64 },
+    /// Kill this worker once the global submission ordinal reaches `at`
+    /// (one-shot; the executor drains the dead worker's deque).
+    KillWorkerAt { worker: usize, at: usize },
 }
 
 /// Shared, cheaply clonable fault plan.
@@ -23,6 +32,7 @@ enum Mode {
 pub struct FaultPlan {
     mode: Mode,
     fired: Arc<AtomicUsize>,
+    kill_fired: Arc<AtomicBool>,
 }
 
 impl FaultPlan {
@@ -31,11 +41,11 @@ impl FaultPlan {
     }
 
     pub fn fail_first_attempt_on_worker(w: usize) -> Self {
-        Self { mode: Mode::FailFirstAttemptOnWorker(w), fired: Default::default() }
+        Self { mode: Mode::FailFirstAttemptOnWorker(w), ..Self::default() }
     }
 
     pub fn fail_nth_task(n: usize) -> Self {
-        Self { mode: Mode::FailNthTask(n), fired: Default::default() }
+        Self { mode: Mode::FailNthTask(n), ..Self::default() }
     }
 
     pub fn random(p: f64, seed: u64) -> Self {
@@ -44,13 +54,38 @@ impl FaultPlan {
                 p_milli: (p.clamp(0.0, 1.0) * 1000.0) as usize,
                 seed,
             },
-            fired: Default::default(),
+            ..Self::default()
         }
+    }
+
+    /// Kill `worker` once the global submission ordinal reaches `at`.
+    pub fn kill_worker_at(worker: usize, at: usize) -> Self {
+        Self { mode: Mode::KillWorkerAt { worker, at }, ..Self::default() }
     }
 
     /// How many injections have fired so far.
     pub fn fired(&self) -> usize {
         self.fired.load(Ordering::Relaxed)
+    }
+
+    /// Consult the kill rule for this submission ordinal; returns the
+    /// worker to kill at most once over the plan's lifetime.
+    pub fn should_kill(&self, ordinal: usize) -> Option<usize> {
+        match self.mode {
+            Mode::KillWorkerAt { worker, at } if ordinal >= at => {
+                if self
+                    .kill_fired
+                    .compare_exchange(false, true, Ordering::Relaxed, Ordering::Relaxed)
+                    .is_ok()
+                {
+                    self.fired.fetch_add(1, Ordering::Relaxed);
+                    Some(worker)
+                } else {
+                    None
+                }
+            }
+            _ => None,
+        }
     }
 
     /// Decide whether this (worker, submission ordinal, attempt) fails.
@@ -105,6 +140,17 @@ mod tests {
         assert!(!p.should_fail(0, 4, 0));
         assert!(p.should_fail(0, 5, 0));
         assert!(!p.should_fail(0, 6, 0));
+    }
+
+    #[test]
+    fn kill_plan_fires_once_at_threshold() {
+        let p = FaultPlan::kill_worker_at(2, 5);
+        assert_eq!(p.should_kill(4), None);
+        assert_eq!(p.should_kill(5), Some(2));
+        assert_eq!(p.should_kill(6), None, "kill is one-shot");
+        assert_eq!(p.fired(), 1);
+        // Non-kill plans never kill.
+        assert_eq!(FaultPlan::random(0.9, 1).should_kill(100), None);
     }
 
     #[test]

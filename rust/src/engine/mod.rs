@@ -1,7 +1,9 @@
 //! The mini-Spark substrate: lazy RDDs with lineage, a DAG-cut scheduler,
-//! a worker-pool executor, swappable shuffle backends (in-memory Spark vs
-//! disk key-value Hadoop), broadcast variables, per-worker memory
-//! accounting, and deterministic fault injection.
+//! a work-stealing worker executor with speculative straggler
+//! re-execution, swappable shuffle backends (in-memory Spark vs disk
+//! key-value Hadoop), broadcast variables, per-worker memory accounting,
+//! and deterministic fault injection (task failures and worker kills,
+//! which drain the dead node's deque back into the steal pool).
 //!
 //! See DESIGN.md §4 for how each piece maps onto the paper's system.
 
@@ -16,6 +18,7 @@ pub mod shuffle;
 
 pub use broadcast::Broadcast;
 pub use context::{Cluster, ClusterConfig, ClusterStats};
+pub use executor::{ExecutorOptions, WorkerMetrics};
 pub use fault::FaultPlan;
 pub use memory::{MemSize, MemoryTracker};
 pub use rdd::{Data, Rdd};

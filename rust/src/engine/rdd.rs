@@ -112,6 +112,66 @@ impl<U: Data, T: Data> PartSrc<T> for MapPartsNode<U, T> {
     }
 }
 
+/// Split every parent partition into `factor` contiguous slices — a
+/// narrow repartitioning that multiplies the task count so the
+/// work-stealing executor has finer-grained units to balance.  The parent
+/// partition is recomputed once per slice; `cache()` or `checkpoint()`
+/// first when the parent is expensive.
+struct SplitNode<T: Data> {
+    parent: Arc<dyn PartSrc<T>>,
+    factor: usize,
+}
+
+impl<T: Data> PartSrc<T> for SplitNode<T> {
+    fn num_parts(&self) -> usize {
+        self.parent.num_parts() * self.factor
+    }
+
+    fn compute(&self, part: usize) -> Result<Vec<T>> {
+        let data = self.parent.compute(part / self.factor)?;
+        let slice = part % self.factor;
+        let n = data.len();
+        let per = n.div_ceil(self.factor).max(1);
+        let lo = (slice * per).min(n);
+        let hi = ((slice + 1) * per).min(n);
+        Ok(data.into_iter().skip(lo).take(hi - lo).collect())
+    }
+
+    fn shuffle_deps(&self) -> Vec<Arc<dyn ShuffleNode>> {
+        self.parent.shuffle_deps()
+    }
+}
+
+/// Merge adjacent parent partitions down to `parts` outputs (narrow; the
+/// inverse of [`SplitNode`], Spark's `coalesce`).
+struct CoalesceNode<T: Data> {
+    parent: Arc<dyn PartSrc<T>>,
+    parts: usize,
+}
+
+impl<T: Data> PartSrc<T> for CoalesceNode<T> {
+    fn num_parts(&self) -> usize {
+        self.parts
+    }
+
+    fn compute(&self, part: usize) -> Result<Vec<T>> {
+        let n = self.parent.num_parts();
+        let base = n / self.parts;
+        let extra = n % self.parts;
+        let lo = part * base + part.min(extra);
+        let hi = lo + base + usize::from(part < extra);
+        let mut out = Vec::new();
+        for p in lo..hi {
+            out.extend(self.parent.compute(p)?);
+        }
+        Ok(out)
+    }
+
+    fn shuffle_deps(&self) -> Vec<Arc<dyn ShuffleNode>> {
+        self.parent.shuffle_deps()
+    }
+}
+
 struct UnionNode<T: Data> {
     left: Arc<dyn PartSrc<T>>,
     right: Arc<dyn PartSrc<T>>,
@@ -265,6 +325,33 @@ impl<T: Data> Rdd<T> {
         })
     }
 
+    /// Narrow repartitioning: split every partition into `factor`
+    /// contiguous slices (element order preserved), so long partitions
+    /// become finer-grained tasks the work-stealing executor can balance.
+    pub fn split_partitions(&self, factor: usize) -> Rdd<T> {
+        if factor <= 1 {
+            return self.clone();
+        }
+        Rdd::from_src(
+            self.ctx.clone(),
+            Arc::new(SplitNode { parent: self.src.clone(), factor }),
+        )
+    }
+
+    /// Merge adjacent partitions down to at most `parts` (element order
+    /// preserved) — Spark's `coalesce`.
+    pub fn coalesce(&self, parts: usize) -> Rdd<T> {
+        let n = self.src.num_parts();
+        let parts = parts.clamp(1, n.max(1));
+        if parts >= n {
+            return self.clone();
+        }
+        Rdd::from_src(
+            self.ctx.clone(),
+            Arc::new(CoalesceNode { parent: self.src.clone(), parts }),
+        )
+    }
+
     pub fn union(&self, other: &Rdd<T>) -> Rdd<T> {
         Rdd::from_src(
             self.ctx.clone(),
@@ -331,7 +418,13 @@ impl<T: Data> Rdd<T> {
                 ctx.memory().worker(worker).acquire(bytes);
                 let result = f(part, data);
                 ctx.memory().worker(worker).release(bytes);
-                out2.lock().unwrap()[part] = Some(result?);
+                let value = result?;
+                // The results Vec is taken once the stage completes; an
+                // abandoned speculative/straggler duplicate finishing
+                // late must not index into the emptied Vec.
+                if let Some(slot) = out2.lock().unwrap().get_mut(part) {
+                    *slot = Some(value);
+                }
                 Ok(())
             },
         )?;
@@ -408,7 +501,10 @@ impl<T: Data> Rdd<T> {
                             } else {
                                 format!("part-{part:05}.kv.r{copy}")
                             };
-                            std::fs::write(dir2.join(name), &bytes)?;
+                            // Atomic (tmp + rename) so a speculative
+                            // duplicate re-writing the file can never be
+                            // observed half-written by a reader.
+                            super::shuffle::write_atomic(&dir2.join(name), &bytes)?;
                             ctx.io().shuffle_bytes_written.fetch_add(
                                 bytes.len() as u64,
                                 std::sync::atomic::Ordering::Relaxed,
@@ -605,6 +701,45 @@ mod tests {
                 assert_eq!(c.stats().shuffle_bytes_written, 0);
             }
         }
+    }
+
+    #[test]
+    fn split_partitions_preserves_order_and_multiplies_tasks() {
+        let c = cluster();
+        let rdd = c.parallelize((0..101u32).collect(), 4);
+        let fine = rdd.split_partitions(3);
+        assert_eq!(fine.num_partitions(), 12);
+        assert_eq!(fine.collect().unwrap(), (0..101).collect::<Vec<u32>>());
+        // factor 1 is the identity.
+        assert_eq!(rdd.split_partitions(1).num_partitions(), 4);
+    }
+
+    #[test]
+    fn split_partitions_handles_empty_and_tiny_partitions() {
+        let c = cluster();
+        let rdd = c.parallelize(vec![7u32, 8], 2).split_partitions(4);
+        assert_eq!(rdd.num_partitions(), 8);
+        assert_eq!(rdd.collect().unwrap(), vec![7, 8]);
+    }
+
+    #[test]
+    fn coalesce_merges_adjacent_partitions() {
+        let c = cluster();
+        let rdd = c.parallelize((0..50u32).collect(), 7);
+        let coarse = rdd.coalesce(3);
+        assert_eq!(coarse.num_partitions(), 3);
+        assert_eq!(coarse.collect().unwrap(), (0..50).collect::<Vec<u32>>());
+        // Requests beyond the current count are the identity.
+        assert_eq!(rdd.coalesce(10).num_partitions(), 7);
+    }
+
+    #[test]
+    fn split_then_coalesce_roundtrips() {
+        let c = cluster();
+        let rdd = c.parallelize((0..40u32).collect(), 5);
+        let back = rdd.split_partitions(4).coalesce(5);
+        assert_eq!(back.num_partitions(), 5);
+        assert_eq!(back.collect().unwrap(), (0..40).collect::<Vec<u32>>());
     }
 
     #[test]

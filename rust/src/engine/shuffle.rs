@@ -11,15 +11,25 @@
 //!   blames for HAlign v1's slowdown and HPTree's memory spikes.
 
 use std::collections::HashMap;
-use std::io::{Read, Write};
-use std::path::PathBuf;
-use std::sync::atomic::Ordering;
+use std::io::Read;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use anyhow::{Context as _, Result};
 
 use super::context::Cluster;
 use crate::util::{Decode, Encode};
+
+/// Write a spill file atomically (unique tmp name + rename), so a reader
+/// can never observe a half-written bucket even if a speculative
+/// duplicate task re-writes it concurrently.
+pub(crate) fn write_atomic(path: &Path, bytes: &[u8]) -> std::io::Result<()> {
+    static TMP_SEQ: AtomicUsize = AtomicUsize::new(0);
+    let tmp = path.with_extension(format!("tmp{}", TMP_SEQ.fetch_add(1, Ordering::Relaxed)));
+    std::fs::write(&tmp, bytes)?;
+    std::fs::rename(&tmp, path)
+}
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Backend {
@@ -39,6 +49,11 @@ impl std::fmt::Display for Backend {
 /// Map-output store for one shuffle: buckets indexed by (map, reduce)
 /// partition. Thread-safe; map tasks `put` concurrently, reduce tasks
 /// `read_reduce` after the map stage completes.
+///
+/// Ownership is keyed to the *owning* worker (`worker_for(map_part)`),
+/// not the executing worker: under the work-stealing executor a map task
+/// may run anywhere, but its outputs still have a stable home node, which
+/// is what lets the fault injector "lose" a node's outputs coherently.
 pub struct ShuffleStore<T> {
     backend: Backend,
     cluster: Cluster,
@@ -94,10 +109,24 @@ impl<T: Clone + Encode + Decode + crate::engine::memory::MemSize> ShuffleStore<T
                 let bytes = crate::engine::memory::slice_bytes(&data);
                 self.cluster.memory().worker(worker).acquire(bytes);
                 self.charged.lock().unwrap().push((worker, bytes));
-                self.mem
+                let replaced = self
+                    .mem
                     .lock()
                     .unwrap()
                     .insert((map_part, reduce_part), Arc::new(data));
+                if let Some(old) = replaced {
+                    // A duplicate task (speculative re-execution) re-wrote
+                    // this bucket: release the stale copy's charge now so
+                    // the bucket stays single-counted in the Fig-5 metric.
+                    let old_bytes = crate::engine::memory::slice_bytes(old.as_ref());
+                    self.cluster.memory().worker(worker).release(old_bytes);
+                    let mut charged = self.charged.lock().unwrap();
+                    if let Some(pos) =
+                        charged.iter().position(|&(w, b)| w == worker && b == old_bytes)
+                    {
+                        charged.remove(pos);
+                    }
+                }
             }
             Backend::DiskKv => {
                 // Hadoop path: MapReduce's sort-merge shuffle — every
@@ -128,8 +157,7 @@ impl<T: Clone + Encode + Decode + crate::engine::memory::MemSize> ShuffleStore<T
                         } else {
                             path.with_extension(format!("kv.r{copy}"))
                         };
-                        std::fs::File::create(&path)
-                            .and_then(|mut f| f.write_all(&buf))
+                        write_atomic(&path, &buf)
                             .with_context(|| format!("spilling {}", path.display()))?;
                         self.cluster
                             .io()
@@ -330,6 +358,32 @@ mod tests {
         store.drop_worker_outputs(0, 4);
         let present = store.present_map_parts(4);
         assert_eq!(present, vec![false, true, true, false]); // w0 owned 0 and 3
+    }
+
+    #[test]
+    fn backends_produce_byte_identical_grouped_output() {
+        // Same job, both backends, canonicalized (groups sorted by key,
+        // values sorted within each group — MapReduce sorts map outputs,
+        // Spark preserves arrival order, so raw order is backend-defined)
+        // and then *encoded*: the byte streams must match exactly.
+        let gen_pairs = || -> Vec<(u32, String)> {
+            let mut rng = crate::util::Rng::seed_from_u64(0xC0FFEE);
+            (0..300)
+                .map(|i| (rng.below(23) as u32, format!("v{i}-{}", rng.below(1000))))
+                .collect()
+        };
+        let canonical = |c: &Cluster| -> Vec<u8> {
+            let mut groups = c.parallelize(gen_pairs(), 5).group_by_key(4).collect().unwrap();
+            for (_, vs) in groups.iter_mut() {
+                vs.sort();
+            }
+            groups.sort();
+            groups.to_bytes()
+        };
+        let spark = canonical(&Cluster::new(ClusterConfig::spark(3)));
+        let hadoop = canonical(&Cluster::new(ClusterConfig::hadoop(3)));
+        assert!(!spark.is_empty());
+        assert_eq!(spark, hadoop, "backends must agree byte-for-byte");
     }
 
     #[test]

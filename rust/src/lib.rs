@@ -16,8 +16,15 @@
 //! * [`util`]    — PRNG, binary codec, timing (std-only substitutes for the
 //!                 usual crates; this build is fully offline).
 //! * [`engine`]  — the mini-Spark substrate: lazy RDDs with lineage, DAG
-//!                 scheduler, worker executor, shuffles, broadcast, memory
-//!                 accounting, fault injection.
+//!                 scheduler, a work-stealing executor (locality-preferred
+//!                 per-worker deques, idle workers steal from the busiest
+//!                 queue, stragglers re-executed speculatively with
+//!                 first-completion-wins), shuffles, broadcast, memory
+//!                 accounting, and fault injection including worker kills
+//!                 that drain the dead node's deque back into the steal
+//!                 pool.  Steal/speculation counters and busy-time skew
+//!                 (max/mean worker busy nanos) surface through
+//!                 `ClusterStats` into [`metrics`].
 //! * [`fasta`]   — sequence types, alphabets, FASTA I/O.
 //! * [`data`]    — deterministic synthetic dataset generators standing in
 //!                 for the paper's mito-genome / 16S rRNA / BAliBASE data.

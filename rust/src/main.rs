@@ -230,7 +230,7 @@ fn cmd_tree(args: &Args) -> Result<()> {
 }
 
 fn cmd_bench(args: &Args) -> Result<()> {
-    let table = args.get("table").context("--table t2|t3|t4|t5|f5|f6 required")?;
+    let table = args.get("table").context("--table t2|t3|t4|t5|f5|f6|f6skew required")?;
     let cfg = BenchConfig {
         workers: args.parse_or("workers", 8usize)?,
         scale: args.parse_or("scale", 1.0f64)?,
@@ -254,11 +254,18 @@ fn cmd_bench(args: &Args) -> Result<()> {
             "Figure 5 — avg max per-worker memory",
             bench::fig5_memory(&cfg, svc.as_ref()),
         ),
-        "f6" => ("Figure 6 — scaling with worker count", bench::fig6_scaling(&cfg)),
+        "f6" => (
+            "Figure 6 — scaling with worker count (steal on vs off)",
+            bench::fig6_scaling(&cfg),
+        ),
+        "f6skew" => (
+            "Figure 6b — skewed partitions (straggler scenario)",
+            bench::fig6_skew(&cfg),
+        ),
         other => bail!("unknown table {other:?}"),
     };
     print_table(title, &rows);
-    println!("\n# tool\tdataset\twall_s\tbusy_s\tmetric\tavg_max_mem_mb\tstatus");
+    println!("\n# {}", halign2::metrics::TSV_HEADER);
     for r in &rows {
         println!("{}", tsv_line(r));
     }

@@ -20,6 +20,13 @@ pub struct RunReport {
     pub metric_name: &'static str,
     pub avg_max_memory_mb: Option<f64>,
     pub shuffle_mb: Option<f64>,
+    /// Max/mean per-worker busy nanos (1.0 = perfectly balanced); the
+    /// Fig-6 load-balance signal the work-stealing scheduler improves.
+    pub busy_skew: Option<f64>,
+    /// Tasks executed away from their owning node (work stealing).
+    pub tasks_stolen: Option<usize>,
+    /// Speculative straggler duplicates launched.
+    pub speculative_launches: Option<usize>,
     /// "-" rows: tool did not finish (OOM / unsupported / over budget).
     pub dnf: Option<String>,
 }
@@ -35,6 +42,9 @@ impl RunReport {
             metric_name: "",
             avg_max_memory_mb: None,
             shuffle_mb: None,
+            busy_skew: None,
+            tasks_stolen: None,
+            speculative_launches: None,
             dnf: Some(reason.into()),
         }
     }
@@ -45,6 +55,9 @@ impl RunReport {
         self.shuffle_mb = Some(
             (stats.shuffle_bytes_written + stats.shuffle_bytes_read) as f64 / (1 << 20) as f64,
         );
+        self.busy_skew = Some(stats.busy_skew);
+        self.tasks_stolen = Some(stats.tasks_stolen);
+        self.speculative_launches = Some(stats.speculative_launches);
         self
     }
 }
@@ -94,16 +107,25 @@ pub fn print_table(title: &str, reports: &[RunReport]) {
     }
 }
 
-/// Machine-readable one-line record (appended to bench logs).
+/// Column names matching [`tsv_line`]'s fields — keep the two in sync
+/// here so every TSV emitter prints the same header.
+pub const TSV_HEADER: &str =
+    "tool\tdataset\twall_s\tbusy_s\tmetric\tavg_max_mem_mb\tbusy_skew\tstolen\tspeculative\tstatus";
+
+/// Machine-readable one-line record (appended to bench logs); fields as
+/// in [`TSV_HEADER`].
 pub fn tsv_line(r: &RunReport) -> String {
     format!(
-        "{}\t{}\t{:.3}\t{}\t{}\t{}\t{}",
+        "{}\t{}\t{:.3}\t{}\t{}\t{}\t{}\t{}\t{}\t{}",
         r.tool,
         r.dataset,
         r.wall.as_secs_f64(),
         r.busy.map(|b| format!("{:.3}", b.as_secs_f64())).unwrap_or_else(|| "-".into()),
         r.metric.map(|m| format!("{m:.3}")).unwrap_or_else(|| "-".into()),
         r.avg_max_memory_mb.map(|m| format!("{m:.2}")).unwrap_or_else(|| "-".into()),
+        r.busy_skew.map(|s| format!("{s:.3}")).unwrap_or_else(|| "-".into()),
+        r.tasks_stolen.map(|s| s.to_string()).unwrap_or_else(|| "-".into()),
+        r.speculative_launches.map(|s| s.to_string()).unwrap_or_else(|| "-".into()),
         r.dnf.clone().unwrap_or_else(|| "ok".into()),
     )
 }
@@ -113,7 +135,7 @@ mod tests {
     use super::*;
 
     #[test]
-    fn tsv_has_seven_fields() {
+    fn tsv_has_ten_fields() {
         let r = RunReport {
             tool: "halign2".into(),
             dataset: "dna1x".into(),
@@ -123,9 +145,15 @@ mod tests {
             metric_name: "avgSP",
             avg_max_memory_mb: Some(100.0),
             shuffle_mb: Some(0.0),
+            busy_skew: Some(1.25),
+            tasks_stolen: Some(7),
+            speculative_launches: Some(1),
             dnf: None,
         };
-        assert_eq!(tsv_line(&r).split('\t').count(), 7);
+        let line = tsv_line(&r);
+        assert_eq!(line.split('\t').count(), 10);
+        assert_eq!(TSV_HEADER.split('\t').count(), 10, "header matches row arity");
+        assert!(line.contains("1.250"));
     }
 
     #[test]

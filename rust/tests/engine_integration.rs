@@ -56,6 +56,26 @@ fn random_faults_do_not_change_results() {
 }
 
 #[test]
+fn scheduler_modes_and_kills_do_not_change_results() {
+    let text = ["a b a", "c b a", "c c c c", "", "b"];
+    let reference = wordcount(&Cluster::new(ClusterConfig::spark(3)), &text);
+
+    // Work stealing and speculation off: same answer.
+    let mut cfg = ClusterConfig::spark(3);
+    cfg.scheduler.work_stealing = false;
+    cfg.scheduler.speculation = false;
+    assert_eq!(wordcount(&Cluster::new(cfg), &text), reference);
+
+    // A worker killed mid-job (its deque drained back into the steal
+    // pool): same answer, one fewer node.
+    let mut cfg = ClusterConfig::spark(3);
+    cfg.fault = FaultPlan::kill_worker_at(1, 3);
+    let c = Cluster::new(cfg);
+    assert_eq!(wordcount(&c, &text), reference);
+    assert_eq!(c.config().fault.fired(), 1, "the kill must have fired");
+}
+
+#[test]
 fn diskkv_pays_io_inmemory_pays_memory() {
     let payload: Vec<(u32, Vec<u8>)> = (0..256).map(|i| (i % 16, vec![7u8; 2048])).collect();
 

@@ -1,0 +1,119 @@
+//! Deterministic end-to-end golden test: DNA center-star MSA over a
+//! seeded synthetic mito dataset, asserting the *exact* alignment width,
+//! SP score, and row bytes are identical across worker counts (1 and 4),
+//! shuffle backends (Spark in-memory and Hadoop disk-KV), scheduler modes
+//! (stealing on/off), and fault plans (random task failures, a targeted
+//! worker fault, and a worker kill) — the engine must never change
+//! results, only performance.
+
+use halign2::align::center_star::{align_nucleotide, CenterStarConfig};
+use halign2::data::DatasetSpec;
+use halign2::engine::{Cluster, ClusterConfig, FaultPlan};
+use halign2::fasta::Sequence;
+
+fn dataset() -> Vec<Sequence> {
+    DatasetSpec { count: 28, ..DatasetSpec::mito(0.01, 0x601D) }.generate()
+}
+
+struct GoldenRun {
+    width: usize,
+    avg_sp: f64,
+    rows: Vec<Vec<u8>>,
+    cluster: Cluster,
+}
+
+fn run(cfg: ClusterConfig) -> GoldenRun {
+    let seqs = dataset();
+    let cluster = Cluster::new(cfg);
+    let msa = align_nucleotide(&cluster, &seqs, &CenterStarConfig::default()).unwrap();
+    msa.validate(&seqs).unwrap();
+    let avg_sp = msa.avg_sp_distributed(&cluster).unwrap();
+    // The distributed scorer folds the same integer column counts as the
+    // local one; the values must match bit-for-bit.
+    assert_eq!(avg_sp, msa.avg_sp().unwrap(), "distributed SP == local SP");
+    GoldenRun {
+        width: msa.width,
+        avg_sp,
+        rows: msa.aligned.iter().map(|s| s.codes.clone()).collect(),
+        cluster,
+    }
+}
+
+#[test]
+fn golden_msa_identical_across_workers_backends_schedulers_and_faults() {
+    let golden = run(ClusterConfig::spark(1));
+    let max_input = dataset().iter().map(Sequence::len).max().unwrap();
+    assert!(golden.width >= max_input, "MSA at least as wide as the longest input");
+    assert!(golden.avg_sp >= 0.0 && golden.avg_sp.is_finite());
+
+    fn with_fault(mut cfg: ClusterConfig, fault: FaultPlan, retries: usize) -> ClusterConfig {
+        cfg.fault = fault;
+        cfg.max_retries = retries;
+        cfg
+    }
+    let mut nosteal = ClusterConfig::spark(4);
+    nosteal.scheduler.work_stealing = false;
+    nosteal.scheduler.speculation = false;
+
+    let variants: Vec<(&str, ClusterConfig, bool)> = vec![
+        ("spark-4w", ClusterConfig::spark(4), false),
+        ("hadoop-1w", ClusterConfig::hadoop(1), false),
+        ("hadoop-4w", ClusterConfig::hadoop(4), false),
+        ("spark-4w-nosteal", nosteal, false),
+        (
+            "spark-1w-faults",
+            with_fault(
+                ClusterConfig::spark(1),
+                FaultPlan::fail_first_attempt_on_worker(0),
+                4,
+            ),
+            true,
+        ),
+        (
+            "spark-4w-random-faults",
+            with_fault(ClusterConfig::spark(4), FaultPlan::random(0.25, 0xFA117), 10),
+            true,
+        ),
+        (
+            "spark-4w-worker-fault",
+            with_fault(
+                ClusterConfig::spark(4),
+                FaultPlan::fail_first_attempt_on_worker(2),
+                4,
+            ),
+            true,
+        ),
+        (
+            "spark-4w-kill",
+            with_fault(ClusterConfig::spark(4), FaultPlan::kill_worker_at(1, 10), 2),
+            true,
+        ),
+        (
+            "hadoop-4w-random-faults",
+            with_fault(ClusterConfig::hadoop(4), FaultPlan::random(0.2, 0xFA118), 10),
+            true,
+        ),
+    ];
+
+    for (name, cfg, expects_fault) in variants {
+        let got = run(cfg);
+        assert_eq!(got.width, golden.width, "{name}: width must match golden");
+        assert_eq!(got.avg_sp, golden.avg_sp, "{name}: SP must match golden exactly");
+        assert_eq!(got.rows, golden.rows, "{name}: aligned rows must be byte-identical");
+        if expects_fault {
+            assert!(
+                got.cluster.config().fault.fired() > 0,
+                "{name}: the fault plan never fired, the variant proves nothing"
+            );
+        }
+    }
+}
+
+#[test]
+fn golden_run_is_reproducible_within_a_config() {
+    let a = run(ClusterConfig::spark(4));
+    let b = run(ClusterConfig::spark(4));
+    assert_eq!(a.width, b.width);
+    assert_eq!(a.avg_sp, b.avg_sp);
+    assert_eq!(a.rows, b.rows);
+}
