@@ -1,6 +1,8 @@
 //! Regenerates Figure 6 — running time, memory and busy-time skew with
 //! increasing worker nodes (1, 2, 4, 8, 12), work stealing on vs off,
-//! plus the skewed-partition straggler scenario.
+//! the skewed-partition straggler scenario, and the sharded-vs-global
+//! scheduler A/B at 16/32/64 simulated workers (busy skew must be <= the
+//! global-lock baseline and wall-clock no worse from 16 workers up).
 #[allow(dead_code)]
 mod common;
 
@@ -13,5 +15,9 @@ fn main() {
     common::emit(
         "Figure 6b — skewed partitions (straggler scenario)",
         halign2::bench::fig6_skew(&cfg),
+    );
+    common::emit(
+        "Figure 6c — sharded deques vs global lock at 16/32/64 workers",
+        halign2::bench::fig6_sharded(&cfg),
     );
 }

@@ -59,11 +59,36 @@ impl Default for CenterStarConfig {
 
 /// Residue-aware task count: enough partitions that a task holds about
 /// `target` residues, at least the cluster default (capped at one task
-/// per sequence so no partition is empty).
-fn adaptive_partitions(seqs: &[Sequence], default_parts: usize, target: usize) -> usize {
+/// per sequence so no partition is empty).  Shared with the protein
+/// pipeline.
+pub(crate) fn adaptive_partitions(
+    seqs: &[Sequence],
+    default_parts: usize,
+    target: usize,
+) -> usize {
     let total: usize = seqs.iter().map(Sequence::len).sum();
     let by_residues = total.div_ceil(target.max(1));
     by_residues.max(default_parts).min(seqs.len()).max(1)
+}
+
+/// Base partition count and split factor realizing the residue-aware
+/// repartitioning: parallelize into the cluster-default partitions, then
+/// `split_partitions(factor)` down to ~`target` residues per task.  The
+/// split rides the slice-aware lineage (sources/caches/checkpoints serve
+/// each slice its own range), so finer tasks cost one pass over the
+/// input instead of `factor` recomputes.  `base * factor` never exceeds
+/// the sequence count — the split must not reintroduce the empty tasks
+/// [`adaptive_partitions`] caps away.  Shared with the protein pipeline.
+pub(crate) fn repartition_plan(
+    seqs: &[Sequence],
+    default_parts: usize,
+    target: usize,
+) -> (usize, usize) {
+    let n = seqs.len().max(1);
+    let base = default_parts.clamp(1, n);
+    let desired = adaptive_partitions(seqs, default_parts, target);
+    let factor = desired.div_ceil(base).clamp(1, n / base);
+    (base, factor)
 }
 
 /// Pick the center sequence index.
@@ -111,14 +136,18 @@ pub fn align_nucleotide(
     let center_index = choose_center(seqs, cfg, cluster.config().seed);
     let center_codes = seqs[center_index].codes.clone();
     let segment_len = cfg.segment_len;
-    let parts = if cfg.partitions == 0 {
-        adaptive_partitions(
+    // Residue-count repartitioning: coarse source partitions split into
+    // ~target_residues_per_task tasks via the slice-aware split (each
+    // slice computes only its own range of the source partition), so
+    // long-sequence inputs become finer stealable tasks for free.
+    let (base_parts, split_factor) = if cfg.partitions == 0 {
+        repartition_plan(
             seqs,
             cluster.config().default_partitions,
             cfg.target_residues_per_task,
         )
     } else {
-        cfg.partitions
+        (cfg.partitions, 1)
     };
 
     // ---- Round 1 map: pairwise align vs broadcast center ----------------
@@ -128,9 +157,12 @@ pub fn align_nucleotide(
         .enumerate()
         .map(|(i, s)| (i as u64, s.clone()))
         .collect();
-    let rdd = cluster.parallelize(indexed, parts);
+    let rdd = cluster.parallelize(indexed, base_parts).split_partitions(split_factor);
     let center_for_map = center_bc.arc();
     let paths = rdd.map_partitions_with_index(move |_, items| {
+        if items.is_empty() {
+            return Vec::new(); // ragged tail slice: skip the trie build
+        }
         // Build the trie once per partition (the broadcast is the center
         // codes; the automaton is cheap relative to alignment).
         let trie = SegmentTrie::build(&center_for_map, segment_len);
@@ -310,6 +342,33 @@ mod tests {
         let fine = adaptive_partitions(&seqs, 8, 1024);
         assert!(fine > coarse, "long sequences must split finer (got {fine})");
         assert!(fine <= seqs.len(), "never more tasks than sequences");
+    }
+
+    #[test]
+    fn repartition_plan_reaches_residue_granularity_via_split() {
+        let seqs = DatasetSpec { count: 64, ..DatasetSpec::mito(0.05, 11) }.generate();
+        let (base, factor) = repartition_plan(&seqs, 8, 1024);
+        assert_eq!(base, 8, "source partitions stay at the cluster default");
+        assert!(factor > 1, "fine residue target must split (factor {factor})");
+        assert!(
+            base * factor >= adaptive_partitions(&seqs, 8, 1024),
+            "split must reach the residue-derived task count"
+        );
+        assert!(
+            base * factor <= seqs.len(),
+            "split must never create more tasks than sequences"
+        );
+        // A huge target needs no splitting at all.
+        assert_eq!(repartition_plan(&seqs, 8, 1 << 30), (8, 1));
+        // Fewer sequences than default partitions: base shrinks to fit.
+        let three = &seqs[..3];
+        let (b, f) = repartition_plan(three, 8, 1024);
+        assert_eq!((b, f), (3, 1), "never more source partitions than sequences");
+        // Sequence count barely above the default: the cap keeps the
+        // plan at the coarse base rather than minting empty slices.
+        let ten = &seqs[..10];
+        let (b, f) = repartition_plan(ten, 8, 1);
+        assert!(b * f <= 10, "10 sequences must yield at most 10 tasks (got {b}x{f})");
     }
 
     #[test]

@@ -25,16 +25,26 @@ use crate::runtime::{batcher::SwBatcher, XlaService};
 pub struct ProteinConfig {
     /// Linear gap penalty (positive, subtracted).
     pub gap: f32,
-    /// Partitions for the sequence RDD (0 = cluster default).
+    /// Partitions for the sequence RDD (0 = residue-aware adaptive).
     pub partitions: usize,
     /// Center strategy: pick the longest sequence (HAlign-II keeps the
     /// longest center so every other sequence aligns within it).
     pub center_longest: bool,
+    /// When `partitions == 0`, repartition so each task holds roughly
+    /// this many residues (same knob as the nucleotide path): long
+    /// proteins become finer stealable tasks instead of coarse
+    /// per-sequence partitions pinning a stage to one node.
+    pub target_residues_per_task: usize,
 }
 
 impl Default for ProteinConfig {
     fn default() -> Self {
-        Self { gap: 5.0, partitions: 0, center_longest: true }
+        Self {
+            gap: 5.0,
+            partitions: 0,
+            center_longest: true,
+            target_residues_per_task: 32 * 1024,
+        }
     }
 }
 
@@ -146,23 +156,31 @@ pub fn align_protein(
         alpha: alphabet.size(),
         gap: cfg.gap,
     };
-    let parts = if cfg.partitions == 0 {
-        cluster.config().default_partitions
+    // Residue-aware repartitioning via the slice-aware split, exactly
+    // like the nucleotide path.
+    let (base_parts, split_factor) = if cfg.partitions == 0 {
+        super::center_star::repartition_plan(
+            seqs,
+            cluster.config().default_partitions,
+            cfg.target_residues_per_task,
+        )
     } else {
-        cfg.partitions
+        (cfg.partitions, 1)
     };
 
     // Round 1 map: SW vs broadcast center (XLA-batched per partition).
     let center_bc = cluster.broadcast(center_codes.clone())?;
     let indexed: Vec<(u64, Sequence)> =
         seqs.iter().enumerate().map(|(i, s)| (i as u64, s.clone())).collect();
-    let rdd = cluster.parallelize(indexed, parts);
+    let rdd = cluster.parallelize(indexed, base_parts).split_partitions(split_factor);
     let center_for_map = center_bc.arc();
     let params_map = params.clone();
     let svc_map = svc.cloned();
-    let paths = rdd.map_partitions_with_index(move |_, items| {
+    // Fallible map: an accelerator batch error becomes a task `Err` the
+    // executor retries through lineage (and ultimately surfaces to the
+    // caller) instead of panicking the worker thread.
+    let paths = rdd.try_map_partitions_with_index(move |_, items| {
         align_partition(&items, &center_for_map, &params_map, svc_map.as_ref())
-            .expect("partition alignment failed")
     });
     let paths = paths.checkpoint().context("persisting pairwise paths")?;
 

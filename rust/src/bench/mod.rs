@@ -24,7 +24,7 @@ use crate::align::protein::{align_protein, ProteinConfig};
 use crate::baselines::progressive::{estimated_bytes, progressive_msa, ProgressiveConfig};
 use crate::baselines::{halign_v1, hptree_build, iqtree_like, sparksw};
 use crate::data::DatasetSpec;
-use crate::engine::{Cluster, ClusterConfig};
+use crate::engine::{Cluster, ClusterConfig, SchedulerMode};
 use crate::fasta::Sequence;
 use crate::metrics::RunReport;
 use crate::runtime::XlaService;
@@ -117,6 +117,8 @@ pub fn measure<T>(
                 shuffle_mb: None,
                 busy_skew: None,
                 tasks_stolen: None,
+                steal_batches: None,
+                lock_contentions: None,
                 speculative_launches: None,
                 dnf: None,
             };
@@ -422,6 +424,35 @@ pub fn fig6_scaling(cfg: &BenchConfig) -> Vec<RunReport> {
     out
 }
 
+/// Figure 6 companion — scheduler-architecture A/B past the paper's 12
+/// workstations: sharded per-worker deques with steal-half batching vs
+/// the single global-mutex scheduler at 16/32/64 simulated workers.
+/// Same MSA, identical results; the columns that differ are busy-time
+/// skew, lock contention and wall-clock — the centralized-queue
+/// bottleneck the sharding removes.
+pub fn fig6_sharded(cfg: &BenchConfig) -> Vec<RunReport> {
+    let (label, spec) = cfg.dna_tiers().into_iter().nth(1).unwrap();
+    let seqs = spec.generate();
+    let mut out = Vec::new();
+    for workers in [16usize, 32, 64] {
+        let name = format!("{label}@w{workers}");
+        for (tool, mode) in [
+            ("halign2_sharded", SchedulerMode::Sharded),
+            ("halign2_global", SchedulerMode::GlobalLock),
+        ] {
+            out.push(measure(tool, &name, "avgSP", || {
+                let mut ccfg = ClusterConfig::spark(workers);
+                ccfg.scheduler.mode = mode;
+                let engine = Cluster::new(ccfg);
+                let msa = align_nucleotide(&engine, &seqs, &CenterStarConfig::default())?;
+                let sp = msa.avg_sp_distributed(&engine)?;
+                Ok((msa, Some(sp), Some(engine)))
+            }));
+        }
+    }
+    out
+}
+
 /// Figure 6 companion — a deliberately skewed workload (one in eight
 /// sequences is ~5x longer), the straggler scenario the fixed modulo
 /// placement handled worst: compare busy skew with stealing+speculation
@@ -483,6 +514,23 @@ mod tests {
             let pair: Vec<_> = rows.iter().filter(|r| r.dataset == name).collect();
             assert_eq!(pair.len(), 2);
         }
+    }
+
+    #[test]
+    fn fig6_sharded_covers_both_architectures_with_identical_results() {
+        let rows = fig6_sharded(&quick());
+        assert_eq!(rows.len(), 6, "3 worker counts x sharded/global");
+        assert!(rows.iter().all(|r| r.dnf.is_none()));
+        for w in ["16", "32", "64"] {
+            let name = format!("dna_20x@w{w}");
+            let pair: Vec<_> = rows.iter().filter(|r| r.dataset == name).collect();
+            assert_eq!(pair.len(), 2);
+            assert_eq!(
+                pair[0].metric, pair[1].metric,
+                "queue architecture must not change the MSA"
+            );
+        }
+        assert!(rows.iter().all(|r| r.busy_skew.is_some() && r.lock_contentions.is_some()));
     }
 
     #[test]

@@ -192,6 +192,16 @@ impl Cluster {
                 .iter()
                 .map(|w| w.steals.load(Ordering::Relaxed))
                 .sum(),
+            steal_batches: m
+                .metrics()
+                .iter()
+                .map(|w| w.steal_batches.load(Ordering::Relaxed))
+                .sum(),
+            lock_contentions: m
+                .metrics()
+                .iter()
+                .map(|w| w.lock_contention.load(Ordering::Relaxed))
+                .sum(),
             speculative_launches: m
                 .metrics()
                 .iter()
@@ -222,8 +232,15 @@ pub struct ClusterStats {
     pub workers: usize,
     pub tasks_run: usize,
     pub injected_failures: usize,
-    /// Tasks executed by a worker other than the one they were queued on.
+    /// Tasks migrated out of their queued deque by work stealing.
     pub tasks_stolen: usize,
+    /// Steal operations; with steal-half batching each one migrates up to
+    /// half the victim's deque, so `tasks_stolen / steal_batches` is the
+    /// mean batch size.
+    pub steal_batches: usize,
+    /// Scheduler-lock `try_lock` misses — the lock-contention proxy that
+    /// separates the sharded scheduler from the global-mutex baseline.
+    pub lock_contentions: usize,
     /// Speculative straggler duplicates launched.
     pub speculative_launches: usize,
     pub total_busy: Duration,
@@ -256,18 +273,26 @@ mod tests {
         assert_eq!(st.tasks_run, 0);
         assert_eq!(st.shuffle_bytes_written, 0);
         assert_eq!(st.tasks_stolen, 0);
+        assert_eq!(st.steal_batches, 0);
+        assert_eq!(st.lock_contentions, 0);
         assert_eq!(st.speculative_launches, 0);
         assert_eq!(st.busy_skew, 1.0, "idle cluster is trivially balanced");
     }
 
     #[test]
     fn scheduler_options_reach_the_executor() {
+        use crate::engine::SchedulerMode;
         let mut cfg = ClusterConfig::spark(2);
         cfg.scheduler.work_stealing = false;
         cfg.scheduler.speculation = false;
+        cfg.scheduler.mode = SchedulerMode::GlobalLock;
         let c = Cluster::new(cfg);
         assert!(!c.executor().options().work_stealing);
         assert!(!c.executor().options().speculation);
+        assert_eq!(c.executor().options().mode, SchedulerMode::GlobalLock);
+        // Sharded is the default architecture.
+        let d = Cluster::new(ClusterConfig::spark(2));
+        assert_eq!(d.executor().options().mode, SchedulerMode::Sharded);
     }
 
     #[test]

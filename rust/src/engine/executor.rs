@@ -2,21 +2,35 @@
 //! node, each with its own deque plus the ability to steal from the
 //! busiest peer when idle.
 //!
-//! Placement is still locality-preferred: task `i` of a stage is enqueued
-//! on worker `i % workers` (the partition's *owning* node, so cached
-//! partitions and shuffle map outputs keep a stable home the fault
-//! injector can target), but any idle worker may steal queued tasks from
-//! the back of another worker's deque — the delay/speculative scheduling
-//! story of Spark, which is what keeps one slow node from stalling a
-//! whole stage.
+//! Two queue architectures, selected by [`SchedulerMode`]:
+//!
+//! * **Sharded** (default): every worker owns a `Mutex<VecDeque<Job>>`
+//!   touched only by its owner on the hot path; an idle worker steals
+//!   **half** of the busiest victim's deque in one batch (one lock
+//!   round-trip migrates many tasks instead of one), and `enqueue` /
+//!   `kill_worker` / shutdown coordinate through a small control block
+//!   (atomic liveness flags plus a wake-epoch condvar) instead of a
+//!   global lock.  This is the per-domain decomposition that keeps
+//!   scheduling cheap past ~12 workers.
+//! * **GlobalLock**: the original single `Mutex<SchedState>` scheduler,
+//!   kept as the A/B baseline for the Fig-6 sharded-vs-global scenario.
+//!
+//! Placement is locality-preferred in both modes: task `i` of a stage is
+//! enqueued on worker `i % workers` (the partition's *owning* node, so
+//! cached partitions and shuffle map outputs keep a stable home the fault
+//! injector can target), but any idle worker may steal queued tasks —
+//! the delay/speculative scheduling story of Spark, which is what keeps
+//! one slow node from stalling a whole stage.
 //!
 //! Straggler mitigation: once a stage is past its speculation quantile
-//! (default 75% of tasks complete), tasks that have been running much
-//! longer than the average completed task are re-submitted as speculative
-//! duplicates on another node; the first completion wins and the
-//! duplicate's result is discarded.  Task closures therefore run with
-//! *at-least-once* semantics and must be idempotent — every engine task
-//! is (they recompute deterministic partitions and write keyed slots).
+//! (default 75% of tasks complete), tasks whose *execution* (measured
+//! from the worker-side start timestamp, not from enqueue — queue wait
+//! must not inflate the average task duration) has run much longer than
+//! the average completed task are re-submitted as speculative duplicates
+//! on another node; the first completion wins and the duplicate's result
+//! is discarded.  Task closures therefore run with *at-least-once*
+//! semantics and must be idempotent — every engine task is (they
+//! recompute deterministic partitions and write keyed slots).
 //!
 //! Fault kills: [`Executor::kill_worker`] (usually driven by a
 //! [`FaultPlan`] kill rule) marks a node dead and drains its deque back
@@ -29,7 +43,7 @@
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, RecvTimeoutError};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
@@ -38,6 +52,18 @@ use super::fault::FaultPlan;
 
 /// A unit of queued work; receives the id of the worker that executes it.
 type Job = Box<dyn FnOnce(usize) + Send>;
+
+/// Queue architecture: per-worker sharded deques (default) vs the single
+/// global-mutex scheduler kept as the scaling baseline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulerMode {
+    /// Per-worker `Mutex<VecDeque>` shards, steal-half batches, control
+    /// block coordination — no global lock on the hot path.
+    Sharded,
+    /// One `Mutex` around every queue (the pre-sharding scheduler); every
+    /// pop/steal/enqueue serializes through it.
+    GlobalLock,
+}
 
 /// Scheduler tuning knobs (see [`super::context::ClusterConfig`]).
 #[derive(Debug, Clone)]
@@ -50,6 +76,8 @@ pub struct ExecutorOptions {
     pub speculation_quantile: f64,
     /// Stages smaller than this never speculate.
     pub speculation_min_tasks: usize,
+    /// Queue architecture (sharded deques vs single global mutex).
+    pub mode: SchedulerMode,
 }
 
 impl Default for ExecutorOptions {
@@ -59,20 +87,32 @@ impl Default for ExecutorOptions {
             speculation: true,
             speculation_quantile: 0.75,
             speculation_min_tasks: 4,
+            mode: SchedulerMode::Sharded,
         }
     }
 }
 
 /// Per-worker counters (busy nanos, tasks run, failures injected, tasks
-/// stolen from peers, speculative duplicates enqueued on this worker).
+/// stolen from peers, steal batches, scheduler-lock contention events,
+/// speculative duplicates enqueued on this worker).
 #[derive(Debug, Default)]
 pub struct WorkerMetrics {
     pub busy_nanos: AtomicU64,
     pub tasks: AtomicUsize,
     pub failures: AtomicUsize,
+    /// Tasks this worker migrated out of peers' deques.
     pub steals: AtomicUsize,
+    /// Steal operations (each migrates up to half the victim's deque).
+    pub steal_batches: AtomicUsize,
+    /// Times a scheduler lock was already held when this worker wanted it
+    /// (`try_lock` miss) — the lock-contention proxy Fig-6 reports.
+    pub lock_contention: AtomicUsize,
     pub speculations: AtomicUsize,
 }
+
+// ---------------------------------------------------------------------------
+// GlobalLock backend — the pre-sharding scheduler, kept as the baseline.
+// ---------------------------------------------------------------------------
 
 struct SchedState {
     queues: Vec<VecDeque<Job>>,
@@ -90,17 +130,385 @@ impl SchedState {
     }
 }
 
-struct Shared {
+struct GlobalQueues {
     state: Mutex<SchedState>,
     cv: Condvar,
-    metrics: Vec<Arc<WorkerMetrics>>,
     steal: bool,
+}
+
+impl GlobalQueues {
+    fn new(workers: usize, steal: bool) -> Self {
+        Self {
+            state: Mutex::new(SchedState {
+                queues: (0..workers).map(|_| VecDeque::new()).collect(),
+                alive: vec![true; workers],
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+            steal,
+        }
+    }
+
+    fn lock_state(&self, m: Option<&WorkerMetrics>) -> MutexGuard<'_, SchedState> {
+        match self.state.try_lock() {
+            Ok(g) => g,
+            Err(_) => {
+                if let Some(m) = m {
+                    m.lock_contention.fetch_add(1, Ordering::Relaxed);
+                }
+                self.state.lock().unwrap()
+            }
+        }
+    }
+
+    /// Block until a job is available for `w`; `None` = shutdown or dead.
+    fn next_job(&self, w: usize, m: &WorkerMetrics) -> Option<Job> {
+        let mut st = self.lock_state(Some(m));
+        loop {
+            if st.shutdown || !st.alive[w] {
+                return None;
+            }
+            if let Some(job) = st.queues[w].pop_front() {
+                return Some(job);
+            }
+            if self.steal {
+                // Steal from the back of the busiest non-empty deque.
+                let victim = (0..st.queues.len())
+                    .filter(|&v| v != w && !st.queues[v].is_empty())
+                    .max_by_key(|&v| st.queues[v].len());
+                if let Some(v) = victim {
+                    let job = st.queues[v].pop_back().expect("victim checked non-empty");
+                    m.steals.fetch_add(1, Ordering::Relaxed);
+                    m.steal_batches.fetch_add(1, Ordering::Relaxed);
+                    return Some(job);
+                }
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    fn enqueue(&self, owner: usize, job: Job) -> Result<usize> {
+        let target = {
+            let mut st = self.lock_state(None);
+            let target = if st.alive[owner] {
+                owner
+            } else {
+                st.least_loaded_alive().ok_or_else(|| anyhow!("all workers are dead"))?
+            };
+            st.queues[target].push_back(job);
+            target
+        };
+        self.cv.notify_all();
+        Ok(target)
+    }
+
+    fn kill(&self, w: usize) -> bool {
+        {
+            let mut st = self.lock_state(None);
+            if w >= st.alive.len() || !st.alive[w] {
+                return false;
+            }
+            if st.alive.iter().filter(|&&a| a).count() <= 1 {
+                return false;
+            }
+            st.alive[w] = false;
+            let drained: Vec<Job> = st.queues[w].drain(..).collect();
+            for job in drained {
+                let target =
+                    st.least_loaded_alive().expect("at least one alive worker remains");
+                st.queues[target].push_back(job);
+            }
+        }
+        self.cv.notify_all();
+        true
+    }
+
+    fn alive_count(&self) -> usize {
+        self.state.lock().unwrap().alive.iter().filter(|&&a| a).count()
+    }
+
+    fn begin_shutdown(&self) {
+        self.state.lock().unwrap().shutdown = true;
+        self.cv.notify_all();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sharded backend — per-worker deques + control block, steal-half batches.
+// ---------------------------------------------------------------------------
+
+struct Shard {
+    deque: Mutex<VecDeque<Job>>,
+    /// Mirror of `deque.len()`, updated under the deque lock; lets victim
+    /// selection and least-loaded routing run without touching any lock.
+    len: AtomicUsize,
+}
+
+struct ShardedQueues {
+    shards: Vec<Shard>,
+    /// Control block: liveness + shutdown are plain atomics so the hot
+    /// path (owner pop) takes exactly one uncontended shard lock.
+    alive: Vec<AtomicBool>,
+    shutdown: AtomicBool,
+    /// Wake epoch: bumped under the mutex whenever work is enqueued,
+    /// redistributed, or liveness changes; idle workers park on it.  Only
+    /// touched on the idle path, never on a successful pop.
+    epoch: Mutex<u64>,
+    cv: Condvar,
+    /// Serializes kills so "never kill the last alive worker" is atomic.
+    kill_lock: Mutex<()>,
+    steal: bool,
+}
+
+impl ShardedQueues {
+    fn new(workers: usize, steal: bool) -> Self {
+        Self {
+            shards: (0..workers)
+                .map(|_| Shard { deque: Mutex::new(VecDeque::new()), len: AtomicUsize::new(0) })
+                .collect(),
+            alive: (0..workers).map(|_| AtomicBool::new(true)).collect(),
+            shutdown: AtomicBool::new(false),
+            epoch: Mutex::new(0),
+            cv: Condvar::new(),
+            kill_lock: Mutex::new(()),
+            steal,
+        }
+    }
+
+    fn lock_shard(
+        &self,
+        s: usize,
+        m: Option<&WorkerMetrics>,
+    ) -> MutexGuard<'_, VecDeque<Job>> {
+        match self.shards[s].deque.try_lock() {
+            Ok(g) => g,
+            Err(_) => {
+                if let Some(m) = m {
+                    m.lock_contention.fetch_add(1, Ordering::Relaxed);
+                }
+                self.shards[s].deque.lock().unwrap()
+            }
+        }
+    }
+
+    fn bump_epoch(&self) {
+        *self.epoch.lock().unwrap() += 1;
+        self.cv.notify_all();
+    }
+
+    fn least_loaded_alive(&self) -> Option<usize> {
+        (0..self.shards.len())
+            .filter(|&v| self.alive[v].load(Ordering::SeqCst))
+            .min_by_key(|&v| self.shards[v].len.load(Ordering::Relaxed))
+    }
+
+    /// Pop the front of the worker's own deque (owner-only hot path).
+    fn pop_own(&self, w: usize, m: &WorkerMetrics) -> Option<Job> {
+        if self.shards[w].len.load(Ordering::Relaxed) == 0 {
+            return None;
+        }
+        let mut q = self.lock_shard(w, Some(m));
+        let job = q.pop_front();
+        self.shards[w].len.store(q.len(), Ordering::Relaxed);
+        job
+    }
+
+    /// Steal the back half of the busiest peer's deque in one batch: one
+    /// lock round-trip migrates ~half the victim's queue instead of a
+    /// single task.  Returns the first stolen job to run now; the rest are
+    /// appended to the thief's own deque (where peers may steal-chain).
+    fn steal_half(&self, w: usize, m: &WorkerMetrics) -> Option<Job> {
+        if !self.alive[w].load(Ordering::SeqCst) {
+            // Killed since the caller's liveness check: don't take on new
+            // work.  A kill racing past this check is still benign — the
+            // append below bumps the epoch and dead shards remain valid
+            // steal victims, so any jobs parked there get re-stolen.
+            return None;
+        }
+        let victim = (0..self.shards.len())
+            .filter(|&v| v != w && self.shards[v].len.load(Ordering::Relaxed) > 0)
+            .max_by_key(|&v| self.shards[v].len.load(Ordering::Relaxed))?;
+        let mut batch = {
+            let mut vq = self.lock_shard(victim, Some(m));
+            let n = vq.len();
+            if n == 0 {
+                return None; // raced: victim drained before we locked
+            }
+            let batch = vq.split_off(n - n.div_ceil(2));
+            self.shards[victim].len.store(vq.len(), Ordering::Relaxed);
+            batch
+        };
+        m.steals.fetch_add(batch.len(), Ordering::Relaxed);
+        m.steal_batches.fetch_add(1, Ordering::Relaxed);
+        let first = batch.pop_front().expect("batch is non-empty");
+        if !batch.is_empty() {
+            let mut q = self.lock_shard(w, Some(m));
+            q.append(&mut batch);
+            self.shards[w].len.store(q.len(), Ordering::Relaxed);
+            drop(q);
+            // The thief's deque just gained work other idle workers may
+            // steal-chain from.
+            self.bump_epoch();
+        }
+        Some(first)
+    }
+
+    /// Block until a job is available for `w`; `None` = shutdown or dead.
+    fn next_job(&self, w: usize, m: &WorkerMetrics) -> Option<Job> {
+        loop {
+            if self.shutdown.load(Ordering::SeqCst) || !self.alive[w].load(Ordering::SeqCst) {
+                return None;
+            }
+            if let Some(job) = self.pop_own(w, m) {
+                return Some(job);
+            }
+            if self.steal {
+                if let Some(job) = self.steal_half(w, m) {
+                    return Some(job);
+                }
+            }
+            // Idle path: snapshot the wake epoch, rescan once (an enqueue
+            // that bumped the epoch before our snapshot also finished its
+            // push before it — the epoch mutex orders the two), then park
+            // until the epoch moves.
+            let seen = *self.epoch.lock().unwrap();
+            if let Some(job) = self.pop_own(w, m) {
+                return Some(job);
+            }
+            if self.steal {
+                if let Some(job) = self.steal_half(w, m) {
+                    return Some(job);
+                }
+            }
+            let mut epoch = self.epoch.lock().unwrap();
+            while *epoch == seen
+                && !self.shutdown.load(Ordering::SeqCst)
+                && self.alive[w].load(Ordering::SeqCst)
+            {
+                epoch = self.cv.wait(epoch).unwrap();
+            }
+        }
+    }
+
+    fn enqueue(&self, owner: usize, job: Job) -> Result<usize> {
+        let mut job = Some(job);
+        loop {
+            let target = if self.alive[owner].load(Ordering::SeqCst) {
+                owner
+            } else {
+                self.least_loaded_alive().ok_or_else(|| anyhow!("all workers are dead"))?
+            };
+            let mut q = self.shards[target].deque.lock().unwrap();
+            // Re-check liveness under the shard lock: `kill` marks a node
+            // dead *before* locking its deque to drain it, so any push
+            // that observed `alive` here is guaranteed to be drained (or
+            // the push sees `dead` and retries elsewhere) — a job can
+            // never strand in a dead worker's deque.
+            if self.alive[target].load(Ordering::SeqCst) {
+                q.push_back(job.take().expect("job still to be placed"));
+                self.shards[target].len.store(q.len(), Ordering::Relaxed);
+                drop(q);
+                self.bump_epoch();
+                return Ok(target);
+            }
+        }
+    }
+
+    fn kill(&self, w: usize) -> bool {
+        let _serialized = self.kill_lock.lock().unwrap();
+        if w >= self.alive.len() || !self.alive[w].load(Ordering::SeqCst) {
+            return false;
+        }
+        if self.alive.iter().filter(|a| a.load(Ordering::SeqCst)).count() <= 1 {
+            return false;
+        }
+        // Dead before drain — see the enqueue liveness re-check.
+        self.alive[w].store(false, Ordering::SeqCst);
+        let drained: Vec<Job> = {
+            let mut q = self.shards[w].deque.lock().unwrap();
+            let d = q.drain(..).collect();
+            self.shards[w].len.store(0, Ordering::Relaxed);
+            d
+        };
+        // Redistribute to the least-loaded alive workers; targets cannot
+        // die concurrently because kills are serialized.
+        for job in drained {
+            let target = self.least_loaded_alive().expect("at least one alive worker remains");
+            let mut q = self.shards[target].deque.lock().unwrap();
+            q.push_back(job);
+            self.shards[target].len.store(q.len(), Ordering::Relaxed);
+        }
+        self.bump_epoch();
+        true
+    }
+
+    fn alive_count(&self) -> usize {
+        self.alive.iter().filter(|a| a.load(Ordering::SeqCst)).count()
+    }
+
+    fn begin_shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.bump_epoch();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Backend dispatch
+// ---------------------------------------------------------------------------
+
+enum Queues {
+    Global(GlobalQueues),
+    Sharded(ShardedQueues),
+}
+
+impl Queues {
+    fn next_job(&self, w: usize, m: &WorkerMetrics) -> Option<Job> {
+        match self {
+            Queues::Global(q) => q.next_job(w, m),
+            Queues::Sharded(q) => q.next_job(w, m),
+        }
+    }
+
+    fn enqueue(&self, owner: usize, job: Job) -> Result<usize> {
+        match self {
+            Queues::Global(q) => q.enqueue(owner, job),
+            Queues::Sharded(q) => q.enqueue(owner, job),
+        }
+    }
+
+    fn kill(&self, w: usize) -> bool {
+        match self {
+            Queues::Global(q) => q.kill(w),
+            Queues::Sharded(q) => q.kill(w),
+        }
+    }
+
+    fn alive_count(&self) -> usize {
+        match self {
+            Queues::Global(q) => q.alive_count(),
+            Queues::Sharded(q) => q.alive_count(),
+        }
+    }
+
+    fn begin_shutdown(&self) {
+        match self {
+            Queues::Global(q) => q.begin_shutdown(),
+            Queues::Sharded(q) => q.begin_shutdown(),
+        }
+    }
+}
+
+struct Shared {
+    queues: Queues,
+    metrics: Vec<Arc<WorkerMetrics>>,
 }
 
 struct TaskDone {
     task: usize,
     speculative: bool,
     result: Result<()>,
+    /// Worker-side execution time (excludes queue wait).
+    exec_nanos: u64,
 }
 
 pub struct Executor {
@@ -109,35 +517,15 @@ pub struct Executor {
     fault: FaultPlan,
     opts: ExecutorOptions,
     task_counter: AtomicUsize,
+    /// Mean worker-side execution nanos of the most recent stage — the
+    /// quantity the speculation deadline is derived from (regression
+    /// hook: queue wait must never leak into it).
+    last_stage_avg_exec_nanos: AtomicU64,
 }
 
 fn worker_loop(w: usize, shared: Arc<Shared>) {
-    loop {
-        let (job, stolen) = {
-            let mut st = shared.state.lock().unwrap();
-            loop {
-                if st.shutdown || !st.alive[w] {
-                    return;
-                }
-                if let Some(job) = st.queues[w].pop_front() {
-                    break (job, false);
-                }
-                if shared.steal {
-                    // Steal from the back of the busiest non-empty deque.
-                    let victim = (0..st.queues.len())
-                        .filter(|&v| v != w && !st.queues[v].is_empty())
-                        .max_by_key(|&v| st.queues[v].len());
-                    if let Some(v) = victim {
-                        let job = st.queues[v].pop_back().expect("victim checked non-empty");
-                        break (job, true);
-                    }
-                }
-                st = shared.cv.wait(st).unwrap();
-            }
-        };
-        if stolen {
-            shared.metrics[w].steals.fetch_add(1, Ordering::Relaxed);
-        }
+    let metrics = shared.metrics[w].clone();
+    while let Some(job) = shared.queues.next_job(w, &metrics) {
         job(w);
     }
 }
@@ -149,15 +537,17 @@ impl Executor {
 
     pub fn with_options(num_workers: usize, fault: FaultPlan, opts: ExecutorOptions) -> Self {
         assert!(num_workers > 0);
+        let queues = match opts.mode {
+            SchedulerMode::Sharded => {
+                Queues::Sharded(ShardedQueues::new(num_workers, opts.work_stealing))
+            }
+            SchedulerMode::GlobalLock => {
+                Queues::Global(GlobalQueues::new(num_workers, opts.work_stealing))
+            }
+        };
         let shared = Arc::new(Shared {
-            state: Mutex::new(SchedState {
-                queues: (0..num_workers).map(|_| VecDeque::new()).collect(),
-                alive: vec![true; num_workers],
-                shutdown: false,
-            }),
-            cv: Condvar::new(),
+            queues,
             metrics: (0..num_workers).map(|_| Arc::new(WorkerMetrics::default())).collect(),
-            steal: opts.work_stealing,
         });
         let mut handles = Vec::with_capacity(num_workers);
         for w in 0..num_workers {
@@ -168,7 +558,14 @@ impl Executor {
                 .expect("spawning worker thread");
             handles.push(Some(handle));
         }
-        Self { shared, handles, fault, opts, task_counter: AtomicUsize::new(0) }
+        Self {
+            shared,
+            handles,
+            fault,
+            opts,
+            task_counter: AtomicUsize::new(0),
+            last_stage_avg_exec_nanos: AtomicU64::new(0),
+        }
     }
 
     pub fn num_workers(&self) -> usize {
@@ -181,6 +578,13 @@ impl Executor {
 
     pub fn options(&self) -> &ExecutorOptions {
         &self.opts
+    }
+
+    /// Mean worker-side execution nanos per completed task in the most
+    /// recent `run_tasks` stage (0 before any stage ran).  Excludes queue
+    /// wait by construction — the speculation deadline derives from it.
+    pub fn last_stage_avg_task_nanos(&self) -> u64 {
+        self.last_stage_avg_exec_nanos.load(Ordering::Relaxed)
     }
 
     pub fn total_busy(&self) -> Duration {
@@ -218,7 +622,7 @@ impl Executor {
 
     /// Number of workers still alive (not killed by a fault plan).
     pub fn alive_workers(&self) -> usize {
-        self.shared.state.lock().unwrap().alive.iter().filter(|&&a| a).count()
+        self.shared.queues.alive_count()
     }
 
     /// Kill a worker: mark it dead and drain its deque back into the
@@ -227,42 +631,7 @@ impl Executor {
     /// stage always retains capacity to finish.  Returns whether the kill
     /// happened.
     pub fn kill_worker(&self, w: usize) -> bool {
-        {
-            let mut st = self.shared.state.lock().unwrap();
-            if w >= st.alive.len() || !st.alive[w] {
-                return false;
-            }
-            if st.alive.iter().filter(|&&a| a).count() <= 1 {
-                return false;
-            }
-            st.alive[w] = false;
-            let drained: Vec<Job> = st.queues[w].drain(..).collect();
-            for job in drained {
-                let target =
-                    st.least_loaded_alive().expect("at least one alive worker remains");
-                st.queues[target].push_back(job);
-            }
-        }
-        self.shared.cv.notify_all();
-        true
-    }
-
-    /// Enqueue a job with locality preference `owner`; falls back to the
-    /// least-loaded alive worker when the owner is dead.  Returns the
-    /// worker the job actually landed on.
-    fn enqueue(&self, owner: usize, job: Job) -> Result<usize> {
-        let target = {
-            let mut st = self.shared.state.lock().unwrap();
-            let target = if st.alive[owner] {
-                owner
-            } else {
-                st.least_loaded_alive().ok_or_else(|| anyhow!("all workers are dead"))?
-            };
-            st.queues[target].push_back(job);
-            target
-        };
-        self.shared.cv.notify_all();
-        Ok(target)
+        self.shared.queues.kill(w)
     }
 
     /// Run one task set: task `i` executes `f(i)`, preferring its owning
@@ -283,6 +652,14 @@ impl Executor {
         let (done_tx, done_rx) = channel::<TaskDone>();
         let completed: Arc<Vec<AtomicBool>> =
             Arc::new((0..num_tasks).map(|_| AtomicBool::new(false)).collect());
+        // Worker-side execution start per task, as nanos-since-stage-epoch
+        // plus one (0 = not yet executing).  The speculation deadline is
+        // measured from here, NOT from enqueue: queue wait must neither
+        // inflate the average task duration nor mark a merely-queued task
+        // as a straggler.
+        let stage_epoch = Instant::now();
+        let exec_start: Arc<Vec<AtomicU64>> =
+            Arc::new((0..num_tasks).map(|_| AtomicU64::new(0)).collect());
 
         let submit = |task: usize, attempt: usize, speculative: bool| -> Result<()> {
             let owner = self.worker_for(task + attempt); // retries migrate nodes
@@ -302,11 +679,16 @@ impl Executor {
             let f = f.clone();
             let done = done_tx.clone();
             let completed = completed.clone();
+            let exec_start = exec_start.clone();
             let shared = self.shared.clone();
             let job: Job = Box::new(move |exec_w: usize| {
                 if completed[task].load(Ordering::Acquire) {
                     return; // first completion already won; drop the duplicate
                 }
+                exec_start[task].store(
+                    stage_epoch.elapsed().as_nanos() as u64 + 1,
+                    Ordering::Release,
+                );
                 let m = &shared.metrics[exec_w];
                 let start = Instant::now();
                 let result = if fail_this {
@@ -318,12 +700,12 @@ impl Executor {
                             Err(anyhow!("task {task} panicked: {}", panic_msg(p.as_ref())))
                         })
                 };
-                m.busy_nanos
-                    .fetch_add(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                let exec_nanos = start.elapsed().as_nanos() as u64;
+                m.busy_nanos.fetch_add(exec_nanos, Ordering::Relaxed);
                 m.tasks.fetch_add(1, Ordering::Relaxed);
-                let _ = done.send(TaskDone { task, speculative, result });
+                let _ = done.send(TaskDone { task, speculative, result, exec_nanos });
             });
-            let target = self.enqueue(owner, job)?;
+            let target = self.shared.queues.enqueue(owner, job)?;
             if speculative {
                 // Counted against the worker the duplicate actually
                 // landed on (the preferred owner may be dead).
@@ -334,9 +716,7 @@ impl Executor {
 
         let mut attempts = vec![0usize; num_tasks];
         let mut speculated = vec![false; num_tasks];
-        let mut submit_time = Vec::with_capacity(num_tasks);
         for t in 0..num_tasks {
-            submit_time.push(Instant::now());
             submit(t, 0, false)?;
         }
 
@@ -366,13 +746,15 @@ impl Executor {
                 Some(done_rx.recv().map_err(|_| anyhow!("all workers died mid-job"))?)
             };
 
-            if let Some(TaskDone { task, speculative, result }) = msg {
+            if let Some(TaskDone { task, speculative, result, exec_nanos }) = msg {
                 if !completed[task].load(Ordering::Acquire) {
                     match result {
                         Ok(()) => {
                             completed[task].store(true, Ordering::Release);
                             done_count += 1;
-                            sum_done_nanos += submit_time[task].elapsed().as_nanos() as u64;
+                            // Execution time only — a deep queue must not
+                            // stretch the deadline that gates duplicates.
+                            sum_done_nanos += exec_nanos;
                         }
                         Err(e) => {
                             if speculative {
@@ -386,7 +768,8 @@ impl Executor {
                                         attempts[task]
                                     )));
                                 }
-                                submit_time[task] = Instant::now();
+                                // The retry hasn't started executing yet.
+                                exec_start[task].store(0, Ordering::Release);
                                 submit(task, attempts[task], false)?;
                             }
                         }
@@ -395,8 +778,9 @@ impl Executor {
             }
 
             // Speculative re-execution: past the quantile, duplicate tasks
-            // that have been in flight much longer than the average
-            // completed task (first completion wins).
+            // whose current execution has run much longer than the average
+            // completed task (first completion wins).  Tasks still waiting
+            // in a queue are not stragglers — stealing migrates those.
             if spec_enabled && done_count >= spec_threshold && done_count < num_tasks {
                 let candidates = spec_candidates.get_or_insert_with(|| {
                     (0..num_tasks)
@@ -404,13 +788,15 @@ impl Executor {
                         .collect()
                 });
                 let avg = sum_done_nanos / done_count.max(1) as u64;
-                let deadline = Duration::from_nanos((4 * avg).max(100_000_000));
+                let deadline_nanos = (4 * avg).max(100_000_000);
+                let now = stage_epoch.elapsed().as_nanos() as u64;
                 let mut still_waiting = Vec::with_capacity(candidates.len());
                 for &t in candidates.iter() {
                     if completed[t].load(Ordering::Acquire) || speculated[t] {
                         continue; // finished or already duplicated: drop
                     }
-                    if submit_time[t].elapsed() >= deadline {
+                    let started = exec_start[t].load(Ordering::Acquire);
+                    if started > 0 && now.saturating_sub(started - 1) >= deadline_nanos {
                         speculated[t] = true;
                         submit(t, attempts[t] + 1, true)?;
                     } else {
@@ -420,6 +806,8 @@ impl Executor {
                 *candidates = still_waiting;
             }
         }
+        self.last_stage_avg_exec_nanos
+            .store(sum_done_nanos / num_tasks as u64, Ordering::Relaxed);
         Ok(())
     }
 }
@@ -433,11 +821,7 @@ fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
 
 impl Drop for Executor {
     fn drop(&mut self) {
-        {
-            let mut st = self.shared.state.lock().unwrap();
-            st.shutdown = true;
-        }
-        self.shared.cv.notify_all();
+        self.shared.queues.begin_shutdown();
         let me = std::thread::current().id();
         for h in &mut self.handles {
             if let Some(h) = h.take() {
@@ -460,28 +844,45 @@ mod tests {
         ExecutorOptions { speculation: false, ..ExecutorOptions::default() }
     }
 
+    fn both_modes() -> [SchedulerMode; 2] {
+        [SchedulerMode::Sharded, SchedulerMode::GlobalLock]
+    }
+
     #[test]
     fn runs_all_tasks_once() {
         // Speculation off: exactly-once execution of the happy path.
-        let ex = Executor::with_options(4, FaultPlan::none(), no_spec());
-        let count = Arc::new(AtomicUsize::new(0));
-        let c = count.clone();
-        ex.run_tasks(37, 0, move |_| {
-            c.fetch_add(1, Ordering::SeqCst);
-            Ok(())
-        })
-        .unwrap();
-        assert_eq!(count.load(Ordering::SeqCst), 37);
+        for mode in both_modes() {
+            let ex = Executor::with_options(
+                4,
+                FaultPlan::none(),
+                ExecutorOptions { mode, ..no_spec() },
+            );
+            let count = Arc::new(AtomicUsize::new(0));
+            let c = count.clone();
+            ex.run_tasks(37, 0, move |_| {
+                c.fetch_add(1, Ordering::SeqCst);
+                Ok(())
+            })
+            .unwrap();
+            assert_eq!(count.load(Ordering::SeqCst), 37, "{mode:?}");
+        }
     }
 
     #[test]
     fn no_steal_mode_preserves_modulo_placement() {
-        let opts = ExecutorOptions { work_stealing: false, speculation: false, ..Default::default() };
-        let ex = Executor::with_options(3, FaultPlan::none(), opts);
-        ex.run_tasks(30, 0, |_| Ok(())).unwrap();
-        for m in ex.metrics() {
-            assert_eq!(m.tasks.load(Ordering::SeqCst), 10, "static placement is exact");
-            assert_eq!(m.steals.load(Ordering::SeqCst), 0);
+        for mode in both_modes() {
+            let opts = ExecutorOptions {
+                work_stealing: false,
+                speculation: false,
+                mode,
+                ..Default::default()
+            };
+            let ex = Executor::with_options(3, FaultPlan::none(), opts);
+            ex.run_tasks(30, 0, |_| Ok(())).unwrap();
+            for m in ex.metrics() {
+                assert_eq!(m.tasks.load(Ordering::SeqCst), 10, "static placement is exact");
+                assert_eq!(m.steals.load(Ordering::SeqCst), 0);
+            }
         }
     }
 
@@ -515,6 +916,43 @@ mod tests {
         let stolen: usize =
             ex.metrics().iter().map(|m| m.steals.load(Ordering::SeqCst)).sum();
         assert!(stolen >= 4, "tasks 2,4,6,8 must have been stolen (got {stolen})");
+    }
+
+    #[test]
+    fn sharded_steal_moves_half_the_victims_queue_per_batch() {
+        // Same topology as above: worker 0 blocks in task 0 with four
+        // tasks queued behind it.  Peer tasks sleep briefly so every task
+        // is enqueued before worker 1 goes idle; its *first* steal must
+        // then grab a batch of several tasks, so the total steal count
+        // must exceed the number of steal operations.
+        let ex = Executor::with_options(2, FaultPlan::none(), ExecutorOptions::default());
+        let sync = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let s = sync.clone();
+        ex.run_tasks(10, 0, move |task| {
+            let (count, cv) = &*s;
+            if task == 0 {
+                let done = count.lock().unwrap();
+                let (_, timeout) = cv
+                    .wait_timeout_while(done, Duration::from_secs(20), |c| *c < 9)
+                    .unwrap();
+                anyhow::ensure!(!timeout.timed_out(), "peer tasks never ran");
+            } else {
+                std::thread::sleep(Duration::from_millis(10));
+                *count.lock().unwrap() += 1;
+                cv.notify_all();
+            }
+            Ok(())
+        })
+        .unwrap();
+        let stolen: usize =
+            ex.metrics().iter().map(|m| m.steals.load(Ordering::SeqCst)).sum();
+        let batches: usize =
+            ex.metrics().iter().map(|m| m.steal_batches.load(Ordering::SeqCst)).sum();
+        assert!(batches >= 1, "at least one steal batch must have happened");
+        assert!(
+            stolen > batches,
+            "steal-half must move multiple tasks per batch (stolen {stolen}, batches {batches})"
+        );
     }
 
     #[test]
@@ -555,65 +993,122 @@ mod tests {
     }
 
     #[test]
+    fn speculation_deadline_uses_execution_time_not_queue_wait() {
+        // One worker, everything queued up front: the last task *waits*
+        // ~31x longer than it *executes*.  The recorded average task
+        // duration must reflect execution only — the old submit-time
+        // accounting averaged ~16x the execution time here, which is
+        // exactly what suppressed duplicates under deep queues.
+        let opts = ExecutorOptions { work_stealing: false, speculation: false, ..Default::default() };
+        let ex = Executor::with_options(1, FaultPlan::none(), opts);
+        ex.run_tasks(32, 0, |_| {
+            std::thread::sleep(Duration::from_millis(3));
+            Ok(())
+        })
+        .unwrap();
+        let avg = ex.last_stage_avg_task_nanos();
+        assert!(avg >= 2_000_000, "tasks sleep 3ms each (avg {avg}ns)");
+        assert!(
+            avg < 24_000_000,
+            "avg task duration must exclude queue wait (avg {avg}ns; \
+             submit-time accounting would report ~48ms)"
+        );
+    }
+
+    #[test]
+    fn queued_but_unstarted_tasks_are_not_speculated() {
+        // Stealing off, 1 worker: when the quantile is crossed the
+        // remaining tasks are merely queued, not straggling.  None of
+        // them must be duplicated (exec-start gating), yet the stage
+        // still completes exactly.
+        let opts = ExecutorOptions { work_stealing: false, ..Default::default() };
+        let ex = Executor::with_options(1, FaultPlan::none(), opts);
+        let count = Arc::new(AtomicUsize::new(0));
+        let c = count.clone();
+        ex.run_tasks(16, 0, move |_| {
+            c.fetch_add(1, Ordering::SeqCst);
+            std::thread::sleep(Duration::from_millis(2));
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(count.load(Ordering::SeqCst), 16, "exactly-once: no queued task duplicated");
+        let specs: usize =
+            ex.metrics().iter().map(|m| m.speculations.load(Ordering::SeqCst)).sum();
+        assert_eq!(specs, 0, "queue wait alone must never trigger speculation");
+    }
+
+    #[test]
     fn kill_drains_deque_back_into_steal_pool() {
         // Three workers all blocked in their first task; worker 0 is then
         // killed while its deque still holds queued tasks, which must be
         // redistributed and completed by the survivors.
-        let ex = Arc::new(Executor::with_options(3, FaultPlan::none(), no_spec()));
-        let gate = Arc::new((Mutex::new(false), Condvar::new()));
-        let count = Arc::new(AtomicUsize::new(0));
+        for mode in both_modes() {
+            let ex = Arc::new(Executor::with_options(
+                3,
+                FaultPlan::none(),
+                ExecutorOptions { mode, ..no_spec() },
+            ));
+            let gate = Arc::new((Mutex::new(false), Condvar::new()));
+            let count = Arc::new(AtomicUsize::new(0));
 
-        let opener = {
-            let ex = ex.clone();
-            let gate = gate.clone();
-            std::thread::spawn(move || {
-                std::thread::sleep(Duration::from_millis(150));
-                assert!(ex.kill_worker(0), "kill must succeed");
-                let (open, cv) = &*gate;
-                *open.lock().unwrap() = true;
-                cv.notify_all();
+            let opener = {
+                let ex = ex.clone();
+                let gate = gate.clone();
+                std::thread::spawn(move || {
+                    std::thread::sleep(Duration::from_millis(150));
+                    assert!(ex.kill_worker(0), "kill must succeed");
+                    let (open, cv) = &*gate;
+                    *open.lock().unwrap() = true;
+                    cv.notify_all();
+                })
+            };
+
+            let g = gate.clone();
+            let c = count.clone();
+            ex.run_tasks(12, 0, move |task| {
+                if task < 3 {
+                    // One gate task per worker keeps all deques populated
+                    // until the kill has happened.
+                    let (open, cv) = &*g;
+                    let opened = open.lock().unwrap();
+                    let (_, timeout) = cv
+                        .wait_timeout_while(opened, Duration::from_secs(20), |o| !*o)
+                        .unwrap();
+                    anyhow::ensure!(!timeout.timed_out(), "gate never opened");
+                }
+                c.fetch_add(1, Ordering::SeqCst);
+                Ok(())
             })
-        };
+            .unwrap();
+            opener.join().unwrap();
 
-        let g = gate.clone();
-        let c = count.clone();
-        ex.run_tasks(12, 0, move |task| {
-            if task < 3 {
-                // One gate task per worker keeps all deques populated
-                // until the kill has happened.
-                let (open, cv) = &*g;
-                let opened = open.lock().unwrap();
-                let (_, timeout) = cv
-                    .wait_timeout_while(opened, Duration::from_secs(20), |o| !*o)
-                    .unwrap();
-                anyhow::ensure!(!timeout.timed_out(), "gate never opened");
-            }
-            c.fetch_add(1, Ordering::SeqCst);
-            Ok(())
-        })
-        .unwrap();
-        opener.join().unwrap();
-
-        assert_eq!(count.load(Ordering::SeqCst), 12, "drained tasks must not be lost");
-        assert_eq!(ex.alive_workers(), 2);
-        // New work keeps flowing around the dead node.
-        let c2 = Arc::new(AtomicUsize::new(0));
-        let c2c = c2.clone();
-        ex.run_tasks(9, 0, move |_| {
-            c2c.fetch_add(1, Ordering::SeqCst);
-            Ok(())
-        })
-        .unwrap();
-        assert_eq!(c2.load(Ordering::SeqCst), 9);
+            assert_eq!(count.load(Ordering::SeqCst), 12, "drained tasks must not be lost");
+            assert_eq!(ex.alive_workers(), 2);
+            // New work keeps flowing around the dead node.
+            let c2 = Arc::new(AtomicUsize::new(0));
+            let c2c = c2.clone();
+            ex.run_tasks(9, 0, move |_| {
+                c2c.fetch_add(1, Ordering::SeqCst);
+                Ok(())
+            })
+            .unwrap();
+            assert_eq!(c2.load(Ordering::SeqCst), 9);
+        }
     }
 
     #[test]
     fn last_alive_worker_cannot_be_killed() {
-        let ex = Executor::new(2, FaultPlan::none());
-        assert!(ex.kill_worker(1));
-        assert!(!ex.kill_worker(0), "the last worker must survive");
-        assert_eq!(ex.alive_workers(), 1);
-        ex.run_tasks(4, 0, |_| Ok(())).unwrap();
+        for mode in both_modes() {
+            let ex = Executor::with_options(
+                2,
+                FaultPlan::none(),
+                ExecutorOptions { mode, ..Default::default() },
+            );
+            assert!(ex.kill_worker(1));
+            assert!(!ex.kill_worker(0), "the last worker must survive");
+            assert_eq!(ex.alive_workers(), 1);
+            ex.run_tasks(4, 0, |_| Ok(())).unwrap();
+        }
     }
 
     #[test]
@@ -680,22 +1175,77 @@ mod tests {
     fn fault_plan_kill_drains_and_stage_completes() {
         // A kill rule in the fault plan fires mid-submission; the stage
         // must still complete on the surviving worker.
-        let plan = FaultPlan::kill_worker_at(0, 5);
-        let ex = Executor::with_options(2, plan, no_spec());
-        let count = Arc::new(AtomicUsize::new(0));
-        let c = count.clone();
-        ex.run_tasks(16, 0, move |_| {
-            c.fetch_add(1, Ordering::SeqCst);
-            Ok(())
-        })
-        .unwrap();
-        assert_eq!(count.load(Ordering::SeqCst), 16);
-        assert_eq!(ex.alive_workers(), 1);
+        for mode in both_modes() {
+            let plan = FaultPlan::kill_worker_at(0, 5);
+            let ex =
+                Executor::with_options(2, plan, ExecutorOptions { mode, ..no_spec() });
+            let count = Arc::new(AtomicUsize::new(0));
+            let c = count.clone();
+            ex.run_tasks(16, 0, move |_| {
+                c.fetch_add(1, Ordering::SeqCst);
+                Ok(())
+            })
+            .unwrap();
+            assert_eq!(count.load(Ordering::SeqCst), 16);
+            assert_eq!(ex.alive_workers(), 1);
+        }
     }
 
     #[test]
     fn busy_skew_is_unity_when_idle() {
         let ex = Executor::new(3, FaultPlan::none());
         assert_eq!(ex.busy_skew(), 1.0);
+    }
+
+    #[test]
+    fn sharded_and_global_agree_at_scale() {
+        // 32 workers x 2000 tasks, speculation off: both queue
+        // architectures must run every task exactly once and produce
+        // identical per-slot results.
+        let run = |mode: SchedulerMode| {
+            let opts = ExecutorOptions { mode, speculation: false, ..Default::default() };
+            let ex = Executor::with_options(32, FaultPlan::none(), opts);
+            let slots: Arc<Vec<AtomicUsize>> =
+                Arc::new((0..2000).map(|_| AtomicUsize::new(0)).collect());
+            let s = slots.clone();
+            ex.run_tasks(2000, 0, move |t| {
+                s[t].fetch_add(1 + t * t, Ordering::SeqCst);
+                Ok(())
+            })
+            .unwrap();
+            slots.iter().map(|s| s.load(Ordering::SeqCst)).collect::<Vec<_>>()
+        };
+        let sharded = run(SchedulerMode::Sharded);
+        let global = run(SchedulerMode::GlobalLock);
+        assert_eq!(sharded, global, "queue architecture must not change results");
+        for (t, &v) in sharded.iter().enumerate() {
+            assert_eq!(v, 1 + t * t, "task {t} must run exactly once");
+        }
+    }
+
+    #[test]
+    fn sharded_survives_kills_under_load() {
+        // Kill two of eight workers while a 500-task stage is in flight;
+        // drained deques and rerouted enqueues must lose nothing.
+        let ex = Arc::new(Executor::with_options(8, FaultPlan::none(), no_spec()));
+        let count = Arc::new(AtomicUsize::new(0));
+        let killer = {
+            let ex = ex.clone();
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(5));
+                ex.kill_worker(3);
+                ex.kill_worker(6);
+            })
+        };
+        let c = count.clone();
+        ex.run_tasks(500, 0, move |_| {
+            c.fetch_add(1, Ordering::SeqCst);
+            std::thread::yield_now();
+            Ok(())
+        })
+        .unwrap();
+        killer.join().unwrap();
+        assert_eq!(count.load(Ordering::SeqCst), 500);
+        assert!(ex.alive_workers() >= 6);
     }
 }

@@ -1,5 +1,7 @@
-//! The mini-Spark substrate: lazy RDDs with lineage, a DAG-cut scheduler,
-//! a work-stealing worker executor with speculative straggler
+//! The mini-Spark substrate: lazy RDDs with slice-aware lineage, a
+//! DAG-cut scheduler, a sharded work-stealing worker executor (per-worker
+//! deques, steal-half batching, control-block coordination — plus a
+//! global-mutex baseline for A/B) with speculative straggler
 //! re-execution, swappable shuffle backends (in-memory Spark vs disk
 //! key-value Hadoop), broadcast variables, per-worker memory accounting,
 //! and deterministic fault injection (task failures and worker kills,
@@ -18,7 +20,7 @@ pub mod shuffle;
 
 pub use broadcast::Broadcast;
 pub use context::{Cluster, ClusterConfig, ClusterStats};
-pub use executor::{ExecutorOptions, WorkerMetrics};
+pub use executor::{ExecutorOptions, SchedulerMode, WorkerMetrics};
 pub use fault::FaultPlan;
 pub use memory::{MemSize, MemoryTracker};
 pub use rdd::{Data, Rdd};

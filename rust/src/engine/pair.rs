@@ -40,6 +40,11 @@ struct ShuffleStage<K: KeyBound, V: ValBound> {
     combiner: Option<Arc<dyn Fn(V, V) -> V + Send + Sync>>,
     store: OnceLock<Arc<ShuffleStore<(K, V)>>>,
     done: Mutex<bool>,
+    /// One recovery guard per map partition: when a node's outputs are
+    /// lost, every reduce task notices at once — without the guard all
+    /// `num_reduce` of them recompute the same map partition.  The first
+    /// to take the lock recomputes; the rest re-probe and skip.
+    recovery: Vec<Mutex<()>>,
 }
 
 impl<K: KeyBound, V: ValBound> ShuffleStage<K, V> {
@@ -49,7 +54,16 @@ impl<K: KeyBound, V: ValBound> ShuffleStage<K, V> {
         num_reduce: usize,
         combiner: Option<Arc<dyn Fn(V, V) -> V + Send + Sync>>,
     ) -> Self {
-        Self { ctx, parent, num_reduce, combiner, store: OnceLock::new(), done: Mutex::new(false) }
+        let recovery = (0..parent.num_parts()).map(|_| Mutex::new(())).collect();
+        Self {
+            ctx,
+            parent,
+            num_reduce,
+            combiner,
+            store: OnceLock::new(),
+            done: Mutex::new(false),
+            recovery,
+        }
     }
 
     fn store(&self) -> Result<&Arc<ShuffleStore<(K, V)>>> {
@@ -86,12 +100,19 @@ impl<K: KeyBound, V: ValBound> ShuffleStage<K, V> {
     }
 
     /// Reduce-side read with lineage recovery for missing map outputs.
+    /// Recovery is double-checked under a per-map-partition mutex so a
+    /// lost node costs **one** recompute, not `num_reduce` concurrent
+    /// ones racing each other.
     fn read_with_recovery(&self, reduce_part: usize) -> Result<Vec<(K, V)>> {
         let store = self.store()?;
         let num_map = self.parent.num_parts();
-        let present = store.present_map_parts(num_map);
-        for (m, ok) in present.iter().enumerate() {
-            if !ok {
+        for m in 0..num_map {
+            if store.map_part_present(m) {
+                continue;
+            }
+            let _one_recovers = self.recovery[m].lock().unwrap();
+            // Another reduce task may have recomputed while we waited.
+            if !store.map_part_present(m) {
                 // Lost output: recompute map task m from lineage, inline.
                 map_task(&self.parent, store, self.num_reduce, &self.combiner, m)?;
             }
@@ -420,6 +441,74 @@ mod tests {
         grouped.collect().unwrap();
         grouped.count().unwrap();
         assert_eq!(c.stats().shuffles_executed, 1);
+    }
+
+    #[test]
+    fn lost_map_outputs_recomputed_once_not_per_reduce() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        for c in both_backends() {
+            let calls = Arc::new(AtomicUsize::new(0));
+            let k = calls.clone();
+            let pairs: Vec<(u32, u32)> = (0..40).map(|i| (i % 8, i)).collect();
+            let parent = c.parallelize(pairs, 4).map(move |kv| {
+                k.fetch_add(1, Ordering::SeqCst);
+                kv
+            });
+            let num_reduce = 6;
+            let stage = ShuffleStage::new(c.clone(), parent.src.clone(), num_reduce, None);
+            stage.materialize().unwrap();
+            assert_eq!(calls.load(Ordering::SeqCst), 40, "map stage ran once");
+
+            // Lose worker 0's outputs (3 workers: it owns map parts 0, 3).
+            stage.store().unwrap().drop_worker_outputs(0, 4);
+
+            // All reduce tasks race into recovery at once; the per-map-
+            // partition guard must hold the recompute to one per lost
+            // partition: 2 lost partitions x 10 elements = +20 calls,
+            // not +20 per reduce task.
+            std::thread::scope(|s| {
+                for r in 0..num_reduce {
+                    let stage = &stage;
+                    s.spawn(move || {
+                        let got = stage.read_with_recovery(r).unwrap();
+                        for (key, _) in got {
+                            assert_eq!(partition_for(&key, num_reduce), r);
+                        }
+                    });
+                }
+            });
+            assert_eq!(
+                calls.load(Ordering::SeqCst),
+                60,
+                "a lost node costs one recompute per lost partition, not num_reduce"
+            );
+        }
+    }
+
+    #[test]
+    fn diskkv_recovery_keeps_write_counters_stable() {
+        // The recovery re-put writes the same bytes into the same slots;
+        // with the replace-and-release accounting the job's IO counters
+        // must be identical before and after a loss + recovery cycle.
+        let c = Cluster::new(ClusterConfig::hadoop(3));
+        let pairs: Vec<(u32, u32)> = (0..60).map(|i| (i % 5, i)).collect();
+        let stage = ShuffleStage::new(
+            c.clone(),
+            c.parallelize(pairs, 4).src.clone(),
+            3,
+            None,
+        );
+        stage.materialize().unwrap();
+        let before = c.stats();
+        stage.store().unwrap().drop_worker_outputs(1, 4);
+        for r in 0..3 {
+            stage.read_with_recovery(r).unwrap();
+        }
+        let after = c.stats();
+        assert_eq!(
+            after.shuffle_bytes_written, before.shuffle_bytes_written,
+            "recovery re-puts replace their accounting slots"
+        );
     }
 
     #[test]

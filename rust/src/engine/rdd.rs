@@ -26,10 +26,36 @@ use crate::util::{Decode, Encode, Rng};
 pub trait Data: Clone + Send + Sync + MemSize + 'static {}
 impl<T: Clone + Send + Sync + MemSize + 'static> Data for T {}
 
+/// Clamp a requested element range to a partition of `n` elements:
+/// `lo <= hi <= n` on return.  Single source of truth for every
+/// `compute_slice` implementation.
+fn clamp_range(n: usize, lo: usize, hi: usize) -> (usize, usize) {
+    let lo = lo.min(n);
+    (lo, hi.clamp(lo, n))
+}
+
 /// A node that can produce the contents of one partition.
 pub trait PartSrc<T: Data>: Send + Sync {
     fn num_parts(&self) -> usize;
     fn compute(&self, part: usize) -> Result<Vec<T>>;
+    /// Element count of `part` when knowable without running the full
+    /// lineage (sources, caches, checkpoints).  `None` makes
+    /// slice-requesting callers fall back to a full [`compute`].
+    ///
+    /// [`compute`]: PartSrc::compute
+    fn part_len(&self, _part: usize) -> Result<Option<usize>> {
+        Ok(None)
+    }
+    /// Compute only elements `lo..hi` of `part` (bounds clamped to the
+    /// partition length).  Nodes that can slice cheaply — sources, filled
+    /// caches, checkpoint files — override this so `split_partitions(f)`
+    /// costs one pass over the parent instead of `f` recomputes; the
+    /// default recomputes the whole partition and slices locally.
+    fn compute_slice(&self, part: usize, lo: usize, hi: usize) -> Result<Vec<T>> {
+        let data = self.compute(part)?;
+        let (lo, hi) = clamp_range(data.len(), lo, hi);
+        Ok(data.into_iter().skip(lo).take(hi - lo).collect())
+    }
     /// Wide dependencies that must be materialized before this node's
     /// partitions can be computed (transitively closed by recursion).
     fn shuffle_deps(&self) -> Vec<Arc<dyn ShuffleNode>>;
@@ -73,6 +99,16 @@ impl<T: Data> PartSrc<T> for SourceNode<T> {
         Ok(self.parts[part].as_ref().clone())
     }
 
+    fn part_len(&self, part: usize) -> Result<Option<usize>> {
+        Ok(Some(self.parts[part].len()))
+    }
+
+    fn compute_slice(&self, part: usize, lo: usize, hi: usize) -> Result<Vec<T>> {
+        let data = self.parts[part].as_ref();
+        let (lo, hi) = clamp_range(data.len(), lo, hi);
+        Ok(data[lo..hi].to_vec())
+    }
+
     fn shuffle_deps(&self) -> Vec<Arc<dyn ShuffleNode>> {
         Vec::new()
     }
@@ -112,14 +148,62 @@ impl<U: Data, T: Data> PartSrc<T> for MapPartsNode<U, T> {
     }
 }
 
+/// Fallible variant of [`MapPartsNode`]: the closure returns `Result`, so
+/// a partition-level failure (an XLA batch error, a poisoned resource)
+/// surfaces as a task error the executor retries through lineage instead
+/// of panicking the worker.
+struct TryMapPartsNode<U: Data, T: Data> {
+    parent: Arc<dyn PartSrc<U>>,
+    #[allow(clippy::type_complexity)]
+    f: Arc<dyn Fn(usize, Vec<U>) -> Result<Vec<T>> + Send + Sync>,
+}
+
+impl<U: Data, T: Data> PartSrc<T> for TryMapPartsNode<U, T> {
+    fn num_parts(&self) -> usize {
+        self.parent.num_parts()
+    }
+
+    fn compute(&self, part: usize) -> Result<Vec<T>> {
+        (self.f)(part, self.parent.compute(part)?)
+    }
+
+    fn shuffle_deps(&self) -> Vec<Arc<dyn ShuffleNode>> {
+        self.parent.shuffle_deps()
+    }
+}
+
+/// Contiguous element bounds of slice `slice` when a partition of `n`
+/// elements is split `factor` ways.
+fn slice_bounds(n: usize, factor: usize, slice: usize) -> (usize, usize) {
+    let per = n.div_ceil(factor).max(1);
+    ((slice * per).min(n), ((slice + 1) * per).min(n))
+}
+
 /// Split every parent partition into `factor` contiguous slices — a
 /// narrow repartitioning that multiplies the task count so the
-/// work-stealing executor has finer-grained units to balance.  The parent
-/// partition is recomputed once per slice; `cache()` or `checkpoint()`
-/// first when the parent is expensive.
+/// work-stealing executor has finer-grained units to balance.
+///
+/// Slice-aware lineage: when the parent can report its partition length
+/// cheaply (sources, caches, checkpoints), each slice asks the parent for
+/// only its `lo..hi` range via [`PartSrc::compute_slice`] — the parent is
+/// computed **once**, not once per slice.  Opaque parents (arbitrary map
+/// closures) fall back to recompute-and-slice; `cache()` or `checkpoint()`
+/// first when such a parent is expensive.
 struct SplitNode<T: Data> {
     parent: Arc<dyn PartSrc<T>>,
     factor: usize,
+}
+
+impl<T: Data> SplitNode<T> {
+    /// Bounds of `part`'s slice within its parent partition, when the
+    /// parent length is knowable without computing.
+    fn parent_bounds(&self, part: usize) -> Result<Option<(usize, usize)>> {
+        let parent_part = part / self.factor;
+        Ok(self
+            .parent
+            .part_len(parent_part)?
+            .map(|n| slice_bounds(n, self.factor, part % self.factor)))
+    }
 }
 
 impl<T: Data> PartSrc<T> for SplitNode<T> {
@@ -128,12 +212,28 @@ impl<T: Data> PartSrc<T> for SplitNode<T> {
     }
 
     fn compute(&self, part: usize) -> Result<Vec<T>> {
-        let data = self.parent.compute(part / self.factor)?;
-        let slice = part % self.factor;
-        let n = data.len();
-        let per = n.div_ceil(self.factor).max(1);
-        let lo = (slice * per).min(n);
-        let hi = ((slice + 1) * per).min(n);
+        let parent_part = part / self.factor;
+        if let Some((lo, hi)) = self.parent_bounds(part)? {
+            return self.parent.compute_slice(parent_part, lo, hi);
+        }
+        // Opaque parent: recompute the partition and slice locally.
+        let data = self.parent.compute(parent_part)?;
+        let (lo, hi) = slice_bounds(data.len(), self.factor, part % self.factor);
+        Ok(data.into_iter().skip(lo).take(hi - lo).collect())
+    }
+
+    fn part_len(&self, part: usize) -> Result<Option<usize>> {
+        Ok(self.parent_bounds(part)?.map(|(lo, hi)| hi - lo))
+    }
+
+    fn compute_slice(&self, part: usize, lo: usize, hi: usize) -> Result<Vec<T>> {
+        if let Some((slo, shi)) = self.parent_bounds(part)? {
+            // Nested split: translate the sub-range into parent space.
+            let (lo, hi) = clamp_range(shi - slo, lo, hi);
+            return self.parent.compute_slice(part / self.factor, slo + lo, slo + hi);
+        }
+        let data = self.compute(part)?;
+        let (lo, hi) = clamp_range(data.len(), lo, hi);
         Ok(data.into_iter().skip(lo).take(hi - lo).collect())
     }
 
@@ -191,6 +291,24 @@ impl<T: Data> PartSrc<T> for UnionNode<T> {
         }
     }
 
+    fn part_len(&self, part: usize) -> Result<Option<usize>> {
+        let nl = self.left.num_parts();
+        if part < nl {
+            self.left.part_len(part)
+        } else {
+            self.right.part_len(part - nl)
+        }
+    }
+
+    fn compute_slice(&self, part: usize, lo: usize, hi: usize) -> Result<Vec<T>> {
+        let nl = self.left.num_parts();
+        if part < nl {
+            self.left.compute_slice(part, lo, hi)
+        } else {
+            self.right.compute_slice(part - nl, lo, hi)
+        }
+    }
+
     fn shuffle_deps(&self) -> Vec<Arc<dyn ShuffleNode>> {
         let mut deps = self.left.shuffle_deps();
         deps.extend(self.right.shuffle_deps());
@@ -207,21 +325,41 @@ struct CacheNode<T: Data> {
     slots: Vec<Mutex<Option<Arc<Vec<T>>>>>,
 }
 
+impl<T: Data> CacheNode<T> {
+    /// The cached partition, computing (and charging) it on first touch.
+    fn cached(&self, part: usize) -> Result<Arc<Vec<T>>> {
+        let mut slot = self.slots[part].lock().unwrap();
+        if let Some(cached) = slot.as_ref() {
+            return Ok(cached.clone());
+        }
+        let data = self.parent.compute(part)?;
+        let worker = self.ctx.executor().worker_for(part);
+        self.ctx.memory().worker(worker).acquire(slice_bytes(&data));
+        let arc = Arc::new(data);
+        *slot = Some(arc.clone());
+        Ok(arc)
+    }
+}
+
 impl<T: Data> PartSrc<T> for CacheNode<T> {
     fn num_parts(&self) -> usize {
         self.parent.num_parts()
     }
 
     fn compute(&self, part: usize) -> Result<Vec<T>> {
-        let mut slot = self.slots[part].lock().unwrap();
-        if let Some(cached) = slot.as_ref() {
-            return Ok(cached.as_ref().clone());
-        }
-        let data = self.parent.compute(part)?;
-        let worker = self.ctx.executor().worker_for(part);
-        self.ctx.memory().worker(worker).acquire(slice_bytes(&data));
-        *slot = Some(Arc::new(data.clone()));
-        Ok(data)
+        Ok(self.cached(part)?.as_ref().clone())
+    }
+
+    fn part_len(&self, part: usize) -> Result<Option<usize>> {
+        // Materializes the slot on first touch: a split over a cached
+        // parent then costs exactly one parent computation total.
+        Ok(Some(self.cached(part)?.len()))
+    }
+
+    fn compute_slice(&self, part: usize, lo: usize, hi: usize) -> Result<Vec<T>> {
+        let data = self.cached(part)?;
+        let (lo, hi) = clamp_range(data.len(), lo, hi);
+        Ok(data[lo..hi].to_vec())
     }
 
     fn shuffle_deps(&self) -> Vec<Arc<dyn ShuffleNode>> {
@@ -298,6 +436,22 @@ impl<T: Data> Rdd<T> {
         )
     }
 
+    /// Fallible [`map_partitions_with_index`]: the closure's `Err` becomes
+    /// a task failure the executor retries through lineage (instead of a
+    /// worker panic) — use for partitions whose computation can fail at
+    /// runtime, e.g. accelerator batch dispatch.
+    ///
+    /// [`map_partitions_with_index`]: Rdd::map_partitions_with_index
+    pub fn try_map_partitions_with_index<U: Data>(
+        &self,
+        f: impl Fn(usize, Vec<T>) -> Result<Vec<U>> + Send + Sync + 'static,
+    ) -> Rdd<U> {
+        Rdd::from_src(
+            self.ctx.clone(),
+            Arc::new(TryMapPartsNode { parent: self.src.clone(), f: Arc::new(f) }),
+        )
+    }
+
     pub fn map<U: Data>(&self, f: impl Fn(T) -> U + Send + Sync + 'static) -> Rdd<U> {
         self.map_partitions_with_index(move |_, xs| xs.into_iter().map(&f).collect())
     }
@@ -328,6 +482,9 @@ impl<T: Data> Rdd<T> {
     /// Narrow repartitioning: split every partition into `factor`
     /// contiguous slices (element order preserved), so long partitions
     /// become finer-grained tasks the work-stealing executor can balance.
+    /// Slice-aware over sources, caches and checkpoints: each slice
+    /// computes only its own element range, so the parent is not
+    /// recomputed `factor` times (see [`PartSrc::compute_slice`]).
     pub fn split_partitions(&self, factor: usize) -> Rdd<T> {
         if factor <= 1 {
             return self.clone();
@@ -486,7 +643,15 @@ impl<T: Data> Rdd<T> {
                 std::fs::create_dir_all(&dir)?;
                 let dir2 = dir.clone();
                 let ctx = self.ctx.clone();
-                self.run_partitions(move |part, xs| {
+                // Once-only byte crediting per partition: the executor
+                // runs tasks at-least-once (speculation, retries), and a
+                // duplicate re-writing its files must replace its slot in
+                // the IO accounting, not accumulate — otherwise the
+                // Fig-5/Table-2 numbers drift run to run.
+                let counted: Arc<super::shuffle::CreditOnce<usize>> =
+                    Arc::new(super::shuffle::CreditOnce::new());
+                let lens = self.run_partitions(move |part, xs| {
+                    let n = xs.len();
                     // Job-boundary write pays the same taxes as a shuffle
                     // spill: serialization buffers with JVM KV bloat, and
                     // HDFS-style block replication.
@@ -494,7 +659,8 @@ impl<T: Data> Rdd<T> {
                     let worker = ctx.executor().worker_for(part);
                     let charge = bytes.len() * 2 * ctx.config().kv_overhead.max(1);
                     ctx.memory().worker(worker).acquire(charge);
-                    let result = (|| -> Result<()> {
+                    let result = (|| -> Result<u64> {
+                        let mut written = 0u64;
                         for copy in 0..ctx.config().disk_replication.max(1) {
                             let name = if copy == 0 {
                                 format!("part-{part:05}.kv")
@@ -505,48 +671,104 @@ impl<T: Data> Rdd<T> {
                             // duplicate re-writing the file can never be
                             // observed half-written by a reader.
                             super::shuffle::write_atomic(&dir2.join(name), &bytes)?;
-                            ctx.io().shuffle_bytes_written.fetch_add(
-                                bytes.len() as u64,
-                                std::sync::atomic::Ordering::Relaxed,
-                            );
+                            written += bytes.len() as u64;
                         }
-                        Ok(())
+                        Ok(written)
                     })();
                     ctx.memory().worker(worker).release(charge);
-                    result?;
-                    Ok(())
+                    let written = result?;
+                    let io = ctx.io();
+                    // Checkpoints spill through the same accounting as
+                    // shuffle buckets; they add no spill-file count.
+                    counted.credit(part, written, 0, &io.shuffle_bytes_written, &io.spill_files);
+                    Ok(n)
                 })?;
-                let n = self.src.num_parts();
                 let ctx = self.ctx.clone();
                 Ok(Rdd::from_src(
                     self.ctx.clone(),
-                    Arc::new(DiskPartsNode { ctx, dir, parts: n, _marker: std::marker::PhantomData }),
+                    Arc::new(DiskPartsNode { ctx, dir, lens, _marker: std::marker::PhantomData }),
                 ))
             }
         }
     }
 }
 
-/// Partitions persisted as encoded files (checkpoint outputs).
+/// Partitions persisted as encoded files (checkpoint outputs).  Element
+/// counts are recorded at write time so `split_partitions` can slice
+/// without a read, and reads fall back to the HDFS-style `.r1`/`.r2`
+/// replica copies when the primary file is missing (lost node).
 struct DiskPartsNode<T> {
     ctx: Cluster,
     dir: std::path::PathBuf,
-    parts: usize,
+    /// Element count per partition, captured when the checkpoint wrote.
+    lens: Vec<usize>,
     _marker: std::marker::PhantomData<fn() -> T>,
+}
+
+impl<T: Data + Encode + Decode> DiskPartsNode<T> {
+    /// Read a partition's bytes, trying the primary then each replica in
+    /// turn — a missing primary must fall back, not fail, for the
+    /// replication copies to be worth their write cost.
+    fn read_part_bytes(&self, part: usize) -> Result<Vec<u8>> {
+        let mut last_err: Option<std::io::Error> = None;
+        for copy in 0..self.ctx.config().disk_replication.max(1) {
+            let name = if copy == 0 {
+                format!("part-{part:05}.kv")
+            } else {
+                format!("part-{part:05}.kv.r{copy}")
+            };
+            match std::fs::read(self.dir.join(&name)) {
+                Ok(bytes) => {
+                    self.ctx
+                        .io()
+                        .shuffle_bytes_read
+                        .fetch_add(bytes.len() as u64, std::sync::atomic::Ordering::Relaxed);
+                    return Ok(bytes);
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        Err(anyhow!(
+            "checkpoint partition {part} unreadable in {} (all {} copies): {}",
+            self.dir.display(),
+            self.ctx.config().disk_replication.max(1),
+            last_err.map(|e| e.to_string()).unwrap_or_else(|| "no copies tried".into()),
+        ))
+    }
+
+    /// Decode elements `lo..hi` from an encoded partition, stopping at
+    /// `hi` (prefix elements are parsed for framing but earlier slices
+    /// never force a full-partition materialization downstream).
+    fn decode_range(&self, part: usize, bytes: &[u8], lo: usize, hi: usize) -> Result<Vec<T>> {
+        let worker = self.ctx.executor().worker_for(part);
+        let charge = bytes.len() * self.ctx.config().kv_overhead.max(1);
+        self.ctx.memory().worker(worker).acquire(charge);
+        let result = (|| -> Result<Vec<T>> {
+            let mut input = bytes;
+            let total = u64::decode(&mut input)? as usize;
+            let hi = hi.min(total);
+            let lo = lo.min(hi);
+            let mut out = Vec::with_capacity(hi - lo);
+            for i in 0..hi {
+                let v = T::decode(&mut input)?;
+                if i >= lo {
+                    out.push(v);
+                }
+            }
+            Ok(out)
+        })();
+        self.ctx.memory().worker(worker).release(charge);
+        result
+    }
 }
 
 impl<T: Data + Encode + Decode> PartSrc<T> for DiskPartsNode<T> {
     fn num_parts(&self) -> usize {
-        self.parts
+        self.lens.len()
     }
 
     fn compute(&self, part: usize) -> Result<Vec<T>> {
-        let path = self.dir.join(format!("part-{part:05}.kv"));
-        let bytes = std::fs::read(&path)?;
-        self.ctx
-            .io()
-            .shuffle_bytes_read
-            .fetch_add(bytes.len() as u64, std::sync::atomic::Ordering::Relaxed);
+        let bytes = self.read_part_bytes(part)?;
         // Reduce-side deserialization buffer with the JVM KV bloat —
         // every downstream job re-pays this at the boundary (the paper's
         // "key-value pair conversion operators").
@@ -556,6 +778,15 @@ impl<T: Data + Encode + Decode> PartSrc<T> for DiskPartsNode<T> {
         let out = Vec::<T>::from_bytes(&bytes);
         self.ctx.memory().worker(worker).release(charge);
         out
+    }
+
+    fn part_len(&self, part: usize) -> Result<Option<usize>> {
+        Ok(Some(self.lens[part]))
+    }
+
+    fn compute_slice(&self, part: usize, lo: usize, hi: usize) -> Result<Vec<T>> {
+        let bytes = self.read_part_bytes(part)?;
+        self.decode_range(part, &bytes, lo, hi)
     }
 
     fn shuffle_deps(&self) -> Vec<Arc<dyn ShuffleNode>> {
@@ -740,6 +971,232 @@ mod tests {
         let back = rdd.split_partitions(4).coalesce(5);
         assert_eq!(back.num_partitions(), 5);
         assert_eq!(back.collect().unwrap(), (0..40).collect::<Vec<u32>>());
+    }
+
+    /// Instrumented slice-aware source: counts full computes vs sliced
+    /// elements so tests can prove `split_partitions` never multiplies
+    /// parent computation.
+    struct CountingSrc {
+        parts: Vec<Vec<u32>>,
+        full: std::sync::atomic::AtomicUsize,
+        sliced: std::sync::atomic::AtomicUsize,
+    }
+
+    impl PartSrc<u32> for CountingSrc {
+        fn num_parts(&self) -> usize {
+            self.parts.len()
+        }
+
+        fn compute(&self, part: usize) -> Result<Vec<u32>> {
+            self.full.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            Ok(self.parts[part].clone())
+        }
+
+        fn part_len(&self, part: usize) -> Result<Option<usize>> {
+            Ok(Some(self.parts[part].len()))
+        }
+
+        fn compute_slice(&self, part: usize, lo: usize, hi: usize) -> Result<Vec<u32>> {
+            let (lo, hi) = clamp_range(self.parts[part].len(), lo, hi);
+            self.sliced.fetch_add(hi - lo, std::sync::atomic::Ordering::SeqCst);
+            Ok(self.parts[part][lo..hi].to_vec())
+        }
+
+        fn shuffle_deps(&self) -> Vec<Arc<dyn ShuffleNode>> {
+            Vec::new()
+        }
+    }
+
+    #[test]
+    fn split_on_sliceable_parent_computes_each_element_exactly_once() {
+        use std::sync::atomic::Ordering;
+        let c = cluster();
+        let src = Arc::new(CountingSrc {
+            parts: (0..3).map(|p| (p * 10..p * 10 + 10).collect()).collect(),
+            full: Default::default(),
+            sliced: Default::default(),
+        });
+        let fine = Rdd::from_src(c, src.clone() as Arc<dyn PartSrc<u32>>).split_partitions(4);
+        assert_eq!(fine.num_partitions(), 12);
+        assert_eq!(fine.collect().unwrap(), (0..30).collect::<Vec<u32>>());
+        assert_eq!(
+            src.full.load(Ordering::SeqCst),
+            0,
+            "slice-aware split must never recompute a full parent partition"
+        );
+        assert_eq!(
+            src.sliced.load(Ordering::SeqCst),
+            30,
+            "each parent element must be computed exactly once across slices"
+        );
+    }
+
+    #[test]
+    fn split_property_each_element_once_across_random_shapes() {
+        use std::sync::atomic::Ordering;
+        let mut rng = crate::util::Rng::seed_from_u64(0x5117CE);
+        for case in 0..100 {
+            let nparts = 1 + rng.below(5);
+            let factor = 1 + rng.below(7);
+            let parts: Vec<Vec<u32>> = (0..nparts)
+                .map(|p| {
+                    let len = rng.below(40) as u32;
+                    (0..len).map(|i| ((p as u32) << 16) | i).collect()
+                })
+                .collect();
+            let expect: Vec<u32> = parts.iter().flatten().copied().collect();
+            let total = expect.len();
+            let src = Arc::new(CountingSrc {
+                parts,
+                full: Default::default(),
+                sliced: Default::default(),
+            });
+            let c = cluster();
+            let fine =
+                Rdd::from_src(c, src.clone() as Arc<dyn PartSrc<u32>>).split_partitions(factor);
+            assert_eq!(fine.collect().unwrap(), expect, "case {case}: order preserved");
+            if factor > 1 {
+                assert_eq!(src.full.load(Ordering::SeqCst), 0, "case {case}");
+                assert_eq!(src.sliced.load(Ordering::SeqCst), total, "case {case}");
+            }
+        }
+    }
+
+    #[test]
+    fn split_on_cached_parent_computes_parent_once() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let c = cluster();
+        let calls = Arc::new(AtomicUsize::new(0));
+        let k = calls.clone();
+        let fine = c
+            .parallelize((0..40u32).collect(), 4)
+            .map(move |x| {
+                k.fetch_add(1, Ordering::SeqCst);
+                x
+            })
+            .cache()
+            .split_partitions(4);
+        assert_eq!(fine.num_partitions(), 16);
+        assert_eq!(fine.collect().unwrap(), (0..40).collect::<Vec<u32>>());
+        assert_eq!(
+            calls.load(Ordering::SeqCst),
+            40,
+            "cached parent must compute each element once, not once per slice"
+        );
+        fine.collect().unwrap();
+        assert_eq!(calls.load(Ordering::SeqCst), 40, "re-collect stays cached");
+    }
+
+    #[test]
+    fn split_on_checkpoint_does_not_recompute_lineage() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        for cfg in [ClusterConfig::spark(3), ClusterConfig::hadoop(3)] {
+            let c = Cluster::new(cfg);
+            let calls = Arc::new(AtomicUsize::new(0));
+            let k = calls.clone();
+            let ck = c
+                .parallelize((0..60u32).collect(), 4)
+                .map(move |x| {
+                    k.fetch_add(1, Ordering::SeqCst);
+                    x
+                })
+                .checkpoint()
+                .unwrap();
+            assert_eq!(calls.load(Ordering::SeqCst), 60, "checkpoint materializes once");
+            let fine = ck.split_partitions(5);
+            assert_eq!(fine.collect().unwrap(), (0..60).collect::<Vec<u32>>());
+            assert_eq!(
+                calls.load(Ordering::SeqCst),
+                60,
+                "slices read the checkpoint, never the lineage above it"
+            );
+        }
+    }
+
+    #[test]
+    fn nested_split_still_slices_through_to_the_source() {
+        use std::sync::atomic::Ordering;
+        let src = Arc::new(CountingSrc {
+            parts: vec![(0..24).collect()],
+            full: Default::default(),
+            sliced: Default::default(),
+        });
+        let c = cluster();
+        let fine = Rdd::from_src(c, src.clone() as Arc<dyn PartSrc<u32>>)
+            .split_partitions(2)
+            .split_partitions(3);
+        assert_eq!(fine.num_partitions(), 6);
+        assert_eq!(fine.collect().unwrap(), (0..24).collect::<Vec<u32>>());
+        assert_eq!(src.full.load(Ordering::SeqCst), 0);
+        assert_eq!(src.sliced.load(Ordering::SeqCst), 24);
+    }
+
+    #[test]
+    fn checkpoint_survives_missing_primary_via_replicas() {
+        let c = Cluster::new(ClusterConfig::hadoop(2));
+        let ck = c.parallelize((0..50u32).collect(), 4).map(|x| x + 1).checkpoint().unwrap();
+        // Delete every *primary* part file; the .r1/.r2 replica copies
+        // must carry the read.
+        let scratch = c.scratch_dir().unwrap();
+        let mut deleted = 0;
+        for dir in std::fs::read_dir(&scratch).unwrap().flatten() {
+            if !dir.file_name().to_string_lossy().starts_with("checkpoint-") {
+                continue;
+            }
+            for f in std::fs::read_dir(dir.path()).unwrap().flatten() {
+                if f.file_name().to_string_lossy().ends_with(".kv") {
+                    std::fs::remove_file(f.path()).unwrap();
+                    deleted += 1;
+                }
+            }
+        }
+        assert_eq!(deleted, 4, "one primary per partition");
+        let mut out = ck.collect().unwrap();
+        out.sort();
+        assert_eq!(out, (1..=50).collect::<Vec<u32>>(), "replicas must serve reads");
+    }
+
+    #[test]
+    fn checkpoint_with_all_copies_gone_reports_error() {
+        let c = Cluster::new(ClusterConfig::hadoop(2));
+        let ck = c.parallelize((0..10u32).collect(), 2).checkpoint().unwrap();
+        let scratch = c.scratch_dir().unwrap();
+        for dir in std::fs::read_dir(&scratch).unwrap().flatten() {
+            if dir.file_name().to_string_lossy().starts_with("checkpoint-") {
+                for f in std::fs::read_dir(dir.path()).unwrap().flatten() {
+                    std::fs::remove_file(f.path()).unwrap();
+                }
+            }
+        }
+        let err = ck.collect().unwrap_err();
+        assert!(format!("{err:#}").contains("unreadable"), "got: {err:#}");
+    }
+
+    #[test]
+    fn try_map_partitions_propagates_errors_for_retry() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let c = cluster();
+        let attempts = Arc::new(AtomicUsize::new(0));
+        let a = attempts.clone();
+        let rdd = c.parallelize((0..20u32).collect(), 4).try_map_partitions_with_index(
+            move |part, xs| {
+                if part == 2 && a.fetch_add(1, Ordering::SeqCst) == 0 {
+                    anyhow::bail!("transient batch failure");
+                }
+                Ok(xs)
+            },
+        );
+        let mut out = rdd.collect().unwrap();
+        out.sort();
+        assert_eq!(out, (0..20).collect::<Vec<u32>>(), "retry must recover the partition");
+        assert!(attempts.load(Ordering::SeqCst) >= 2, "the failing attempt was retried");
+
+        // A permanently failing partition surfaces the error.
+        let bad = c
+            .parallelize((0..8u32).collect(), 2)
+            .try_map_partitions_with_index(|_, _| anyhow::bail!("always fails"));
+        let err = bad.collect().unwrap_err();
+        assert!(format!("{err:#}").contains("always fails"));
     }
 
     #[test]

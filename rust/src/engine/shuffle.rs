@@ -13,7 +13,7 @@
 use std::collections::HashMap;
 use std::io::Read;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use anyhow::{Context as _, Result};
@@ -29,6 +29,45 @@ pub(crate) fn write_atomic(path: &Path, bytes: &[u8]) -> std::io::Result<()> {
     let tmp = path.with_extension(format!("tmp{}", TMP_SEQ.fetch_add(1, Ordering::Relaxed)));
     std::fs::write(&tmp, bytes)?;
     std::fs::rename(&tmp, path)
+}
+
+/// Per-slot once-only IO crediting.  Tasks run at-least-once
+/// (speculation, retries, lineage recovery), so a duplicate execution
+/// must *replace* its slot's credit in the shared counters, never
+/// accumulate — the bytes/files numbers then record the job's footprint,
+/// not how many times a task happened to re-run.  Shared by the shuffle
+/// spill path and checkpoint writes.
+pub(crate) struct CreditOnce<K> {
+    slots: Mutex<HashMap<K, (u64, usize)>>,
+}
+
+impl<K: std::hash::Hash + Eq> CreditOnce<K> {
+    pub(crate) fn new() -> Self {
+        Self { slots: Mutex::new(HashMap::new()) }
+    }
+
+    /// Credit `bytes`/`files` for `key`'s slot, releasing any credit an
+    /// earlier execution of the same slot already took.  The counter
+    /// updates happen under the slot lock so two racing credits for the
+    /// same slot can never interleave sub-before-add and transiently
+    /// wrap the shared counter under a concurrent stats reader.
+    pub(crate) fn credit(
+        &self,
+        key: K,
+        bytes: u64,
+        files: usize,
+        bytes_counter: &AtomicU64,
+        files_counter: &AtomicUsize,
+    ) {
+        let mut slots = self.slots.lock().unwrap();
+        let prev = slots.insert(key, (bytes, files));
+        if let Some((prev_bytes, prev_files)) = prev {
+            bytes_counter.fetch_sub(prev_bytes, Ordering::Relaxed);
+            files_counter.fetch_sub(prev_files, Ordering::Relaxed);
+        }
+        bytes_counter.fetch_add(bytes, Ordering::Relaxed);
+        files_counter.fetch_add(files, Ordering::Relaxed);
+    }
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -62,6 +101,10 @@ pub struct ShuffleStore<T> {
     mem: Mutex<HashMap<(usize, usize), Arc<Vec<T>>>>,
     /// Bytes charged per map worker (released on drop).
     charged: Mutex<Vec<(usize, usize)>>,
+    /// DiskKv: once-only (bytes, spill files) crediting per (map, reduce)
+    /// slot, mirroring the in-memory path's replace-and-release so the
+    /// Fig-5/Table-2 IO numbers are stable run to run.
+    counted: CreditOnce<(usize, usize)>,
     dir: Option<PathBuf>,
 }
 
@@ -85,7 +128,8 @@ impl<T: Clone + Encode + Decode + crate::engine::memory::MemSize> ShuffleStore<T
             num_reduce,
             mem: Mutex::new(HashMap::new()),
             charged: Mutex::new(Vec::new()),
-            dir: None.or(dir),
+            counted: CreditOnce::new(),
+            dir,
         })
     }
 
@@ -149,7 +193,9 @@ impl<T: Clone + Encode + Decode + crate::engine::memory::MemSize> ShuffleStore<T
                     (r.len() as u64).encode(&mut buf);
                     buf.extend_from_slice(r);
                 }
-                let result = (|| -> Result<()> {
+                let result = (|| -> Result<(u64, usize)> {
+                    let mut written = 0u64;
+                    let mut files = 0usize;
                     for copy in 0..cfg.disk_replication.max(1) {
                         let path = self.bucket_path(map_part, reduce_part);
                         let path = if copy == 0 {
@@ -159,16 +205,21 @@ impl<T: Clone + Encode + Decode + crate::engine::memory::MemSize> ShuffleStore<T
                         };
                         write_atomic(&path, &buf)
                             .with_context(|| format!("spilling {}", path.display()))?;
-                        self.cluster
-                            .io()
-                            .shuffle_bytes_written
-                            .fetch_add(buf.len() as u64, Ordering::Relaxed);
-                        self.cluster.io().spill_files.fetch_add(1, Ordering::Relaxed);
+                        written += buf.len() as u64;
+                        files += 1;
                     }
-                    Ok(())
+                    Ok((written, files))
                 })();
                 mem.release(charge);
-                result?;
+                let (written, files) = result?;
+                let io = self.cluster.io();
+                self.counted.credit(
+                    (map_part, reduce_part),
+                    written,
+                    files,
+                    &io.shuffle_bytes_written,
+                    &io.spill_files,
+                );
             }
         }
         Ok(())
@@ -235,24 +286,28 @@ impl<T: Clone + Encode + Decode + crate::engine::memory::MemSize> ShuffleStore<T
         }
     }
 
-    /// Which map partitions currently have outputs present for all their
-    /// reduce buckets (used by recompute-after-loss).
-    pub fn present_map_parts(&self, num_map: usize) -> Vec<bool> {
-        let mut present = vec![false; num_map];
+    /// Whether map partition `m` has a *complete* set of outputs — every
+    /// reduce bucket present.  Map tasks write all `num_reduce` buckets
+    /// (empty ones included), so a partial set means the outputs were
+    /// lost or a recompute is still in flight; the recovery probe must
+    /// not treat it as done, or a concurrent reduce task would read its
+    /// own still-missing bucket as empty.
+    pub fn map_part_present(&self, m: usize) -> bool {
         match self.backend {
             Backend::InMemory => {
                 let mem = self.mem.lock().unwrap();
-                for ((m, _), _) in mem.iter() {
-                    present[*m] = true;
-                }
+                (0..self.num_reduce).all(|r| mem.contains_key(&(m, r)))
             }
-            Backend::DiskKv => {
-                for (m, p) in present.iter_mut().enumerate() {
-                    *p = (0..self.num_reduce).any(|r| self.bucket_path(m, r).exists());
-                }
-            }
+            Backend::DiskKv => (0..self.num_reduce).all(|r| self.bucket_path(m, r).exists()),
         }
-        present
+    }
+
+    /// Which map partitions currently have complete outputs (all reduce
+    /// buckets, see [`map_part_present`]) — used by recompute-after-loss.
+    ///
+    /// [`map_part_present`]: ShuffleStore::map_part_present
+    pub fn present_map_parts(&self, num_map: usize) -> Vec<bool> {
+        (0..num_map).map(|m| self.map_part_present(m)).collect()
     }
 }
 
@@ -384,6 +439,74 @@ mod tests {
         let hadoop = canonical(&Cluster::new(ClusterConfig::hadoop(3)));
         assert!(!spark.is_empty());
         assert_eq!(spark, hadoop, "backends must agree byte-for-byte");
+    }
+
+    #[test]
+    fn duplicate_diskkv_puts_count_bucket_bytes_once() {
+        // Speculative / retried map tasks re-put the same (map, reduce)
+        // slot under at-least-once execution; written bytes and spill
+        // files must be credited once per slot, not once per execution.
+        let c = mk(Backend::DiskKv);
+        let store: ShuffleStore<(u32, u32)> = ShuffleStore::new(&c, 2).unwrap();
+        store.put(0, 0, vec![(1, 10), (2, 20)]).unwrap();
+        store.put(0, 1, vec![(3, 30)]).unwrap();
+        let once = c.stats();
+        assert!(once.shuffle_bytes_written > 0);
+        // Re-run the same map task (identical deterministic output).
+        store.put(0, 0, vec![(1, 10), (2, 20)]).unwrap();
+        store.put(0, 1, vec![(3, 30)]).unwrap();
+        let twice = c.stats();
+        assert_eq!(
+            twice.shuffle_bytes_written, once.shuffle_bytes_written,
+            "duplicate puts must not double-count bytes"
+        );
+        assert_eq!(
+            c.io().spill_files.load(Ordering::Relaxed),
+            2 * c.config().disk_replication,
+            "two buckets x replication, regardless of re-puts"
+        );
+    }
+
+    #[test]
+    fn recovery_reput_keeps_counters_stable() {
+        // Losing a worker's outputs and recomputing them (the lineage
+        // recovery path re-puts the same slots) must leave the write-side
+        // counters exactly where they were.
+        let c = mk(Backend::DiskKv);
+        let store: ShuffleStore<(u32, u32)> = ShuffleStore::new(&c, 2).unwrap();
+        for m in 0..4 {
+            store.put(m, 0, vec![(m as u32, 1)]).unwrap();
+            store.put(m, 1, vec![(m as u32, 2)]).unwrap();
+        }
+        let before = c.stats().shuffle_bytes_written;
+        store.drop_worker_outputs(0, 4);
+        for m in [0usize, 3] {
+            // worker 0 owned map parts 0 and 3 (3 workers)
+            store.put(m, 0, vec![(m as u32, 1)]).unwrap();
+            store.put(m, 1, vec![(m as u32, 2)]).unwrap();
+        }
+        assert_eq!(c.stats().shuffle_bytes_written, before, "recovery must not inflate IO");
+    }
+
+    #[test]
+    fn map_part_present_requires_every_bucket() {
+        for backend in [Backend::InMemory, Backend::DiskKv] {
+            let c = mk(backend);
+            let store: ShuffleStore<(u32, u32)> = ShuffleStore::new(&c, 2).unwrap();
+            assert!(!store.map_part_present(0));
+            // A half-written map output (recompute in flight) is NOT
+            // present — a reduce task must not skip recovery on it.
+            store.put(0, 0, vec![(1, 1)]).unwrap();
+            assert!(!store.map_part_present(0), "partial outputs are not complete");
+            store.put(0, 1, Vec::new()).unwrap();
+            assert!(store.map_part_present(0), "empty buckets still count once written");
+            store.put(1, 0, Vec::new()).unwrap();
+            store.put(1, 1, Vec::new()).unwrap();
+            assert!(store.map_part_present(1));
+            store.drop_worker_outputs(0, 2);
+            assert!(!store.map_part_present(0), "worker 0 owned map part 0");
+            assert!(store.map_part_present(1), "worker 1's outputs survive");
+        }
     }
 
     #[test]

@@ -15,16 +15,22 @@
 //! Layering (bottom-up):
 //! * [`util`]    — PRNG, binary codec, timing (std-only substitutes for the
 //!                 usual crates; this build is fully offline).
-//! * [`engine`]  — the mini-Spark substrate: lazy RDDs with lineage, DAG
-//!                 scheduler, a work-stealing executor (locality-preferred
-//!                 per-worker deques, idle workers steal from the busiest
-//!                 queue, stragglers re-executed speculatively with
-//!                 first-completion-wins), shuffles, broadcast, memory
-//!                 accounting, and fault injection including worker kills
-//!                 that drain the dead node's deque back into the steal
-//!                 pool.  Steal/speculation counters and busy-time skew
-//!                 (max/mean worker busy nanos) surface through
-//!                 `ClusterStats` into [`metrics`].
+//! * [`engine`]  — the mini-Spark substrate: lazy RDDs with lineage
+//!                 (slice-aware, so `split_partitions` computes only each
+//!                 slice's range over sources/caches/checkpoints), DAG
+//!                 scheduler, a sharded work-stealing executor
+//!                 (per-worker mutexed deques with no global lock on the
+//!                 hot path, idle workers steal *half* the busiest
+//!                 victim's deque per batch, stragglers re-executed
+//!                 speculatively with first-completion-wins and
+//!                 execution-time deadlines; a global-mutex baseline
+//!                 remains selectable for A/B), shuffles, broadcast,
+//!                 memory accounting, and fault injection including
+//!                 worker kills that drain the dead node's deque back
+//!                 into the steal pool.  Steal/steal-batch/contention/
+//!                 speculation counters and busy-time skew (max/mean
+//!                 worker busy nanos) surface through `ClusterStats`
+//!                 into [`metrics`].
 //! * [`fasta`]   — sequence types, alphabets, FASTA I/O.
 //! * [`data`]    — deterministic synthetic dataset generators standing in
 //!                 for the paper's mito-genome / 16S rRNA / BAliBASE data.

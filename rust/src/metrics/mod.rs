@@ -25,6 +25,11 @@ pub struct RunReport {
     pub busy_skew: Option<f64>,
     /// Tasks executed away from their owning node (work stealing).
     pub tasks_stolen: Option<usize>,
+    /// Steal operations (steal-half: each migrates up to half a deque).
+    pub steal_batches: Option<usize>,
+    /// Scheduler-lock `try_lock` misses — the contention proxy the
+    /// sharded-vs-global Fig-6 scenario compares.
+    pub lock_contentions: Option<usize>,
     /// Speculative straggler duplicates launched.
     pub speculative_launches: Option<usize>,
     /// "-" rows: tool did not finish (OOM / unsupported / over budget).
@@ -44,6 +49,8 @@ impl RunReport {
             shuffle_mb: None,
             busy_skew: None,
             tasks_stolen: None,
+            steal_batches: None,
+            lock_contentions: None,
             speculative_launches: None,
             dnf: Some(reason.into()),
         }
@@ -57,6 +64,8 @@ impl RunReport {
         );
         self.busy_skew = Some(stats.busy_skew);
         self.tasks_stolen = Some(stats.tasks_stolen);
+        self.steal_batches = Some(stats.steal_batches);
+        self.lock_contentions = Some(stats.lock_contentions);
         self.speculative_launches = Some(stats.speculative_launches);
         self
     }
@@ -109,14 +118,13 @@ pub fn print_table(title: &str, reports: &[RunReport]) {
 
 /// Column names matching [`tsv_line`]'s fields — keep the two in sync
 /// here so every TSV emitter prints the same header.
-pub const TSV_HEADER: &str =
-    "tool\tdataset\twall_s\tbusy_s\tmetric\tavg_max_mem_mb\tbusy_skew\tstolen\tspeculative\tstatus";
+pub const TSV_HEADER: &str = "tool\tdataset\twall_s\tbusy_s\tmetric\tavg_max_mem_mb\tbusy_skew\tstolen\tsteal_batches\tlock_contention\tspeculative\tstatus";
 
 /// Machine-readable one-line record (appended to bench logs); fields as
 /// in [`TSV_HEADER`].
 pub fn tsv_line(r: &RunReport) -> String {
     format!(
-        "{}\t{}\t{:.3}\t{}\t{}\t{}\t{}\t{}\t{}\t{}",
+        "{}\t{}\t{:.3}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}",
         r.tool,
         r.dataset,
         r.wall.as_secs_f64(),
@@ -125,6 +133,8 @@ pub fn tsv_line(r: &RunReport) -> String {
         r.avg_max_memory_mb.map(|m| format!("{m:.2}")).unwrap_or_else(|| "-".into()),
         r.busy_skew.map(|s| format!("{s:.3}")).unwrap_or_else(|| "-".into()),
         r.tasks_stolen.map(|s| s.to_string()).unwrap_or_else(|| "-".into()),
+        r.steal_batches.map(|s| s.to_string()).unwrap_or_else(|| "-".into()),
+        r.lock_contentions.map(|s| s.to_string()).unwrap_or_else(|| "-".into()),
         r.speculative_launches.map(|s| s.to_string()).unwrap_or_else(|| "-".into()),
         r.dnf.clone().unwrap_or_else(|| "ok".into()),
     )
@@ -135,7 +145,7 @@ mod tests {
     use super::*;
 
     #[test]
-    fn tsv_has_ten_fields() {
+    fn tsv_has_twelve_fields() {
         let r = RunReport {
             tool: "halign2".into(),
             dataset: "dna1x".into(),
@@ -147,12 +157,14 @@ mod tests {
             shuffle_mb: Some(0.0),
             busy_skew: Some(1.25),
             tasks_stolen: Some(7),
+            steal_batches: Some(3),
+            lock_contentions: Some(2),
             speculative_launches: Some(1),
             dnf: None,
         };
         let line = tsv_line(&r);
-        assert_eq!(line.split('\t').count(), 10);
-        assert_eq!(TSV_HEADER.split('\t').count(), 10, "header matches row arity");
+        assert_eq!(line.split('\t').count(), 12);
+        assert_eq!(TSV_HEADER.split('\t').count(), 12, "header matches row arity");
         assert!(line.contains("1.250"));
     }
 

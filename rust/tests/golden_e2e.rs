@@ -8,7 +8,7 @@
 
 use halign2::align::center_star::{align_nucleotide, CenterStarConfig};
 use halign2::data::DatasetSpec;
-use halign2::engine::{Cluster, ClusterConfig, FaultPlan};
+use halign2::engine::{Cluster, ClusterConfig, FaultPlan, SchedulerMode};
 use halign2::fasta::Sequence;
 
 fn dataset() -> Vec<Sequence> {
@@ -54,12 +54,15 @@ fn golden_msa_identical_across_workers_backends_schedulers_and_faults() {
     let mut nosteal = ClusterConfig::spark(4);
     nosteal.scheduler.work_stealing = false;
     nosteal.scheduler.speculation = false;
+    let mut global_lock = ClusterConfig::spark(4);
+    global_lock.scheduler.mode = SchedulerMode::GlobalLock;
 
     let variants: Vec<(&str, ClusterConfig, bool)> = vec![
         ("spark-4w", ClusterConfig::spark(4), false),
         ("hadoop-1w", ClusterConfig::hadoop(1), false),
         ("hadoop-4w", ClusterConfig::hadoop(4), false),
         ("spark-4w-nosteal", nosteal, false),
+        ("spark-4w-globallock", global_lock, false),
         (
             "spark-1w-faults",
             with_fault(
