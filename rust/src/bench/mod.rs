@@ -28,7 +28,8 @@ use crate::engine::{Cluster, ClusterConfig, SchedulerMode};
 use crate::fasta::Sequence;
 use crate::metrics::RunReport;
 use crate::runtime::XlaService;
-use crate::tree::{build_tree, ClusterConfig as TreeClusterConfig, TreeConfig};
+use crate::distmat::DistBackend;
+use crate::tree::{build_tree, ClusterConfig as TreeClusterConfig, DistMatOptions, TreeConfig};
 
 #[derive(Debug, Clone)]
 pub struct BenchConfig {
@@ -120,6 +121,7 @@ pub fn measure<T>(
                 steal_batches: None,
                 lock_contentions: None,
                 speculative_launches: None,
+                distmat_peak_mb: None,
                 dnf: None,
             };
             if let Some(engine) = engine {
@@ -310,6 +312,7 @@ pub fn table5_tree(cfg: &BenchConfig, svc: Option<&XlaService>) -> Vec<RunReport
     let mut out = Vec::new();
     let tree_cfg = TreeConfig {
         clustering: TreeClusterConfig { max_cluster_size: 96, ..Default::default() },
+        ..Default::default()
     };
     // One dataset per family (the full 8-row sweep is the bench target's
     // --full mode; wall-clock dominated by the MSA step otherwise).
@@ -366,6 +369,41 @@ pub fn table5_tree(cfg: &BenchConfig, svc: Option<&XlaService>) -> Vec<RunReport
             let r = build_tree(&engine, rows, svc, &tree_cfg)?;
             Ok(((), Some(r.log_likelihood), Some(engine)))
         }));
+    }
+
+    // Distmat A/B: the same tree, dense vs tiled distance backend, at
+    // 16/32/64 simulated workers (tiles are the stealable unit, so tile
+    // jobs scale with workers while results stay bit-identical).  The
+    // distmat_peak_mb column is the headline: dense reports the largest
+    // cluster's O(n²) matrices, tiled stays under its byte budget.
+    if let Some((label, rows)) = jobs.first() {
+        let tile_rows = if cfg.quick { 6 } else { 24 };
+        let byte_budget: usize = 16 * tile_rows * tile_rows * 8;
+        for workers in [16usize, 32, 64] {
+            for (tool, backend) in [
+                ("halign2_dense", DistBackend::Dense),
+                ("halign2_tiled", DistBackend::Tiled { tile_rows, byte_budget }),
+            ] {
+                let name = format!("{label}@w{workers}");
+                let peak_mb = std::cell::Cell::new(None);
+                let tcfg = TreeConfig {
+                    clustering: tree_cfg.clustering.clone(),
+                    distmat: DistMatOptions { backend },
+                };
+                let mut r = measure(tool, &name, "logML", || {
+                    let engine = Cluster::new(ClusterConfig::spark(workers));
+                    // No XLA here: the tiled backend always computes
+                    // natively, so the dense side must too for the
+                    // bit-identical A/B to hold.
+                    let res = build_tree(&engine, rows, None, &tcfg)?;
+                    peak_mb
+                        .set(Some(res.distmat_peak_bytes as f64 / (1u64 << 20) as f64));
+                    Ok(((), Some(res.log_likelihood), Some(engine)))
+                });
+                r.distmat_peak_mb = peak_mb.get();
+                out.push(r);
+            }
+        }
     }
     out
 }
@@ -498,6 +536,38 @@ mod tests {
             let v1 = rows.iter().find(|r| r.tool == "halign_v1" && r.dataset == d).unwrap();
             let v2 = rows.iter().find(|r| r.tool == "halign2" && r.dataset == d).unwrap();
             assert_eq!(v1.metric, v2.metric, "same center-star, same SP");
+        }
+    }
+
+    #[test]
+    fn table5_smoke_runs_dense_and_tiled_with_peak_column() {
+        // Smoke mode for the CI bench job: tiny n, both distance
+        // backends.  Guards against panics, a missing
+        // peak-resident-bytes column, and dense/tiled divergence.
+        let rows = table5_tree(&quick(), None);
+        let tiled: Vec<_> = rows.iter().filter(|r| r.tool == "halign2_tiled").collect();
+        let dense: Vec<_> = rows.iter().filter(|r| r.tool == "halign2_dense").collect();
+        assert_eq!(tiled.len(), 3, "tiled rows at 16/32/64 workers");
+        assert_eq!(dense.len(), 3, "dense rows at 16/32/64 workers");
+        for w in ["16", "32", "64"] {
+            let suffix = format!("@w{w}");
+            let t: &RunReport =
+                tiled.iter().find(|r| r.dataset.ends_with(&suffix)).unwrap();
+            let d: &RunReport =
+                dense.iter().find(|r| r.dataset.ends_with(&suffix)).unwrap();
+            assert!(t.dnf.is_none() && d.dnf.is_none(), "w{w}: no DNFs");
+            assert_eq!(t.metric, d.metric, "w{w}: backends must agree on logML exactly");
+            let (tp, dp) = (t.distmat_peak_mb.unwrap(), d.distmat_peak_mb.unwrap());
+            assert!(tp > 0.0 && dp > 0.0, "w{w}: peak column must be populated");
+            assert!(tp <= dp, "w{w}: tiled peak ({tp}) must not exceed dense ({dp})");
+            // The TSV rendering the CI job greps for.
+            let line = crate::metrics::tsv_line(t);
+            assert_eq!(
+                line.split('\t').count(),
+                crate::metrics::TSV_HEADER.split('\t').count(),
+                "row arity matches the header (which carries distmat_peak_mb)"
+            );
+            assert!(!line.split('\t').nth(11).unwrap().contains('-'), "peak cell is numeric");
         }
     }
 

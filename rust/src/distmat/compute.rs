@@ -1,0 +1,276 @@
+//! Tile jobs: compute a [`TiledDist`] on the engine, one stealable task
+//! per tile.
+//!
+//! The input rows are partitioned into the grid's row blocks
+//! (`parallelize` chunking matches [`TileGrid`] bounds by construction)
+//! and the engine's `lower_triangle_blocks` primitive pairs every
+//! (row block, col block) combination with `cb <= rb`; each pair is one
+//! task that computes its tile's entries and `put`s them into the shared
+//! [`TileStore`].  Tasks are idempotent (deterministic entries,
+//! replace-on-put), so the executor's at-least-once semantics —
+//! speculation, retries, worker kills with lineage recompute — apply
+//! unchanged.
+//!
+//! The per-pair kernels are shared with [`crate::tree::distance`]
+//! (`pdist_pair`, `jc_distance`, `kmer_profile`, `kmer_sqdist_pair`), so
+//! tiled entries are bit-identical to the dense matrices the single-node
+//! path materializes.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, ensure, Result};
+
+use super::tile::Tile;
+use super::{TileGrid, TileStore, TiledDist};
+use crate::engine::Cluster as Engine;
+use crate::fasta::Sequence;
+use crate::tree::distance::{jc_distance, kmer_profile, kmer_sqdist_pair, pdist_pair};
+
+/// Which distance the tile jobs compute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DistKind {
+    /// p-distance over aligned rows (the NJ input), optionally
+    /// Jukes-Cantor corrected with the alphabet's state count.
+    PDistance { jukes_cantor: bool },
+    /// Squared-euclidean distance between hashed k-mer count profiles
+    /// (the clustering signal; works on unaligned rows).
+    KmerSq { k: usize, dim: usize },
+}
+
+/// Knobs for the tiled distance pipeline.
+#[derive(Debug, Clone)]
+pub struct DistMatConfig {
+    /// Rows per tile block (tile ≈ `tile_rows²` f64 entries).
+    pub tile_rows: usize,
+    /// Resident-byte budget for the tile store; completed tiles beyond
+    /// it spill to the engine scratch dir.
+    pub byte_budget: usize,
+    pub kind: DistKind,
+}
+
+impl Default for DistMatConfig {
+    fn default() -> Self {
+        Self {
+            tile_rows: 64,
+            byte_budget: 8 << 20,
+            kind: DistKind::PDistance { jukes_cantor: true },
+        }
+    }
+}
+
+/// Compute the tiled pairwise distance matrix of `rows` as engine jobs.
+///
+/// One task per lower-triangle tile; the work-stealing executor balances
+/// them and speculation/fault recovery re-run them safely.  Returns a
+/// [`TiledDist`] whose resident footprint is bounded by
+/// `cfg.byte_budget` plus one tile.
+pub fn distance_tiled(
+    engine: &Engine,
+    rows: &[Sequence],
+    cfg: &DistMatConfig,
+) -> Result<TiledDist> {
+    let n = rows.len();
+    ensure!(n > 0, "no rows to measure");
+    if let DistKind::PDistance { .. } = cfg.kind {
+        let width = rows[0].len();
+        ensure!(rows.iter().all(|r| r.len() == width), "p-distances need aligned rows");
+    }
+    let grid = TileGrid::new(n, cfg.tile_rows);
+    let dir = engine.scratch_dir()?.join(format!("distmat-{}", engine.next_shuffle_id()));
+    let store = Arc::new(TileStore::spilling(dir, cfg.byte_budget)?);
+
+    let blocks = engine.parallelize(rows.to_vec(), grid.num_row_blocks());
+    ensure!(
+        blocks.num_partitions() == grid.num_row_blocks(),
+        "row-block partitioning diverged from the tile grid"
+    );
+    let pairs = blocks.lower_triangle_blocks();
+    ensure!(pairs.num_partitions() == grid.num_tiles(), "tile task count mismatch");
+
+    let kind = cfg.kind;
+    let gap = rows[0].alphabet.gap();
+    let states = rows[0].alphabet.residues();
+    let grid_task = grid.clone();
+    let store_task = store.clone();
+    pairs.run_partitions(move |part, items| {
+        let ((bi, bj), (rows_i, rows_j)) = items
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("tile partition {part} produced no block pair"))?;
+        let tile = grid_task.tile(part);
+        ensure!(
+            (tile.row_block, tile.col_block) == (bi as usize, bj as usize),
+            "tile {part}: expected blocks ({},{}), got ({bi},{bj})",
+            tile.row_block,
+            tile.col_block
+        );
+        let entries = tile_entries(kind, &tile, &rows_i, &rows_j, gap, states);
+        store_task.put(part as u64, entries)
+    })?;
+
+    Ok(TiledDist::new(grid, store))
+}
+
+/// Entries of one tile, row-major, diagonal cells zero.  Every cell is
+/// computed directly (the per-pair kernels are exactly symmetric, so the
+/// diagonal tile's (i,j)/(j,i) cells agree bit for bit without
+/// mirroring).
+fn tile_entries(
+    kind: DistKind,
+    tile: &Tile,
+    rows_i: &[Sequence],
+    rows_j: &[Sequence],
+    gap: u8,
+    states: usize,
+) -> Vec<f64> {
+    let mut out = Vec::with_capacity(tile.num_entries());
+    match kind {
+        DistKind::PDistance { jukes_cantor } => {
+            for (r, a) in rows_i.iter().enumerate() {
+                for (c, b) in rows_j.iter().enumerate() {
+                    if tile.row_lo + r == tile.col_lo + c {
+                        out.push(0.0);
+                        continue;
+                    }
+                    let p = pdist_pair(&a.codes, &b.codes, gap);
+                    out.push(if jukes_cantor { jc_distance(p, states) } else { p });
+                }
+            }
+        }
+        DistKind::KmerSq { k, dim } => {
+            let pi: Vec<Vec<f32>> =
+                rows_i.iter().map(|s| kmer_profile(&s.codes, k, dim, gap)).collect();
+            let pj: Vec<Vec<f32>> =
+                rows_j.iter().map(|s| kmer_profile(&s.codes, k, dim, gap)).collect();
+            for (r, a) in pi.iter().enumerate() {
+                for (c, b) in pj.iter().enumerate() {
+                    if tile.row_lo + r == tile.col_lo + c {
+                        out.push(0.0);
+                    } else {
+                        out.push(kmer_sqdist_pair(a, b) as f64);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetSpec;
+    use crate::distmat::{DenseF32, DenseView, DistSource};
+    use crate::engine::{Cluster, ClusterConfig, FaultPlan};
+    use crate::tree::distance::{kmer_distance_native, pdistance_native};
+
+    fn aligned_rows(n: usize, seed: u64) -> Vec<Sequence> {
+        // Raw mito rows share a length per spec, which is all the
+        // p-distance kernel needs.
+        let spec = DatasetSpec { count: n, ..DatasetSpec::mito(0.01, seed) };
+        let rows = spec.generate();
+        let w = rows.iter().map(Sequence::len).min().unwrap();
+        rows.into_iter()
+            .map(|mut s| {
+                s.codes.truncate(w);
+                s
+            })
+            .collect()
+    }
+
+    fn dense_jc(rows: &[Sequence]) -> Vec<Vec<f64>> {
+        let p = pdistance_native(rows).unwrap();
+        let states = rows[0].alphabet.residues();
+        p.iter().map(|r| r.iter().map(|&x| jc_distance(x, states)).collect()).collect()
+    }
+
+    #[test]
+    fn tiled_pdistance_matches_dense_bitwise() {
+        let rows = aligned_rows(19, 11);
+        let dense = dense_jc(&rows);
+        for (tile_rows, workers) in [(1usize, 2usize), (4, 3), (7, 8), (64, 2)] {
+            let engine = Cluster::new(ClusterConfig::spark(workers));
+            let cfg = DistMatConfig { tile_rows, byte_budget: 1 << 12, ..Default::default() };
+            let tiled = distance_tiled(&engine, &rows, &cfg).unwrap();
+            for i in 0..rows.len() {
+                for j in 0..rows.len() {
+                    if i == j {
+                        continue;
+                    }
+                    assert_eq!(
+                        tiled.dist(i, j).unwrap().to_bits(),
+                        dense[i][j].to_bits(),
+                        "tile={tile_rows} w={workers} ({i},{j})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_budget_spills_but_peak_stays_bounded() {
+        let rows = aligned_rows(24, 5);
+        let engine = Cluster::new(ClusterConfig::spark(4));
+        let budget = 512; // far below the 24²×8 = 4.6 KB dense matrix
+        let cfg = DistMatConfig { tile_rows: 4, byte_budget: budget, ..Default::default() };
+        let tiled = distance_tiled(&engine, &rows, &cfg).unwrap();
+        let store = tiled.store_arc();
+        assert!(store.spill_files_written() > 0, "budget this small must spill");
+        assert!(
+            tiled.peak_resident_bytes() <= budget + tiled.grid().max_tile_bytes(),
+            "peak {} must stay within budget {budget} + one tile {}",
+            tiled.peak_resident_bytes(),
+            tiled.grid().max_tile_bytes()
+        );
+        // Spilled tiles still serve bit-exact reads.
+        let dense = dense_jc(&rows);
+        let (sums, _) = tiled.row_stats().unwrap();
+        let (dsums, _) = DenseView(&dense).row_stats().unwrap();
+        for i in 0..rows.len() {
+            assert_eq!(sums[i].to_bits(), dsums[i].to_bits(), "row {i}");
+        }
+    }
+
+    #[test]
+    fn worker_kill_mid_tile_job_recovers() {
+        let rows = aligned_rows(16, 7);
+        let dense = dense_jc(&rows);
+        let mut ccfg = ClusterConfig::spark(3);
+        ccfg.fault = FaultPlan::kill_worker_at(1, 3);
+        let engine = Cluster::new(ccfg);
+        let cfg = DistMatConfig { tile_rows: 3, byte_budget: 1 << 12, ..Default::default() };
+        let tiled = distance_tiled(&engine, &rows, &cfg).unwrap();
+        assert_eq!(engine.executor().alive_workers(), 2, "the kill must have fired");
+        for i in 0..rows.len() {
+            for j in 0..i {
+                assert_eq!(tiled.dist(i, j).unwrap().to_bits(), dense[i][j].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn kmer_kind_matches_native_profiles() {
+        let rows = DatasetSpec::rrna(14, 0.2, 9).generate();
+        let gap = rows[0].alphabet.gap();
+        let profiles: Vec<Vec<f32>> =
+            rows.iter().map(|s| kmer_profile(&s.codes, 4, 64, gap)).collect();
+        let dense = kmer_distance_native(&profiles);
+        let engine = Cluster::new(ClusterConfig::spark(2));
+        let cfg = DistMatConfig {
+            tile_rows: 5,
+            byte_budget: 1 << 14,
+            kind: DistKind::KmerSq { k: 4, dim: 64 },
+        };
+        let tiled = distance_tiled(&engine, &rows, &cfg).unwrap();
+        let view = DenseF32(&dense);
+        for i in 0..rows.len() {
+            for j in 0..rows.len() {
+                assert_eq!(
+                    tiled.dist(i, j).unwrap().to_bits(),
+                    view.dist(i, j).unwrap().to_bits(),
+                    "({i},{j})"
+                );
+            }
+        }
+    }
+}

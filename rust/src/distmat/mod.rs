@@ -1,0 +1,323 @@
+//! Distributed tiled distance matrices — the subsystem behind the
+//! paper's "extremely high memory efficiency" tree claim.
+//!
+//! The n×n pairwise distance matrix is the O(n²) object that makes
+//! ultra-large tree reconstruction memory-bound.  This module stops
+//! materializing it:
+//!
+//! * [`TileGrid`] partitions the lower triangle into fixed-size tiles;
+//!   each tile is one stealable engine task (Sample-Align-D's pairwise
+//!   domain decomposition), so the sharded work-stealing/speculation
+//!   machinery from `engine/` applies unchanged.
+//! * [`TileStore`] keeps completed tiles resident under a byte budget
+//!   and spills the rest to disk (tmp+rename, bit-exact roundtrip);
+//!   peak resident bytes stay `<= budget + one tile`, not O(n²).
+//! * [`DistSource`] abstracts "something that answers d(i, j)" so
+//!   consumers ([`crate::tree::nj`], [`crate::tree::cluster`]) are
+//!   backend-agnostic: [`DenseView`] / [`DenseF32`] wrap in-memory
+//!   matrices, [`TiledDist`] serves tiles out-of-core.
+//! * [`compute::distance_tiled`] runs the tile jobs on the engine
+//!   (p-distance + optional Jukes-Cantor, or k-mer-profile distances).
+//!
+//! Bit-identity contract: every backend must return the *same f64 bits*
+//! for d(i, j) as the dense single-node path, and `row_stats` must
+//! accumulate row sums in ascending-j order (f64 addition is not
+//! associative).  The tile kernels share the per-pair code with
+//! `tree::distance`, and the NJ property tests pin the end-to-end
+//! guarantee across tile sizes, worker counts and fault plans.
+//!
+//! At-least-once interaction: tile jobs may run more than once under
+//! speculation/retry; `TileStore::put` replaces (accounting released
+//! first) and tile contents are deterministic, so duplicates are
+//! harmless — the same discipline as the shuffle spill path.
+
+pub mod compute;
+pub mod store;
+pub mod tile;
+
+use anyhow::{ensure, Result};
+
+pub use compute::{distance_tiled, DistKind, DistMatConfig};
+pub use store::TileStore;
+pub use tile::{Tile, TileGrid};
+
+use std::sync::Arc;
+
+/// Which distance backend a tree pipeline should use (threaded through
+/// [`crate::tree::TreeConfig`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DistBackend {
+    /// Materialize dense `Vec<Vec<f64>>` matrices per cluster (the
+    /// single-node path; resident memory is O(n²) per cluster).
+    #[default]
+    Dense,
+    /// Compute tiles as engine jobs and consume them out-of-core with
+    /// resident memory bounded by `byte_budget` (+ one tile).
+    Tiled { tile_rows: usize, byte_budget: usize },
+}
+
+/// Read access to a symmetric pairwise distance matrix, independent of
+/// how (or whether) it is materialized.
+///
+/// Contract: `dist(i, j) == dist(j, i)`, `dist(i, i) == 0.0`, and all
+/// methods return identical f64 bits across backends for the same
+/// underlying distances.  `row_stats`/`stream_row` must visit `j` in
+/// ascending order so floating-point accumulation matches the dense
+/// reference exactly.
+pub trait DistSource: Send + Sync {
+    /// Number of taxa (matrix side length).
+    fn num_taxa(&self) -> usize;
+
+    /// Distance between taxa `i` and `j` (fallible: tiled backends may
+    /// touch disk).
+    fn dist(&self, i: usize, j: usize) -> Result<f64>;
+
+    /// Visit `(j, d(i, j))` for every `j != i`, in ascending `j` order.
+    fn stream_row(&self, i: usize, f: &mut dyn FnMut(usize, f64)) -> Result<()> {
+        for j in 0..self.num_taxa() {
+            if j != i {
+                f(j, self.dist(i, j)?);
+            }
+        }
+        Ok(())
+    }
+
+    /// `(row_sums, row_mins)` over `j != i` — the NJ seed data, computed
+    /// in one pass so a tiled backend reads each spilled tile once
+    /// instead of once per row.
+    fn row_stats(&self) -> Result<(Vec<f64>, Vec<f64>)> {
+        let n = self.num_taxa();
+        let mut sums = vec![0f64; n];
+        let mut mins = vec![f64::INFINITY; n];
+        for i in 0..n {
+            self.stream_row(i, &mut |_, v| {
+                sums[i] += v;
+                mins[i] = mins[i].min(v);
+            })?;
+        }
+        Ok((sums, mins))
+    }
+
+    /// Per-row minima (rapid-NJ seed caches); see [`row_stats`].
+    ///
+    /// [`row_stats`]: DistSource::row_stats
+    fn row_mins(&self) -> Result<Vec<f64>> {
+        Ok(self.row_stats()?.1)
+    }
+}
+
+/// Borrowed dense f64 matrix as a [`DistSource`] (the single-node path).
+pub struct DenseView<'a>(pub &'a [Vec<f64>]);
+
+impl DistSource for DenseView<'_> {
+    fn num_taxa(&self) -> usize {
+        self.0.len()
+    }
+
+    fn dist(&self, i: usize, j: usize) -> Result<f64> {
+        Ok(self.0[i][j])
+    }
+}
+
+/// Borrowed dense f32 matrix (k-mer profile distances) as a
+/// [`DistSource`]; `f32 -> f64` is exact and order-preserving, so
+/// consumers see the same comparisons as raw-f32 code did.
+pub struct DenseF32<'a>(pub &'a [Vec<f32>]);
+
+impl DistSource for DenseF32<'_> {
+    fn num_taxa(&self) -> usize {
+        self.0.len()
+    }
+
+    fn dist(&self, i: usize, j: usize) -> Result<f64> {
+        Ok(self.0[i][j] as f64)
+    }
+}
+
+/// Tiled, byte-budgeted distance matrix: entries live in a [`TileStore`]
+/// keyed by tile index (resident or spilled), planned by a [`TileGrid`].
+/// Built by [`compute::distance_tiled`].
+pub struct TiledDist {
+    grid: TileGrid,
+    store: Arc<TileStore>,
+}
+
+impl TiledDist {
+    pub fn new(grid: TileGrid, store: Arc<TileStore>) -> Self {
+        Self { grid, store }
+    }
+
+    pub fn grid(&self) -> &TileGrid {
+        &self.grid
+    }
+
+    /// Shared handle to the backing store — NJ reuses it (with keys
+    /// offset past `grid.num_tiles()`) for its merged-row working set so
+    /// one byte budget governs the whole tree build.
+    pub fn store_arc(&self) -> Arc<TileStore> {
+        self.store.clone()
+    }
+
+    pub fn peak_resident_bytes(&self) -> usize {
+        self.store.peak_resident_bytes()
+    }
+}
+
+impl DistSource for TiledDist {
+    fn num_taxa(&self) -> usize {
+        self.grid.num_taxa()
+    }
+
+    fn dist(&self, i: usize, j: usize) -> Result<f64> {
+        ensure!(i < self.num_taxa() && j < self.num_taxa(), "taxon out of range");
+        if i == j {
+            return Ok(0.0);
+        }
+        let (hi, lo) = if i > j { (i, j) } else { (j, i) };
+        let tile = self.grid.tile(self.grid.tile_for(hi, lo));
+        let data = self.store.get(tile.index as u64)?;
+        Ok(data[tile.entry_offset(hi, lo)])
+    }
+
+    fn stream_row(&self, i: usize, f: &mut dyn FnMut(usize, f64)) -> Result<()> {
+        ensure!(i < self.num_taxa(), "taxon out of range");
+        let rb = self.grid.block_of(i);
+        // j < end of i's block: row-side entries of tiles (rb, 0..=rb),
+        // ascending cb = ascending j (the diagonal tile stores its full
+        // rectangle, covering in-block j on both sides of i).
+        for cb in 0..=rb {
+            let tile = self.grid.tile(self.grid.tile_index(rb, cb));
+            let data = self.store.get(tile.index as u64)?;
+            for j in tile.col_lo..tile.col_hi {
+                if j != i {
+                    f(j, data[tile.entry_offset(i, j)]);
+                }
+            }
+        }
+        // j in later blocks: i is a *column* of tiles (rb2, rb),
+        // ascending rb2 = ascending j.
+        for rb2 in rb + 1..self.grid.num_row_blocks() {
+            let tile = self.grid.tile(self.grid.tile_index(rb2, rb));
+            let data = self.store.get(tile.index as u64)?;
+            for j in tile.row_lo..tile.row_hi {
+                f(j, data[tile.entry_offset(j, i)]);
+            }
+        }
+        Ok(())
+    }
+
+    fn row_stats(&self) -> Result<(Vec<f64>, Vec<f64>)> {
+        // One pass over tiles in index order.  For any row i this visits
+        // its entries in ascending-j order (row-side tiles (rb, cb) come
+        // in ascending cb, then column-side tiles (rb2, rb) in ascending
+        // rb2), so the f64 row sums match the dense reference bit for
+        // bit.
+        let n = self.num_taxa();
+        let mut sums = vec![0f64; n];
+        let mut mins = vec![f64::INFINITY; n];
+        for t in 0..self.grid.num_tiles() {
+            let tile = self.grid.tile(t);
+            let data = self.store.get(t as u64)?;
+            for i in tile.row_lo..tile.row_hi {
+                for j in tile.col_lo..tile.col_hi {
+                    if i == j {
+                        continue;
+                    }
+                    let v = data[tile.entry_offset(i, j)];
+                    sums[i] += v;
+                    mins[i] = mins[i].min(v);
+                    if !tile.is_diagonal() {
+                        // Cross tiles hold each pair once; credit the
+                        // column row's mirror entry here.
+                        sums[j] += v;
+                        mins[j] = mins[j].min(v);
+                    }
+                }
+            }
+        }
+        Ok((sums, mins))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dense(n: usize, seed: u64) -> Vec<Vec<f64>> {
+        let mut rng = crate::util::Rng::seed_from_u64(seed);
+        let mut d = vec![vec![0f64; n]; n];
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let v = 0.05 + rng.f64();
+                d[i][j] = v;
+                d[j][i] = v;
+            }
+        }
+        d
+    }
+
+    fn tiled_from_dense(d: &[Vec<f64>], tile_rows: usize) -> TiledDist {
+        let grid = TileGrid::new(d.len(), tile_rows);
+        let store = Arc::new(TileStore::in_memory());
+        for t in 0..grid.num_tiles() {
+            let tile = grid.tile(t);
+            let mut entries = Vec::with_capacity(tile.num_entries());
+            for i in tile.row_lo..tile.row_hi {
+                for j in tile.col_lo..tile.col_hi {
+                    entries.push(d[i][j]);
+                }
+            }
+            store.put(t as u64, entries).unwrap();
+        }
+        TiledDist::new(grid, store)
+    }
+
+    #[test]
+    fn dense_view_basics() {
+        let d = dense(6, 1);
+        let v = DenseView(&d);
+        assert_eq!(v.num_taxa(), 6);
+        assert_eq!(v.dist(2, 5).unwrap(), d[2][5]);
+        let (sums, mins) = v.row_stats().unwrap();
+        let want: f64 = (0..6).filter(|&j| j != 3).map(|j| d[3][j]).sum();
+        assert_eq!(sums[3], want);
+        assert!(mins.iter().all(|m| m.is_finite()));
+    }
+
+    #[test]
+    fn tiled_matches_dense_bitwise_across_tile_sizes() {
+        let d = dense(17, 2);
+        for tile_rows in [1usize, 2, 3, 5, 17, 100] {
+            let t = tiled_from_dense(&d, tile_rows);
+            let v = DenseView(&d);
+            for i in 0..17 {
+                for j in 0..17 {
+                    assert_eq!(
+                        t.dist(i, j).unwrap().to_bits(),
+                        v.dist(i, j).unwrap().to_bits(),
+                        "tile={tile_rows} ({i},{j})"
+                    );
+                }
+            }
+            let (ts, tm) = t.row_stats().unwrap();
+            let (ds, dm) = v.row_stats().unwrap();
+            for i in 0..17 {
+                assert_eq!(ts[i].to_bits(), ds[i].to_bits(), "tile={tile_rows} sum row {i}");
+                assert_eq!(tm[i].to_bits(), dm[i].to_bits(), "tile={tile_rows} min row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn stream_row_ascending_and_complete() {
+        let d = dense(11, 3);
+        let t = tiled_from_dense(&d, 4);
+        for i in 0..11 {
+            let mut seen = Vec::new();
+            t.stream_row(i, &mut |j, v| seen.push((j, v))).unwrap();
+            let want: Vec<(usize, f64)> =
+                (0..11).filter(|&j| j != i).map(|j| (j, d[i][j])).collect();
+            assert_eq!(seen, want, "row {i} must stream ascending and complete");
+        }
+    }
+}

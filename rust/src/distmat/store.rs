@@ -1,0 +1,316 @@
+//! Byte-budgeted store for f64 blobs (distance-matrix tiles and NJ
+//! merged-row working sets), with LRU spill-to-disk.
+//!
+//! Resident blobs live in a keyed map under a configurable byte budget;
+//! inserting past the budget evicts least-recently-used blobs to disk
+//! (one file per key, written with the engine's tmp+rename discipline so
+//! a speculative duplicate re-writing a tile can never be observed
+//! half-written).  `get` re-reads and re-admits spilled blobs.  All
+//! values roundtrip bit-exactly (`f64::to_le_bytes`), which is what lets
+//! the tiled NJ path promise bit-identical trees to the dense path.
+//!
+//! `put` *replaces* — the engine executes tile jobs at-least-once
+//! (speculation, retries, lineage recovery), and a duplicate execution
+//! re-putting its deterministic output must leave accounting unchanged.
+//!
+//! The peak-resident counter is the Fig-5-style headline: a tiled
+//! pipeline's peak stays `<= budget + one blob` instead of O(n²).
+
+use std::collections::{HashMap, HashSet};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, ensure, Context as _, Result};
+
+/// A resident blob plus the access tick the LRU eviction keys off.
+struct ResidentBlob {
+    data: Arc<Vec<f64>>,
+    last_access: u64,
+}
+
+struct StoreInner {
+    resident: HashMap<u64, ResidentBlob>,
+    /// Monotone access counter: `get`/`put` stamp blobs in O(1); only
+    /// eviction (rare) scans for the minimum stamp.  Keeps the hot
+    /// `dist(i, j)` path a hash lookup, not a queue rewrite.
+    tick: u64,
+    resident_bytes: usize,
+    /// Keys whose *current* bytes are already on disk (skip re-spill).
+    persisted: HashSet<u64>,
+    /// Per-key write generation, bumped by `put`: lets a `get` that read
+    /// the spill file outside the lock detect that a concurrent `put`
+    /// superseded those bytes, instead of re-admitting stale data.
+    versions: HashMap<u64, u64>,
+}
+
+impl StoreInner {
+    fn next_tick(&mut self) -> u64 {
+        self.tick += 1;
+        self.tick
+    }
+
+    /// Key of the least-recently-used resident blob.
+    fn coldest(&self) -> Option<u64> {
+        self.resident.iter().min_by_key(|(_, b)| b.last_access).map(|(&k, _)| k)
+    }
+}
+
+/// Spillable keyed blob store (see module docs).
+pub struct TileStore {
+    inner: Mutex<StoreInner>,
+    dir: Option<PathBuf>,
+    budget: usize,
+    peak: AtomicUsize,
+    spill_files: AtomicUsize,
+    spill_reads: AtomicUsize,
+}
+
+fn blob_bytes(data: &[f64]) -> usize {
+    data.len() * std::mem::size_of::<f64>()
+}
+
+impl TileStore {
+    /// Unbounded in-memory store (never spills; the dense-equivalent
+    /// working mode NJ uses when no spill directory is configured).
+    pub fn in_memory() -> Self {
+        Self::with_limits(None, usize::MAX)
+    }
+
+    /// Budgeted store spilling to `dir` (created if missing); the
+    /// directory is removed on drop.
+    pub fn spilling(dir: PathBuf, byte_budget: usize) -> Result<Self> {
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating tile spill dir {}", dir.display()))?;
+        Ok(Self::with_limits(Some(dir), byte_budget))
+    }
+
+    fn with_limits(dir: Option<PathBuf>, budget: usize) -> Self {
+        Self {
+            inner: Mutex::new(StoreInner {
+                resident: HashMap::new(),
+                tick: 0,
+                resident_bytes: 0,
+                persisted: HashSet::new(),
+                versions: HashMap::new(),
+            }),
+            dir,
+            budget,
+            peak: AtomicUsize::new(0),
+            spill_files: AtomicUsize::new(0),
+            spill_reads: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn byte_budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Bytes of blobs currently resident in memory.
+    pub fn resident_bytes(&self) -> usize {
+        self.inner.lock().unwrap().resident_bytes
+    }
+
+    /// High-water mark of resident bytes — bounded by
+    /// `byte_budget + largest blob`, never O(total blobs).
+    pub fn peak_resident_bytes(&self) -> usize {
+        self.peak.load(Ordering::Relaxed)
+    }
+
+    /// Spill files written (eviction count of not-yet-persisted blobs).
+    pub fn spill_files_written(&self) -> usize {
+        self.spill_files.load(Ordering::Relaxed)
+    }
+
+    /// Spilled blobs re-read from disk on `get`.
+    pub fn spill_reads(&self) -> usize {
+        self.spill_reads.load(Ordering::Relaxed)
+    }
+
+    fn blob_path(&self, key: u64) -> Option<PathBuf> {
+        self.dir.as_ref().map(|d| d.join(format!("blob-{key}.f64")))
+    }
+
+    /// Drop least-recently-used blobs (spilling unpersisted ones) until
+    /// the resident set fits the budget; always keeps the most recently
+    /// touched blob resident so the caller's working tile survives its
+    /// own insert.
+    fn evict_over_budget(&self, st: &mut StoreInner) -> Result<()> {
+        if self.dir.is_none() {
+            return Ok(()); // nowhere to spill: stay resident
+        }
+        while st.resident_bytes > self.budget && st.resident.len() > 1 {
+            let key = st.coldest().expect("resident non-empty");
+            let blob = st.resident.remove(&key).expect("coldest key is resident");
+            st.resident_bytes -= blob_bytes(&blob.data);
+            if !st.persisted.contains(&key) {
+                let path = self.blob_path(key).expect("spill dir checked above");
+                let mut bytes = Vec::with_capacity(blob_bytes(&blob.data));
+                for v in blob.data.iter() {
+                    bytes.extend_from_slice(&v.to_le_bytes());
+                }
+                crate::engine::shuffle::write_atomic(&path, &bytes)
+                    .with_context(|| format!("spilling {}", path.display()))?;
+                self.spill_files.fetch_add(1, Ordering::Relaxed);
+                st.persisted.insert(key);
+            }
+        }
+        Ok(())
+    }
+
+    fn admit(&self, st: &mut StoreInner, key: u64, data: Arc<Vec<f64>>) -> Result<()> {
+        let tick = st.next_tick();
+        let blob = ResidentBlob { data: data.clone(), last_access: tick };
+        if let Some(old) = st.resident.insert(key, blob) {
+            st.resident_bytes -= blob_bytes(&old.data);
+        }
+        st.resident_bytes += blob_bytes(&data);
+        self.peak.fetch_max(st.resident_bytes, Ordering::Relaxed);
+        self.evict_over_budget(st)
+    }
+
+    /// Insert (or replace) the blob for `key`.  Replacement releases the
+    /// old copy's accounting first, so at-least-once producers keep the
+    /// resident/peak numbers stable run to run.
+    pub fn put(&self, key: u64, data: Vec<f64>) -> Result<()> {
+        let mut st = self.inner.lock().unwrap();
+        // The new bytes supersede any spilled copy of an earlier
+        // execution; it will be re-spilled on the next eviction, and any
+        // in-flight disk read of the old bytes sees the version bump.
+        st.persisted.remove(&key);
+        *st.versions.entry(key).or_insert(0) += 1;
+        self.admit(&mut st, key, Arc::new(data))
+    }
+
+    /// Fetch the blob for `key`, re-reading (and re-admitting) a spilled
+    /// copy from disk when it is not resident.  Resident hits are O(1):
+    /// one hash lookup plus an access-tick stamp.  The disk read happens
+    /// outside the lock; if a concurrent `put` supersedes the key while
+    /// the read is in flight (version bump), the stale bytes are
+    /// discarded and the lookup retries.
+    pub fn get(&self, key: u64) -> Result<Arc<Vec<f64>>> {
+        loop {
+            let seen_version = {
+                let mut st = self.inner.lock().unwrap();
+                let tick = st.next_tick();
+                if let Some(blob) = st.resident.get_mut(&key) {
+                    blob.last_access = tick;
+                    return Ok(blob.data.clone());
+                }
+                st.versions.get(&key).copied().unwrap_or(0)
+            };
+            let path = self
+                .blob_path(key)
+                .ok_or_else(|| anyhow!("blob {key} missing from in-memory tile store"))?;
+            let bytes = std::fs::read(&path)
+                .with_context(|| format!("reading spilled blob {}", path.display()))?;
+            ensure!(bytes.len() % 8 == 0, "spilled blob {key} has ragged length {}", bytes.len());
+            let data: Vec<f64> = bytes
+                .chunks_exact(8)
+                .map(|c| f64::from_le_bytes(c.try_into().expect("chunk is 8 bytes")))
+                .collect();
+            self.spill_reads.fetch_add(1, Ordering::Relaxed);
+            let arc = Arc::new(data);
+            let mut st = self.inner.lock().unwrap();
+            if let Some(raced) = st.resident.get(&key) {
+                return Ok(raced.data.clone()); // another reader re-admitted it first
+            }
+            if st.versions.get(&key).copied().unwrap_or(0) != seen_version {
+                continue; // a put superseded the bytes we read: retry
+            }
+            self.admit(&mut st, key, arc.clone())?;
+            // The just-read bytes are exactly what is on disk.
+            st.persisted.insert(key);
+            return Ok(arc);
+        }
+    }
+}
+
+impl Drop for TileStore {
+    fn drop(&mut self) {
+        if let Some(dir) = &self.dir {
+            let _ = std::fs::remove_dir_all(dir);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("halign2-tilestore-{}-{tag}", std::process::id()))
+    }
+
+    #[test]
+    fn in_memory_roundtrip_and_peak() {
+        let s = TileStore::in_memory();
+        s.put(3, vec![1.5, -2.5]).unwrap();
+        s.put(9, vec![0.25]).unwrap();
+        assert_eq!(*s.get(3).unwrap(), vec![1.5, -2.5]);
+        assert_eq!(*s.get(9).unwrap(), vec![0.25]);
+        assert_eq!(s.resident_bytes(), 24);
+        assert_eq!(s.peak_resident_bytes(), 24);
+        assert_eq!(s.spill_files_written(), 0);
+        assert!(s.get(4).is_err(), "unknown key must error");
+    }
+
+    #[test]
+    fn replacement_keeps_accounting_stable() {
+        let s = TileStore::in_memory();
+        for _ in 0..5 {
+            s.put(7, vec![1.0; 100]).unwrap(); // at-least-once producer
+        }
+        assert_eq!(s.resident_bytes(), 800, "replace, don't accumulate");
+        assert_eq!(s.peak_resident_bytes(), 800);
+    }
+
+    #[test]
+    fn eviction_spills_and_get_rereads_bit_exact() {
+        let dir = tmpdir("spill");
+        let s = TileStore::spilling(dir.clone(), 3 * 80).unwrap();
+        let blob = |k: u64| -> Vec<f64> {
+            (0..10).map(|i| (k as f64) * 1e17 + i as f64 + 0.123).collect()
+        };
+        for k in 0..8u64 {
+            s.put(k, blob(k)).unwrap();
+        }
+        assert!(s.resident_bytes() <= 3 * 80, "budget enforced");
+        assert!(s.spill_files_written() >= 5, "older blobs spilled");
+        assert!(s.peak_resident_bytes() <= 3 * 80 + 80, "peak <= budget + one blob");
+        for k in 0..8u64 {
+            let got = s.get(k).unwrap();
+            let want = blob(k);
+            assert_eq!(got.len(), want.len());
+            for (a, b) in got.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits(), "key {k}: spill must be bit-exact");
+            }
+        }
+        assert!(s.spill_reads() >= 5, "spilled blobs were re-read");
+        drop(s);
+        assert!(!dir.exists(), "spill dir removed on drop");
+    }
+
+    #[test]
+    fn clean_eviction_does_not_rewrite_persisted_blobs() {
+        let dir = tmpdir("clean");
+        let s = TileStore::spilling(dir, 100).unwrap();
+        s.put(1, vec![1.0; 10]).unwrap();
+        s.put(2, vec![2.0; 10]).unwrap(); // evicts 1 (spill #1)
+        let w1 = s.spill_files_written();
+        s.get(1).unwrap(); // re-admit 1, evicts 2 (spill #2)
+        s.get(2).unwrap(); // re-admit 2, evicts 1 again — already persisted
+        assert_eq!(
+            s.spill_files_written(),
+            w1 + 1,
+            "a clean (persisted, unmodified) blob must not be re-written"
+        );
+    }
+
+    #[test]
+    fn no_spill_dir_means_budget_is_advisory() {
+        let s = TileStore::with_limits(None, 8);
+        s.put(1, vec![0.0; 64]).unwrap();
+        assert_eq!(*s.get(1).unwrap(), vec![0.0; 64], "stays resident with nowhere to spill");
+    }
+}

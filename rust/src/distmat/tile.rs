@@ -1,0 +1,226 @@
+//! Tile planner: partition the n×n lower-triangular distance matrix into
+//! fixed-size rectangular tiles, one stealable engine task each.
+//!
+//! Row indices 0..n are cut into contiguous *row blocks*; a tile is the
+//! rectangle (row block `rb`, col block `cb`) with `cb <= rb`, so the
+//! tile set covers exactly the lower triangle (diagonal tiles are square
+//! and store their full rectangle — both (i,j) and (j,i) — which wastes
+//! under half a diagonal tile but keeps the entry layout uniform).
+//!
+//! Block bounds use the same chunking formula as the engine's
+//! `parallelize` (`per = ceil(n / num_blocks)`), so an `Rdd` built with
+//! `parallelize(rows, grid.num_row_blocks())` has partition `b` equal to
+//! row block `b` — the property the tile compute pipeline relies on.
+
+/// One tile of the lower-triangular grid: a (row block, col block) pair
+/// with its element bounds.  Entries are row-major:
+/// `entry[(i - row_lo) * cols + (j - col_lo)] = d(i, j)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Tile {
+    pub index: usize,
+    pub row_block: usize,
+    pub col_block: usize,
+    pub row_lo: usize,
+    pub row_hi: usize,
+    pub col_lo: usize,
+    pub col_hi: usize,
+}
+
+impl Tile {
+    pub fn rows(&self) -> usize {
+        self.row_hi - self.row_lo
+    }
+
+    pub fn cols(&self) -> usize {
+        self.col_hi - self.col_lo
+    }
+
+    /// Number of f64 entries the tile stores.
+    pub fn num_entries(&self) -> usize {
+        self.rows() * self.cols()
+    }
+
+    pub fn is_diagonal(&self) -> bool {
+        self.row_block == self.col_block
+    }
+
+    /// Offset of global pair (i, j) within the tile's entry vector.
+    pub fn entry_offset(&self, i: usize, j: usize) -> usize {
+        debug_assert!(i >= self.row_lo && i < self.row_hi);
+        debug_assert!(j >= self.col_lo && j < self.col_hi);
+        (i - self.row_lo) * self.cols() + (j - self.col_lo)
+    }
+}
+
+use crate::util::triangle_coords;
+
+/// Plan of the tiled lower-triangular distance matrix for `n` taxa.
+#[derive(Debug, Clone)]
+pub struct TileGrid {
+    n: usize,
+    rows_per_block: usize,
+    num_blocks: usize,
+}
+
+impl TileGrid {
+    /// Plan a grid over `n` taxa with roughly `tile_rows` rows per block
+    /// (clamped to `1..=n`, then snapped to the engine's even-chunk
+    /// formula so blocks line up with `parallelize` partitions).
+    pub fn new(n: usize, tile_rows: usize) -> Self {
+        assert!(n > 0, "empty taxon set has no distance matrix");
+        let requested = tile_rows.clamp(1, n);
+        let nb = n.div_ceil(requested);
+        let rows_per_block = n.div_ceil(nb);
+        // ceil-division fix point: ceil(n / ceil(n / rows_per_block))
+        // equals rows_per_block, so this block count is self-consistent
+        // with the per-block size (and with `Rdd::from_vec` chunking).
+        let num_blocks = n.div_ceil(rows_per_block);
+        debug_assert_eq!(n.div_ceil(num_blocks), rows_per_block);
+        Self { n, rows_per_block, num_blocks }
+    }
+
+    pub fn num_taxa(&self) -> usize {
+        self.n
+    }
+
+    pub fn rows_per_block(&self) -> usize {
+        self.rows_per_block
+    }
+
+    pub fn num_row_blocks(&self) -> usize {
+        self.num_blocks
+    }
+
+    /// Total tile count: `nb * (nb + 1) / 2` (lower triangle + diagonal).
+    pub fn num_tiles(&self) -> usize {
+        self.num_blocks * (self.num_blocks + 1) / 2
+    }
+
+    pub fn block_of(&self, i: usize) -> usize {
+        debug_assert!(i < self.n);
+        i / self.rows_per_block
+    }
+
+    /// Element bounds `[lo, hi)` of row block `b`.
+    pub fn block_bounds(&self, b: usize) -> (usize, usize) {
+        debug_assert!(b < self.num_blocks);
+        (b * self.rows_per_block, ((b + 1) * self.rows_per_block).min(self.n))
+    }
+
+    /// Linear index of tile (row block, col block), `cb <= rb`.
+    pub fn tile_index(&self, rb: usize, cb: usize) -> usize {
+        debug_assert!(cb <= rb && rb < self.num_blocks);
+        rb * (rb + 1) / 2 + cb
+    }
+
+    /// The tile holding d(i, j) for `i >= j`.
+    pub fn tile_for(&self, i: usize, j: usize) -> usize {
+        debug_assert!(i >= j);
+        self.tile_index(self.block_of(i), self.block_of(j))
+    }
+
+    /// Decode a linear tile index into its block pair and bounds.
+    pub fn tile(&self, index: usize) -> Tile {
+        debug_assert!(index < self.num_tiles());
+        let (rb, cb) = triangle_coords(index);
+        let (row_lo, row_hi) = self.block_bounds(rb);
+        let (col_lo, col_hi) = self.block_bounds(cb);
+        Tile { index, row_block: rb, col_block: cb, row_lo, row_hi, col_lo, col_hi }
+    }
+
+    /// Bytes of the largest tile's entries — the granularity slack on top
+    /// of a `TileStore` byte budget.
+    pub fn max_tile_bytes(&self) -> usize {
+        self.rows_per_block * self.rows_per_block * std::mem::size_of::<f64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn triangle_coords_roundtrip() {
+        let mut idx = 0;
+        for rb in 0..60 {
+            for cb in 0..=rb {
+                assert_eq!(triangle_coords(idx), (rb, cb), "index {idx}");
+                idx += 1;
+            }
+        }
+    }
+
+    #[test]
+    fn blocks_cover_taxa_exactly_once() {
+        for n in [1usize, 2, 5, 9, 10, 17, 64, 101] {
+            for tile_rows in [1usize, 2, 3, 4, 7, 64, 1000] {
+                let g = TileGrid::new(n, tile_rows);
+                let mut covered = vec![0usize; n];
+                for b in 0..g.num_row_blocks() {
+                    let (lo, hi) = g.block_bounds(b);
+                    assert!(lo < hi, "n={n} tile={tile_rows}: empty block {b}");
+                    for i in lo..hi {
+                        covered[i] += 1;
+                        assert_eq!(g.block_of(i), b);
+                    }
+                }
+                assert!(covered.iter().all(|&c| c == 1), "n={n} tile={tile_rows}");
+            }
+        }
+    }
+
+    #[test]
+    fn tiles_cover_lower_triangle_exactly_once() {
+        let g = TileGrid::new(23, 5);
+        let n = g.num_taxa();
+        let mut covered = vec![vec![0usize; n]; n];
+        for t in 0..g.num_tiles() {
+            let tile = g.tile(t);
+            assert_eq!(tile.index, t);
+            for i in tile.row_lo..tile.row_hi {
+                for j in tile.col_lo..tile.col_hi {
+                    covered[i][j] += 1;
+                }
+            }
+        }
+        for i in 0..n {
+            for j in 0..n {
+                let expect = usize::from(g.block_of(i) >= g.block_of(j));
+                assert_eq!(covered[i][j], expect, "({i},{j})");
+            }
+        }
+        // Every lower-triangle pair i >= j is addressable.
+        for i in 0..n {
+            for j in 0..=i {
+                let tile = g.tile(g.tile_for(i, j));
+                let off = tile.entry_offset(i, j);
+                assert!(off < tile.num_entries());
+            }
+        }
+    }
+
+    #[test]
+    fn block_size_matches_parallelize_chunking() {
+        // The engine chunks `parallelize(v, parts)` as ceil(len/parts)
+        // per partition; the grid must agree for every shape.
+        for n in 1..200usize {
+            for tile_rows in 1..=n {
+                let g = TileGrid::new(n, tile_rows);
+                let per = n.div_ceil(g.num_row_blocks());
+                assert_eq!(
+                    per,
+                    g.rows_per_block(),
+                    "n={n} tile={tile_rows}: grid must match from_vec chunking"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tile_entry_layout_is_row_major() {
+        let g = TileGrid::new(10, 4);
+        let t = g.tile(g.tile_for(5, 1));
+        assert_eq!((t.row_block, t.col_block), (1, 0));
+        assert_eq!(t.entry_offset(5, 1), (5 - t.row_lo) * t.cols() + 1);
+    }
+}

@@ -81,6 +81,11 @@ pub struct IoCounters {
     pub shuffle_bytes_read: AtomicU64,
     pub spill_files: AtomicUsize,
     pub shuffles_executed: AtomicUsize,
+    /// Payload bytes actually decoded from checkpoint files.  With the
+    /// per-element offset index a tail slice decodes only its own range,
+    /// so this stays proportional to elements consumed, not file size
+    /// (regression hook for the seek-instead-of-prefix-decode path).
+    pub checkpoint_bytes_decoded: AtomicU64,
 }
 
 pub(crate) struct ClusterInner {

@@ -10,7 +10,10 @@
 //!   round-trip migrates many tasks instead of one), and `enqueue` /
 //!   `kill_worker` / shutdown coordinate through a small control block
 //!   (atomic liveness flags plus a wake-epoch condvar) instead of a
-//!   global lock.  This is the per-domain decomposition that keeps
+//!   global lock.  Past `steal_sample_threshold` workers the victim scan
+//!   itself becomes O(1): sampled two-choice probes replace the full
+//!   length-mirror sweep (the pre-park rescan stays exhaustive for
+//!   liveness).  This is the per-domain decomposition that keeps
 //!   scheduling cheap past ~12 workers.
 //! * **GlobalLock**: the original single `Mutex<SchedState>` scheduler,
 //!   kept as the A/B baseline for the Fig-6 sharded-vs-global scenario.
@@ -25,8 +28,9 @@
 //! Straggler mitigation: once a stage is past its speculation quantile
 //! (default 75% of tasks complete), tasks whose *execution* (measured
 //! from the worker-side start timestamp, not from enqueue — queue wait
-//! must not inflate the average task duration) has run much longer than
-//! the average completed task are re-submitted as speculative duplicates
+//! must not inflate the average task duration) has outrun the stage's
+//! variance-derived deadline (mean + k·stddev of completed execution
+//! times, floored at 100ms) are re-submitted as speculative duplicates
 //! on another node; the first completion wins and the duplicate's result
 //! is discarded.  Task closures therefore run with *at-least-once*
 //! semantics and must be idempotent — every engine task is (they
@@ -76,6 +80,15 @@ pub struct ExecutorOptions {
     pub speculation_quantile: f64,
     /// Stages smaller than this never speculate.
     pub speculation_min_tasks: usize,
+    /// Straggler deadline = mean + `speculation_sigma` · stddev of the
+    /// stage's completed execution times (floored at 100ms), so tight
+    /// stages duplicate aggressively and naturally-spread stages don't.
+    pub speculation_sigma: f64,
+    /// Sharded mode: above this worker count, steal victims are picked
+    /// by sampled two-choice (O(1) probes) instead of the O(workers)
+    /// length-mirror scan; the pre-park rescan always runs the full scan
+    /// so a sampled miss can never strand queued work.
+    pub steal_sample_threshold: usize,
     /// Queue architecture (sharded deques vs single global mutex).
     pub mode: SchedulerMode,
 }
@@ -87,9 +100,29 @@ impl Default for ExecutorOptions {
             speculation: true,
             speculation_quantile: 0.75,
             speculation_min_tasks: 4,
+            speculation_sigma: 3.0,
+            steal_sample_threshold: 128,
             mode: SchedulerMode::Sharded,
         }
     }
+}
+
+use crate::util::hash::splitmix64;
+
+/// Per-stage adaptive straggler deadline: mean + `sigma` · stddev of
+/// completed worker-side execution nanos, floored at 100ms.  A stage of
+/// uniform durations gets a deadline barely above its mean (any real
+/// straggler is duplicated fast); a stage with genuine duration spread
+/// (bimodal workloads) widens its own deadline so the natural slow half
+/// is not pointlessly duplicated.
+fn variance_deadline(sum_nanos: u64, sum_sq_nanos: f64, count: usize, sigma: f64) -> u64 {
+    const FLOOR_NANOS: u64 = 100_000_000;
+    if count == 0 {
+        return FLOOR_NANOS;
+    }
+    let mean = sum_nanos as f64 / count as f64;
+    let var = (sum_sq_nanos / count as f64 - mean * mean).max(0.0);
+    ((mean + sigma * var.sqrt()) as u64).max(FLOOR_NANOS)
 }
 
 /// Per-worker counters (busy nanos, tasks run, failures injected, tasks
@@ -258,10 +291,14 @@ struct ShardedQueues {
     /// Serializes kills so "never kill the last alive worker" is atomic.
     kill_lock: Mutex<()>,
     steal: bool,
+    /// Worker counts above this use sampled two-choice victim selection.
+    sample_above: usize,
+    /// Monotone counter feeding the victim-sampling hash.
+    steal_tick: AtomicU64,
 }
 
 impl ShardedQueues {
-    fn new(workers: usize, steal: bool) -> Self {
+    fn new(workers: usize, steal: bool, sample_above: usize) -> Self {
         Self {
             shards: (0..workers)
                 .map(|_| Shard { deque: Mutex::new(VecDeque::new()), len: AtomicUsize::new(0) })
@@ -272,6 +309,8 @@ impl ShardedQueues {
             cv: Condvar::new(),
             kill_lock: Mutex::new(()),
             steal,
+            sample_above,
+            steal_tick: AtomicU64::new(0),
         }
     }
 
@@ -313,11 +352,19 @@ impl ShardedQueues {
         job
     }
 
-    /// Steal the back half of the busiest peer's deque in one batch: one
-    /// lock round-trip migrates ~half the victim's queue instead of a
-    /// single task.  Returns the first stolen job to run now; the rest are
-    /// appended to the thief's own deque (where peers may steal-chain).
-    fn steal_half(&self, w: usize, m: &WorkerMetrics) -> Option<Job> {
+    /// Steal the back half of a peer's deque in one batch: one lock
+    /// round-trip migrates ~half the victim's queue instead of a single
+    /// task.  Victim selection is the busiest-shard scan of the length
+    /// mirrors — O(workers) per steal — unless the worker count exceeds
+    /// `sample_above` and this is not a `thorough` attempt, in which case
+    /// two deterministic pseudo-random shards are probed and the longer
+    /// one wins (power-of-two-choices).  A sampled probe can miss the
+    /// only non-empty shard; callers therefore pass `thorough = true` on
+    /// the final pre-park rescan so queued work is never stranded behind
+    /// a sampling miss.  Returns the first stolen job to run now; the
+    /// rest are appended to the thief's own deque (where peers may
+    /// steal-chain).
+    fn steal_half(&self, w: usize, m: &WorkerMetrics, thorough: bool) -> Option<Job> {
         if !self.alive[w].load(Ordering::SeqCst) {
             // Killed since the caller's liveness check: don't take on new
             // work.  A kill racing past this check is still benign — the
@@ -325,9 +372,24 @@ impl ShardedQueues {
             // steal victims, so any jobs parked there get re-stolen.
             return None;
         }
-        let victim = (0..self.shards.len())
-            .filter(|&v| v != w && self.shards[v].len.load(Ordering::Relaxed) > 0)
-            .max_by_key(|&v| self.shards[v].len.load(Ordering::Relaxed))?;
+        let nb = self.shards.len();
+        let load = |v: usize| self.shards[v].len.load(Ordering::Relaxed);
+        let victim = if !thorough && nb > self.sample_above {
+            let tick = self.steal_tick.fetch_add(1, Ordering::Relaxed);
+            let h = splitmix64(((w as u64) << 32) ^ tick);
+            let c0 = (h % nb as u64) as usize;
+            let c1 = ((h >> 32) % nb as u64) as usize;
+            let ok = |v: usize| v != w && load(v) > 0;
+            match (ok(c0), ok(c1)) {
+                (true, true) => Some(if load(c0) >= load(c1) { c0 } else { c1 }),
+                (true, false) => Some(c0),
+                (false, true) => Some(c1),
+                (false, false) => None,
+            }
+        } else {
+            (0..nb).filter(|&v| v != w && load(v) > 0).max_by_key(|&v| load(v))
+        };
+        let victim = victim?;
         let mut batch = {
             let mut vq = self.lock_shard(victim, Some(m));
             let n = vq.len();
@@ -363,20 +425,22 @@ impl ShardedQueues {
                 return Some(job);
             }
             if self.steal {
-                if let Some(job) = self.steal_half(w, m) {
+                if let Some(job) = self.steal_half(w, m, false) {
                     return Some(job);
                 }
             }
             // Idle path: snapshot the wake epoch, rescan once (an enqueue
             // that bumped the epoch before our snapshot also finished its
             // push before it — the epoch mutex orders the two), then park
-            // until the epoch moves.
+            // until the epoch moves.  The rescan steal is `thorough`
+            // (full victim scan even above the sampling threshold): a
+            // worker must never park behind a two-choice sampling miss.
             let seen = *self.epoch.lock().unwrap();
             if let Some(job) = self.pop_own(w, m) {
                 return Some(job);
             }
             if self.steal {
-                if let Some(job) = self.steal_half(w, m) {
+                if let Some(job) = self.steal_half(w, m, true) {
                     return Some(job);
                 }
             }
@@ -521,6 +585,9 @@ pub struct Executor {
     /// quantity the speculation deadline is derived from (regression
     /// hook: queue wait must never leak into it).
     last_stage_avg_exec_nanos: AtomicU64,
+    /// Most recent variance-derived straggler deadline (regression hook
+    /// for the mean + k·stddev formula).
+    last_stage_deadline_nanos: AtomicU64,
 }
 
 fn worker_loop(w: usize, shared: Arc<Shared>) {
@@ -538,9 +605,11 @@ impl Executor {
     pub fn with_options(num_workers: usize, fault: FaultPlan, opts: ExecutorOptions) -> Self {
         assert!(num_workers > 0);
         let queues = match opts.mode {
-            SchedulerMode::Sharded => {
-                Queues::Sharded(ShardedQueues::new(num_workers, opts.work_stealing))
-            }
+            SchedulerMode::Sharded => Queues::Sharded(ShardedQueues::new(
+                num_workers,
+                opts.work_stealing,
+                opts.steal_sample_threshold,
+            )),
             SchedulerMode::GlobalLock => {
                 Queues::Global(GlobalQueues::new(num_workers, opts.work_stealing))
             }
@@ -565,6 +634,7 @@ impl Executor {
             opts,
             task_counter: AtomicUsize::new(0),
             last_stage_avg_exec_nanos: AtomicU64::new(0),
+            last_stage_deadline_nanos: AtomicU64::new(0),
         }
     }
 
@@ -585,6 +655,13 @@ impl Executor {
     /// wait by construction — the speculation deadline derives from it.
     pub fn last_stage_avg_task_nanos(&self) -> u64 {
         self.last_stage_avg_exec_nanos.load(Ordering::Relaxed)
+    }
+
+    /// The variance-derived straggler deadline (mean + k·stddev, floored
+    /// at 100ms) most recently used by a speculation scan — 0 when no
+    /// stage has crossed its speculation quantile yet.
+    pub fn last_stage_speculation_deadline_nanos(&self) -> u64 {
+        self.last_stage_deadline_nanos.load(Ordering::Relaxed)
     }
 
     pub fn total_busy(&self) -> Duration {
@@ -725,6 +802,10 @@ impl Executor {
         let spec_threshold = spec_threshold.clamp(1, num_tasks);
         let mut done_count = 0usize;
         let mut sum_done_nanos = 0u64;
+        // Sum of squared execution nanos (f64: squares overflow u64) —
+        // feeds the per-stage variance the straggler deadline derives
+        // from.
+        let mut sum_sq_done_nanos = 0f64;
         // Straggler candidates, built lazily when the stage first crosses
         // the speculation quantile (so the scan is bounded by the tail of
         // the stage, not by num_tasks).
@@ -755,6 +836,7 @@ impl Executor {
                             // Execution time only — a deep queue must not
                             // stretch the deadline that gates duplicates.
                             sum_done_nanos += exec_nanos;
+                            sum_sq_done_nanos += (exec_nanos as f64) * (exec_nanos as f64);
                         }
                         Err(e) => {
                             if speculative {
@@ -787,8 +869,15 @@ impl Executor {
                         .filter(|&t| !completed[t].load(Ordering::Acquire))
                         .collect()
                 });
-                let avg = sum_done_nanos / done_count.max(1) as u64;
-                let deadline_nanos = (4 * avg).max(100_000_000);
+                // Adaptive deadline from the stage's own duration
+                // distribution, not a static multiple of the mean.
+                let deadline_nanos = variance_deadline(
+                    sum_done_nanos,
+                    sum_sq_done_nanos,
+                    done_count,
+                    self.opts.speculation_sigma,
+                );
+                self.last_stage_deadline_nanos.store(deadline_nanos, Ordering::Relaxed);
                 let now = stage_epoch.elapsed().as_nanos() as u64;
                 let mut still_waiting = Vec::with_capacity(candidates.len());
                 for &t in candidates.iter() {
@@ -1199,11 +1288,18 @@ mod tests {
 
     #[test]
     fn sharded_and_global_agree_at_scale() {
-        // 32 workers x 2000 tasks, speculation off: both queue
-        // architectures must run every task exactly once and produce
-        // identical per-slot results.
-        let run = |mode: SchedulerMode| {
-            let opts = ExecutorOptions { mode, speculation: false, ..Default::default() };
+        // 32 workers x 2000 tasks, speculation off: every queue
+        // architecture — global mutex, sharded with the full victim
+        // scan, and sharded with sampled two-choice victim picks
+        // (threshold 1 forces sampling at 32 workers) — must run every
+        // task exactly once and produce identical per-slot results.
+        let run = |mode: SchedulerMode, steal_sample_threshold: usize| {
+            let opts = ExecutorOptions {
+                mode,
+                speculation: false,
+                steal_sample_threshold,
+                ..Default::default()
+            };
             let ex = Executor::with_options(32, FaultPlan::none(), opts);
             let slots: Arc<Vec<AtomicUsize>> =
                 Arc::new((0..2000).map(|_| AtomicUsize::new(0)).collect());
@@ -1215,12 +1311,105 @@ mod tests {
             .unwrap();
             slots.iter().map(|s| s.load(Ordering::SeqCst)).collect::<Vec<_>>()
         };
-        let sharded = run(SchedulerMode::Sharded);
-        let global = run(SchedulerMode::GlobalLock);
+        let sharded = run(SchedulerMode::Sharded, 128); // below threshold: full scan
+        let sampled = run(SchedulerMode::Sharded, 1); // above threshold: two-choice
+        let global = run(SchedulerMode::GlobalLock, 128);
         assert_eq!(sharded, global, "queue architecture must not change results");
+        assert_eq!(sampled, global, "sampled victim selection must not change results");
         for (t, &v) in sharded.iter().enumerate() {
             assert_eq!(v, 1 + t * t, "task {t} must run exactly once");
         }
+    }
+
+    #[test]
+    fn sampled_stealing_still_drains_a_single_hot_deque() {
+        // Threshold 1 forces two-choice sampling on 4 workers.  Worker
+        // 0's first task blocks until every peer task has run; the tasks
+        // queued behind it can only finish if sampled (or thorough
+        // pre-park) steals migrate them — a sampling miss must park and
+        // retry, never strand the stage.
+        let opts = ExecutorOptions {
+            speculation: false,
+            steal_sample_threshold: 1,
+            ..Default::default()
+        };
+        let ex = Executor::with_options(4, FaultPlan::none(), opts);
+        let sync = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let s = sync.clone();
+        ex.run_tasks(20, 0, move |task| {
+            let (count, cv) = &*s;
+            if task == 0 {
+                let done = count.lock().unwrap();
+                let (done, timeout) = cv
+                    .wait_timeout_while(done, Duration::from_secs(20), |c| *c < 19)
+                    .unwrap();
+                anyhow::ensure!(
+                    !timeout.timed_out(),
+                    "only {} of 19 peer tasks ran: sampled stealing stranded the deque",
+                    *done
+                );
+            } else {
+                *count.lock().unwrap() += 1;
+                cv.notify_all();
+            }
+            Ok(())
+        })
+        .unwrap();
+        let stolen: usize = ex.metrics().iter().map(|m| m.steals.load(Ordering::SeqCst)).sum();
+        assert!(stolen >= 4, "worker 0's queued tasks must have been stolen (got {stolen})");
+    }
+
+    #[test]
+    fn variance_deadline_tracks_bimodal_spread() {
+        let floor = 100_000_000u64;
+        // Empty stage: floor.
+        assert_eq!(variance_deadline(0, 0.0, 0, 3.0), floor);
+        // Uniform 200ms stage: zero variance, deadline collapses to the
+        // mean — a real straggler is duplicated after ~1x the mean, not
+        // the old static 4x.
+        let uni = vec![200_000_000u64; 20];
+        let sum: u64 = uni.iter().sum();
+        let sq: f64 = uni.iter().map(|&v| (v as f64) * (v as f64)).sum();
+        let d_uni = variance_deadline(sum, sq, uni.len(), 3.0);
+        assert!(
+            (200_000_000..=201_000_000).contains(&d_uni),
+            "uniform stage deadline must sit at its mean (got {d_uni})"
+        );
+        // Synthetic bimodal stage (10x 5ms + 10x 500ms): mean 252.5ms,
+        // stddev 247.5ms -> deadline ~995ms, so the natural slow half is
+        // not flagged as straggling.
+        let bi: Vec<u64> = [vec![5_000_000u64; 10], vec![500_000_000u64; 10]].concat();
+        let sum: u64 = bi.iter().sum();
+        let sq: f64 = bi.iter().map(|&v| (v as f64) * (v as f64)).sum();
+        let d_bi = variance_deadline(sum, sq, bi.len(), 3.0);
+        assert!(
+            (900_000_000..=1_100_000_000).contains(&d_bi),
+            "bimodal deadline must be mean + 3 sigma (got {d_bi})"
+        );
+        assert!(d_bi > 3 * d_uni, "spread must widen the deadline, uniformity must not");
+        // Sub-floor stages clamp up.
+        assert_eq!(variance_deadline(10_000, 100.0 * 100.0, 1, 3.0), floor);
+    }
+
+    #[test]
+    fn bimodal_stage_records_variance_deadline() {
+        // Stage with real duration spread: 2 slow tasks (150ms) + 14
+        // fast (1ms) on 2 workers.  By the last speculation scan the
+        // completed set contains at least one slow task, so the recorded
+        // variance deadline must sit strictly above the 100ms floor —
+        // the old static `4 * avg` formula is gone.
+        let ex = Executor::with_options(2, FaultPlan::none(), ExecutorOptions::default());
+        ex.run_tasks(16, 0, |task| {
+            std::thread::sleep(Duration::from_millis(if task < 2 { 150 } else { 1 }));
+            Ok(())
+        })
+        .unwrap();
+        let deadline = ex.last_stage_speculation_deadline_nanos();
+        assert!(deadline > 0, "a speculation scan must have run past the quantile");
+        assert!(
+            deadline > 100_000_000,
+            "a bimodal stage's deadline must exceed the floor (got {deadline}ns)"
+        );
     }
 
     #[test]

@@ -1,11 +1,16 @@
-//! The mini-Spark substrate: lazy RDDs with slice-aware lineage, a
-//! DAG-cut scheduler, a sharded work-stealing worker executor (per-worker
-//! deques, steal-half batching, control-block coordination — plus a
-//! global-mutex baseline for A/B) with speculative straggler
+//! The mini-Spark substrate: lazy RDDs with slice-aware lineage and
+//! pairwise block-job primitives (`cartesian_blocks` /
+//! `lower_triangle_blocks`, the distmat tile scheduler), a DAG-cut
+//! scheduler, a sharded work-stealing worker executor (per-worker
+//! deques, steal-half batching, sampled two-choice victim picks at high
+//! worker counts, control-block coordination — plus a global-mutex
+//! baseline for A/B) with variance-deadline speculative straggler
 //! re-execution, swappable shuffle backends (in-memory Spark vs disk
-//! key-value Hadoop), broadcast variables, per-worker memory accounting,
-//! and deterministic fault injection (task failures and worker kills,
-//! which drain the dead node's deque back into the steal pool).
+//! key-value Hadoop) and offset-indexed checkpoint files (slices seek,
+//! not prefix-decode), broadcast variables, per-worker memory
+//! accounting, and deterministic fault injection (task failures and
+//! worker kills, which drain the dead node's deque back into the steal
+//! pool).
 //!
 //! See DESIGN.md §4 for how each piece maps onto the paper's system.
 

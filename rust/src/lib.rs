@@ -36,8 +36,26 @@
 //!                 for the paper's mito-genome / 16S rRNA / BAliBASE data.
 //! * [`align`]   — center-star MSA: trie, pairwise DP, space merging,
 //!                 SP scoring, the DNA and protein pipelines.
-//! * [`tree`]    — distances, sampling clustering, neighbor-joining, tree
-//!                 merge, Newick, JC69 likelihood.
+//! * [`distmat`] — distributed tiled distance matrices: a `TileGrid`
+//!                 plans the n×n lower triangle as fixed-size tiles, each
+//!                 one stealable engine job (via the
+//!                 `Rdd::lower_triangle_blocks` pairwise-block
+//!                 primitive); a byte-budgeted `TileStore` keeps
+//!                 completed tiles resident up to a budget and spills the
+//!                 rest (tmp+rename, bit-exact); the `DistSource` trait
+//!                 (`dist`, `row_mins`/`row_stats`, `stream_row`)
+//!                 abstracts dense-in-memory vs tiled-on-disk backends.
+//!                 Tile jobs are idempotent (deterministic entries,
+//!                 replace-on-put), so the executor's at-least-once
+//!                 writes — speculation, retries, kill-recovery — apply
+//!                 unchanged.  Knobs: `DistMatConfig { tile_rows,
+//!                 byte_budget, kind }`, `DistBackend` on `TreeConfig`.
+//! * [`tree`]    — distances, sampling clustering, neighbor-joining over
+//!                 any `DistSource` (rapid-NJ-style row-min pruning;
+//!                 merged-row working set spills through the same
+//!                 `TileStore`, making million-pair trees buildable in
+//!                 O(tile) resident memory, bit-identical to the dense
+//!                 path), tree merge, Newick, JC69 likelihood.
 //! * [`baselines`] — HAlign-v1 (Hadoop mode), SparkSW, MUSCLE/MAFFT-like
 //!                 progressive, IQ-TREE-like ML search.
 //! * [`runtime`] — PJRT service + shape-bucket batcher over the artifacts.
@@ -49,6 +67,7 @@ pub mod align;
 pub mod baselines;
 pub mod bench;
 pub mod data;
+pub mod distmat;
 pub mod engine;
 pub mod fasta;
 pub mod metrics;

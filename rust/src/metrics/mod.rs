@@ -32,6 +32,9 @@ pub struct RunReport {
     pub lock_contentions: Option<usize>,
     /// Speculative straggler duplicates launched.
     pub speculative_launches: Option<usize>,
+    /// Peak resident distance-matrix MB (tree rows: dense = O(n²) in the
+    /// largest cluster, tiled = bounded by the distmat byte budget).
+    pub distmat_peak_mb: Option<f64>,
     /// "-" rows: tool did not finish (OOM / unsupported / over budget).
     pub dnf: Option<String>,
 }
@@ -52,6 +55,7 @@ impl RunReport {
             steal_batches: None,
             lock_contentions: None,
             speculative_launches: None,
+            distmat_peak_mb: None,
             dnf: Some(reason.into()),
         }
     }
@@ -118,13 +122,13 @@ pub fn print_table(title: &str, reports: &[RunReport]) {
 
 /// Column names matching [`tsv_line`]'s fields — keep the two in sync
 /// here so every TSV emitter prints the same header.
-pub const TSV_HEADER: &str = "tool\tdataset\twall_s\tbusy_s\tmetric\tavg_max_mem_mb\tbusy_skew\tstolen\tsteal_batches\tlock_contention\tspeculative\tstatus";
+pub const TSV_HEADER: &str = "tool\tdataset\twall_s\tbusy_s\tmetric\tavg_max_mem_mb\tbusy_skew\tstolen\tsteal_batches\tlock_contention\tspeculative\tdistmat_peak_mb\tstatus";
 
 /// Machine-readable one-line record (appended to bench logs); fields as
 /// in [`TSV_HEADER`].
 pub fn tsv_line(r: &RunReport) -> String {
     format!(
-        "{}\t{}\t{:.3}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}",
+        "{}\t{}\t{:.3}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}",
         r.tool,
         r.dataset,
         r.wall.as_secs_f64(),
@@ -136,6 +140,7 @@ pub fn tsv_line(r: &RunReport) -> String {
         r.steal_batches.map(|s| s.to_string()).unwrap_or_else(|| "-".into()),
         r.lock_contentions.map(|s| s.to_string()).unwrap_or_else(|| "-".into()),
         r.speculative_launches.map(|s| s.to_string()).unwrap_or_else(|| "-".into()),
+        r.distmat_peak_mb.map(|m| format!("{m:.4}")).unwrap_or_else(|| "-".into()),
         r.dnf.clone().unwrap_or_else(|| "ok".into()),
     )
 }
@@ -145,7 +150,7 @@ mod tests {
     use super::*;
 
     #[test]
-    fn tsv_has_twelve_fields() {
+    fn tsv_has_thirteen_fields() {
         let r = RunReport {
             tool: "halign2".into(),
             dataset: "dna1x".into(),
@@ -160,12 +165,15 @@ mod tests {
             steal_batches: Some(3),
             lock_contentions: Some(2),
             speculative_launches: Some(1),
+            distmat_peak_mb: Some(0.0625),
             dnf: None,
         };
         let line = tsv_line(&r);
-        assert_eq!(line.split('\t').count(), 12);
-        assert_eq!(TSV_HEADER.split('\t').count(), 12, "header matches row arity");
+        assert_eq!(line.split('\t').count(), 13);
+        assert_eq!(TSV_HEADER.split('\t').count(), 13, "header matches row arity");
         assert!(line.contains("1.250"));
+        assert!(line.contains("0.0625"), "distmat peak column must render");
+        assert!(TSV_HEADER.contains("distmat_peak_mb"));
     }
 
     #[test]

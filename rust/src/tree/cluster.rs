@@ -13,6 +13,7 @@
 use anyhow::{ensure, Result};
 
 use super::distance::{kmer_distance_matrix, kmer_profile};
+use crate::distmat::{DenseF32, DistSource};
 use crate::engine::Cluster as Engine;
 use crate::fasta::Sequence;
 use crate::runtime::XlaService;
@@ -72,12 +73,18 @@ impl Clustering {
     }
 }
 
-/// Farthest-point medoid selection over a distance matrix.
-fn k_center(dist: &[Vec<f32>], k: usize, rng: &mut Rng) -> Vec<usize> {
-    let n = dist.len();
+/// Farthest-point medoid selection over any [`DistSource`] backend
+/// (dense k-mer matrices today; a tiled source drops in unchanged).
+/// `f32 -> f64` promotion is exact and order-preserving, so this picks
+/// the same medoids the raw-f32 scan did.
+fn k_center(dist: &dyn DistSource, k: usize, rng: &mut Rng) -> Result<Vec<usize>> {
+    let n = dist.num_taxa();
     let k = k.min(n).max(1);
     let mut medoids = vec![rng.below(n)];
-    let mut mind: Vec<f32> = dist[medoids[0]].clone();
+    let mut mind = Vec::with_capacity(n);
+    for i in 0..n {
+        mind.push(dist.dist(medoids[0], i)?);
+    }
     while medoids.len() < k {
         let (far, _) = mind
             .iter()
@@ -88,11 +95,11 @@ fn k_center(dist: &[Vec<f32>], k: usize, rng: &mut Rng) -> Vec<usize> {
             break; // no more distinct points
         }
         medoids.push(far);
-        for i in 0..n {
-            mind[i] = mind[i].min(dist[far][i]);
+        for (i, m) in mind.iter_mut().enumerate() {
+            *m = m.min(dist.dist(far, i)?);
         }
     }
-    medoids
+    Ok(medoids)
 }
 
 /// Distributed clustering of `seqs` (gaps in rows are ignored by the
@@ -125,7 +132,7 @@ pub fn cluster_sequences(
         .map(|&i| kmer_profile(&seqs[i].codes, cfg.k, cfg.profile_dim, gap))
         .collect();
     let sample_dist = kmer_distance_matrix(&sample_profiles, svc)?;
-    let medoid_sample_idx = k_center(&sample_dist, target_clusters, &mut rng);
+    let medoid_sample_idx = k_center(&DenseF32(&sample_dist), target_clusters, &mut rng)?;
     let medoids: Vec<usize> = medoid_sample_idx.iter().map(|&s| sample[s]).collect();
 
     // --- Distributed assignment: nearest medoid per sequence --------------

@@ -147,6 +147,7 @@ mod tests {
             None,
             &TreeConfig {
                 clustering: ClusterConfig { num_clusters: 1, max_cluster_size: 999, ..Default::default() },
+                ..Default::default()
             },
         )
         .unwrap();
@@ -156,6 +157,7 @@ mod tests {
             None,
             &TreeConfig {
                 clustering: ClusterConfig { max_cluster_size: 8, ..Default::default() },
+                ..Default::default()
             },
         )
         .unwrap();

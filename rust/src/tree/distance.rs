@@ -36,22 +36,51 @@ pub fn kmer_profile(codes: &[u8], k: usize, dim: usize, gap: u8) -> Vec<f32> {
     profile
 }
 
+/// Squared-euclidean distance of one profile pair — the shared kernel
+/// both the dense matrix below and the distmat k-mer tile jobs call, so
+/// the two backends are bit-identical by construction.  Exactly
+/// symmetric in its arguments.
+pub fn kmer_sqdist_pair(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
 /// Squared-euclidean distances between k-mer profiles (native).
 pub fn kmer_distance_native(profiles: &[Vec<f32>]) -> Vec<Vec<f32>> {
     let n = profiles.len();
     let mut d = vec![vec![0f32; n]; n];
     for i in 0..n {
         for j in (i + 1)..n {
-            let s: f32 = profiles[i]
-                .iter()
-                .zip(&profiles[j])
-                .map(|(a, b)| (a - b) * (a - b))
-                .sum();
+            let s = kmer_sqdist_pair(&profiles[i], &profiles[j]);
             d[i][j] = s;
             d[j][i] = s;
         }
     }
     d
+}
+
+/// p-distance of one aligned row pair (columns where either side is a
+/// gap are skipped; an all-gap overlap counts as distance 0).  The
+/// shared kernel of [`pdistance_native`] and the distmat p-distance tile
+/// jobs — keeping it in one place is what makes the tiled backend
+/// bit-identical to the dense path.  Exactly symmetric in its
+/// arguments.
+pub fn pdist_pair(a: &[u8], b: &[u8], gap: u8) -> f64 {
+    debug_assert_eq!(a.len(), b.len(), "rows must be aligned");
+    let (mut compared, mut mismatch) = (0u64, 0u64);
+    for (x, y) in a.iter().zip(b) {
+        if *x == gap || *y == gap {
+            continue;
+        }
+        compared += 1;
+        if x != y {
+            mismatch += 1;
+        }
+    }
+    if compared == 0 {
+        0.0
+    } else {
+        mismatch as f64 / compared as f64
+    }
 }
 
 /// Squared-euclidean k-mer distances, XLA-batched when possible.
@@ -84,18 +113,7 @@ pub fn pdistance_native(rows: &[Sequence]) -> Result<Vec<Vec<f64>>> {
     ensure!(rows.iter().all(|r| r.len() == width), "rows must be aligned");
     for i in 0..n {
         for j in (i + 1)..n {
-            let (mut compared, mut mismatch) = (0u64, 0u64);
-            for k in 0..width {
-                let (a, b) = (rows[i].codes[k], rows[j].codes[k]);
-                if a == gap || b == gap {
-                    continue;
-                }
-                compared += 1;
-                if a != b {
-                    mismatch += 1;
-                }
-            }
-            let p = if compared == 0 { 0.0 } else { mismatch as f64 / compared as f64 };
+            let p = pdist_pair(&rows[i].codes, &rows[j].codes, gap);
             d[i][j] = p;
             d[j][i] = p;
         }

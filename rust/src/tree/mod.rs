@@ -1,7 +1,19 @@
 //! Phylogenetic tree reconstruction (paper §NJ method, Fig. 4):
-//! sampling-based clustering → per-cluster NJ trees built in parallel on
-//! the engine → merge into the final evolution tree; quality evaluated as
-//! the JC69 log maximum-likelihood value of the result.
+//! sampling-based clustering → per-cluster NJ trees built on the engine
+//! → merge into the final evolution tree; quality evaluated as the JC69
+//! log maximum-likelihood value of the result.
+//!
+//! Two distance backends (selected by [`TreeConfig::distmat`]):
+//!
+//! * [`DistBackend::Dense`] — each cluster task materializes its dense
+//!   p-distance matrix locally and runs NJ over it; clusters are the
+//!   parallel unit (the original HAlign-II shape).
+//! * [`DistBackend::Tiled`] — each cluster's matrix is computed as
+//!   engine-scheduled *tiles* ([`crate::distmat`]) consumed out-of-core;
+//!   tiles are the parallel unit and resident distance-matrix memory is
+//!   bounded by the byte budget, not O(n²).  Produces bit-identical
+//!   trees to the dense backend (shared per-pair kernels + the same NJ
+//!   code over a `DistSource`; property-tested).
 
 pub mod cluster;
 pub mod compare;
@@ -13,17 +25,25 @@ pub mod nj;
 
 use anyhow::{Context as _, Result};
 
+use crate::distmat::{self, DistBackend, DistKind, DistMatConfig};
 use crate::engine::Cluster as Engine;
 use crate::fasta::Sequence;
 use crate::runtime::XlaService;
 
 pub use cluster::{cluster_sequences, ClusterConfig, Clustering};
 pub use newick::Tree;
-pub use nj::neighbor_joining;
+pub use nj::{neighbor_joining, neighbor_joining_src, NjConfig};
+
+/// Distance-matrix options for the tree pipeline.
+#[derive(Debug, Clone, Default)]
+pub struct DistMatOptions {
+    pub backend: DistBackend,
+}
 
 #[derive(Debug, Clone, Default)]
 pub struct TreeConfig {
     pub clustering: ClusterConfig,
+    pub distmat: DistMatOptions,
 }
 
 /// Outcome of the distributed pipeline, with the stats the paper reports.
@@ -33,6 +53,11 @@ pub struct TreeResult {
     pub num_clusters: usize,
     /// JC69 log-likelihood of the final tree given the alignment.
     pub log_likelihood: f64,
+    /// Peak resident distance-matrix bytes across cluster subtree
+    /// builds: the dense backend reports its materialized matrices
+    /// (O(n²) in the largest cluster), the tiled backend its store's
+    /// high-water mark (bounded by the byte budget + one tile).
+    pub distmat_peak_bytes: u64,
 }
 
 /// Build a phylogenetic tree from *aligned* rows (an MSA — the paper:
@@ -51,30 +76,60 @@ pub fn build_tree(
     let clustering = cluster_sequences(engine, rows, svc, &cfg.clustering)
         .context("initial clustering")?;
 
-    // --- Stage 2: per-cluster NJ trees, in parallel ------------------------
-    // Each task gets (cluster_id, member rows); computes p-distances
-    // (XLA match-count kernel when a bucket covers the cluster) and runs
-    // NJ locally — "calculate individual phylogenetic tree based on
-    // individual clusters".
+    // --- Stage 2: per-cluster NJ trees -------------------------------------
+    // "calculate individual phylogenetic tree based on individual
+    // clusters".  Dense backend: clusters are the engine's parallel unit
+    // and each task materializes its matrix locally.  Tiled backend:
+    // *tiles* are the parallel unit — the driver walks clusters and each
+    // cluster's tile jobs fan out over the engine, with resident
+    // distance bytes bounded by the byte budget.
     let groups: Vec<(u64, Vec<Sequence>)> = clustering
         .members
         .iter()
         .enumerate()
         .map(|(c, m)| (c as u64, m.iter().map(|&i| rows[i].clone()).collect()))
         .collect();
-    let svc_map = svc.cloned();
-    let parts = engine.config().default_partitions.min(groups.len().max(1));
-    // Job boundary between the clustering job and the tree job (HPTree's
-    // chained MapReduce; a no-op cache on the Spark backend).
-    let groups_rdd = engine.parallelize(groups, parts).checkpoint()?;
-    let subtrees_rdd = groups_rdd.map(move |(c, members)| {
-        let tree = subtree_for_cluster(&members, svc_map.as_ref())
-            .expect("cluster subtree construction failed");
-        (c, tree)
-    });
-    let mut subtrees = subtrees_rdd.collect()?;
-    subtrees.sort_by_key(|(c, _)| *c);
-    let subtrees: Vec<Tree> = subtrees.into_iter().map(|(_, t)| t).collect();
+    let (subtrees, distmat_peak_bytes) = match cfg.distmat.backend {
+        DistBackend::Dense => {
+            // Dense resident footprint: the largest cluster's p-distance
+            // + JC matrices, both alive inside its task.
+            let peak = groups
+                .iter()
+                .map(|(_, m)| (m.len() * m.len() * 2 * std::mem::size_of::<f64>()) as u64)
+                .max()
+                .unwrap_or(0);
+            let svc_map = svc.cloned();
+            let parts = engine.config().default_partitions.min(groups.len().max(1));
+            // Job boundary between the clustering job and the tree job
+            // (HPTree's chained MapReduce; a no-op cache on Spark).
+            let groups_rdd = engine.parallelize(groups, parts).checkpoint()?;
+            // Fallible map: a failed subtree (e.g. an XLA batch error)
+            // surfaces as a task error the executor retries through
+            // lineage instead of panicking the worker.
+            let subtrees_rdd = groups_rdd.try_map_partitions_with_index(move |_, items| {
+                items
+                    .into_iter()
+                    .map(|(c, members)| {
+                        subtree_for_cluster(&members, svc_map.as_ref()).map(|t| (c, t))
+                    })
+                    .collect()
+            });
+            let mut subtrees = subtrees_rdd.collect()?;
+            subtrees.sort_by_key(|(c, _)| *c);
+            (subtrees.into_iter().map(|(_, t)| t).collect::<Vec<Tree>>(), peak)
+        }
+        DistBackend::Tiled { tile_rows, byte_budget } => {
+            let mut subtrees = Vec::with_capacity(groups.len());
+            let mut peak = 0u64;
+            for (_, members) in &groups {
+                let (tree, cluster_peak) =
+                    tiled_subtree_for_cluster(engine, members, tile_rows, byte_budget)?;
+                peak = peak.max(cluster_peak);
+                subtrees.push(tree);
+            }
+            (subtrees, peak)
+        }
+    };
 
     // --- Stage 3: merge (paper Fig. 4 right) -------------------------------
     let gap = rows[0].alphabet.gap();
@@ -101,10 +156,16 @@ pub fn build_tree(
 
     let log_likelihood =
         likelihood::log_likelihood(&tree, rows).context("evaluating log-likelihood")?;
-    Ok(TreeResult { tree, num_clusters: clustering.num_clusters(), log_likelihood })
+    Ok(TreeResult {
+        tree,
+        num_clusters: clustering.num_clusters(),
+        log_likelihood,
+        distmat_peak_bytes,
+    })
 }
 
-/// NJ tree for one cluster's aligned rows.
+/// NJ tree for one cluster's aligned rows (dense backend: the matrix is
+/// materialized inside the cluster's task).
 fn subtree_for_cluster(members: &[Sequence], svc: Option<&XlaService>) -> Result<Tree> {
     anyhow::ensure!(!members.is_empty(), "empty cluster");
     if members.len() == 1 {
@@ -118,6 +179,38 @@ fn subtree_for_cluster(members: &[Sequence], svc: Option<&XlaService>) -> Result
         .collect();
     let labels: Vec<String> = members.iter().map(|s| s.id.clone()).collect();
     neighbor_joining(&labels, &d)
+}
+
+/// NJ tree for one cluster via the tiled distance pipeline: JC-corrected
+/// p-distance tiles computed as engine jobs, NJ consuming them
+/// out-of-core with its merged-row working set sharing the same
+/// byte-budgeted store.  Returns the tree and the store's peak resident
+/// bytes.  Bit-identical to [`subtree_for_cluster`] without an XLA
+/// service (shared kernels + shared NJ); the tiled path always computes
+/// natively.
+fn tiled_subtree_for_cluster(
+    engine: &Engine,
+    members: &[Sequence],
+    tile_rows: usize,
+    byte_budget: usize,
+) -> Result<(Tree, u64)> {
+    anyhow::ensure!(!members.is_empty(), "empty cluster");
+    if members.len() == 1 {
+        return Ok((Tree::leaf(members[0].id.clone()), 0));
+    }
+    let dm_cfg = DistMatConfig {
+        tile_rows,
+        byte_budget,
+        kind: DistKind::PDistance { jukes_cantor: true },
+    };
+    let tiled = distmat::distance_tiled(engine, members, &dm_cfg)?;
+    let labels: Vec<String> = members.iter().map(|s| s.id.clone()).collect();
+    let nj_cfg = NjConfig {
+        row_store: Some(tiled.store_arc()),
+        row_key_base: tiled.grid().num_tiles() as u64,
+    };
+    let tree = neighbor_joining_src(&labels, &tiled, &nj_cfg)?;
+    Ok((tree, tiled.peak_resident_bytes() as u64))
 }
 
 #[cfg(test)]
@@ -140,6 +233,7 @@ mod tests {
         let (engine, rows) = aligned_mito(30, 6);
         let cfg = TreeConfig {
             clustering: ClusterConfig { max_cluster_size: 12, ..Default::default() },
+            ..Default::default()
         };
         let result = build_tree(&engine, &rows, None, &cfg).unwrap();
         result.tree.validate().unwrap();
@@ -160,11 +254,13 @@ mod tests {
         // Single-cluster (plain NJ over everything).
         let single_cfg = TreeConfig {
             clustering: ClusterConfig { num_clusters: 1, max_cluster_size: 1000, ..Default::default() },
+            ..Default::default()
         };
         let single = build_tree(&engine, &rows, None, &single_cfg).unwrap();
         // Multi-cluster.
         let multi_cfg = TreeConfig {
             clustering: ClusterConfig { max_cluster_size: 8, ..Default::default() },
+            ..Default::default()
         };
         let multi = build_tree(&engine, &rows, None, &multi_cfg).unwrap();
         assert_eq!(single.tree.num_leaves(), multi.tree.num_leaves());
@@ -180,9 +276,48 @@ mod tests {
         let (engine, rows) = aligned_mito(16, 8);
         let cfg = TreeConfig {
             clustering: ClusterConfig { max_cluster_size: 6, ..Default::default() },
+            ..Default::default()
         };
         let a = build_tree(&engine, &rows, None, &cfg).unwrap();
         let b = build_tree(&engine, &rows, None, &cfg).unwrap();
         assert_eq!(a.tree.to_newick(), b.tree.to_newick());
+    }
+
+    #[test]
+    fn tiled_backend_is_bit_identical_to_dense_and_bounds_memory() {
+        let (engine, rows) = aligned_mito(30, 9);
+        let clustering = ClusterConfig { max_cluster_size: 12, ..Default::default() };
+        let dense_cfg =
+            TreeConfig { clustering: clustering.clone(), ..Default::default() };
+        let byte_budget = 1 << 10; // 1 KiB, under the largest cluster's dense matrices
+        let tiled_cfg = TreeConfig {
+            clustering,
+            distmat: DistMatOptions {
+                backend: DistBackend::Tiled { tile_rows: 4, byte_budget },
+            },
+        };
+        let dense = build_tree(&engine, &rows, None, &dense_cfg).unwrap();
+        let tiled = build_tree(&engine, &rows, None, &tiled_cfg).unwrap();
+        assert_eq!(
+            dense.tree, tiled.tree,
+            "tiled distance backend must reproduce the dense tree bit for bit"
+        );
+        assert_eq!(dense.log_likelihood.to_bits(), tiled.log_likelihood.to_bits());
+        assert_eq!(dense.num_clusters, tiled.num_clusters);
+        // Memory story: dense reports the largest cluster's O(n²)
+        // matrices; tiled stays within budget + one blob (the largest
+        // blob is a merged-row vector of ~2·cluster_size f64s).
+        let blob_slack = 2 * 12 * 8 + 4 * 4 * 8;
+        assert!(
+            tiled.distmat_peak_bytes <= (byte_budget + blob_slack) as u64,
+            "tiled peak {} must honor the byte budget {byte_budget}",
+            tiled.distmat_peak_bytes
+        );
+        assert!(
+            dense.distmat_peak_bytes > tiled.distmat_peak_bytes,
+            "dense ({}) must report a larger resident matrix than tiled ({})",
+            dense.distmat_peak_bytes,
+            tiled.distmat_peak_bytes
+        );
     }
 }

@@ -1,28 +1,84 @@
 //! Neighbor-joining (Saitou & Nei 1987) — the paper's distance-based tree
 //! method ("time-efficient and suitable for ultra-large sequences data").
 //!
-//! Classic O(n³)-time / O(n²)-space implementation with an active-node
-//! list and incrementally maintained row sums (the O(n²) update the
-//! HPTree line of work relies on).
+//! O(n³)-time implementation with an active-node list and incrementally
+//! maintained row sums, generalized to consume any
+//! [`DistSource`](crate::distmat::DistSource) — a dense in-memory matrix
+//! or a tiled, byte-budgeted on-disk one — instead of `&[Vec<f64>]`:
+//!
+//! * **Leaf-leaf distances** are read through the source; tiled backends
+//!   serve them from resident-or-spilled tiles.
+//! * **Merged-node rows** (the working set joins create) live in a
+//!   [`TileStore`] keyed past the tile range, so the whole NJ run stays
+//!   inside one byte budget instead of materializing a growing O(n²)
+//!   matrix.
+//! * **Row-min caches** (rapid-NJ style) prune the Q-criterion scan:
+//!   each node carries a stale-low lower bound on its min distance, and
+//!   a row whose Q lower bound `(r-2)·dmin_i - rowsum_i - max_rowsum`
+//!   cannot beat the current best is skipped without touching any
+//!   (possibly spilled) tile.  The prune is *exact* — a skipped row
+//!   provably contains no strictly smaller Q, and ties keep the
+//!   first-scanned pair exactly as the unpruned loop would — so dense
+//!   and tiled backends produce bit-identical trees (property-tested).
+
+use std::sync::Arc;
 
 use anyhow::{ensure, Result};
 
 use super::newick::{Tree, TreeNode};
+use crate::distmat::{DenseView, DistSource, TileStore};
 
-/// Build an NJ tree over `labels` with the given symmetric distance
-/// matrix.  Returns a rooted binary-ish tree (the final join becomes the
-/// root's children).
+/// Working-storage knobs for [`neighbor_joining_src`].
+#[derive(Clone, Default)]
+pub struct NjConfig {
+    /// Store for merged-node rows.  `None` = a private unbounded
+    /// in-memory store (the dense-equivalent mode).  Tiled pipelines
+    /// pass the tile store itself so one byte budget governs tiles and
+    /// working rows together.
+    pub row_store: Option<Arc<TileStore>>,
+    /// First key NJ may use inside `row_store` (set it past
+    /// `grid.num_tiles()` when sharing a tile store).
+    pub row_key_base: u64,
+}
+
+/// Build an NJ tree over `labels` with the given symmetric dense
+/// distance matrix (thin wrapper over [`neighbor_joining_src`]).
+/// Returns a rooted binary-ish tree (the final join becomes the root's
+/// children).
 pub fn neighbor_joining(labels: &[String], dist: &[Vec<f64>]) -> Result<Tree> {
     let n = labels.len();
-    ensure!(n > 0, "empty taxon set");
     ensure!(dist.len() == n && dist.iter().all(|r| r.len() == n), "bad matrix shape");
+    neighbor_joining_src(labels, &DenseView(dist), &NjConfig::default())
+}
+
+/// Neighbor-joining over any [`DistSource`] backend (see module docs).
+pub fn neighbor_joining_src(
+    labels: &[String],
+    src: &dyn DistSource,
+    cfg: &NjConfig,
+) -> Result<Tree> {
+    let n = labels.len();
+    ensure!(n > 0, "empty taxon set");
+    ensure!(src.num_taxa() == n, "distance source covers {} taxa, labels {n}", src.num_taxa());
     if n == 1 {
         return Ok(Tree::leaf(labels[0].clone()));
     }
 
-    // Working copy of the distance matrix; grows as joins add nodes.
-    let mut d: Vec<Vec<f64>> = dist.to_vec();
-    // node id of each working row (tree node indices).
+    let rows = cfg.row_store.clone().unwrap_or_else(|| Arc::new(TileStore::in_memory()));
+    let key_base = cfg.row_key_base;
+    // d(a, b) for any pair of node ids: leaves go through the source,
+    // merged nodes through their stored row (row of the larger id holds
+    // every smaller id).
+    let dist_any = |a: usize, b: usize| -> Result<f64> {
+        debug_assert_ne!(a, b);
+        let (hi, lo) = if a > b { (a, b) } else { (b, a) };
+        if hi < n {
+            src.dist(hi, lo)
+        } else {
+            Ok(rows.get(key_base + (hi - n) as u64)?[lo])
+        }
+    };
+
     let mut nodes: Vec<TreeNode> = labels
         .iter()
         .map(|l| TreeNode {
@@ -32,20 +88,39 @@ pub fn neighbor_joining(labels: &[String], dist: &[Vec<f64>]) -> Result<Tree> {
             label: Some(l.clone()),
         })
         .collect();
-    let mut active: Vec<usize> = (0..n).collect(); // indices into d/nodes
+    let mut active: Vec<usize> = (0..n).collect();
 
-    // Row sums over active set.
-    let mut rowsum: Vec<f64> = (0..n)
-        .map(|i| (0..n).map(|j| d[i][j]).sum())
-        .collect();
+    // Row sums and row-min caches over the active set, seeded in one
+    // pass over the source (tiled backends read each tile once here).
+    // `dmin[k]` is maintained as a *lower bound*: joins can only remove
+    // partners (raising the true min) or add one new distance (folded in
+    // below), and a stale-low bound only weakens the prune, never its
+    // exactness.
+    let (mut rowsum, mut dmin) = src.row_stats()?;
 
     while active.len() > 2 {
         let r = active.len() as f64;
-        // Find the pair minimizing the Q criterion.
+        let max_rowsum =
+            active.iter().map(|&k| rowsum[k]).fold(f64::NEG_INFINITY, f64::max);
+        // Find the pair minimizing the Q criterion.  Row prune: every
+        // pair (i, j) satisfies q >= (r-2)·dmin_i - rowsum_i -
+        // max_rowsum; once a best pair exists, rows whose bound cannot
+        // *strictly* beat it are skipped — exactly the pairs the plain
+        // scan would have rejected (`q < best_q` is strict), so the
+        // selected pair and tie-breaking are identical to the unpruned
+        // loop.
         let (mut best_q, mut bi, mut bj) = (f64::INFINITY, 0usize, 1usize);
         for (ai, &i) in active.iter().enumerate() {
+            if ai + 1 == active.len() {
+                break;
+            }
+            if best_q.is_finite()
+                && (r - 2.0) * dmin[i] - rowsum[i] - max_rowsum >= best_q
+            {
+                continue;
+            }
             for &j in active.iter().skip(ai + 1) {
-                let q = (r - 2.0) * d[i][j] - rowsum[i] - rowsum[j];
+                let q = (r - 2.0) * dist_any(i, j)? - rowsum[i] - rowsum[j];
                 if q < best_q {
                     best_q = q;
                     bi = i;
@@ -54,7 +129,7 @@ pub fn neighbor_joining(labels: &[String], dist: &[Vec<f64>]) -> Result<Tree> {
             }
         }
         // Branch lengths to the new internal node.
-        let dij = d[bi][bj];
+        let dij = dist_any(bi, bj)?;
         let li = 0.5 * dij + (rowsum[bi] - rowsum[bj]) / (2.0 * (r - 2.0));
         let li = li.clamp(0.0, dij.max(0.0));
         let lj = (dij - li).max(0.0);
@@ -66,39 +141,37 @@ pub fn neighbor_joining(labels: &[String], dist: &[Vec<f64>]) -> Result<Tree> {
         nodes[bj].parent = Some(u);
         nodes[bj].branch = lj;
 
-        // New distance row: d(u, k) = (d(i,k) + d(j,k) - d(i,j)) / 2.
-        let mut du = vec![0f64; u + 1];
+        // New distance row: d(u, k) = (d(i,k) + d(j,k) - d(i,j)) / 2,
+        // stored over every node id < u (inactive slots stay 0).  Row
+        // sums and min caches update in the same pass — each d(bi,k) /
+        // d(bj,k) is read from the (possibly spilled) store exactly once
+        // per join.
+        let mut du = vec![0f64; u];
+        let mut dmin_u = f64::INFINITY;
         for &k in &active {
             if k == bi || k == bj {
                 continue;
             }
-            du[k] = ((d[bi][k] + d[bj][k] - dij) / 2.0).max(0.0);
+            let d_bik = dist_any(bi, k)?;
+            let d_bjk = dist_any(bj, k)?;
+            du[k] = ((d_bik + d_bjk - dij) / 2.0).max(0.0);
+            rowsum[k] -= d_bik + d_bjk;
+            rowsum[k] += du[k];
+            dmin[k] = dmin[k].min(du[k]);
+            dmin_u = dmin_u.min(du[k]);
         }
-        for row in d.iter_mut() {
-            row.push(0.0);
-        }
-        d.push(du.clone());
-        for &k in &active {
-            if k != bi && k != bj {
-                d[k][u] = du[k];
-                d[u][k] = du[k];
-            }
-        }
-        // Update active set and row sums.
         active.retain(|&k| k != bi && k != bj);
-        for &k in &active {
-            rowsum[k] -= d[bi][k] + d[bj][k];
-            rowsum[k] += d[u][k];
-        }
-        let su: f64 = active.iter().map(|&k| d[u][k]).sum();
+        let su: f64 = active.iter().map(|&k| du[k]).sum();
         rowsum.push(su);
+        dmin.push(dmin_u);
+        rows.put(key_base + (u - n) as u64, du)?;
         active.push(u);
     }
 
     // Join the final two under a root.
     let (a, b) = (active[0], active[1]);
     let root = nodes.len();
-    let dab = d[a][b].max(0.0);
+    let dab = dist_any(a, b)?.max(0.0);
     nodes.push(TreeNode { parent: None, children: vec![a, b], branch: 0.0, label: None });
     nodes[a].parent = Some(root);
     nodes[a].branch = dab / 2.0;
@@ -230,6 +303,91 @@ mod tests {
     fn single_taxon_is_leaf() {
         let t = neighbor_joining(&labels(1), &[vec![0.0]]).unwrap();
         assert_eq!(t.num_leaves(), 1);
+    }
+
+    fn random_matrix(n: usize, seed: u64) -> Vec<Vec<f64>> {
+        let mut rng = crate::util::Rng::seed_from_u64(seed);
+        let mut d = vec![vec![0f64; n]; n];
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let v = 0.05 + rng.f64();
+                d[i][j] = v;
+                d[j][i] = v;
+            }
+        }
+        d
+    }
+
+    /// Feed a dense matrix through a real tiled store (tiny budget, so
+    /// tiles and merged rows spill) and require the exact tree.
+    #[test]
+    fn tiled_source_with_spilling_rows_is_bit_identical_to_dense() {
+        use crate::distmat::{TileGrid, TiledDist};
+        for (n, tile_rows, seed) in [(12usize, 3usize, 1u64), (20, 7, 2), (9, 1, 3), (16, 16, 4)] {
+            let d = random_matrix(n, seed);
+            let lbl = labels(n);
+            let dense_tree = neighbor_joining(&lbl, &d).unwrap();
+
+            let grid = TileGrid::new(n, tile_rows);
+            let dir = std::env::temp_dir().join(format!(
+                "halign2-njspill-{}-{n}-{tile_rows}",
+                std::process::id()
+            ));
+            let store = Arc::new(TileStore::spilling(dir, 256).unwrap());
+            for t in 0..grid.num_tiles() {
+                let tile = grid.tile(t);
+                let mut entries = Vec::with_capacity(tile.num_entries());
+                for i in tile.row_lo..tile.row_hi {
+                    for j in tile.col_lo..tile.col_hi {
+                        entries.push(d[i][j]);
+                    }
+                }
+                store.put(t as u64, entries).unwrap();
+            }
+            let tiled = TiledDist::new(grid, store);
+            let cfg = NjConfig {
+                row_store: Some(tiled.store_arc()),
+                row_key_base: tiled.grid().num_tiles() as u64,
+            };
+            let tiled_tree = neighbor_joining_src(&lbl, &tiled, &cfg).unwrap();
+            assert_eq!(
+                dense_tree, tiled_tree,
+                "n={n} tile={tile_rows}: tiled NJ must equal dense bit for bit"
+            );
+            assert!(
+                tiled.store_arc().spill_files_written() > 0,
+                "n={n}: a 256-byte budget must have spilled"
+            );
+            if tiled.grid().num_row_blocks() > 1 {
+                // Multi-tile grids: the resident working set stays below
+                // the dense matrix (a single-tile grid's one tile *is*
+                // the matrix, so the bound is vacuous there).
+                assert!(
+                    tiled.peak_resident_bytes() < n * n * 8,
+                    "n={n}: peak {} must stay below dense {}",
+                    tiled.peak_resident_bytes(),
+                    n * n * 8
+                );
+            }
+        }
+    }
+
+    /// The row-prune must be inert: an adversarial matrix with massive
+    /// Q ties (all distances equal) picks the same pair as the plain
+    /// scan order dictates.
+    #[test]
+    fn prune_preserves_tie_breaking_on_uniform_matrices() {
+        let n = 10;
+        let mut d = vec![vec![1.0f64; n]; n];
+        for (i, row) in d.iter_mut().enumerate() {
+            row[i] = 0.0;
+        }
+        let t = neighbor_joining(&labels(n), &d).unwrap();
+        t.validate().unwrap();
+        assert_eq!(t.num_leaves(), n);
+        // First join under full ties must be the first-scanned pair
+        // (t0, t1): node n is their parent.
+        assert_eq!(t.nodes[n].children, vec![0, 1], "tie-break must match the plain scan");
     }
 
     #[test]

@@ -50,6 +50,18 @@ pub fn partition_for<T: Hash>(key: &T, num_partitions: usize) -> usize {
     (det_hash(key) % num_partitions as u64) as usize
 }
 
+/// Canonical SplitMix64 step: cheap, deterministic, well-mixed — the
+/// hash behind the executor's sampled victim picks.  (The PRNG in
+/// `util::rng` and the fault plan use seed-pinned variants of the same
+/// mix; their exact bit streams are locked by seeded tests, so they stay
+/// inlined.)
+pub fn splitmix64(seed: u64) -> u64 {
+    let mut z = seed.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -10,3 +10,34 @@ pub mod timer;
 pub use codec::{Decode, Encode};
 pub use rng::Rng;
 pub use timer::Stopwatch;
+
+/// Row/column of a linear lower-triangle index: the unique `(r, c)` with
+/// `c <= r` and `r(r+1)/2 + c == index`.  Shared by the engine's
+/// `lower_triangle_blocks` pairing and the distmat tile grid, which must
+/// agree on the enumeration order.
+pub fn triangle_coords(index: usize) -> (usize, usize) {
+    // Float sqrt gets within one of the answer; correct with integer
+    // steps so the result is exact for any index we can hold.
+    let mut r = (((8.0 * index as f64 + 1.0).sqrt() as usize).saturating_sub(1)) / 2;
+    while (r + 1) * (r + 2) / 2 <= index {
+        r += 1;
+    }
+    while r * (r + 1) / 2 > index {
+        r -= 1;
+    }
+    (r, index - r * (r + 1) / 2)
+}
+
+#[cfg(test)]
+mod triangle_tests {
+    #[test]
+    fn triangle_coords_roundtrip() {
+        let mut idx = 0;
+        for r in 0..80 {
+            for c in 0..=r {
+                assert_eq!(super::triangle_coords(idx), (r, c), "index {idx}");
+                idx += 1;
+            }
+        }
+    }
+}

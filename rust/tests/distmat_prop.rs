@@ -1,0 +1,85 @@
+//! Property tests for the distmat subsystem: across random shapes, tile
+//! sizes, worker counts and fault plans, the tiled `DistSource` pipeline
+//! must hand NJ the exact same f64s as the dense single-node path —
+//! yielding bit-identical topologies and branch lengths.
+
+use halign2::distmat::{distance_tiled, DistKind, DistMatConfig};
+use halign2::engine::{Cluster, ClusterConfig, FaultPlan};
+use halign2::fasta::{Alphabet, Sequence};
+use halign2::tree::distance::{jc_distance, pdistance_native};
+use halign2::tree::{neighbor_joining, neighbor_joining_src, NjConfig};
+use halign2::util::Rng;
+
+fn random_aligned_rows(n: usize, width: usize, rng: &mut Rng) -> Vec<Sequence> {
+    let residues = [b'A', b'C', b'G', b'T'];
+    (0..n)
+        .map(|i| {
+            let text: String = (0..width)
+                .map(|_| {
+                    if rng.chance(0.08) {
+                        '-'
+                    } else {
+                        residues[rng.below(4)] as char
+                    }
+                })
+                .collect();
+            Sequence::from_text(format!("t{i}"), &text, Alphabet::Dna)
+        })
+        .collect()
+}
+
+/// ≥100 seeded cases: dense NJ (materialized matrix) vs tiled NJ (tile
+/// jobs on the engine + byte-budgeted out-of-core consumption) must be
+/// *equal*, i.e. identical topology and f64-equal branch lengths.  A
+/// fifth of the cases kill a worker mid-tile-job to prove the
+/// at-least-once recovery path preserves the bits too.
+#[test]
+fn tiled_nj_is_bit_identical_to_dense_across_100_cases() {
+    let mut rng = Rng::seed_from_u64(0xD157_A7);
+    for case in 0..100u64 {
+        let n = 4 + rng.below(24);
+        let width = 24 + rng.below(48);
+        let rows = random_aligned_rows(n, width, &mut rng);
+
+        // Dense single-node path.
+        let p = pdistance_native(&rows).unwrap();
+        let states = rows[0].alphabet.residues();
+        let d: Vec<Vec<f64>> = p
+            .iter()
+            .map(|r| r.iter().map(|&x| jc_distance(x, states)).collect())
+            .collect();
+        let labels: Vec<String> = rows.iter().map(|s| s.id.clone()).collect();
+        let dense_tree = neighbor_joining(&labels, &d)
+            .unwrap_or_else(|e| panic!("case {case}: dense NJ failed: {e:#}"));
+
+        // Tiled engine path: random tile size, worker count, tiny byte
+        // budget (forces spills), and an occasional worker kill.
+        let workers = [2usize, 3, 4, 8, 16][rng.below(5)];
+        let mut ccfg = ClusterConfig::spark(workers);
+        if case % 5 == 0 {
+            ccfg.fault = FaultPlan::kill_worker_at(rng.below(workers), rng.below(6));
+        }
+        let engine = Cluster::new(ccfg);
+        let tile_rows = 1 + rng.below(n);
+        let byte_budget = 128 + rng.below(4096);
+        let cfg = DistMatConfig {
+            tile_rows,
+            byte_budget,
+            kind: DistKind::PDistance { jukes_cantor: true },
+        };
+        let tiled = distance_tiled(&engine, &rows, &cfg)
+            .unwrap_or_else(|e| panic!("case {case}: tile jobs failed: {e:#}"));
+        let nj_cfg = NjConfig {
+            row_store: Some(tiled.store_arc()),
+            row_key_base: tiled.grid().num_tiles() as u64,
+        };
+        let tiled_tree = neighbor_joining_src(&labels, &tiled, &nj_cfg)
+            .unwrap_or_else(|e| panic!("case {case}: tiled NJ failed: {e:#}"));
+
+        assert_eq!(
+            dense_tree, tiled_tree,
+            "case {case}: n={n} w={workers} tile={tile_rows} budget={byte_budget} \
+             — tiled NJ must equal dense NJ bit for bit"
+        );
+    }
+}

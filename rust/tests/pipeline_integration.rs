@@ -36,6 +36,7 @@ fn dna_msa_to_tree_end_to_end() {
         None,
         &TreeConfig {
             clustering: TreeClusterConfig { max_cluster_size: 16, ..Default::default() },
+            ..Default::default()
         },
     )
     .unwrap();
@@ -119,6 +120,7 @@ fn tree_quality_consistent_between_backends() {
 
     let cfg = TreeConfig {
         clustering: TreeClusterConfig { max_cluster_size: 8, ..Default::default() },
+        ..Default::default()
     };
     let t_spark = build_tree(&spark, &msa.aligned, None, &cfg).unwrap();
     let hadoop = Cluster::new(ClusterConfig::hadoop(3));
