@@ -28,10 +28,12 @@ import jax.numpy as jnp
 from compile.kernels import distance, sw
 
 # Alphabet sizes baked into the artifacts.  25 covers the 20 amino acids,
-# ambiguity codes B/Z/X, the gap code, and a padding sentinel; 6 covers
-# A/C/G/T(U) + N + gap for nucleotide work.
+# ambiguity codes B/Z/X, the gap code, and a padding sentinel; 7 covers
+# A/C/G/T(U) + N + gap + a distinct padding sentinel for nucleotide work
+# (gap=5 and sentinel=6 must be different codes, or batcher padding is
+# indistinguishable from real gap columns).
 PROTEIN_ALPHA = 25
-DNA_ALPHA = 6
+DNA_ALPHA = 7
 
 
 def sw_align(a_codes, b_codes, subst, gap):

@@ -88,7 +88,7 @@ class TestSwKernel:
     def test_padding_sentinel_never_extends(self):
         """Sentinel-padded tails must not raise any H cell above the
         unpadded optimum (the batcher relies on this)."""
-        alpha = 6
+        alpha = 7
         rng = np.random.default_rng(8)
         subst = blosum_like(alpha, rng)
         gap = np.float32(2.0)

@@ -7,7 +7,10 @@ mod common;
 
 use std::time::Instant;
 
-use halign2::align::sw::{sw_matrix, SwParams};
+use halign2::align::banded::{banded_global, sw_align_i32, IntSwParams};
+use halign2::align::myers::{edit_distance_dp, myers_edit_distance};
+use halign2::align::pairwise::global_dp;
+use halign2::align::sw::{sw_align, sw_matrix, SwParams};
 use halign2::align::trie::SegmentTrie;
 use halign2::data::DatasetSpec;
 use halign2::engine::{Cluster, ClusterConfig, FaultPlan};
@@ -15,6 +18,30 @@ use halign2::fasta::{alphabet::substitution_matrix, Alphabet, Sequence};
 use halign2::runtime::batcher::SwBatcher;
 use halign2::tree::nj::neighbor_joining;
 use halign2::util::Rng;
+
+/// Hand-rolled JSON (no deps) recording the kernel A/B rates.  Written
+/// to the repo root — the parent of the `rust/` crate dir — so the CI
+/// smoke step can assert its presence from the workflow's
+/// `working-directory: rust` with `test -f ../BENCH_micro.json`.
+fn write_bench_micro_json(rows: &[(String, &'static str, f64)]) {
+    let mut json = String::from(
+        "{\n  \"bench\": \"micro_kernel_ab\",\n  \"unit\": \"cells_per_sec\",\n  \"rows\": [\n",
+    );
+    for (i, (kernel, backend, cps)) in rows.iter().enumerate() {
+        let comma = if i + 1 < rows.len() { "," } else { "" };
+        json.push_str(&format!(
+            "    {{\"kernel\": \"{kernel}\", \"backend\": \"{backend}\", \
+             \"cells_per_sec\": {cps:.0}}}{comma}\n"
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate dir has a parent")
+        .join("BENCH_micro.json");
+    std::fs::write(&path, json).expect("writing BENCH_micro.json");
+    println!("wrote {}", path.display());
+}
 
 fn median(mut xs: Vec<f64>) -> f64 {
     xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -71,6 +98,86 @@ fn main() {
     bench("native SW 400x400", (400 * 400) as f64 / 1e6, "Mcell/s", iters, || {
         std::hint::black_box(sw_matrix(&a, &b, &params));
     });
+
+    // --- exact-kernel A/B: cells/sec per backend -----------------------------
+    // Scalar full-DP kernels vs the integer bit-parallel/banded kernels
+    // behind `KernelBackend::BitParallel`.  The table below is the CI
+    // contract (header carries `cells_per_sec`, rows carry `scalar` and
+    // `bitparallel`), and the same numbers land in BENCH_micro.json at
+    // the repo root.
+    let kernel_rows = {
+        let n = if quick { 160usize } else { 400 };
+        let mut krng = Rng::seed_from_u64(7);
+        // ~4% divergent pair: realistic band width for the banded kernel.
+        let da: Vec<u8> = (0..n).map(|_| krng.below(4) as u8).collect();
+        let db: Vec<u8> = da
+            .iter()
+            .map(|&c| if krng.chance(0.04) { krng.below(4) as u8 } else { c })
+            .collect();
+        let cells = (n * n) as f64;
+        let sw_cells = (a.len() * b.len()) as f64;
+        let rate = |cells: f64, iters: usize, f: &mut dyn FnMut()| -> f64 {
+            f(); // warmup
+            let mut times = Vec::with_capacity(iters);
+            for _ in 0..iters {
+                let t = Instant::now();
+                f();
+                times.push(t.elapsed().as_secs_f64());
+            }
+            cells / median(times).max(1e-9)
+        };
+        let ip = IntSwParams::from_f32(&params).expect("built-in matrix is integer-valued");
+        let rows: Vec<(String, &'static str, f64)> = vec![
+            (
+                format!("global_{n}x{n}"),
+                "scalar",
+                rate(cells, iters, &mut || {
+                    std::hint::black_box(global_dp(&da, &db));
+                }),
+            ),
+            (
+                format!("global_{n}x{n}"),
+                "bitparallel",
+                rate(cells, iters, &mut || {
+                    std::hint::black_box(banded_global(&da, &db));
+                }),
+            ),
+            (
+                format!("edit_distance_{n}x{n}"),
+                "scalar",
+                rate(cells, iters, &mut || {
+                    std::hint::black_box(edit_distance_dp(&da, &db));
+                }),
+            ),
+            (
+                format!("edit_distance_{n}x{n}"),
+                "bitparallel",
+                rate(cells, iters, &mut || {
+                    std::hint::black_box(myers_edit_distance(&da, &db));
+                }),
+            ),
+            (
+                "local_sw_400x400".into(),
+                "scalar",
+                rate(sw_cells, iters, &mut || {
+                    std::hint::black_box(sw_align(&a, &b, &params));
+                }),
+            ),
+            (
+                "local_sw_400x400".into(),
+                "bitparallel",
+                rate(sw_cells, iters, &mut || {
+                    std::hint::black_box(sw_align_i32(&a, &b, &ip));
+                }),
+            ),
+        ];
+        println!("{:<26} {:>12} {:>18}", "kernel A/B", "backend", "cells_per_sec");
+        for (kernel, backend, cps) in &rows {
+            println!("{kernel:<26} {backend:>12} {cps:>18.0}");
+        }
+        rows
+    };
+    write_bench_micro_json(&kernel_rows);
 
     // --- XLA SW cell rate ---------------------------------------------------
     if let Some(svc) = common::service_forced() {

@@ -1,0 +1,547 @@
+//! Banded integer DP kernels with adaptive band widening.
+//!
+//! All kernels here score in integers, so traceback predecessor checks
+//! are exact equality — no epsilon anywhere.  The band is over diagonal
+//! offsets `d = j - i ∈ [min(0,δ) - w, max(0,δ) + w]` with `δ = n - m`;
+//! any path that leaves that band must spend at least `|δ| + 2(w+1)`
+//! gap steps (it deviates past the corridor by more than `w` and must
+//! come back), which upper-bounds every out-of-band path's score.  When
+//! the banded optimum beats that bound — or the band covers the whole
+//! matrix — the banded result is *provably* the full-DP optimum, and the
+//! traceback (same diag→up→left check order as the full kernels) visits
+//! exactly the cells full DP would, so the op path is bit-identical.
+//! Otherwise the band doubles and the DP re-runs.
+//!
+//! * [`banded_global`] — linear-gap global alignment, bit-identical to
+//!   [`super::pairwise::global_dp`] (+1 match / -1 mismatch / -2 gap),
+//!   initial band seeded from the bit-parallel Myers edit distance.
+//! * [`affine_full`] / [`affine_banded`] — integer affine-gap (Gotoh)
+//!   global alignment, banded provably identical to the full DP.
+//! * [`sw_align_i32`] — integer local Smith-Waterman replicating
+//!   [`super::sw::sw_align`] (same argmax tie-break, same traceback
+//!   order) for integer-valued substitution matrices.
+
+use super::myers::myers_edit_distance;
+use super::sw::{LocalAlignment, Op};
+use crate::align::pairwise::{global_dp, PathOp};
+
+/// Sentinel for out-of-band / unreachable cells.  Low enough that no
+/// real score reaches it, high enough that a few additions can't wrap.
+const NEG: i32 = i32::MIN / 4;
+
+/// Linear-gap scores, matching [`global_dp`] exactly.
+const GAP: i32 = -2;
+
+/// Banded global alignment with adaptive widening; bit-identical ops to
+/// [`global_dp`].  The initial band width is seeded from the Myers
+/// bit-parallel edit distance (an alignment with `e` unit edits strays
+/// at most `(e - |δ|)/2` beyond the corridor).
+pub fn banded_global(a: &[u8], b: &[u8]) -> Vec<PathOp> {
+    let (m, n) = (a.len(), b.len());
+    if m == 0 {
+        return vec![Op::Left; n];
+    }
+    if n == 0 {
+        return vec![Op::Up; m];
+    }
+    if a == b {
+        // score(i,i) == i exactly, so full-DP traceback is all Diag.
+        return vec![Op::Diag; m];
+    }
+    let e = myers_edit_distance(a, b);
+    let dd = (n as i64 - m as i64).unsigned_abs() as usize;
+    let w0 = (e.saturating_sub(dd) / 2 + 1).max(8);
+    banded_global_with_band(a, b, w0)
+}
+
+/// Banded global alignment starting at band width `w0`, doubling until
+/// the result is provably optimal.  Exposed so tests can force the
+/// adaptive re-run path with a deliberately tiny initial band.
+pub fn banded_global_with_band(a: &[u8], b: &[u8], w0: usize) -> Vec<PathOp> {
+    let (m, n) = (a.len(), b.len());
+    if m == 0 {
+        return vec![Op::Left; n];
+    }
+    if n == 0 {
+        return vec![Op::Up; m];
+    }
+    let mut w = w0.max(1);
+    loop {
+        if let Some(ops) = banded_attempt(a, b, w) {
+            return ops;
+        }
+        w *= 2;
+    }
+}
+
+/// One banded fill + provability check + traceback.  Returns `None`
+/// when the banded optimum cannot be certified as the global optimum.
+fn banded_attempt(a: &[u8], b: &[u8], w: usize) -> Option<Vec<PathOp>> {
+    let (m, n) = (a.len(), b.len());
+    let delta = n as i64 - m as i64;
+    let lo_d = delta.min(0) - w as i64;
+    let hi_d = delta.max(0) + w as i64;
+    let covers_full = lo_d <= -(m as i64) && hi_d >= n as i64;
+    let bw = (hi_d - lo_d + 1) as usize;
+
+    // Diagonal-band layout: cell (i, j) lives at i*bw + (j - i - lo_d).
+    // Neighbors: (i-1,j-1) -> k - bw; (i-1,j) -> k - bw + 1; (i,j-1) -> k - 1.
+    let mut score = vec![NEG; (m + 1) * bw];
+    let idx = |i: usize, j: usize| -> usize { i * bw + (j as i64 - i as i64 - lo_d) as usize };
+    score[idx(0, 0)] = 0;
+    for j in 1..=n.min(hi_d as usize) {
+        score[idx(0, j)] = j as i32 * GAP;
+    }
+    for i in 1..=m.min((-lo_d) as usize) {
+        score[idx(i, 0)] = i as i32 * GAP;
+    }
+    for i in 1..=m {
+        let ai = a[i - 1];
+        let jlo = (i as i64 + lo_d).max(1) as usize;
+        let jhi = (i as i64 + hi_d).min(n as i64);
+        if jhi < jlo as i64 {
+            continue;
+        }
+        for j in jlo..=jhi as usize {
+            let col = (j as i64 - i as i64 - lo_d) as usize;
+            let k = i * bw + col;
+            let s = if ai == b[j - 1] { 1 } else { -1 };
+            // The diagonal predecessor shares d, so it is always in band
+            // and (by induction from the boundaries) holds a real value.
+            let diag = score[k - bw] + s;
+            let up = if col + 1 < bw { score[k - bw + 1] + GAP } else { NEG };
+            let left = if col > 0 { score[k - 1] + GAP } else { NEG };
+            score[k] = diag.max(up).max(left);
+        }
+    }
+
+    let best = score[idx(m, n)];
+    // Any path leaving the band spends >= |δ| + 2(w+1) gap steps; with
+    // +1/-1/-2 scoring its score is <= min(m,n) - 2(|δ| + 2(w+1)).
+    let out_of_band_cap =
+        m.min(n) as i64 - 2 * (delta.unsigned_abs() as i64 + 2 * (w as i64 + 1));
+    if !covers_full && (best as i64) <= out_of_band_cap {
+        return None;
+    }
+
+    // Traceback — same check order as global_dp (diag, up, else left).
+    let in_band = |i: usize, j: usize| -> bool {
+        let d = j as i64 - i as i64;
+        (lo_d..=hi_d).contains(&d)
+    };
+    let get = |i: usize, j: usize| -> i32 { if in_band(i, j) { score[idx(i, j)] } else { NEG } };
+    let mut ops = Vec::with_capacity(m + n);
+    let (mut i, mut j) = (m, n);
+    while i > 0 || j > 0 {
+        let v = get(i, j);
+        if i > 0 && j > 0 {
+            let s = if a[i - 1] == b[j - 1] { 1 } else { -1 };
+            if v == get(i - 1, j - 1) + s {
+                ops.push(Op::Diag);
+                i -= 1;
+                j -= 1;
+                continue;
+            }
+        }
+        if i > 0 && v == get(i - 1, j) + GAP {
+            ops.push(Op::Up);
+            i -= 1;
+        } else {
+            debug_assert!(j > 0, "banded traceback escaped the certified band");
+            ops.push(Op::Left);
+            j -= 1;
+        }
+    }
+    ops.reverse();
+    Some(ops)
+}
+
+// ---------------------------------------------------------------------
+// Integer affine-gap (Gotoh) global alignment, full and banded.
+// ---------------------------------------------------------------------
+
+/// Integer affine-gap costs: a gap of length k costs `open + k*ext`
+/// (both penalties positive), substitutions come from `subst`.
+#[derive(Debug, Clone)]
+pub struct AffineCosts {
+    pub subst: Vec<i32>,
+    pub alpha: usize,
+    pub open: i32,
+    pub ext: i32,
+}
+
+impl AffineCosts {
+    #[inline]
+    fn score(&self, a: u8, b: u8) -> i32 {
+        self.subst[a as usize * self.alpha + b as usize]
+    }
+}
+
+/// Full-matrix integer Gotoh global alignment: reference for
+/// [`affine_banded`].  Returns (score, ops).
+pub fn affine_full(a: &[u8], b: &[u8], p: &AffineCosts) -> (i32, Vec<PathOp>) {
+    let (m, n) = (a.len(), b.len());
+    if m == 0 {
+        let s = if n == 0 { 0 } else { -p.open - n as i32 * p.ext };
+        return (s, vec![Op::Left; n]);
+    }
+    if n == 0 {
+        return (-p.open - m as i32 * p.ext, vec![Op::Up; m]);
+    }
+    let w = n + 1;
+    let mut h = vec![NEG; (m + 1) * w];
+    let mut e = vec![NEG; (m + 1) * w];
+    let mut f = vec![NEG; (m + 1) * w];
+    h[0] = 0;
+    for j in 1..=n {
+        e[j] = -p.open - j as i32 * p.ext;
+        h[j] = e[j];
+    }
+    for i in 1..=m {
+        f[i * w] = -p.open - i as i32 * p.ext;
+        h[i * w] = f[i * w];
+        for j in 1..=n {
+            e[i * w + j] =
+                (e[i * w + j - 1] - p.ext).max(h[i * w + j - 1] - p.open - p.ext).max(NEG);
+            f[i * w + j] =
+                (f[(i - 1) * w + j] - p.ext).max(h[(i - 1) * w + j] - p.open - p.ext).max(NEG);
+            let diag = h[(i - 1) * w + j - 1] + p.score(a[i - 1], b[j - 1]);
+            h[i * w + j] = diag.max(e[i * w + j]).max(f[i * w + j]);
+        }
+    }
+    let ops = affine_traceback(
+        a,
+        b,
+        p,
+        |i, j| h[i * w + j],
+        |i, j| e[i * w + j],
+        |i, j| f[i * w + j],
+    );
+    (h[m * w + n], ops)
+}
+
+/// Banded integer Gotoh with adaptive widening; provably identical to
+/// [`affine_full`] (score and ops).  Out-of-band paths spend at least
+/// `|δ| + 2(w+1)` gap steps in at least one run, so they score at most
+/// `max(0, min(m,n)*max_sub) - open - (|δ| + 2(w+1))*ext`; beating that
+/// bound certifies the banded optimum.
+pub fn affine_banded(a: &[u8], b: &[u8], p: &AffineCosts, w0: usize) -> (i32, Vec<PathOp>) {
+    let (m, n) = (a.len(), b.len());
+    if m == 0 || n == 0 {
+        return affine_full(a, b, p);
+    }
+    let mut w = w0.max(1);
+    loop {
+        if let Some(res) = affine_banded_attempt(a, b, p, w) {
+            return res;
+        }
+        w *= 2;
+    }
+}
+
+fn affine_banded_attempt(
+    a: &[u8],
+    b: &[u8],
+    p: &AffineCosts,
+    w: usize,
+) -> Option<(i32, Vec<PathOp>)> {
+    let (m, n) = (a.len(), b.len());
+    let delta = n as i64 - m as i64;
+    let lo_d = delta.min(0) - w as i64;
+    let hi_d = delta.max(0) + w as i64;
+    let covers_full = lo_d <= -(m as i64) && hi_d >= n as i64;
+    let bw = (hi_d - lo_d + 1) as usize;
+
+    let mut h = vec![NEG; (m + 1) * bw];
+    let mut e = vec![NEG; (m + 1) * bw];
+    let mut f = vec![NEG; (m + 1) * bw];
+    let idx = |i: usize, j: usize| -> usize { i * bw + (j as i64 - i as i64 - lo_d) as usize };
+    h[idx(0, 0)] = 0;
+    for j in 1..=n.min(hi_d as usize) {
+        let k = idx(0, j);
+        e[k] = -p.open - j as i32 * p.ext;
+        h[k] = e[k];
+    }
+    for i in 1..=m.min((-lo_d) as usize) {
+        let k = idx(i, 0);
+        f[k] = -p.open - i as i32 * p.ext;
+        h[k] = f[k];
+    }
+    for i in 1..=m {
+        let ai = a[i - 1];
+        let jlo = (i as i64 + lo_d).max(1) as usize;
+        let jhi = (i as i64 + hi_d).min(n as i64);
+        if jhi < jlo as i64 {
+            continue;
+        }
+        for j in jlo..=jhi as usize {
+            let col = (j as i64 - i as i64 - lo_d) as usize;
+            let k = i * bw + col;
+            let (el, hl) = if col > 0 { (e[k - 1], h[k - 1]) } else { (NEG, NEG) };
+            let (fu, hu) =
+                if col + 1 < bw { (f[k - bw + 1], h[k - bw + 1]) } else { (NEG, NEG) };
+            e[k] = (el - p.ext).max(hl - p.open - p.ext).max(NEG);
+            f[k] = (fu - p.ext).max(hu - p.open - p.ext).max(NEG);
+            let diag = h[k - bw] + p.score(ai, b[j - 1]);
+            h[k] = diag.max(e[k]).max(f[k]);
+        }
+    }
+
+    let best = h[idx(m, n)];
+    let max_sub = p.subst.iter().copied().max().unwrap_or(0) as i64;
+    let gap_steps = delta.unsigned_abs() as i64 + 2 * (w as i64 + 1);
+    let out_of_band_cap =
+        (m.min(n) as i64 * max_sub).max(0) - p.open as i64 - gap_steps * p.ext as i64;
+    if !covers_full && (best as i64) <= out_of_band_cap {
+        return None;
+    }
+
+    let in_band = |i: usize, j: usize| -> bool {
+        let d = j as i64 - i as i64;
+        (lo_d..=hi_d).contains(&d)
+    };
+    let ops = affine_traceback(
+        a,
+        b,
+        p,
+        |i, j| if in_band(i, j) { h[idx(i, j)] } else { NEG },
+        |i, j| if in_band(i, j) { e[idx(i, j)] } else { NEG },
+        |i, j| if in_band(i, j) { f[idx(i, j)] } else { NEG },
+    );
+    Some((best, ops))
+}
+
+/// Shared three-layer traceback: exact integer equality, with the same
+/// check order as [`super::gotoh::gotoh_align`] (diag, then E, then F;
+/// gap runs close on the open-transition check).
+fn affine_traceback(
+    a: &[u8],
+    b: &[u8],
+    p: &AffineCosts,
+    h: impl Fn(usize, usize) -> i32,
+    e: impl Fn(usize, usize) -> i32,
+    f: impl Fn(usize, usize) -> i32,
+) -> Vec<PathOp> {
+    #[derive(Clone, Copy, PartialEq)]
+    enum Layer {
+        H,
+        E,
+        F,
+    }
+    let (m, n) = (a.len(), b.len());
+    let mut ops = Vec::with_capacity(m + n);
+    let (mut i, mut j) = (m, n);
+    let mut layer = Layer::H;
+    while i > 0 || j > 0 {
+        match layer {
+            Layer::H => {
+                let v = h(i, j);
+                if i > 0 && j > 0 && v == h(i - 1, j - 1) + p.score(a[i - 1], b[j - 1]) {
+                    ops.push(Op::Diag);
+                    i -= 1;
+                    j -= 1;
+                } else if v == e(i, j) {
+                    layer = Layer::E;
+                } else {
+                    debug_assert_eq!(v, f(i, j), "affine traceback lost at ({i},{j})");
+                    layer = Layer::F;
+                }
+            }
+            Layer::E => {
+                let v = e(i, j);
+                ops.push(Op::Left);
+                let from_open = h(i, j - 1) - p.open - p.ext;
+                j -= 1;
+                if v == from_open {
+                    layer = Layer::H;
+                }
+            }
+            Layer::F => {
+                let v = f(i, j);
+                ops.push(Op::Up);
+                let from_open = h(i - 1, j) - p.open - p.ext;
+                i -= 1;
+                if v == from_open {
+                    layer = Layer::H;
+                }
+            }
+        }
+    }
+    ops.reverse();
+    ops
+}
+
+// ---------------------------------------------------------------------
+// Integer local Smith-Waterman (exact mirror of the f32 kernel).
+// ---------------------------------------------------------------------
+
+/// Integer Smith-Waterman parameters.  Convertible from [`SwParams`]
+/// whenever every matrix entry and the gap penalty are integer-valued
+/// (true for all built-in matrices), in which case [`sw_align_i32`] is
+/// bit-identical to [`super::sw::sw_align`]: f32 arithmetic on integer
+/// values of this magnitude is exact, and both tracebacks test exact
+/// equality in the same order.
+#[derive(Debug, Clone)]
+pub struct IntSwParams {
+    pub subst: Vec<i32>,
+    pub alpha: usize,
+    pub gap: i32,
+}
+
+impl IntSwParams {
+    /// Exact conversion; `None` if any parameter is not an f32-exact
+    /// integer small enough for overflow-free i32/f32 agreement.
+    pub fn from_f32(p: &super::sw::SwParams) -> Option<Self> {
+        let conv = |v: f32| -> Option<i32> {
+            if v.abs() > 1e7 || v != v.trunc() {
+                return None;
+            }
+            Some(v as i32)
+        };
+        let mut subst = Vec::with_capacity(p.subst.len());
+        for &v in &p.subst {
+            subst.push(conv(v)?);
+        }
+        Some(Self { subst, alpha: p.alpha, gap: conv(p.gap)? })
+    }
+
+    #[inline]
+    fn score(&self, a: i32, b: i32) -> i32 {
+        self.subst[a as usize * self.alpha + b as usize]
+    }
+}
+
+/// Integer local Smith-Waterman: same fill recurrence, same row-major
+/// `v >= best` argmax tie-break, and same diag→up→left traceback as the
+/// f32 kernel — but predecessor checks are exact integer equality.
+pub fn sw_align_i32(a: &[i32], b: &[i32], p: &IntSwParams) -> LocalAlignment {
+    let (m, n) = (a.len(), b.len());
+    let w = n + 1;
+    let mut h = vec![0i32; (m + 1) * w];
+    for i in 1..=m {
+        let ai = a[i - 1] as usize;
+        let srow = &p.subst[ai * p.alpha..(ai + 1) * p.alpha];
+        let mut left = 0i32;
+        for j in 1..=n {
+            let diag = h[(i - 1) * w + j - 1] + srow[b[j - 1] as usize];
+            let up = h[(i - 1) * w + j] - p.gap;
+            let v = diag.max(up).max(left - p.gap).max(0);
+            h[i * w + j] = v;
+            left = v;
+        }
+    }
+    // Argmax with the same `v >= best` row-major tie-break (boundary
+    // cells included) as HMatrix::argmax.
+    let (mut bi, mut bj, mut best) = (0usize, 0usize, i32::MIN);
+    for i in 0..=m {
+        for j in 0..=n {
+            let v = h[i * w + j];
+            if v >= best {
+                bi = i;
+                bj = j;
+                best = v;
+            }
+        }
+    }
+    let (a_end, b_end) = (bi, bj);
+    let (mut i, mut j) = (bi, bj);
+    let mut ops = Vec::new();
+    while i > 0 && j > 0 && h[i * w + j] > 0 {
+        let v = h[i * w + j];
+        let diag = h[(i - 1) * w + j - 1] + p.score(a[i - 1], b[j - 1]);
+        if v == diag {
+            ops.push(Op::Diag);
+            i -= 1;
+            j -= 1;
+        } else if v == h[(i - 1) * w + j] - p.gap {
+            ops.push(Op::Up);
+            i -= 1;
+        } else {
+            debug_assert_eq!(v, h[i * w + j - 1] - p.gap);
+            ops.push(Op::Left);
+            j -= 1;
+        }
+    }
+    ops.reverse();
+    LocalAlignment { score: best as f32, a_start: i, a_end, b_start: j, b_end, ops }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand_seq(rng: &mut Rng, len: usize, alpha: usize) -> Vec<u8> {
+        (0..len).map(|_| rng.below(alpha) as u8).collect()
+    }
+
+    #[test]
+    fn banded_matches_global_dp_on_hand_cases() {
+        let cases: [(&[u8], &[u8]); 5] = [
+            (b"ACGT", b"ACGT"),
+            (b"ACGT", b""),
+            (b"", b"ACGT"),
+            (b"AAAA", b"TTTT"),
+            (b"ACGTACGT", b"ACGGT"),
+        ];
+        for (a, b) in cases {
+            assert_eq!(banded_global(a, b), global_dp(a, b));
+        }
+    }
+
+    #[test]
+    fn tiny_band_widens_to_the_same_answer() {
+        let mut rng = Rng::seed_from_u64(0xBA2D);
+        for case in 0..30 {
+            let a = rand_seq(&mut rng, 1 + rng.below(120), 4);
+            let b = rand_seq(&mut rng, 1 + rng.below(120), 4);
+            // w0 = 1 forces the adaptive widening loop on most inputs.
+            assert_eq!(banded_global_with_band(&a, &b, 1), global_dp(&a, &b), "case {case}");
+        }
+    }
+
+    #[test]
+    fn affine_banded_matches_full() {
+        let p = AffineCosts {
+            subst: vec![2, -3, -3, -3, -3, 2, -3, -3, -3, -3, 2, -3, -3, -3, -3, 2],
+            alpha: 4,
+            open: 5,
+            ext: 1,
+        };
+        let mut rng = Rng::seed_from_u64(0xAFF1);
+        for case in 0..30 {
+            let a = rand_seq(&mut rng, 1 + rng.below(90), 4);
+            let b = rand_seq(&mut rng, 1 + rng.below(90), 4);
+            let (fs, fo) = affine_full(&a, &b, &p);
+            let (bs, bo) = affine_banded(&a, &b, &p, 1);
+            assert_eq!(fs, bs, "case {case} score");
+            assert_eq!(fo, bo, "case {case} ops");
+        }
+    }
+
+    #[test]
+    fn sw_i32_matches_f32_kernel() {
+        use crate::align::sw::{sw_align, SwParams};
+        use crate::fasta::{alphabet::substitution_matrix, Alphabet};
+        let p = SwParams {
+            subst: substitution_matrix(Alphabet::Dna),
+            alpha: Alphabet::Dna.size(),
+            gap: 6.0,
+        };
+        let ip = IntSwParams::from_f32(&p).expect("DNA matrix is integer-valued");
+        let mut rng = Rng::seed_from_u64(0x5117);
+        for case in 0..30 {
+            let a: Vec<i32> = (0..1 + rng.below(80)).map(|_| rng.below(4) as i32).collect();
+            let b: Vec<i32> = (0..1 + rng.below(80)).map(|_| rng.below(4) as i32).collect();
+            let sf = sw_align(&a, &b, &p);
+            let si = sw_align_i32(&a, &b, &ip);
+            assert_eq!(sf.score, si.score, "case {case}");
+            assert_eq!(sf.ops, si.ops, "case {case}");
+            assert_eq!(
+                (sf.a_start, sf.a_end, sf.b_start, sf.b_end),
+                (si.a_start, si.a_end, si.b_start, si.b_end),
+                "case {case}"
+            );
+        }
+    }
+}

@@ -18,11 +18,11 @@
 use anyhow::{ensure, Context as _, Result};
 
 use super::pairwise::{
-    anchored_align, center_space_profile, encode_ops, merge_profiles, render_center_row,
+    anchored_align_with, center_space_profile, encode_ops, merge_profiles, render_center_row,
     render_query_row,
 };
 use super::trie::SegmentTrie;
-use super::MsaResult;
+use super::{KernelBackend, MsaResult};
 use crate::engine::Cluster;
 use crate::fasta::Sequence;
 
@@ -44,6 +44,9 @@ pub struct CenterStarConfig {
     /// (a straggler partition of long genomes no longer pins a stage to
     /// one node).
     pub target_residues_per_task: usize,
+    /// Pairwise kernel backend for the inter-anchor global DP.  Both
+    /// choices are bit-identical in output.
+    pub kernel: KernelBackend,
 }
 
 impl Default for CenterStarConfig {
@@ -53,6 +56,7 @@ impl Default for CenterStarConfig {
             partitions: 0,
             center_sample: 1,
             target_residues_per_task: 32 * 1024,
+            kernel: KernelBackend::default(),
         }
     }
 }
@@ -159,6 +163,7 @@ pub fn align_nucleotide(
         .collect();
     let rdd = cluster.parallelize(indexed, base_parts).split_partitions(split_factor);
     let center_for_map = center_bc.arc();
+    let kernel = cfg.kernel;
     let paths = rdd.map_partitions_with_index(move |_, items| {
         if items.is_empty() {
             return Vec::new(); // ragged tail slice: skip the trie build
@@ -169,7 +174,7 @@ pub fn align_nucleotide(
         items
             .into_iter()
             .map(|(idx, seq)| {
-                let ops = anchored_align(&seq.codes, &center_for_map, &trie);
+                let ops = anchored_align_with(&seq.codes, &center_for_map, &trie, kernel);
                 (idx, seq, encode_ops(&ops))
             })
             .collect()
@@ -304,6 +309,30 @@ mod tests {
         assert_eq!(spark.width, hadoop.width);
         for (a, b) in spark.aligned.iter().zip(&hadoop.aligned) {
             assert_eq!(a.codes, b.codes, "backends must agree exactly");
+        }
+    }
+
+    #[test]
+    fn kernel_backends_are_bit_identical() {
+        let spec = DatasetSpec { count: 20, ..DatasetSpec::mito(0.02, 17) };
+        let seqs = spec.generate();
+        let c = Cluster::new(ClusterConfig::spark(3));
+        let base = CenterStarConfig { segment_len: 12, ..Default::default() };
+        let scalar = align_nucleotide(
+            &c,
+            &seqs,
+            &CenterStarConfig { kernel: KernelBackend::Scalar, ..base.clone() },
+        )
+        .unwrap();
+        let bitp = align_nucleotide(
+            &c,
+            &seqs,
+            &CenterStarConfig { kernel: KernelBackend::BitParallel, ..base },
+        )
+        .unwrap();
+        assert_eq!(scalar.width, bitp.width);
+        for (a, b) in scalar.aligned.iter().zip(&bitp.aligned) {
+            assert_eq!(a.codes, b.codes, "kernel backends must agree exactly");
         }
     }
 

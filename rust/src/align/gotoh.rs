@@ -69,7 +69,10 @@ pub fn gotoh_align(a: &[i32], b: &[i32], p: &AffineParams) -> LocalAlignment {
         F,
     }
     let mut layer = Layer::H;
-    const EPS: f32 = 1e-3;
+    // Exact predecessor selection: each layer value is literally one of
+    // its fill-loop max() arguments, recomputed here with the identical
+    // expression, so `v == candidate` is bit-deterministic — no epsilon
+    // (the old `|v - cand| <= 1e-3` misparented sub-epsilon neighbors).
     while i > 0 && j > 0 {
         match layer {
             Layer::H => {
@@ -78,14 +81,14 @@ pub fn gotoh_align(a: &[i32], b: &[i32], p: &AffineParams) -> LocalAlignment {
                     break;
                 }
                 let diag = h[(i - 1) * w + j - 1] + p.score(a[i - 1], b[j - 1]);
-                if (v - diag).abs() <= EPS {
+                if v == diag {
                     ops.push(Op::Diag);
                     i -= 1;
                     j -= 1;
-                } else if (v - e[i * w + j]).abs() <= EPS {
+                } else if v == e[i * w + j] {
                     layer = Layer::E;
                 } else {
-                    debug_assert!((v - f[i * w + j]).abs() <= EPS);
+                    debug_assert_eq!(v, f[i * w + j]);
                     layer = Layer::F;
                 }
             }
@@ -95,7 +98,7 @@ pub fn gotoh_align(a: &[i32], b: &[i32], p: &AffineParams) -> LocalAlignment {
                 ops.push(Op::Left);
                 let from_open = h[i * w + j - 1] - p.open - p.ext;
                 j -= 1;
-                if (v - from_open).abs() <= EPS {
+                if v == from_open {
                     layer = Layer::H;
                 }
             }
@@ -104,7 +107,7 @@ pub fn gotoh_align(a: &[i32], b: &[i32], p: &AffineParams) -> LocalAlignment {
                 ops.push(Op::Up);
                 let from_open = h[(i - 1) * w + j] - p.open - p.ext;
                 i -= 1;
-                if (v - from_open).abs() <= EPS {
+                if v == from_open {
                     layer = Layer::H;
                 }
             }
@@ -219,8 +222,11 @@ mod tests {
                 }
                 prev = Some(op);
             }
-            assert!(
-                (score - al.score).abs() < 1e-2,
+            // Exact: the matrix and penalties are integer-valued, every
+            // intermediate is f32-exact, and the exact-equality
+            // traceback follows true predecessors only.
+            assert_eq!(
+                score, al.score,
                 "case {case}: path rescore {score} vs {}",
                 al.score
             );

@@ -1,8 +1,19 @@
 //! Center-star MSA: trie acceleration, pairwise DP, space-merge algebra,
 //! SP scoring, and the nucleotide / protein pipelines.
+//!
+//! Pairwise kernels come in two interchangeable backends selected by
+//! [`KernelBackend`] (same A/B discipline as `SchedulerMode` and the
+//! distmat backends): `Scalar` keeps the original full-matrix f32/i32
+//! DP loops, `BitParallel` (default) routes through the integer kernels
+//! in [`myers`] and [`banded`] — bit-parallel edit distance, banded
+//! adaptive-width global DP, packed p-distance counts, and integer SW.
+//! Both backends produce bit-identical alignments and distances (the
+//! property suite pins this), so the switch is purely a speed knob.
 
+pub mod banded;
 pub mod center_star;
 pub mod gotoh;
+pub mod myers;
 pub mod pairwise;
 pub mod protein;
 pub mod sp_score;
@@ -13,6 +24,17 @@ use anyhow::Result;
 
 use crate::engine::Cluster;
 use crate::fasta::{Alphabet, Sequence};
+
+/// Which pairwise kernel implementation the pipelines use.  Both
+/// backends are bit-identical in output; `BitParallel` is faster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelBackend {
+    /// Original scalar full-matrix DP (f32 SW, i32 full NW).
+    Scalar,
+    /// Integer bit-parallel / banded kernels ([`myers`], [`banded`]).
+    #[default]
+    BitParallel,
+}
 
 /// A finished multiple sequence alignment: one gap-padded row per input
 /// sequence (same order), all of equal `width`.

@@ -1,0 +1,207 @@
+//! Bit-parallel sequence kernels on `u64` lanes (dependency-free).
+//!
+//! * [`myers_edit_distance`] — multi-word Myers bit-parallel edit
+//!   distance (Hyyrö's block formulation): 64 DP columns advance per
+//!   word op, exact unit-cost Levenshtein distance in integers.  Used
+//!   to seed the adaptive band width in [`super::banded`].
+//! * [`RowBits`] / [`pdist_counts_packed`] — bit-plane packed aligned
+//!   rows for p-distance: 5 code bitplanes plus a gap mask, so the
+//!   (compared, mismatch) counts of a row pair cost O(L/64) `popcnt`s
+//!   instead of an O(L) byte loop.  Integer counts, so the resulting
+//!   p-distance is bit-identical to the scalar loop in
+//!   [`crate::tree::distance::pdist_pair`].
+//!
+//! Everything here scores in integers; there is no epsilon anywhere.
+
+/// Scalar reference edit distance (unit costs), O(m*n).  The oracle the
+/// bit-parallel kernel is property-tested against.
+pub fn edit_distance_dp(a: &[u8], b: &[u8]) -> usize {
+    let (m, n) = (a.len(), b.len());
+    let mut prev: Vec<usize> = (0..=n).collect();
+    let mut cur = vec![0usize; n + 1];
+    for i in 1..=m {
+        cur[0] = i;
+        for j in 1..=n {
+            let sub = prev[j - 1] + usize::from(a[i - 1] != b[j - 1]);
+            cur[j] = sub.min(prev[j] + 1).min(cur[j - 1] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[n]
+}
+
+/// Multi-word bit-parallel Myers edit distance.  `a` is the "pattern"
+/// laid out along the bit direction (one bit per row), `b` is scanned
+/// column by column; each text character advances all `a.len()` rows in
+/// `ceil(a.len()/64)` word operations.  Exact unit-cost edit distance.
+pub fn myers_edit_distance(a: &[u8], b: &[u8]) -> usize {
+    let m = a.len();
+    if m == 0 {
+        return b.len();
+    }
+    if b.is_empty() {
+        return m;
+    }
+    let words = (m + 63) / 64;
+    // peq[c * words + w]: bit i of word w set iff a[w*64 + i] == c.
+    let mut peq = vec![0u64; 256 * words];
+    for (i, &c) in a.iter().enumerate() {
+        peq[c as usize * words + i / 64] |= 1u64 << (i % 64);
+    }
+    let mut pv = vec![u64::MAX; words];
+    let mut mv = vec![0u64; words];
+    let mut score = m;
+    // Bit position of the true last row inside the last word.
+    let last = (m - 1) % 64;
+    for &c in b {
+        let eq_base = c as usize * words;
+        // Horizontal delta entering block 0 is +1 (top boundary row).
+        let mut hin: i32 = 1;
+        for w in 0..words {
+            let mut eq = peq[eq_base + w];
+            let pvw = pv[w];
+            let mvw = mv[w];
+            if hin < 0 {
+                eq |= 1;
+            }
+            let xv = eq | mvw;
+            let xh = (((eq & pvw).wrapping_add(pvw)) ^ pvw) | eq;
+            let mut ph = mvw | !(xh | pvw);
+            let mut mh = pvw & xh;
+            if w == words - 1 {
+                score = score.wrapping_add(((ph >> last) & 1) as usize);
+                score = score.wrapping_sub(((mh >> last) & 1) as usize);
+            }
+            let hout: i32 = ((ph >> 63) & 1) as i32 - ((mh >> 63) & 1) as i32;
+            ph <<= 1;
+            mh <<= 1;
+            if hin < 0 {
+                mh |= 1;
+            } else if hin > 0 {
+                ph |= 1;
+            }
+            pv[w] = mh | !(xv | ph);
+            mv[w] = ph & xv;
+            hin = hout;
+        }
+    }
+    score
+}
+
+/// Bit-plane packed representation of one aligned row: five code planes
+/// (codes 0..32, covering `PROTEIN_ALPHA = 25`) plus a gap mask.
+#[derive(Debug, Clone)]
+pub struct RowBits {
+    planes: [Vec<u64>; 5],
+    gap: Vec<u64>,
+    len: usize,
+}
+
+/// Pack a row of residue codes (values < 32) into bitplanes.
+pub fn pack_row(codes: &[u8], gap_code: u8) -> RowBits {
+    let words = (codes.len() + 63) / 64;
+    let mut planes = [
+        vec![0u64; words],
+        vec![0u64; words],
+        vec![0u64; words],
+        vec![0u64; words],
+        vec![0u64; words],
+    ];
+    let mut gap = vec![0u64; words];
+    for (i, &c) in codes.iter().enumerate() {
+        debug_assert!(c < 32, "code {c} exceeds 5 bitplanes");
+        let (w, bit) = (i / 64, 1u64 << (i % 64));
+        if c == gap_code {
+            gap[w] |= bit;
+        }
+        for (p, plane) in planes.iter_mut().enumerate() {
+            if (c >> p) & 1 == 1 {
+                plane[w] |= bit;
+            }
+        }
+    }
+    RowBits { planes, gap, len: codes.len() }
+}
+
+/// (compared, mismatch) column counts of a packed row pair — the integer
+/// core of the p-distance, bit-identical to the scalar byte loop.
+pub fn pdist_counts_packed(a: &RowBits, b: &RowBits) -> (u64, u64) {
+    debug_assert_eq!(a.len, b.len, "rows must be aligned");
+    let words = a.gap.len();
+    let (mut compared, mut mismatch) = (0u64, 0u64);
+    for w in 0..words {
+        // Mask off bits beyond the row length in the last word.
+        let valid = if w == words - 1 && a.len % 64 != 0 {
+            (1u64 << (a.len % 64)) - 1
+        } else {
+            u64::MAX
+        };
+        let both = !(a.gap[w] | b.gap[w]) & valid;
+        let mut diff = 0u64;
+        for p in 0..5 {
+            diff |= a.planes[p][w] ^ b.planes[p][w];
+        }
+        compared += both.count_ones() as u64;
+        mismatch += (diff & both).count_ones() as u64;
+    }
+    (compared, mismatch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn myers_matches_dp_on_hand_cases() {
+        assert_eq!(myers_edit_distance(b"kitten", b"sitting"), 3);
+        assert_eq!(myers_edit_distance(b"", b"abc"), 3);
+        assert_eq!(myers_edit_distance(b"abc", b""), 3);
+        assert_eq!(myers_edit_distance(b"abc", b"abc"), 0);
+        assert_eq!(myers_edit_distance(b"a", b"b"), 1);
+    }
+
+    #[test]
+    fn myers_spans_word_boundaries() {
+        // Lengths straddling 64/128 exercise the multi-word carry chain.
+        for &(m, n) in &[(63usize, 65usize), (64, 64), (65, 63), (128, 130), (200, 5)] {
+            let mut rng = Rng::seed_from_u64((m * 1000 + n) as u64);
+            let a: Vec<u8> = (0..m).map(|_| rng.below(4) as u8).collect();
+            let b: Vec<u8> = (0..n).map(|_| rng.below(4) as u8).collect();
+            assert_eq!(
+                myers_edit_distance(&a, &b),
+                edit_distance_dp(&a, &b),
+                "lengths ({m},{n})"
+            );
+        }
+    }
+
+    #[test]
+    fn packed_counts_match_scalar_loop() {
+        let mut rng = Rng::seed_from_u64(0xBEEF);
+        for case in 0..40 {
+            let len = 1 + rng.below(300);
+            let gap = 23u8;
+            let row = |rng: &mut Rng| -> Vec<u8> {
+                (0..len)
+                    .map(|_| if rng.chance(0.2) { gap } else { rng.below(23) as u8 })
+                    .collect()
+            };
+            let a = row(&mut rng);
+            let b = row(&mut rng);
+            let (mut compared, mut mismatch) = (0u64, 0u64);
+            for (x, y) in a.iter().zip(&b) {
+                if *x == gap || *y == gap {
+                    continue;
+                }
+                compared += 1;
+                if x != y {
+                    mismatch += 1;
+                }
+            }
+            let pa = pack_row(&a, gap);
+            let pb = pack_row(&b, gap);
+            assert_eq!(pdist_counts_packed(&pa, &pb), (compared, mismatch), "case {case}");
+        }
+    }
+}

@@ -16,6 +16,7 @@
 //!    the small-input fallback).
 
 use super::sw::Op;
+use super::KernelBackend;
 use crate::fasta::Alphabet;
 
 /// Re-export the op type under the name the MSA layer uses.
@@ -102,27 +103,47 @@ pub fn global_dp(a: &[u8], b: &[u8]) -> Vec<PathOp> {
     ops
 }
 
+/// Global alignment through the selected kernel backend.  Both arms are
+/// bit-identical: the banded integer kernel certifies its band against
+/// the full-DP optimum before returning (see [`super::banded`]).
+pub fn global_align(a: &[u8], b: &[u8], kernel: KernelBackend) -> Vec<PathOp> {
+    match kernel {
+        KernelBackend::Scalar => global_dp(a, b),
+        KernelBackend::BitParallel => super::banded::banded_global(a, b),
+    }
+}
+
 /// Trie-anchored alignment: exact anchors contribute Diag runs; the gaps
-/// between anchors are closed with [`global_dp`].  `query` and `center`
-/// are residue codes of the same alphabet.
-pub fn anchored_align(
+/// between anchors are closed with [`global_align`].  `query` and
+/// `center` are residue codes of the same alphabet.
+pub fn anchored_align_with(
     query: &[u8],
     center: &[u8],
     trie: &super::trie::SegmentTrie,
+    kernel: KernelBackend,
 ) -> Vec<PathOp> {
     let chain = trie.chain(query);
     let mut ops = Vec::with_capacity(query.len().max(center.len()) + 16);
     let (mut q, mut c) = (0usize, 0usize);
     for a in &chain {
         // Close the unanchored region before this anchor.
-        ops.extend(global_dp(&query[q..a.query_pos], &center[c..a.center_pos]));
+        ops.extend(global_align(&query[q..a.query_pos], &center[c..a.center_pos], kernel));
         // The anchor itself: exact match run.
         ops.extend(std::iter::repeat(Op::Diag).take(a.len));
         q = a.query_pos + a.len;
         c = a.center_pos + a.len;
     }
-    ops.extend(global_dp(&query[q..], &center[c..]));
+    ops.extend(global_align(&query[q..], &center[c..], kernel));
     ops
+}
+
+/// [`anchored_align_with`] under the default kernel backend.
+pub fn anchored_align(
+    query: &[u8],
+    center: &[u8],
+    trie: &super::trie::SegmentTrie,
+) -> Vec<PathOp> {
+    anchored_align_with(query, center, trie, KernelBackend::default())
 }
 
 /// Number of gap columns this pair inserts before each center position:

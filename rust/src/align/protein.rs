@@ -12,11 +12,12 @@
 
 use anyhow::{ensure, Context as _, Result};
 
+use super::banded::{sw_align_i32, IntSwParams};
 use super::pairwise::{
     center_space_profile, decode_ops, encode_ops, merge_profiles, render_query_row, PathOp,
 };
 use super::sw::{sw_align, sw_matrix, traceback, LocalAlignment, Op, SwParams};
-use super::MsaResult;
+use super::{KernelBackend, MsaResult};
 use crate::engine::Cluster;
 use crate::fasta::{alphabet::substitution_matrix, Alphabet, Sequence};
 use crate::runtime::{batcher::SwBatcher, XlaService};
@@ -35,6 +36,10 @@ pub struct ProteinConfig {
     /// proteins become finer stealable tasks instead of coarse
     /// per-sequence partitions pinning a stage to one node.
     pub target_residues_per_task: usize,
+    /// Pairwise kernel backend for the native SW arm.  `BitParallel`
+    /// runs the integer SW kernel (bit-identical to the f32 loop for
+    /// the built-in integer-valued matrices).
+    pub kernel: KernelBackend,
 }
 
 impl Default for ProteinConfig {
@@ -44,6 +49,7 @@ impl Default for ProteinConfig {
             partitions: 0,
             center_longest: true,
             target_residues_per_task: 32 * 1024,
+            kernel: KernelBackend::default(),
         }
     }
 }
@@ -72,9 +78,16 @@ fn align_partition(
     center: &[u8],
     params: &SwParams,
     svc: Option<&XlaService>,
+    kernel: KernelBackend,
 ) -> Result<Vec<(u64, Sequence, Vec<u8>)>> {
     let center_i32: Vec<i32> = center.iter().map(|&c| c as i32).collect();
     let mut out = Vec::with_capacity(queries.len());
+    // Integer SW kernel for the native arm (bit-identical to the f32
+    // loop); falls back to f32 if the matrix is not integer-valued.
+    let int_params = match kernel {
+        KernelBackend::BitParallel => IntSwParams::from_f32(params),
+        KernelBackend::Scalar => None,
+    };
 
     // Split into XLA-coverable and fallback sets to keep batches dense.
     let mut xla_idx: Vec<usize> = Vec::new();
@@ -119,7 +132,10 @@ fn align_partition(
     for &k in &native_idx {
         let (idx, seq) = &queries[k];
         let q: Vec<i32> = seq.codes.iter().map(|&c| c as i32).collect();
-        let local = sw_align(&q, &center_i32, params);
+        let local = match &int_params {
+            Some(ip) => sw_align_i32(&q, &center_i32, ip),
+            None => sw_align(&q, &center_i32, params),
+        };
         let ops = local_to_global(&local, q.len(), center_i32.len());
         out.push((*idx, seq.clone(), encode_ops(&ops)));
     }
@@ -176,11 +192,12 @@ pub fn align_protein(
     let center_for_map = center_bc.arc();
     let params_map = params.clone();
     let svc_map = svc.cloned();
+    let kernel = cfg.kernel;
     // Fallible map: an accelerator batch error becomes a task `Err` the
     // executor retries through lineage (and ultimately surfaces to the
     // caller) instead of panicking the worker thread.
     let paths = rdd.try_map_partitions_with_index(move |_, items| {
-        align_partition(&items, &center_for_map, &params_map, svc_map.as_ref())
+        align_partition(&items, &center_for_map, &params_map, svc_map.as_ref(), kernel)
     });
     let paths = paths.checkpoint().context("persisting pairwise paths")?;
 
@@ -285,6 +302,30 @@ mod tests {
         let msa = align_protein(&c, &seqs, None, &ProteinConfig::default()).unwrap();
         assert_eq!(msa.center_index, 1);
         check(&seqs, &msa);
+    }
+
+    #[test]
+    fn kernel_backends_are_bit_identical() {
+        let seqs = DatasetSpec::protein(16, 0.15, 19).generate();
+        let c = Cluster::new(ClusterConfig::spark(2));
+        let scalar = align_protein(
+            &c,
+            &seqs,
+            None,
+            &ProteinConfig { kernel: KernelBackend::Scalar, ..Default::default() },
+        )
+        .unwrap();
+        let bitp = align_protein(
+            &c,
+            &seqs,
+            None,
+            &ProteinConfig { kernel: KernelBackend::BitParallel, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(scalar.width, bitp.width);
+        for (a, b) in scalar.aligned.iter().zip(&bitp.aligned) {
+            assert_eq!(a.codes, b.codes, "kernel backends must agree exactly");
+        }
     }
 
     #[test]

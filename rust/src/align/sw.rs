@@ -110,23 +110,30 @@ pub struct LocalAlignment {
 
 /// Traceback from the argmax cell, re-deriving each predecessor from H
 /// (no pointer matrix — the XLA kernel only materializes H).
+///
+/// Predecessor selection is *exact*: each cell's value is literally one
+/// of the fill loop's max() arguments, and recomputing a candidate with
+/// the identical expression is bit-deterministic, so `v == candidate`
+/// holds for the true predecessor and for nothing merely nearby.  An
+/// epsilon here (the old `|v - cand| <= 1e-3`) mistakes sub-epsilon
+/// neighbors for predecessors on long high-scoring alignments — see the
+/// sub-epsilon regression test below.
 pub fn traceback(h: &HMatrix, a: &[i32], b: &[i32], p: &SwParams) -> LocalAlignment {
     let (mut i, mut j, score) = h.argmax();
     let (a_end, b_end) = (i, j);
     let mut ops = Vec::new();
-    const EPS: f32 = 1e-3;
     while i > 0 && j > 0 && h.at(i, j) > 0.0 {
         let v = h.at(i, j);
         let diag = h.at(i - 1, j - 1) + p.score(a[i - 1], b[j - 1]);
-        if (v - diag).abs() <= EPS {
+        if v == diag {
             ops.push(Op::Diag);
             i -= 1;
             j -= 1;
-        } else if (v - (h.at(i - 1, j) - p.gap)).abs() <= EPS {
+        } else if v == h.at(i - 1, j) - p.gap {
             ops.push(Op::Up);
             i -= 1;
         } else {
-            debug_assert!((v - (h.at(i, j - 1) - p.gap)).abs() <= EPS);
+            debug_assert_eq!(v, h.at(i, j - 1) - p.gap);
             ops.push(Op::Left);
             j -= 1;
         }
@@ -214,6 +221,68 @@ mod tests {
         assert_eq!(h.at(1, 1), 5.0); // A-A
         assert_eq!(h.at(1, 2), 0.0); // A-G after gap: 5-6 < 0 -> 0... max(diag -4, up/left) = 0
         assert_eq!(h.at(2, 3), 5.0); // C aligned to C after G mismatch skip
+    }
+
+    /// Regression for the epsilon-traceback bug class: with candidate
+    /// spacing below the old `EPS = 1e-3` (here one dyadic unit,
+    /// 2^-10 ≈ 0.00098 — the f32-ulp regime that high-scoring long
+    /// alignments reach), the old `|v - diag| <= EPS` check accepted a
+    /// diagonal predecessor that sits exactly one unit *below* the cell
+    /// value, shearing the path onto the wrong diagonal.  All values
+    /// here are exact in f32 (dyadic, small multiples of 2^-10), so the
+    /// exact-equality traceback is provably right and the path rescores
+    /// to the score bit-for-bit.  Under the old scheme this test fails:
+    /// the traced path becomes all-Diag and rescores one unit low.
+    #[test]
+    fn sub_epsilon_spacing_long_alignment_traces_exactly() {
+        const U: f32 = 1.0 / 1024.0; // 2^-10 < old EPS of 1e-3
+        let alpha = Alphabet::Dna.size();
+        let mut subst = vec![-U; alpha * alpha];
+        for k in 0..alpha {
+            subst[k * alpha + k] = U;
+        }
+        let p = SwParams { subst, alpha, gap: U };
+        // a = A^n G^n, b = A^n T G^n (one T inserted): the optimal local
+        // path is n A-matches, one Left (skip the T), n G-matches.  At
+        // the Left cell the diag candidate is exactly one unit below the
+        // cell value — old-EPS tracebacks take it and lose a unit.
+        let n = 1024usize; // 2048/2049-residue pair
+        let a_code = Alphabet::Dna.encode(b'A') as i32;
+        let g_code = Alphabet::Dna.encode(b'G') as i32;
+        let t_code = Alphabet::Dna.encode(b'T') as i32;
+        let mut a = vec![a_code; n];
+        a.extend(std::iter::repeat(g_code).take(n));
+        let mut b = vec![a_code; n];
+        b.push(t_code);
+        b.extend(std::iter::repeat(g_code).take(n));
+
+        let al = sw_align(&a, &b, &p);
+        assert_eq!(al.score, (2 * n - 1) as f32 * U);
+        let mut expected = vec![Op::Diag; n];
+        expected.push(Op::Left);
+        expected.extend(std::iter::repeat(Op::Diag).take(n));
+        assert_eq!(al.ops, expected, "exact traceback must skip the inserted T via Left");
+        // Path rescore is bit-exact (every term is a small dyadic).
+        let (mut i, mut j, mut score) = (al.a_start, al.b_start, 0f32);
+        for &op in &al.ops {
+            match op {
+                Op::Diag => {
+                    score += p.score(a[i], b[j]);
+                    i += 1;
+                    j += 1;
+                }
+                Op::Up => {
+                    score -= p.gap;
+                    i += 1;
+                }
+                Op::Left => {
+                    score -= p.gap;
+                    j += 1;
+                }
+            }
+        }
+        assert_eq!((i, j), (al.a_end, al.b_end));
+        assert_eq!(score, al.score, "path must rescore to the DP optimum exactly");
     }
 
     #[test]

@@ -21,6 +21,7 @@ use anyhow::Result;
 
 use crate::align::center_star::{align_nucleotide, CenterStarConfig};
 use crate::align::protein::{align_protein, ProteinConfig};
+use crate::align::KernelBackend;
 use crate::baselines::progressive::{estimated_bytes, progressive_msa, ProgressiveConfig};
 use crate::baselines::{halign_v1, hptree_build, iqtree_like, sparksw};
 use crate::data::DatasetSpec;
@@ -408,6 +409,33 @@ pub fn table5_tree(cfg: &BenchConfig, svc: Option<&XlaService>) -> Vec<RunReport
     out
 }
 
+/// Exact-kernel A/B — the same center-star MSA with the scalar f32
+/// pairwise kernels vs the integer bit-parallel/banded kernels.  The
+/// integer path is certified-equal to the full DP (not an
+/// approximation), so the avg-SP metric must be bit-identical; the only
+/// columns allowed to differ are time-shaped.
+pub fn kernel_ab(cfg: &BenchConfig) -> Vec<RunReport> {
+    let (label, spec) = cfg.dna_tiers().into_iter().next().unwrap();
+    let seqs = spec.generate();
+    let mut out = Vec::new();
+    for (tool, kernel) in [
+        ("halign2_scalar", KernelBackend::Scalar),
+        ("halign2_bitparallel", KernelBackend::BitParallel),
+    ] {
+        out.push(measure(tool, &label, "avgSP", || {
+            let engine = Cluster::new(ClusterConfig::spark(cfg.workers));
+            let msa = align_nucleotide(
+                &engine,
+                &seqs,
+                &CenterStarConfig { kernel, ..Default::default() },
+            )?;
+            let sp = msa.avg_sp_distributed(&engine)?;
+            Ok((msa, Some(sp), Some(engine)))
+        }));
+    }
+    out
+}
+
 /// Figure 5 — average max per-worker memory: HAlign (Hadoop) vs SparkSW
 /// vs HAlign-II on a DNA tier and a protein tier.
 pub fn fig5_memory(cfg: &BenchConfig, svc: Option<&XlaService>) -> Vec<RunReport> {
@@ -569,6 +597,19 @@ mod tests {
             );
             assert!(!line.split('\t').nth(11).unwrap().contains('-'), "peak cell is numeric");
         }
+    }
+
+    #[test]
+    fn kernel_ab_backends_agree_exactly() {
+        let rows = kernel_ab(&quick());
+        assert_eq!(rows.len(), 2, "scalar and bitparallel rows");
+        assert!(rows.iter().all(|r| r.dnf.is_none()));
+        assert!(rows.iter().any(|r| r.tool == "halign2_scalar"));
+        assert!(rows.iter().any(|r| r.tool == "halign2_bitparallel"));
+        assert_eq!(
+            rows[0].metric, rows[1].metric,
+            "kernel backend must not change the MSA"
+        );
     }
 
     #[test]

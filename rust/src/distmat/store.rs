@@ -5,7 +5,11 @@
 //! inserting past the budget evicts least-recently-used blobs to disk
 //! (one file per key, written with the engine's tmp+rename discipline so
 //! a speculative duplicate re-writing a tile can never be observed
-//! half-written).  `get` re-reads and re-admits spilled blobs.  All
+//! half-written).  Spill writes run *outside* the store mutex: victims
+//! move to a "spilling" side map under the lock and are written after it
+//! is released, so a slow disk never blocks concurrent `get`s of
+//! resident tiles (readers serve in-flight victims from the side map).
+//! `get` re-reads and re-admits spilled blobs.  All
 //! values roundtrip bit-exactly (`f64::to_le_bytes`), which is what lets
 //! the tiled NJ path promise bit-identical trees to the dense path.
 //!
@@ -16,6 +20,7 @@
 //! The peak-resident counter is the Fig-5-style headline: a tiled
 //! pipeline's peak stays `<= budget + one blob` instead of O(n²).
 
+use std::collections::hash_map::Entry;
 use std::collections::{HashMap, HashSet};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -27,6 +32,20 @@ use anyhow::{anyhow, ensure, Context as _, Result};
 struct ResidentBlob {
     data: Arc<Vec<f64>>,
     last_access: u64,
+}
+
+/// An evicted blob whose spill write has not completed yet.
+struct SpillEntry {
+    data: Arc<Vec<f64>>,
+    version: u64,
+}
+
+/// A spill write handed out of the lock: the bytes to persist plus the
+/// key's write generation they correspond to.
+struct PendingSpill {
+    key: u64,
+    data: Arc<Vec<f64>>,
+    version: u64,
 }
 
 struct StoreInner {
@@ -42,6 +61,12 @@ struct StoreInner {
     /// the spill file outside the lock detect that a concurrent `put`
     /// superseded those bytes, instead of re-admitting stale data.
     versions: HashMap<u64, u64>,
+    /// Evicted-but-not-yet-durable blobs.  Each entry is owned by the
+    /// one thread running [`TileStore::write_spills`] for its key;
+    /// readers serve from here so a slow disk write never blocks `get`,
+    /// and a re-eviction of a re-put key refreshes the entry in place
+    /// for that owner to pick up (never a second concurrent writer).
+    spilling: HashMap<u64, SpillEntry>,
 }
 
 impl StoreInner {
@@ -56,6 +81,9 @@ impl StoreInner {
     }
 }
 
+#[cfg(test)]
+type SpillHook = Box<dyn Fn(u64) + Send + Sync>;
+
 /// Spillable keyed blob store (see module docs).
 pub struct TileStore {
     inner: Mutex<StoreInner>,
@@ -64,6 +92,11 @@ pub struct TileStore {
     peak: AtomicUsize,
     spill_files: AtomicUsize,
     spill_reads: AtomicUsize,
+    /// Test-only: invoked (outside the store lock) before each spill
+    /// write — lets tests stall a spill mid-flight and prove that
+    /// readers of resident and spilling blobs are never blocked on it.
+    #[cfg(test)]
+    spill_hook: Mutex<Option<SpillHook>>,
 }
 
 fn blob_bytes(data: &[f64]) -> usize {
@@ -93,12 +126,15 @@ impl TileStore {
                 resident_bytes: 0,
                 persisted: HashSet::new(),
                 versions: HashMap::new(),
+                spilling: HashMap::new(),
             }),
             dir,
             budget,
             peak: AtomicUsize::new(0),
             spill_files: AtomicUsize::new(0),
             spill_reads: AtomicUsize::new(0),
+            #[cfg(test)]
+            spill_hook: Mutex::new(None),
         }
     }
 
@@ -131,34 +167,88 @@ impl TileStore {
         self.dir.as_ref().map(|d| d.join(format!("blob-{key}.f64")))
     }
 
-    /// Drop least-recently-used blobs (spilling unpersisted ones) until
-    /// the resident set fits the budget; always keeps the most recently
-    /// touched blob resident so the caller's working tile survives its
-    /// own insert.
-    fn evict_over_budget(&self, st: &mut StoreInner) -> Result<()> {
+    /// Drop least-recently-used blobs until the resident set fits the
+    /// budget; always keeps the most recently touched blob resident so
+    /// the caller's working tile survives its own insert.  Unpersisted
+    /// victims move to the `spilling` side map and are returned for the
+    /// caller to write *after releasing the lock* — the disk write must
+    /// never run under the store mutex, or every concurrent `get` of a
+    /// resident tile stalls behind it.
+    fn collect_spill_victims(&self, st: &mut StoreInner) -> Vec<PendingSpill> {
+        let mut victims = Vec::new();
         if self.dir.is_none() {
-            return Ok(()); // nowhere to spill: stay resident
+            return victims; // nowhere to spill: stay resident
         }
         while st.resident_bytes > self.budget && st.resident.len() > 1 {
             let key = st.coldest().expect("resident non-empty");
             let blob = st.resident.remove(&key).expect("coldest key is resident");
             st.resident_bytes -= blob_bytes(&blob.data);
-            if !st.persisted.contains(&key) {
-                let path = self.blob_path(key).expect("spill dir checked above");
-                let mut bytes = Vec::with_capacity(blob_bytes(&blob.data));
-                for v in blob.data.iter() {
+            if st.persisted.contains(&key) {
+                continue; // current bytes already durable on disk
+            }
+            let version = st.versions.get(&key).copied().unwrap_or(0);
+            match st.spilling.entry(key) {
+                Entry::Occupied(mut e) => {
+                    // A writer already owns this key (the blob was
+                    // re-put and re-evicted mid-write): refresh what it
+                    // must persist; it re-writes until the entry
+                    // matches what hit the disk.
+                    *e.get_mut() = SpillEntry { data: blob.data, version };
+                }
+                Entry::Vacant(slot) => {
+                    slot.insert(SpillEntry { data: blob.data.clone(), version });
+                    victims.push(PendingSpill { key, data: blob.data, version });
+                }
+            }
+        }
+        victims
+    }
+
+    /// Persist evicted blobs outside the store lock.  This call owns the
+    /// `spilling` entry of every victim key; if a re-eviction refreshed
+    /// an entry while its write was in flight, loop and write the newer
+    /// bytes until entry and file agree.  On an I/O error the entry is
+    /// left in place, so the blob stays readable from memory.
+    fn write_spills(&self, victims: Vec<PendingSpill>) -> Result<()> {
+        for mut job in victims {
+            loop {
+                #[cfg(test)]
+                if let Some(hook) = self.spill_hook.lock().unwrap().as_ref() {
+                    hook(job.key);
+                }
+                let path =
+                    self.blob_path(job.key).expect("victims only collected with a spill dir");
+                let mut bytes = Vec::with_capacity(blob_bytes(&job.data));
+                for v in job.data.iter() {
                     bytes.extend_from_slice(&v.to_le_bytes());
                 }
                 crate::engine::shuffle::write_atomic(&path, &bytes)
                     .with_context(|| format!("spilling {}", path.display()))?;
                 self.spill_files.fetch_add(1, Ordering::Relaxed);
-                st.persisted.insert(key);
+                let mut st = self.inner.lock().unwrap();
+                match st.spilling.get(&job.key) {
+                    Some(e) if e.version != job.version => {
+                        // Refreshed mid-write: go around and persist the
+                        // newer bytes too.
+                        job.data = e.data.clone();
+                        job.version = e.version;
+                    }
+                    _ => {
+                        if st.versions.get(&job.key).copied().unwrap_or(0) == job.version {
+                            st.persisted.insert(job.key);
+                        }
+                        st.spilling.remove(&job.key);
+                        break;
+                    }
+                }
             }
         }
         Ok(())
     }
 
-    fn admit(&self, st: &mut StoreInner, key: u64, data: Arc<Vec<f64>>) -> Result<()> {
+    /// Must be called with the lock held; returns victims for the caller
+    /// to pass to [`Self::write_spills`] after dropping the lock.
+    fn admit(&self, st: &mut StoreInner, key: u64, data: Arc<Vec<f64>>) -> Vec<PendingSpill> {
         let tick = st.next_tick();
         let blob = ResidentBlob { data: data.clone(), last_access: tick };
         if let Some(old) = st.resident.insert(key, blob) {
@@ -166,20 +256,24 @@ impl TileStore {
         }
         st.resident_bytes += blob_bytes(&data);
         self.peak.fetch_max(st.resident_bytes, Ordering::Relaxed);
-        self.evict_over_budget(st)
+        self.collect_spill_victims(st)
     }
 
     /// Insert (or replace) the blob for `key`.  Replacement releases the
     /// old copy's accounting first, so at-least-once producers keep the
     /// resident/peak numbers stable run to run.
     pub fn put(&self, key: u64, data: Vec<f64>) -> Result<()> {
-        let mut st = self.inner.lock().unwrap();
-        // The new bytes supersede any spilled copy of an earlier
-        // execution; it will be re-spilled on the next eviction, and any
-        // in-flight disk read of the old bytes sees the version bump.
-        st.persisted.remove(&key);
-        *st.versions.entry(key).or_insert(0) += 1;
-        self.admit(&mut st, key, Arc::new(data))
+        let victims = {
+            let mut st = self.inner.lock().unwrap();
+            // The new bytes supersede any spilled copy of an earlier
+            // execution; it will be re-spilled on the next eviction, and
+            // any in-flight disk read or spill write of the old bytes
+            // sees the version bump.
+            st.persisted.remove(&key);
+            *st.versions.entry(key).or_insert(0) += 1;
+            self.admit(&mut st, key, Arc::new(data))
+        };
+        self.write_spills(victims)
     }
 
     /// Fetch the blob for `key`, re-reading (and re-admitting) a spilled
@@ -197,6 +291,11 @@ impl TileStore {
                     blob.last_access = tick;
                     return Ok(blob.data.clone());
                 }
+                if let Some(e) = st.spilling.get(&key) {
+                    // Evicted with its spill write still in flight:
+                    // serve from the side map — never wait on the disk.
+                    return Ok(e.data.clone());
+                }
                 st.versions.get(&key).copied().unwrap_or(0)
             };
             let path = self
@@ -211,16 +310,23 @@ impl TileStore {
                 .collect();
             self.spill_reads.fetch_add(1, Ordering::Relaxed);
             let arc = Arc::new(data);
-            let mut st = self.inner.lock().unwrap();
-            if let Some(raced) = st.resident.get(&key) {
-                return Ok(raced.data.clone()); // another reader re-admitted it first
-            }
-            if st.versions.get(&key).copied().unwrap_or(0) != seen_version {
-                continue; // a put superseded the bytes we read: retry
-            }
-            self.admit(&mut st, key, arc.clone())?;
-            // The just-read bytes are exactly what is on disk.
-            st.persisted.insert(key);
+            let victims = {
+                let mut st = self.inner.lock().unwrap();
+                if let Some(raced) = st.resident.get(&key) {
+                    return Ok(raced.data.clone()); // another reader re-admitted it first
+                }
+                if let Some(e) = st.spilling.get(&key) {
+                    return Ok(e.data.clone()); // at least as new as the file
+                }
+                if st.versions.get(&key).copied().unwrap_or(0) != seen_version {
+                    continue; // a put superseded the bytes we read: retry
+                }
+                let victims = self.admit(&mut st, key, arc.clone());
+                // The just-read bytes are exactly what is on disk.
+                st.persisted.insert(key);
+                victims
+            };
+            self.write_spills(victims)?;
             return Ok(arc);
         }
     }
@@ -305,6 +411,39 @@ mod tests {
             w1 + 1,
             "a clean (persisted, unmodified) blob must not be re-written"
         );
+    }
+
+    #[test]
+    fn get_of_resident_tile_is_not_blocked_by_slow_spill() {
+        use std::sync::mpsc;
+        let s = Arc::new(TileStore::spilling(tmpdir("slowspill"), 100).unwrap());
+        s.put(1, vec![1.0; 10]).unwrap(); // 80 bytes resident
+        let (entered_tx, entered_rx) = mpsc::channel();
+        let (release_tx, release_rx) = mpsc::channel::<()>();
+        let release_rx = Mutex::new(release_rx);
+        let stalled_once = std::sync::atomic::AtomicBool::new(false);
+        *s.spill_hook.lock().unwrap() = Some(Box::new(move |_key| {
+            // Stall only the first spill write; later spills run freely.
+            if !stalled_once.swap(true, Ordering::SeqCst) {
+                entered_tx.send(()).unwrap();
+                release_rx.lock().unwrap().recv().unwrap();
+            }
+        }));
+        let s2 = s.clone();
+        let spiller = std::thread::spawn(move || {
+            s2.put(2, vec![2.0; 10]).unwrap(); // evicts key 1 -> stalled spill
+        });
+        // Wait until the spill write is provably in flight (and stalled).
+        entered_rx.recv().unwrap();
+        // Key 2 is resident: its fetch must not wait on key 1's write.
+        assert_eq!(*s.get(2).unwrap(), vec![2.0; 10]);
+        // The victim itself stays readable from the spilling side map.
+        assert_eq!(*s.get(1).unwrap(), vec![1.0; 10]);
+        release_tx.send(()).unwrap();
+        spiller.join().unwrap();
+        // After the write completes, the blob round-trips from disk.
+        assert_eq!(*s.get(1).unwrap(), vec![1.0; 10]);
+        assert!(s.spill_files_written() >= 1);
     }
 
     #[test]

@@ -844,12 +844,22 @@ fn decode_indexed_range<T: Decode>(
     Ok((out, (ohi - olo) as u64))
 }
 
+/// Positioned 8-byte read used by the slice path's header/offset probes.
+fn read_u64_at(f: &mut std::fs::File, pos: u64) -> Result<u64> {
+    use std::io::{Read as _, Seek as _, SeekFrom};
+    let mut buf = [0u8; 8];
+    f.seek(SeekFrom::Start(pos))?;
+    f.read_exact(&mut buf)?;
+    Ok(u64::from_le_bytes(buf))
+}
+
 /// Partitions persisted as indexed encoded files (checkpoint outputs).
 /// Element counts are recorded at write time so `split_partitions` can
 /// slice without a read; the in-file offset index makes each slice read
-/// decode only its own byte range; and reads fall back to the HDFS-style
-/// `.r1`/`.r2` replica copies when the primary file is missing (lost
-/// node).
+/// *read and* decode only its own byte range (header word, two
+/// bracketing offsets, payload range — via positioned reads, never the
+/// whole file); and reads fall back to the HDFS-style `.r1`/`.r2`
+/// replica copies when the primary file is missing (lost node).
 struct DiskPartsNode<T> {
     ctx: Cluster,
     dir: std::path::PathBuf,
@@ -889,6 +899,43 @@ impl<T: Data + Encode + Decode> DiskPartsNode<T> {
         ))
     }
 
+    /// Positioned read of a slice from one partition file: the header
+    /// word, the two bracketing offsets `off[lo]`/`off[hi]`, and the
+    /// payload range between them — never the whole file.  Returns the
+    /// payload bytes, the clamped bounds, and the file bytes read.
+    fn read_slice_file(
+        &self,
+        path: &std::path::Path,
+        lo: usize,
+        hi: usize,
+    ) -> Result<(Vec<u8>, usize, usize, u64)> {
+        use std::io::{Read as _, Seek as _, SeekFrom};
+        let mut f = std::fs::File::open(path)?;
+        let file_len = f.metadata()?.len();
+        let total = read_u64_at(&mut f, 0)? as usize;
+        // u128 math so a corrupt count can't overflow the index-size check.
+        anyhow::ensure!(
+            8 + (total as u128 + 1) * 8 <= file_len as u128,
+            "checkpoint offset index truncated (count {total}, {file_len}-byte file)"
+        );
+        let hi = hi.min(total);
+        let lo = lo.min(hi);
+        let olo = read_u64_at(&mut f, 8 + lo as u64 * 8)?;
+        let ohi = read_u64_at(&mut f, 8 + hi as u64 * 8)?;
+        let payload_base = 8 + (total as u64 + 1) * 8;
+        anyhow::ensure!(
+            olo <= ohi && payload_base + ohi <= file_len,
+            "checkpoint offsets corrupt ({olo}..{ohi} of {} payload bytes)",
+            file_len - payload_base
+        );
+        let mut payload = vec![0u8; (ohi - olo) as usize];
+        f.seek(SeekFrom::Start(payload_base + olo))?;
+        f.read_exact(&mut payload)?;
+        // Header + two offset probes + the payload range.
+        let read = 8 + 16 + payload.len() as u64;
+        Ok((payload, lo, hi, read))
+    }
+
     /// Decode elements `lo..hi` from an indexed partition file — a seek
     /// to `off[lo]` plus exactly the requested range's payload bytes
     /// (charged with the usual reduce-side KV bloat, audited through the
@@ -926,8 +973,58 @@ impl<T: Data + Encode + Decode> PartSrc<T> for DiskPartsNode<T> {
     }
 
     fn compute_slice(&self, part: usize, lo: usize, hi: usize) -> Result<Vec<T>> {
-        let bytes = self.read_part_bytes(part)?;
-        self.decode_range(part, &bytes, lo, hi)
+        // Positioned reads: a slice touches the header, two offsets and
+        // its own payload byte range — `fs::read`-ing the whole
+        // partition file here made every 2-element split read (and get
+        // charged memory for) the entire checkpoint.  Primary-then-
+        // replica fallback as in `read_part_bytes`.
+        let mut last_err: Option<anyhow::Error> = None;
+        let mut got = None;
+        for copy in 0..self.ctx.config().disk_replication.max(1) {
+            let name = if copy == 0 {
+                format!("part-{part:05}.kv")
+            } else {
+                format!("part-{part:05}.kv.r{copy}")
+            };
+            match self.read_slice_file(&self.dir.join(&name), lo, hi) {
+                Ok(v) => {
+                    got = Some(v);
+                    break;
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        let Some((payload, lo, hi, read)) = got else {
+            return Err(anyhow!(
+                "checkpoint partition {part} unreadable in {} (all {} copies): {}",
+                self.dir.display(),
+                self.ctx.config().disk_replication.max(1),
+                last_err.map(|e| e.to_string()).unwrap_or_else(|| "no copies tried".into()),
+            ));
+        };
+        self.ctx
+            .io()
+            .shuffle_bytes_read
+            .fetch_add(read, std::sync::atomic::Ordering::Relaxed);
+        let worker = self.ctx.executor().worker_for(part);
+        let charge = payload.len() * self.ctx.config().kv_overhead.max(1);
+        self.ctx.memory().worker(worker).acquire(charge);
+        let result = (|| -> Result<Vec<T>> {
+            let mut slice = &payload[..];
+            let mut out = Vec::with_capacity(hi - lo);
+            for _ in lo..hi {
+                out.push(T::decode(&mut slice)?);
+            }
+            anyhow::ensure!(slice.is_empty(), "checkpoint slice has trailing bytes");
+            Ok(out)
+        })();
+        self.ctx.memory().worker(worker).release(charge);
+        let out = result?;
+        self.ctx
+            .io()
+            .checkpoint_bytes_decoded
+            .fetch_add(payload.len() as u64, std::sync::atomic::Ordering::Relaxed);
+        Ok(out)
     }
 
     fn shuffle_deps(&self) -> Vec<Arc<dyn ShuffleNode>> {
@@ -1390,23 +1487,42 @@ mod tests {
         let ck = c.parallelize((0..1000u32).collect(), 1).checkpoint().unwrap();
         let decoded = |f: &dyn Fn() -> Vec<u32>| {
             let before = c.io().checkpoint_bytes_decoded.load(Ordering::Relaxed);
+            let read_before = c.io().shuffle_bytes_read.load(Ordering::Relaxed);
             let out = f();
-            (out, c.io().checkpoint_bytes_decoded.load(Ordering::Relaxed) - before)
+            (
+                out,
+                c.io().checkpoint_bytes_decoded.load(Ordering::Relaxed) - before,
+                c.io().shuffle_bytes_read.load(Ordering::Relaxed) - read_before,
+            )
         };
-        let (tail, tail_bytes) = decoded(&|| ck.src.compute_slice(0, 900, 1000).unwrap());
+        let (tail, tail_bytes, tail_read) =
+            decoded(&|| ck.src.compute_slice(0, 900, 1000).unwrap());
         assert_eq!(tail, (900..1000).collect::<Vec<u32>>());
-        let (head, head_bytes) = decoded(&|| ck.src.compute_slice(0, 0, 100).unwrap());
+        let (head, head_bytes, head_read) = decoded(&|| ck.src.compute_slice(0, 0, 100).unwrap());
         assert_eq!(head, (0..100).collect::<Vec<u32>>());
         assert_eq!(
             tail_bytes, head_bytes,
             "a tail slice must decode exactly its own range, not the prefix up to hi"
         );
-        let (full, full_bytes) = decoded(&|| ck.src.compute(0).unwrap());
+        // Positioned reads: a slice reads the 8-byte count, two 8-byte
+        // bracketing offsets, and its own payload range — nothing else.
+        assert_eq!(
+            tail_read,
+            tail_bytes + 24,
+            "a tail slice must read only header + two offsets + its payload range"
+        );
+        assert_eq!(head_read, head_bytes + 24);
+        let (full, full_bytes, full_read) = decoded(&|| ck.src.compute(0).unwrap());
         assert_eq!(full.len(), 1000);
         assert!(
             tail_bytes * 5 < full_bytes,
             "100 of 1000 elements must decode ~1/10th of the payload \
              (tail {tail_bytes}, full {full_bytes})"
+        );
+        assert!(
+            tail_read * 5 < full_read,
+            "a slice must not read the whole partition file \
+             (slice read {tail_read}, full read {full_read})"
         );
     }
 

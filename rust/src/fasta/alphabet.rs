@@ -2,7 +2,10 @@
 
 use anyhow::{bail, Result};
 
-pub const DNA_ALPHA: usize = 6;
+/// DNA codes: A=0 C=1 G=2 T/U=3 N=4 gap=5 sentinel=6.  The sentinel is
+/// a dedicated padding code — it must never collide with the gap code,
+/// or batcher padding becomes indistinguishable from real gap columns.
+pub const DNA_ALPHA: usize = 7;
 pub const PROTEIN_ALPHA: usize = 25;
 
 /// Canonical amino-acid order for codes 0..19.
@@ -237,9 +240,18 @@ mod tests {
     }
 
     #[test]
-    fn sentinel_distinct_from_gap_for_protein() {
-        assert_ne!(Alphabet::Protein.gap(), Alphabet::Protein.sentinel());
-        // For DNA the gap doubles as sentinel (alpha=6), by design.
-        assert_eq!(Alphabet::Dna.gap(), Alphabet::Dna.sentinel());
+    fn sentinel_distinct_from_gap_for_every_alphabet() {
+        // A sentinel==gap collision makes batcher padding look like real
+        // gap columns (the old DNA_ALPHA=6 bug); every alphabet must
+        // keep the two codes distinct and in range.
+        for alpha in [Alphabet::Dna, Alphabet::Protein] {
+            assert_ne!(alpha.gap(), alpha.sentinel(), "{alpha:?}");
+            assert!((alpha.gap() as usize) < alpha.size(), "{alpha:?}");
+            assert!((alpha.sentinel() as usize) < alpha.size(), "{alpha:?}");
+            assert_ne!(alpha.unknown(), alpha.gap(), "{alpha:?}");
+            assert_ne!(alpha.unknown(), alpha.sentinel(), "{alpha:?}");
+        }
+        assert_eq!(Alphabet::Dna.gap(), 5);
+        assert_eq!(Alphabet::Dna.sentinel(), 6);
     }
 }

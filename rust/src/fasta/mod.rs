@@ -3,7 +3,8 @@
 //! Integer code spaces (shared with the python kernels — see
 //! `python/compile/model.py`):
 //!
-//! * DNA/RNA: `A=0 C=1 G=2 T/U=3 N=4 gap/sentinel=5` (`DNA_ALPHA = 6`)
+//! * DNA/RNA: `A=0 C=1 G=2 T/U=3 N=4 gap=5` padding sentinel `6`
+//!   (`DNA_ALPHA = 7` — gap and sentinel are distinct codes)
 //! * Protein: 20 amino acids `ARNDCQEGHILKMFPSTWYV = 0..19`, ambiguity
 //!   `B=20 Z=21 X=22`, gap `23`, padding sentinel `24` (`PROTEIN_ALPHA=25`)
 

@@ -31,11 +31,24 @@
 //!                 speculation counters and busy-time skew (max/mean
 //!                 worker busy nanos) surface through `ClusterStats`
 //!                 into [`metrics`].
-//! * [`fasta`]   — sequence types, alphabets, FASTA I/O.
+//! * [`fasta`]   — sequence types, alphabets, FASTA I/O.  DNA codes run
+//!                 `A=0 C=1 G=2 T/U=3 N=4 gap=5` plus a *distinct*
+//!                 batcher padding sentinel `6` (`DNA_ALPHA = 7`), so
+//!                 padded tails can never be confused with real gap
+//!                 columns.
 //! * [`data`]    — deterministic synthetic dataset generators standing in
 //!                 for the paper's mito-genome / 16S rRNA / BAliBASE data.
 //! * [`align`]   — center-star MSA: trie, pairwise DP, space merging,
-//!                 SP scoring, the DNA and protein pipelines.
+//!                 SP scoring, the DNA and protein pipelines.  Pairwise
+//!                 hot paths dispatch on `KernelBackend`: `Scalar` keeps
+//!                 the reference full-DP f32 kernels; `BitParallel` (the
+//!                 default) routes through the exact integer kernels —
+//!                 bit-parallel Myers edit distance ([`align::myers`])
+//!                 and adaptive banded global/affine DP
+//!                 ([`align::banded`]), certified bit-identical to the
+//!                 full DP before a result is accepted.  All tracebacks
+//!                 compare with exact equality; there are no epsilon
+//!                 comparisons left in the alignment kernels.
 //! * [`distmat`] — distributed tiled distance matrices: a `TileGrid`
 //!                 plans the n×n lower triangle as fixed-size tiles, each
 //!                 one stealable engine job (via the

@@ -153,7 +153,7 @@ mod tests {
 
     const SAMPLE: &str = "sw_b8_q128_c128\tsw_b8_q128_c128.hlo.txt\tsw\tb=8,m=128,n=128,alpha=25\n\
 kmerdist_n128_d256\tkmerdist_n128_d256.hlo.txt\tkmerdist\tn=128,d=256\n\
-matchdna_n128_l2048\tmatchdna_n128_l2048.hlo.txt\tmatch_dna\tn=128,l=2048,alpha=6\n";
+matchdna_n128_l2048\tmatchdna_n128_l2048.hlo.txt\tmatch_dna\tn=128,l=2048,alpha=7\n";
 
     #[test]
     fn parses_sample() {

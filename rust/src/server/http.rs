@@ -4,7 +4,7 @@ use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Read};
 use std::net::TcpStream;
 
-use anyhow::{bail, Context as _, Result};
+use anyhow::{anyhow, Context as _};
 
 #[derive(Debug)]
 pub struct Request {
@@ -15,9 +15,38 @@ pub struct Request {
     pub body: Vec<u8>,
 }
 
+/// Parse-failure classification: the server answers 413 to an oversized
+/// declared body and 400 to everything else (a plain `anyhow::Error`
+/// can't be told apart reliably, so the distinction is in the type).
+#[derive(Debug)]
+pub enum ReadError {
+    TooLarge { len: usize, max: usize },
+    Bad(anyhow::Error),
+}
+
+impl std::fmt::Display for ReadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ReadError::TooLarge { len, max } => {
+                write!(f, "body too large ({len} bytes > cap {max})")
+            }
+            ReadError::Bad(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl From<anyhow::Error> for ReadError {
+    fn from(e: anyhow::Error) -> Self {
+        ReadError::Bad(e)
+    }
+}
+
 impl Request {
-    pub fn read_from(stream: &mut TcpStream) -> Result<Request> {
-        let mut reader = BufReader::new(stream.try_clone()?);
+    pub fn read_from(
+        stream: &mut TcpStream,
+        max_body: usize,
+    ) -> std::result::Result<Request, ReadError> {
+        let mut reader = BufReader::new(stream.try_clone().context("cloning stream")?);
         let mut line = String::new();
         reader.read_line(&mut line).context("reading request line")?;
         let mut parts = line.split_whitespace();
@@ -35,13 +64,13 @@ impl Request {
         let mut headers = HashMap::new();
         loop {
             let mut h = String::new();
-            reader.read_line(&mut h)?;
+            reader.read_line(&mut h).context("reading header line")?;
             let h = h.trim_end();
             if h.is_empty() {
                 break;
             }
             let Some((k, v)) = h.split_once(':') else {
-                bail!("malformed header {h:?}");
+                return Err(ReadError::Bad(anyhow!("malformed header {h:?}")));
             };
             headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
         }
@@ -51,8 +80,10 @@ impl Request {
             .transpose()
             .context("bad content-length")?
             .unwrap_or(0);
-        if len > 256 << 20 {
-            bail!("body too large ({len} bytes)");
+        if len > max_body {
+            // Checked against the *declared* length, before allocating
+            // or reading a byte of the body.
+            return Err(ReadError::TooLarge { len, max: max_body });
         }
         let mut body = vec![0u8; len];
         reader.read_exact(&mut body).context("reading body")?;
@@ -82,6 +113,7 @@ impl Response {
             200 => "OK",
             400 => "Bad Request",
             404 => "Not Found",
+            413 => "Payload Too Large",
             500 => "Internal Server Error",
             _ => "Unknown",
         };

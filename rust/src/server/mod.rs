@@ -34,11 +34,36 @@ use crate::fasta::{io as fio, Alphabet};
 use crate::runtime::XlaService;
 use crate::tree::{build_tree, TreeConfig};
 
-use http::{Request, Response};
+use http::{ReadError, Request, Response};
+
+/// Socket-hygiene knobs: a public-facing endpoint must bound how long a
+/// connection can stall and how large a body it will accept.
+#[derive(Debug, Clone)]
+pub struct ServerOptions {
+    /// Per-connection read timeout: a half-sent request is dropped when
+    /// it stalls this long, instead of pinning its thread forever.
+    pub read_timeout: std::time::Duration,
+    /// Per-connection write timeout for the response.
+    pub write_timeout: std::time::Duration,
+    /// Declared Content-Length cap; larger bodies are answered 413
+    /// before a byte of them is read or buffered.
+    pub max_body_bytes: usize,
+}
+
+impl Default for ServerOptions {
+    fn default() -> Self {
+        Self {
+            read_timeout: std::time::Duration::from_secs(30),
+            write_timeout: std::time::Duration::from_secs(30),
+            max_body_bytes: 256 << 20,
+        }
+    }
+}
 
 pub struct Server {
     cluster: Cluster,
     svc: Option<XlaService>,
+    options: ServerOptions,
     requests: AtomicUsize,
     shutdown: AtomicBool,
 }
@@ -63,9 +88,18 @@ impl RunningServer {
 
 impl Server {
     pub fn new(cluster: Cluster, svc: Option<XlaService>) -> Arc<Self> {
+        Self::with_options(cluster, svc, ServerOptions::default())
+    }
+
+    pub fn with_options(
+        cluster: Cluster,
+        svc: Option<XlaService>,
+        options: ServerOptions,
+    ) -> Arc<Self> {
         Arc::new(Self {
             cluster,
             svc,
+            options,
             requests: AtomicUsize::new(0),
             shutdown: AtomicBool::new(false),
         })
@@ -95,8 +129,18 @@ impl Server {
     }
 
     fn handle(&self, mut stream: TcpStream) -> Result<()> {
-        let request = match Request::read_from(&mut stream) {
+        // Socket deadlines first: without them a half-sent request (or a
+        // reader that never drains the response) pins this thread for
+        // the life of the peer.
+        stream.set_read_timeout(Some(self.options.read_timeout))?;
+        stream.set_write_timeout(Some(self.options.write_timeout))?;
+        let request = match Request::read_from(&mut stream, self.options.max_body_bytes) {
             Ok(r) => r,
+            Err(e @ ReadError::TooLarge { .. }) => {
+                let resp = Response::text(413, &format!("{e}\n"));
+                stream.write_all(&resp.to_bytes())?;
+                return Ok(());
+            }
             Err(e) => {
                 let resp = Response::text(400, &format!("bad request: {e}\n"));
                 stream.write_all(&resp.to_bytes())?;
@@ -258,6 +302,45 @@ mod tests {
         assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
         assert!(resp.contains("X-Log-Likelihood:"));
         assert!(resp.trim_end().ends_with(");"), "newick body: {resp}");
+        srv.stop();
+    }
+
+    #[test]
+    fn half_sent_request_is_dropped_not_hung() {
+        let cluster = Cluster::new(ClusterConfig::spark(2));
+        let opts = ServerOptions {
+            read_timeout: std::time::Duration::from_millis(200),
+            ..ServerOptions::default()
+        };
+        let srv = Server::with_options(cluster, None, opts).serve("127.0.0.1:0").unwrap();
+        let start = std::time::Instant::now();
+        let mut s = TcpStream::connect(("127.0.0.1", srv.port)).unwrap();
+        // Declare a 10-byte body but send only 2 bytes and stall.
+        s.write_all(b"POST /align HTTP/1.1\r\nHost: x\r\nContent-Length: 10\r\n\r\nAC")
+            .unwrap();
+        let mut out = String::new();
+        // The server must time the read out, answer 400 and close the
+        // connection — not hold the thread (and this read) forever.
+        s.read_to_string(&mut out).unwrap();
+        assert!(out.starts_with("HTTP/1.1 400"), "{out}");
+        assert!(
+            start.elapsed() < std::time::Duration::from_secs(10),
+            "half-sent request must be dropped by the read timeout"
+        );
+        srv.stop();
+    }
+
+    #[test]
+    fn oversized_body_gets_413() {
+        let cluster = Cluster::new(ClusterConfig::spark(2));
+        let opts = ServerOptions { max_body_bytes: 1024, ..ServerOptions::default() };
+        let srv = Server::with_options(cluster, None, opts).serve("127.0.0.1:0").unwrap();
+        let resp = talk(
+            srv.port,
+            "POST /align HTTP/1.1\r\nHost: x\r\nContent-Length: 10000\r\n\r\n",
+        );
+        assert!(resp.starts_with("HTTP/1.1 413"), "{resp}");
+        assert!(resp.contains("Payload Too Large"), "{resp}");
         srv.stop();
     }
 

@@ -19,6 +19,8 @@
 
 use anyhow::{ensure, Result};
 
+use crate::align::myers::{pack_row, pdist_counts_packed, RowBits};
+use crate::align::KernelBackend;
 use crate::fasta::{Alphabet, Sequence};
 use crate::runtime::{batcher, ArtifactKind, XlaService};
 
@@ -83,6 +85,18 @@ pub fn pdist_pair(a: &[u8], b: &[u8], gap: u8) -> f64 {
     }
 }
 
+/// p-distance of one bit-packed aligned row pair.  The counts come from
+/// [`pdist_counts_packed`] (integer popcounts), so the ratio is
+/// bit-identical to [`pdist_pair`] on the same rows.
+pub fn pdist_pair_packed(a: &RowBits, b: &RowBits) -> f64 {
+    let (compared, mismatch) = pdist_counts_packed(a, b);
+    if compared == 0 {
+        0.0
+    } else {
+        mismatch as f64 / compared as f64
+    }
+}
+
 /// Squared-euclidean k-mer distances, XLA-batched when possible.
 pub fn kmer_distance_matrix(
     profiles: &[Vec<f32>],
@@ -101,8 +115,16 @@ pub fn kmer_distance_matrix(
     Ok(kmer_distance_native(profiles))
 }
 
-/// Pairwise p-distances over aligned rows (native path).
+/// Pairwise p-distances over aligned rows (native path, default kernel).
 pub fn pdistance_native(rows: &[Sequence]) -> Result<Vec<Vec<f64>>> {
+    pdistance_native_with(rows, KernelBackend::default())
+}
+
+/// Pairwise p-distances over aligned rows through the selected kernel:
+/// `Scalar` runs the byte loop per pair; `BitParallel` packs every row
+/// into bitplanes once and popcounts, O(n²·L/64) instead of O(n²·L).
+/// Bit-identical results (integer counts either way).
+pub fn pdistance_native_with(rows: &[Sequence], kernel: KernelBackend) -> Result<Vec<Vec<f64>>> {
     let n = rows.len();
     let mut d = vec![vec![0f64; n]; n];
     if n == 0 {
@@ -111,11 +133,25 @@ pub fn pdistance_native(rows: &[Sequence]) -> Result<Vec<Vec<f64>>> {
     let gap = rows[0].alphabet.gap();
     let width = rows[0].len();
     ensure!(rows.iter().all(|r| r.len() == width), "rows must be aligned");
-    for i in 0..n {
-        for j in (i + 1)..n {
-            let p = pdist_pair(&rows[i].codes, &rows[j].codes, gap);
-            d[i][j] = p;
-            d[j][i] = p;
+    match kernel {
+        KernelBackend::Scalar => {
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    let p = pdist_pair(&rows[i].codes, &rows[j].codes, gap);
+                    d[i][j] = p;
+                    d[j][i] = p;
+                }
+            }
+        }
+        KernelBackend::BitParallel => {
+            let packed: Vec<RowBits> = rows.iter().map(|r| pack_row(&r.codes, gap)).collect();
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    let p = pdist_pair_packed(&packed[i], &packed[j]);
+                    d[i][j] = p;
+                    d[j][i] = p;
+                }
+            }
         }
     }
     Ok(d)
@@ -124,6 +160,16 @@ pub fn pdistance_native(rows: &[Sequence]) -> Result<Vec<Vec<f64>>> {
 /// Pairwise p-distances, via the XLA match-count kernel when a bucket
 /// covers (rows, width); exact native fallback otherwise.
 pub fn pdistance_matrix(rows: &[Sequence], svc: Option<&XlaService>) -> Result<Vec<Vec<f64>>> {
+    pdistance_matrix_with(rows, svc, KernelBackend::default())
+}
+
+/// [`pdistance_matrix`] with an explicit native-kernel choice for the
+/// fallback path (the XLA path is unaffected by the kernel switch).
+pub fn pdistance_matrix_with(
+    rows: &[Sequence],
+    svc: Option<&XlaService>,
+    kernel: KernelBackend,
+) -> Result<Vec<Vec<f64>>> {
     let n = rows.len();
     if n == 0 {
         return Ok(Vec::new());
@@ -134,9 +180,9 @@ pub fn pdistance_matrix(rows: &[Sequence], svc: Option<&XlaService>) -> Result<V
         Alphabet::Dna => ArtifactKind::MatchDna,
         Alphabet::Protein => ArtifactKind::MatchProtein,
     };
-    let Some(svc) = svc else { return pdistance_native(rows) };
+    let Some(svc) = svc else { return pdistance_native_with(rows, kernel) };
     if svc.manifest().match_bucket(kind, n, width).is_none() {
-        return pdistance_native(rows);
+        return pdistance_native_with(rows, kernel);
     }
 
     let gap = alphabet.gap();
@@ -229,6 +275,26 @@ mod tests {
     fn pdistance_all_gap_pair_is_zero() {
         let rows = vec![seq("a", "--"), seq("b", "--")];
         assert_eq!(pdistance_native(&rows).unwrap()[0][1], 0.0);
+    }
+
+    #[test]
+    fn packed_pdistance_is_bit_identical_to_scalar() {
+        use crate::util::Rng;
+        let mut rng = Rng::seed_from_u64(0xD157);
+        for case in 0..20 {
+            let width = 1 + rng.below(300);
+            let rows: Vec<Sequence> = (0..6)
+                .map(|k| {
+                    let codes: Vec<u8> = (0..width)
+                        .map(|_| if rng.chance(0.15) { 5 } else { rng.below(4) as u8 })
+                        .collect();
+                    Sequence::new(format!("r{k}"), codes, Alphabet::Dna)
+                })
+                .collect();
+            let scalar = pdistance_native_with(&rows, KernelBackend::Scalar).unwrap();
+            let packed = pdistance_native_with(&rows, KernelBackend::BitParallel).unwrap();
+            assert_eq!(scalar, packed, "case {case}");
+        }
     }
 
     #[test]

@@ -44,6 +44,9 @@ pub struct DistMatOptions {
 pub struct TreeConfig {
     pub clustering: ClusterConfig,
     pub distmat: DistMatOptions,
+    /// Native pairwise-distance kernel (scalar byte loop vs bit-packed
+    /// popcount); bit-identical results either way.
+    pub kernel: crate::align::KernelBackend,
 }
 
 /// Outcome of the distributed pipeline, with the stats the paper reports.
@@ -99,6 +102,7 @@ pub fn build_tree(
                 .max()
                 .unwrap_or(0);
             let svc_map = svc.cloned();
+            let kernel = cfg.kernel;
             let parts = engine.config().default_partitions.min(groups.len().max(1));
             // Job boundary between the clustering job and the tree job
             // (HPTree's chained MapReduce; a no-op cache on Spark).
@@ -110,7 +114,7 @@ pub fn build_tree(
                 items
                     .into_iter()
                     .map(|(c, members)| {
-                        subtree_for_cluster(&members, svc_map.as_ref()).map(|t| (c, t))
+                        subtree_for_cluster(&members, svc_map.as_ref(), kernel).map(|t| (c, t))
                     })
                     .collect()
             });
@@ -166,12 +170,16 @@ pub fn build_tree(
 
 /// NJ tree for one cluster's aligned rows (dense backend: the matrix is
 /// materialized inside the cluster's task).
-fn subtree_for_cluster(members: &[Sequence], svc: Option<&XlaService>) -> Result<Tree> {
+fn subtree_for_cluster(
+    members: &[Sequence],
+    svc: Option<&XlaService>,
+    kernel: crate::align::KernelBackend,
+) -> Result<Tree> {
     anyhow::ensure!(!members.is_empty(), "empty cluster");
     if members.len() == 1 {
         return Ok(Tree::leaf(members[0].id.clone()));
     }
-    let p = distance::pdistance_matrix(members, svc)?;
+    let p = distance::pdistance_matrix_with(members, svc, kernel)?;
     let states = members[0].alphabet.residues();
     let d: Vec<Vec<f64>> = p
         .iter()
@@ -281,6 +289,37 @@ mod tests {
         let a = build_tree(&engine, &rows, None, &cfg).unwrap();
         let b = build_tree(&engine, &rows, None, &cfg).unwrap();
         assert_eq!(a.tree.to_newick(), b.tree.to_newick());
+    }
+
+    #[test]
+    fn kernel_backends_produce_identical_trees() {
+        use crate::align::KernelBackend;
+        let (engine, rows) = aligned_mito(20, 12);
+        let clustering = ClusterConfig { max_cluster_size: 8, ..Default::default() };
+        let scalar = build_tree(
+            &engine,
+            &rows,
+            None,
+            &TreeConfig {
+                clustering: clustering.clone(),
+                kernel: KernelBackend::Scalar,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let bitp = build_tree(
+            &engine,
+            &rows,
+            None,
+            &TreeConfig {
+                clustering,
+                kernel: KernelBackend::BitParallel,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(scalar.tree, bitp.tree, "kernel backends must agree exactly");
+        assert_eq!(scalar.log_likelihood.to_bits(), bitp.log_likelihood.to_bits());
     }
 
     #[test]

@@ -1,0 +1,192 @@
+//! Property suite pinning the integer bit-parallel/banded kernels to the
+//! scalar full-DP references, bit-for-bit: seeded cases spanning band
+//! widths, lengths crossing multiple 64-column words, all-ties inputs
+//! (1- and 2-symbol alphabets), and the adaptive band re-run path (tiny
+//! initial band forced to double).  Each suite runs >= 100 cases.
+
+use halign2::align::banded::{
+    affine_banded, affine_full, banded_global, banded_global_with_band, sw_align_i32, AffineCosts,
+    IntSwParams,
+};
+use halign2::align::myers::{edit_distance_dp, myers_edit_distance, pack_row, pdist_counts_packed};
+use halign2::align::pairwise::global_dp;
+use halign2::align::sw::{sw_align, SwParams};
+use halign2::fasta::{alphabet::substitution_matrix, Alphabet};
+use halign2::util::Rng;
+
+fn rand_seq(rng: &mut Rng, len: usize, alpha: usize) -> Vec<u8> {
+    (0..len).map(|_| rng.below(alpha) as u8).collect()
+}
+
+/// Lengths that straddle the 64-column word boundaries of the
+/// bit-parallel kernels, plus short/empty edges.
+fn word_spanning_len(rng: &mut Rng) -> usize {
+    match rng.below(4) {
+        0 => rng.below(10),              // short / empty
+        1 => 60 + rng.below(10),         // around one word
+        2 => 125 + rng.below(8),         // around two words
+        _ => 180 + rng.below(60),        // three-to-four words
+    }
+}
+
+#[test]
+fn myers_edit_distance_matches_dp_across_words_and_alphabets() {
+    let mut cases = 0;
+    for &alpha in &[1usize, 2, 4] {
+        let mut rng = Rng::seed_from_u64(0x1000 + alpha as u64);
+        for _ in 0..40 {
+            let a = rand_seq(&mut rng, word_spanning_len(&mut rng), alpha);
+            let b = rand_seq(&mut rng, word_spanning_len(&mut rng), alpha);
+            assert_eq!(
+                myers_edit_distance(&a, &b),
+                edit_distance_dp(&a, &b),
+                "alpha {alpha}, lens ({}, {})",
+                a.len(),
+                b.len()
+            );
+            cases += 1;
+        }
+    }
+    assert!(cases >= 100);
+}
+
+#[test]
+fn banded_global_is_bit_identical_to_full_dp() {
+    // 3 alphabets x 4 band widths x 12 reps = 144 cases.  The 1-symbol
+    // alphabet makes every DP cell a tie chain (gap placement is all
+    // ties); w0 = 1 forces the adaptive widening/re-run path whenever
+    // the optimum strays; w0 = 256 covers the full matrix immediately.
+    let mut cases = 0;
+    for &alpha in &[1usize, 2, 4] {
+        for &w0 in &[1usize, 2, 8, 256] {
+            let mut rng = Rng::seed_from_u64(0x2000 + (alpha * 1000 + w0) as u64);
+            for _ in 0..12 {
+                let a = rand_seq(&mut rng, word_spanning_len(&mut rng), alpha);
+                let b = rand_seq(&mut rng, word_spanning_len(&mut rng), alpha);
+                let want = global_dp(&a, &b);
+                assert_eq!(
+                    banded_global_with_band(&a, &b, w0),
+                    want,
+                    "alpha {alpha}, w0 {w0}, lens ({}, {})",
+                    a.len(),
+                    b.len()
+                );
+                cases += 1;
+            }
+        }
+    }
+    assert!(cases >= 100);
+}
+
+#[test]
+fn banded_global_default_band_seed_is_bit_identical() {
+    // The Myers-seeded production entry point (no explicit band).
+    let mut rng = Rng::seed_from_u64(0x3000);
+    for case in 0..120 {
+        let alpha = 1 + rng.below(4);
+        let a = rand_seq(&mut rng, word_spanning_len(&mut rng), alpha);
+        let b = rand_seq(&mut rng, word_spanning_len(&mut rng), alpha);
+        assert_eq!(banded_global(&a, &b), global_dp(&a, &b), "case {case}");
+    }
+}
+
+#[test]
+fn affine_banded_matches_full_gotoh_bit_exactly() {
+    // 3 penalty schemes x 2 band seeds x 20 reps = 120 cases; score AND
+    // op path must agree (the op comparison is what catches a traceback
+    // that picks a different co-optimal predecessor).
+    let subst = |mat: i32, mis: i32| -> Vec<i32> {
+        let mut s = vec![mis; 16];
+        for k in 0..4 {
+            s[k * 4 + k] = mat;
+        }
+        s
+    };
+    let schemes = [
+        AffineCosts { subst: subst(2, -3), alpha: 4, open: 5, ext: 1 },
+        AffineCosts { subst: subst(5, -4), alpha: 4, open: 10, ext: 2 },
+        AffineCosts { subst: subst(1, -1), alpha: 4, open: 1, ext: 3 },
+    ];
+    let mut cases = 0;
+    for (si, p) in schemes.iter().enumerate() {
+        for &w0 in &[1usize, 16] {
+            let mut rng = Rng::seed_from_u64(0x4000 + (si * 100 + w0) as u64);
+            for rep in 0..20 {
+                let alpha = 1 + rng.below(4); // include all-ties inputs
+                let a = rand_seq(&mut rng, 1 + rng.below(130), alpha);
+                let b = rand_seq(&mut rng, 1 + rng.below(130), alpha);
+                let (fs, fo) = affine_full(&a, &b, p);
+                let (bs, bo) = affine_banded(&a, &b, p, w0);
+                assert_eq!(fs, bs, "scheme {si}, w0 {w0}, rep {rep}: score");
+                assert_eq!(fo, bo, "scheme {si}, w0 {w0}, rep {rep}: ops");
+                cases += 1;
+            }
+        }
+    }
+    assert!(cases >= 100);
+}
+
+#[test]
+fn packed_pdist_counts_match_scalar_loop_across_words() {
+    // DNA (gap 5) and protein (gap 23) rows, lengths spanning words.
+    let mut cases = 0;
+    for &(residues, gap) in &[(5usize, 5u8), (23usize, 23u8)] {
+        let mut rng = Rng::seed_from_u64(0x5000 + gap as u64);
+        for _ in 0..60 {
+            let len = 1 + word_spanning_len(&mut rng);
+            let row = |rng: &mut Rng| -> Vec<u8> {
+                (0..len)
+                    .map(|_| if rng.chance(0.15) { gap } else { rng.below(residues) as u8 })
+                    .collect()
+            };
+            let a = row(&mut rng);
+            let b = row(&mut rng);
+            let (mut compared, mut mismatch) = (0u64, 0u64);
+            for (x, y) in a.iter().zip(&b) {
+                if *x != gap && *y != gap {
+                    compared += 1;
+                    mismatch += u64::from(x != y);
+                }
+            }
+            let (pa, pb) = (pack_row(&a, gap), pack_row(&b, gap));
+            assert_eq!(pdist_counts_packed(&pa, &pb), (compared, mismatch), "len {len}");
+            cases += 1;
+        }
+    }
+    assert!(cases >= 100);
+}
+
+#[test]
+fn integer_sw_matches_f32_kernel_for_builtin_matrices() {
+    // Every built-in matrix is integer-valued, so the i32 kernel must be
+    // bit-identical to the f32 one: score, op path, and ranges.
+    let mut cases = 0;
+    let combos = [(Alphabet::Dna, 6.0f32), (Alphabet::Dna, 2.0), (Alphabet::Protein, 4.0)];
+    for &(alphabet, gap) in &combos {
+        let p = SwParams {
+            subst: substitution_matrix(alphabet),
+            alpha: alphabet.size(),
+            gap,
+        };
+        let ip = IntSwParams::from_f32(&p).expect("built-in matrices are integer-valued");
+        let mut rng = Rng::seed_from_u64(0x6000 + gap as u64);
+        for rep in 0..40 {
+            let residues = alphabet.residues();
+            let a: Vec<i32> =
+                (0..1 + rng.below(150)).map(|_| rng.below(residues) as i32).collect();
+            let b: Vec<i32> =
+                (0..1 + rng.below(150)).map(|_| rng.below(residues) as i32).collect();
+            let sf = sw_align(&a, &b, &p);
+            let si = sw_align_i32(&a, &b, &ip);
+            assert_eq!(sf.score, si.score, "{alphabet:?} gap {gap} rep {rep}: score");
+            assert_eq!(sf.ops, si.ops, "{alphabet:?} gap {gap} rep {rep}: ops");
+            assert_eq!(
+                (sf.a_start, sf.a_end, sf.b_start, sf.b_end),
+                (si.a_start, si.a_end, si.b_start, si.b_end),
+                "{alphabet:?} gap {gap} rep {rep}: ranges"
+            );
+            cases += 1;
+        }
+    }
+    assert!(cases >= 100);
+}

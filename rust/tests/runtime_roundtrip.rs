@@ -93,7 +93,7 @@ fn sw_batcher_spans_multiple_chunks() {
 #[test]
 fn match_counts_artifact_exact() {
     let Some(svc) = service() else { return };
-    let alpha = 6usize; // DNA
+    let alpha = 7usize; // DNA_ALPHA (gap=5, sentinel=6)
     let mut seed = 9u64;
     let rows: Vec<Vec<i32>> = (0..20).map(|_| random_codes(90, alpha, &mut seed)).collect();
     let mc = batcher::match_counts(&svc, ArtifactKind::MatchDna, &rows, alpha).unwrap();
