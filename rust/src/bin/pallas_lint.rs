@@ -1,0 +1,111 @@
+//! `pallas-lint` CLI: walk `rust/src/**`, enforce the project
+//! invariants (W1–W6, see `rust/LINTS.md`), print findings as
+//! `file:line rule message`, and write `LINT_REPORT.json` at the repo
+//! root.
+//!
+//! Usage:
+//!   pallas_lint [--deny] [--root <repo-root>] [--report <path>]
+//!
+//! `--deny` exits 1 when any unsuppressed finding remains — the CI
+//! gate.  Exit 2 means the run itself failed (bad args, missing
+//! `rust/LOCKS.md`, unreadable tree).
+
+use halign2::lint;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+struct Args {
+    deny: bool,
+    root: Option<PathBuf>,
+    report: Option<PathBuf>,
+}
+
+fn parse_args() -> Result<Args, String> {
+    let mut args = Args { deny: false, root: None, report: None };
+    let mut it = std::env::args().skip(1);
+    while let Some(arg) = it.next() {
+        match arg.as_str() {
+            "--deny" => args.deny = true,
+            "--root" => {
+                let v = it.next().ok_or("--root needs a path")?;
+                args.root = Some(PathBuf::from(v));
+            }
+            "--report" => {
+                let v = it.next().ok_or("--report needs a path")?;
+                args.report = Some(PathBuf::from(v));
+            }
+            "--help" | "-h" => {
+                return Err("usage: pallas_lint [--deny] [--root <dir>] [--report <path>]"
+                    .to_string())
+            }
+            other => return Err(format!("unknown argument `{other}`")),
+        }
+    }
+    Ok(args)
+}
+
+/// The repo root is the nearest ancestor of the current directory that
+/// contains `rust/src` (so the tool works from the repo root, from
+/// `rust/`, or from anywhere inside it).
+fn find_root() -> Option<PathBuf> {
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        if dir.join("rust").join("src").is_dir() {
+            return Some(dir);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}
+
+fn main() -> ExitCode {
+    let args = match parse_args() {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("pallas-lint: {msg}");
+            return ExitCode::from(2);
+        }
+    };
+    let Some(root) = args.root.or_else(find_root) else {
+        eprintln!("pallas-lint: could not locate a repo root containing rust/src; use --root");
+        return ExitCode::from(2);
+    };
+    let cfg = match lint::load_config(&root) {
+        Ok(cfg) => cfg,
+        Err(e) => {
+            eprintln!(
+                "pallas-lint: cannot read {}: {e} (the lock hierarchy is required)",
+                root.join("rust/LOCKS.md").display()
+            );
+            return ExitCode::from(2);
+        }
+    };
+    let report = match lint::lint_tree(&root, &cfg) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("pallas-lint: scan failed: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    for finding in report.unsuppressed() {
+        println!("{}", finding.render());
+    }
+    let unsuppressed = report.unsuppressed_count();
+    println!(
+        "pallas-lint: {} finding(s) ({} suppressed) across {} file(s)",
+        unsuppressed,
+        report.suppressed_count(),
+        report.files_scanned
+    );
+    let report_path = args.report.unwrap_or_else(|| root.join("LINT_REPORT.json"));
+    if let Err(e) = std::fs::write(&report_path, report.to_json()) {
+        eprintln!("pallas-lint: cannot write {}: {e}", report_path.display());
+        return ExitCode::from(2);
+    }
+    if args.deny && unsuppressed > 0 {
+        ExitCode::from(1)
+    } else {
+        ExitCode::SUCCESS
+    }
+}

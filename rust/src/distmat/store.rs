@@ -40,10 +40,13 @@ struct SpillEntry {
     version: u64,
 }
 
-/// A spill write handed out of the lock: the bytes to persist plus the
-/// key's write generation they correspond to.
+/// A spill write handed out of the lock: the destination path, the
+/// bytes to persist, and the key's write generation they correspond to.
+/// The path is resolved at collection time (victims are only gathered
+/// when a spill dir exists), so the writer needs no fallible re-lookup.
 struct PendingSpill {
     key: u64,
+    path: PathBuf,
     data: Arc<Vec<f64>>,
     version: u64,
 }
@@ -180,13 +183,14 @@ impl TileStore {
             return victims; // nowhere to spill: stay resident
         }
         while st.resident_bytes > self.budget && st.resident.len() > 1 {
-            let key = st.coldest().expect("resident non-empty");
-            let blob = st.resident.remove(&key).expect("coldest key is resident");
+            let Some(key) = st.coldest() else { break };
+            let Some(blob) = st.resident.remove(&key) else { break };
             st.resident_bytes -= blob_bytes(&blob.data);
             if st.persisted.contains(&key) {
                 continue; // current bytes already durable on disk
             }
             let version = st.versions.get(&key).copied().unwrap_or(0);
+            let Some(path) = self.blob_path(key) else { break };
             match st.spilling.entry(key) {
                 Entry::Occupied(mut e) => {
                     // A writer already owns this key (the blob was
@@ -197,7 +201,7 @@ impl TileStore {
                 }
                 Entry::Vacant(slot) => {
                     slot.insert(SpillEntry { data: blob.data.clone(), version });
-                    victims.push(PendingSpill { key, data: blob.data, version });
+                    victims.push(PendingSpill { key, path, data: blob.data, version });
                 }
             }
         }
@@ -216,14 +220,12 @@ impl TileStore {
                 if let Some(hook) = self.spill_hook.lock().unwrap().as_ref() {
                     hook(job.key);
                 }
-                let path =
-                    self.blob_path(job.key).expect("victims only collected with a spill dir");
                 let mut bytes = Vec::with_capacity(blob_bytes(&job.data));
                 for v in job.data.iter() {
                     bytes.extend_from_slice(&v.to_le_bytes());
                 }
-                crate::engine::shuffle::write_atomic(&path, &bytes)
-                    .with_context(|| format!("spilling {}", path.display()))?;
+                crate::engine::shuffle::write_atomic(&job.path, &bytes)
+                    .with_context(|| format!("spilling {}", job.path.display()))?;
                 self.spill_files.fetch_add(1, Ordering::Relaxed);
                 let mut st = self.inner.lock().unwrap();
                 match st.spilling.get(&job.key) {
@@ -304,6 +306,7 @@ impl TileStore {
             let bytes = std::fs::read(&path)
                 .with_context(|| format!("reading spilled blob {}", path.display()))?;
             ensure!(bytes.len() % 8 == 0, "spilled blob {key} has ragged length {}", bytes.len());
+            // lint: allow(panic) chunks_exact(8) yields exactly 8-byte slices
             let data: Vec<f64> = bytes
                 .chunks_exact(8)
                 .map(|c| f64::from_le_bytes(c.try_into().expect("chunk is 8 bytes")))

@@ -209,8 +209,7 @@ impl GlobalQueues {
                 let victim = (0..st.queues.len())
                     .filter(|&v| v != w && !st.queues[v].is_empty())
                     .max_by_key(|&v| st.queues[v].len());
-                if let Some(v) = victim {
-                    let job = st.queues[v].pop_back().expect("victim checked non-empty");
+                if let Some(job) = victim.and_then(|v| st.queues[v].pop_back()) {
                     m.steals.fetch_add(1, Ordering::Relaxed);
                     m.steal_batches.fetch_add(1, Ordering::Relaxed);
                     return Some(job);
@@ -247,8 +246,8 @@ impl GlobalQueues {
             st.alive[w] = false;
             let drained: Vec<Job> = st.queues[w].drain(..).collect();
             for job in drained {
-                let target =
-                    st.least_loaded_alive().expect("at least one alive worker remains");
+                // lint: allow(panic) alive count checked > 1 above under this state lock
+                let target = st.least_loaded_alive().expect("one alive worker remains");
                 st.queues[target].push_back(job);
             }
         }
@@ -336,6 +335,7 @@ impl ShardedQueues {
     }
 
     fn least_loaded_alive(&self) -> Option<usize> {
+        // lint: allow(relaxed-handshake) Relaxed is the shard len counter; alive is SeqCst
         (0..self.shards.len())
             .filter(|&v| self.alive[v].load(Ordering::SeqCst))
             .min_by_key(|&v| self.shards[v].len.load(Ordering::Relaxed))
@@ -402,7 +402,7 @@ impl ShardedQueues {
         };
         m.steals.fetch_add(batch.len(), Ordering::Relaxed);
         m.steal_batches.fetch_add(1, Ordering::Relaxed);
-        let first = batch.pop_front().expect("batch is non-empty");
+        let first = batch.pop_front()?;
         if !batch.is_empty() {
             let mut q = self.lock_shard(w, Some(m));
             q.append(&mut batch);
@@ -469,6 +469,7 @@ impl ShardedQueues {
             // the push sees `dead` and retries elsewhere) — a job can
             // never strand in a dead worker's deque.
             if self.alive[target].load(Ordering::SeqCst) {
+                // lint: allow(panic) the job is taken exactly once: this arm returns
                 q.push_back(job.take().expect("job still to be placed"));
                 self.shards[target].len.store(q.len(), Ordering::Relaxed);
                 drop(q);
@@ -497,7 +498,8 @@ impl ShardedQueues {
         // Redistribute to the least-loaded alive workers; targets cannot
         // die concurrently because kills are serialized.
         for job in drained {
-            let target = self.least_loaded_alive().expect("at least one alive worker remains");
+            // lint: allow(panic) kill refuses to remove the last alive worker above
+            let target = self.least_loaded_alive().expect("one alive worker remains");
             let mut q = self.shards[target].deque.lock().unwrap();
             q.push_back(job);
             self.shards[target].len.store(q.len(), Ordering::Relaxed);
@@ -621,6 +623,8 @@ impl Executor {
         let mut handles = Vec::with_capacity(num_workers);
         for w in 0..num_workers {
             let shared = shared.clone();
+            // lint: allow(panic) driver-side startup, before any task runs; spawn
+            // failure here means the process cannot host workers at all
             let handle = std::thread::Builder::new()
                 .name(format!("worker-{w}"))
                 .spawn(move || worker_loop(w, shared))
@@ -684,7 +688,7 @@ impl Executor {
             return 1.0;
         }
         let mean = total as f64 / busy.len() as f64;
-        *busy.iter().max().expect("at least one worker") as f64 / mean
+        busy.iter().max().copied().unwrap_or(0) as f64 / mean
     }
 
     pub fn fault_plan(&self) -> &FaultPlan {

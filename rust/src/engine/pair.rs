@@ -71,8 +71,8 @@ impl<K: KeyBound, V: ValBound> ShuffleStage<K, V> {
             return Ok(s);
         }
         let s = Arc::new(ShuffleStore::new(&self.ctx, self.num_reduce)?);
-        let _ = self.store.set(s);
-        Ok(self.store.get().unwrap())
+        // If another thread initialized concurrently, ours is dropped.
+        Ok(self.store.get_or_init(|| s))
     }
 
     fn materialize(&self) -> Result<()> {
@@ -186,6 +186,7 @@ impl<K: KeyBound, V: ValBound> PartSrc<(K, Vec<V>)> for GroupByNode<K, V> {
     }
 
     fn shuffle_deps(&self) -> Vec<Arc<dyn ShuffleNode>> {
+        // lint: allow(panic) OnceLock is filled in group_by_key before any task runs
         vec![self.self_arc.get().expect("node registered").clone()]
     }
 }
@@ -246,6 +247,7 @@ impl<K: KeyBound, V: ValBound> PartSrc<(K, V)> for ReduceByNode<K, V> {
     }
 
     fn shuffle_deps(&self) -> Vec<Arc<dyn ShuffleNode>> {
+        // lint: allow(panic) OnceLock is filled in reduce_by_key before any task runs
         vec![self.self_arc.get().expect("node registered").clone()]
     }
 }

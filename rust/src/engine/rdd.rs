@@ -825,6 +825,7 @@ fn decode_indexed_range<T: Decode>(
     );
     let (index, payload) = input.split_at((total + 1) * 8);
     let off = |i: usize| -> usize {
+        // lint: allow(panic) an 8-byte slice always converts to [u8; 8]
         u64::from_le_bytes(index[i * 8..i * 8 + 8].try_into().expect("8-byte offset")) as usize
     };
     let hi = hi.min(total);

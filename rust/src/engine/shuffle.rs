@@ -138,6 +138,8 @@ impl<T: Clone + Encode + Decode + crate::engine::memory::MemSize> ShuffleStore<T
     }
 
     fn bucket_path(&self, map_part: usize, reduce_part: usize) -> PathBuf {
+        // lint: allow(panic) `dir` is always Some in DiskKv mode (set in `new`),
+        // and bucket_path is only reachable from DiskKv match arms
         self.dir
             .as_ref()
             .expect("disk path only in DiskKv mode")

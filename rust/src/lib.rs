@@ -75,6 +75,15 @@
 //! * [`metrics`] — wall-clock/memory reporting, paper-table printers.
 //! * [`bench`]   — the in-tree benchmark harness regenerating every table
 //!                 and figure of the paper's evaluation.
+//! * [`lint`]    — `pallas-lint`, the project-native static-analysis
+//!                 pass (binary: `cargo run --bin pallas_lint`): W1–W6
+//!                 rules pinning the bug classes past PRs paid for
+//!                 (worker panics, lock-across-I/O, lock ordering vs
+//!                 `rust/LOCKS.md`, float tolerances in kernels,
+//!                 relaxed condvar handshakes, TSV arity skew).  See
+//!                 `rust/LINTS.md`.
+
+#![forbid(unsafe_code)]
 
 pub mod align;
 pub mod baselines;
@@ -83,6 +92,7 @@ pub mod data;
 pub mod distmat;
 pub mod engine;
 pub mod fasta;
+pub mod lint;
 pub mod metrics;
 pub mod runtime;
 pub mod server;

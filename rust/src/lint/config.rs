@@ -1,0 +1,154 @@
+//! Parser for `rust/LOCKS.md` — the declared lock hierarchy, the helper
+//! functions that acquire or return locks, and the atomics that pair
+//! with the executor's wake-epoch condvar.
+//!
+//! The file is ordinary markdown; `pallas-lint` only reads three
+//! sections (matched case-insensitively on their headings):
+//!
+//! * a heading containing **"hierarchy"**: numbered list items whose
+//!   first backticked token is a lock name, outermost first
+//!   (`1. \`kill_lock\` — …`);
+//! * a heading containing **"helper"**: bullet items of the form
+//!   `- \`name\` returns \`lock\`` (the call yields a guard the caller
+//!   holds) or `- \`name\` acquires \`lock\`` (the lock is taken and
+//!   released inside the call);
+//! * a heading containing **"atomic"**: bullet items naming the
+//!   condvar-paired atomics (`- \`shutdown\` — …`).
+//!
+//! Unknown lines are ignored, so the prose around the lists can grow
+//! freely without breaking the parser.
+
+/// How a declared helper interacts with its lock.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HelperKind {
+    /// The helper returns a `MutexGuard` the caller goes on holding.
+    ReturnsGuard,
+    /// The helper locks and unlocks internally; calling it while holding
+    /// another lock still creates an ordering edge.
+    AcquiresInternally,
+}
+
+/// One declared helper function.
+#[derive(Debug, Clone)]
+pub struct HelperLock {
+    pub name: String,
+    pub lock: String,
+    pub kind: HelperKind,
+}
+
+/// Parsed `LOCKS.md` contents.
+#[derive(Debug, Clone, Default)]
+pub struct LintConfig {
+    /// Lock names, outermost first.  Index = rank; lower rank must be
+    /// acquired first.
+    pub hierarchy: Vec<String>,
+    pub helpers: Vec<HelperLock>,
+    /// Atomics that participate in the executor sleep/wake handshake;
+    /// `Ordering::Relaxed` on these is rule W5.
+    pub condvar_atomics: Vec<String>,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Section {
+    None,
+    Hierarchy,
+    Helpers,
+    Atomics,
+}
+
+impl LintConfig {
+    /// Rank of a lock name in the hierarchy, if declared.
+    pub fn rank(&self, name: &str) -> Option<usize> {
+        self.hierarchy.iter().position(|h| h == name)
+    }
+
+    pub fn helper(&self, name: &str) -> Option<&HelperLock> {
+        self.helpers.iter().find(|h| h.name == name)
+    }
+
+    /// Parse the markdown text of `LOCKS.md`.
+    pub fn parse_locks_md(text: &str) -> LintConfig {
+        let mut cfg = LintConfig::default();
+        let mut section = Section::None;
+        for line in text.lines() {
+            let trimmed = line.trim();
+            if trimmed.starts_with('#') {
+                let lower = trimmed.to_ascii_lowercase();
+                section = if lower.contains("hierarchy") {
+                    Section::Hierarchy
+                } else if lower.contains("helper") {
+                    Section::Helpers
+                } else if lower.contains("atomic") {
+                    Section::Atomics
+                } else {
+                    Section::None
+                };
+                continue;
+            }
+            match section {
+                Section::Hierarchy => {
+                    if starts_with_number_dot(trimmed) {
+                        if let Some(name) = first_backticked(trimmed) {
+                            cfg.hierarchy.push(name);
+                        }
+                    }
+                }
+                Section::Helpers => {
+                    if trimmed.starts_with('-') {
+                        let ticks = all_backticked(trimmed);
+                        if ticks.len() >= 2 {
+                            let kind = if trimmed.contains(" returns ") {
+                                Some(HelperKind::ReturnsGuard)
+                            } else if trimmed.contains(" acquires ") {
+                                Some(HelperKind::AcquiresInternally)
+                            } else {
+                                None
+                            };
+                            if let Some(kind) = kind {
+                                cfg.helpers.push(HelperLock {
+                                    name: ticks[0].clone(),
+                                    lock: ticks[1].clone(),
+                                    kind,
+                                });
+                            }
+                        }
+                    }
+                }
+                Section::Atomics => {
+                    if trimmed.starts_with('-') {
+                        if let Some(name) = first_backticked(trimmed) {
+                            cfg.condvar_atomics.push(name);
+                        }
+                    }
+                }
+                Section::None => {}
+            }
+        }
+        cfg
+    }
+}
+
+fn starts_with_number_dot(s: &str) -> bool {
+    let digits: String = s.chars().take_while(|c| c.is_ascii_digit()).collect();
+    !digits.is_empty() && s[digits.len()..].starts_with('.')
+}
+
+fn first_backticked(s: &str) -> Option<String> {
+    all_backticked(s).into_iter().next()
+}
+
+fn all_backticked(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut rest = s;
+    while let Some(open) = rest.find('`') {
+        let after = &rest[open + 1..];
+        match after.find('`') {
+            Some(close) => {
+                out.push(after[..close].to_string());
+                rest = &after[close + 1..];
+            }
+            None => break,
+        }
+    }
+    out
+}

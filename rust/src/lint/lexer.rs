@@ -1,0 +1,353 @@
+//! Lexer-level scrubber: the first stage of every `pallas-lint` rule.
+//!
+//! Rules must never fire on text inside string literals or comments (a
+//! doc comment *describing* the old `EPS` bug is not a finding), and
+//! suppressions live *in* comments — so the scrubber walks the source
+//! once, byte by byte, and produces:
+//!
+//! * a **scrubbed** copy of the source, byte-for-byte the same length,
+//!   with the contents of every comment and string/char literal blanked
+//!   to spaces (newlines preserved, so byte offsets and line numbers are
+//!   identical to the original);
+//! * the list of comments (for `// lint: allow(...)` parsing);
+//! * the list of string literals with their raw (escapes-unexpanded)
+//!   contents (for the metrics-arity rule, which counts `\t` columns and
+//!   `{}` placeholders as written in the source).
+//!
+//! Handled syntax: line comments, nested block comments, `"…"` /
+//! `b"…"` strings with escapes, raw strings `r"…"` / `br#"…"#` with any
+//! hash depth, char and byte-char literals, and lifetimes (`'a` is not a
+//! char literal).  This is the same no-external-deps discipline as
+//! `server/http.rs`: a small exact scanner instead of a parser crate.
+
+/// One comment in the source (either form), with its 1-based start line
+/// and the raw text *after* the comment opener, trimmed.
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub line: usize,
+    pub text: String,
+}
+
+/// One string literal: 1-based line, byte offset of its opening quote in
+/// the (scrubbed or original) source, and the raw contents between the
+/// quotes with escape sequences left unexpanded (`\t` is two bytes).
+#[derive(Debug, Clone)]
+pub struct StrLit {
+    pub line: usize,
+    pub offset: usize,
+    pub raw: String,
+}
+
+/// Scrubber output: see module docs.
+#[derive(Debug)]
+pub struct Scrubbed {
+    pub text: String,
+    pub comments: Vec<Comment>,
+    pub strings: Vec<StrLit>,
+    /// Byte offset of the first byte of each line (line N is index N-1).
+    pub line_starts: Vec<usize>,
+}
+
+impl Scrubbed {
+    /// 1-based line number of a byte offset.
+    pub fn line_of(&self, offset: usize) -> usize {
+        match self.line_starts.binary_search(&offset) {
+            Ok(i) => i + 1,
+            Err(i) => i, // offset is inside line i (1-based)
+        }
+    }
+}
+
+pub(crate) fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Scrub `source` (see module docs).  Operates on bytes; multi-byte
+/// UTF-8 sequences inside comments/strings blank to one space per byte,
+/// which keeps every offset stable.
+pub fn scrub(source: &str) -> Scrubbed {
+    let src = source.as_bytes();
+    let mut out = src.to_vec();
+    let mut comments = Vec::new();
+    let mut strings = Vec::new();
+
+    let blank = |out: &mut [u8], from: usize, to: usize| {
+        for b in out.iter_mut().take(to).skip(from) {
+            if *b != b'\n' {
+                *b = b' ';
+            }
+        }
+    };
+
+    let mut i = 0usize;
+    let n = src.len();
+    while i < n {
+        let b = src[i];
+        // Line comment.
+        if b == b'/' && i + 1 < n && src[i + 1] == b'/' {
+            let start = i;
+            while i < n && src[i] != b'\n' {
+                i += 1;
+            }
+            let text = source[start + 2..i].trim().to_string();
+            comments.push(Comment { line: line_at(src, start), text });
+            blank(&mut out, start, i);
+            continue;
+        }
+        // Block comment (nesting).
+        if b == b'/' && i + 1 < n && src[i + 1] == b'*' {
+            let start = i;
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if src[i] == b'/' && i + 1 < n && src[i + 1] == b'*' {
+                    depth += 1;
+                    i += 2;
+                } else if src[i] == b'*' && i + 1 < n && src[i + 1] == b'/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            let inner_end = i.saturating_sub(2).max(start + 2);
+            let text = source[start + 2..inner_end].trim().to_string();
+            comments.push(Comment { line: line_at(src, start), text });
+            blank(&mut out, start, i);
+            continue;
+        }
+        // Raw strings: r"…", r#"…"#, br#"…"# etc.
+        if (b == b'r' || b == b'b') && !prev_is_ident(src, i) {
+            if let Some((open_quote, hashes)) = raw_string_open(src, i) {
+                let start = i;
+                let body_start = open_quote + 1;
+                let mut j = body_start;
+                let closer_len = 1 + hashes;
+                loop {
+                    if j >= n {
+                        break; // unterminated: blank to EOF
+                    }
+                    if src[j] == b'"' && has_hashes(src, j + 1, hashes) {
+                        break;
+                    }
+                    j += 1;
+                }
+                let body_end = j.min(n);
+                strings.push(StrLit {
+                    line: line_at(src, start),
+                    offset: start,
+                    raw: source[body_start..body_end].to_string(),
+                });
+                let end = (body_end + closer_len).min(n);
+                // Keep the delimiting quotes so scans still see a
+                // string boundary; blank everything else.
+                blank(&mut out, start, end);
+                out[open_quote] = b'"';
+                if body_end < n {
+                    out[body_end] = b'"';
+                }
+                i = end;
+                continue;
+            }
+        }
+        // Normal strings: "…" and b"…".
+        if b == b'"' || (b == b'b' && i + 1 < n && src[i + 1] == b'"' && !prev_is_ident(src, i)) {
+            let start = i;
+            let quote = if b == b'"' { i } else { i + 1 };
+            let mut j = quote + 1;
+            while j < n {
+                match src[j] {
+                    b'\\' => j += 2,
+                    b'"' => break,
+                    _ => j += 1,
+                }
+            }
+            let body_end = j.min(n);
+            strings.push(StrLit {
+                line: line_at(src, start),
+                offset: start,
+                raw: source[(quote + 1).min(n)..body_end].to_string(),
+            });
+            let end = (body_end + 1).min(n);
+            blank(&mut out, start, end);
+            out[quote] = b'"';
+            if body_end < n {
+                out[body_end] = b'"';
+            }
+            i = end;
+            continue;
+        }
+        // Char / byte-char literal vs lifetime.
+        if b == b'\'' || (b == b'b' && i + 1 < n && src[i + 1] == b'\'' && !prev_is_ident(src, i))
+        {
+            let quote = if b == b'\'' { i } else { i + 1 };
+            if b == b'\'' && looks_like_lifetime(src, quote) {
+                i += 1;
+                continue;
+            }
+            let start = i;
+            let mut j = quote + 1;
+            if j < n && src[j] == b'\\' {
+                j += 2; // escape + escaped byte
+                while j < n && src[j] != b'\'' {
+                    j += 1; // \u{…} and friends
+                }
+            } else {
+                // One UTF-8 scalar: advance to the closing quote.
+                j += 1;
+                while j < n && src[j] != b'\'' && j - quote < 6 {
+                    j += 1;
+                }
+            }
+            let end = (j + 1).min(n);
+            blank(&mut out, start, end);
+            i = end;
+            continue;
+        }
+        i += 1;
+    }
+
+    let text = String::from_utf8(out).unwrap_or_else(|e| {
+        // Only comment/string bytes were rewritten (to ASCII spaces), so
+        // this cannot happen on valid UTF-8 input; degrade lossily
+        // rather than abort the whole lint run.
+        String::from_utf8_lossy(e.as_bytes()).into_owned()
+    });
+    let mut line_starts = vec![0usize];
+    for (pos, byte) in text.bytes().enumerate() {
+        if byte == b'\n' {
+            line_starts.push(pos + 1);
+        }
+    }
+    Scrubbed { text, comments, strings, line_starts }
+}
+
+fn prev_is_ident(src: &[u8], i: usize) -> bool {
+    i > 0 && is_ident(src[i - 1])
+}
+
+fn line_at(src: &[u8], offset: usize) -> usize {
+    1 + src[..offset].iter().filter(|&&b| b == b'\n').count()
+}
+
+/// If `i` starts a raw-string opener (`r`/`br` + hashes + quote), return
+/// (offset of the opening quote, hash count).
+fn raw_string_open(src: &[u8], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    if src[j] == b'b' {
+        j += 1;
+    }
+    if j >= src.len() || src[j] != b'r' {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0usize;
+    while j < src.len() && src[j] == b'#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j < src.len() && src[j] == b'"' {
+        Some((j, hashes))
+    } else {
+        None
+    }
+}
+
+fn has_hashes(src: &[u8], from: usize, hashes: usize) -> bool {
+    if from + hashes > src.len() {
+        return false;
+    }
+    src[from..from + hashes].iter().all(|&b| b == b'#')
+}
+
+/// `'ident` not followed by a closing quote is a lifetime, not a char.
+fn looks_like_lifetime(src: &[u8], quote: usize) -> bool {
+    let mut j = quote + 1;
+    if j >= src.len() || !(src[j].is_ascii_alphabetic() || src[j] == b'_') {
+        return false;
+    }
+    while j < src.len() && is_ident(src[j]) {
+        j += 1;
+    }
+    // 'a' is a char; 'a followed by anything else is a lifetime.
+    !(j < src.len() && src[j] == b'\'' && j == quote + 2)
+}
+
+/// Per-line `#[cfg(test)]` coverage: true for every line inside a
+/// `#[cfg(test)]`-gated item, statement, or field.  The region runs from
+/// the attribute to the end of the next balanced `{…}` block, or to the
+/// first `;`/`,` at bracket depth zero when the gated thing has no block
+/// (a field, a `type` alias, a struct-literal field).
+pub fn test_line_mask(scrubbed: &Scrubbed) -> Vec<bool> {
+    let text = scrubbed.text.as_bytes();
+    let num_lines = scrubbed.line_starts.len();
+    let mut mask = vec![false; num_lines];
+    let needle = b"#[cfg(test)]";
+    let mut i = 0usize;
+    while let Some(pos) = find_from(text, needle, i) {
+        let start_line = scrubbed.line_of(pos);
+        let mut j = pos + needle.len();
+        // Skip whitespace and any further attributes.
+        loop {
+            while j < text.len() && (text[j] as char).is_whitespace() {
+                j += 1;
+            }
+            if j + 1 < text.len() && text[j] == b'#' && text[j + 1] == b'[' {
+                let mut depth = 0i32;
+                while j < text.len() {
+                    match text[j] {
+                        b'[' => depth += 1,
+                        b']' => {
+                            depth -= 1;
+                            if depth == 0 {
+                                j += 1;
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                    j += 1;
+                }
+            } else {
+                break;
+            }
+        }
+        // Scan to the item's end.
+        let mut depth = 0i32;
+        let mut saw_brace = false;
+        while j < text.len() {
+            match text[j] {
+                b'{' | b'(' | b'[' => {
+                    if text[j] == b'{' {
+                        saw_brace = true;
+                    }
+                    depth += 1;
+                }
+                b'}' | b')' | b']' => {
+                    depth -= 1;
+                    if depth == 0 && text[j] == b'}' && saw_brace {
+                        break;
+                    }
+                }
+                b';' | b',' if depth == 0 && !saw_brace => break,
+                _ => {}
+            }
+            j += 1;
+        }
+        let end_line = scrubbed.line_of(j.min(text.len().saturating_sub(1)));
+        for line in start_line..=end_line.min(num_lines) {
+            mask[line - 1] = true;
+        }
+        i = j.max(pos + 1);
+    }
+    mask
+}
+
+/// First occurrence of `needle` in `hay` at or after `from`.
+pub fn find_from(hay: &[u8], needle: &[u8], from: usize) -> Option<usize> {
+    if needle.is_empty() || from >= hay.len() || hay.len() - from < needle.len() {
+        return None;
+    }
+    let last = hay.len() - needle.len();
+    (from..=last).find(|&i| &hay[i..i + needle.len()] == needle)
+}

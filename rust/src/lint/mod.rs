@@ -1,0 +1,298 @@
+//! `pallas-lint` — project-native static analysis for the invariants
+//! the compiler and clippy cannot see.
+//!
+//! Every PR so far has fixed a *class* of bug by hand: worker panics
+//! that defeat fault recovery, spill I/O performed while holding the
+//! `TileStore` mutex, float-EPS traceback drift, TSV header/row arity
+//! skew.  This module is the gate that keeps those classes from coming
+//! back.  It is deliberately dependency-free (the `server/http.rs`
+//! discipline): a byte-level scrubber ([`lexer`]), a markdown config
+//! parser for the declared lock hierarchy ([`config`]), per-rule
+//! lexical passes ([`rules`]), and a hand-rolled JSON report
+//! ([`report`]).
+//!
+//! Rules (details and rationale in `rust/LINTS.md`):
+//!
+//! | rule | key                | what it catches |
+//! |------|--------------------|-----------------|
+//! | W1   | `panic`            | `.unwrap()`/`.expect(`/`panic!` in worker-reachable code (`engine/`, `distmat/`, `server/`) |
+//! | W2   | `lock-across-io`   | a `MutexGuard` binding live across `fs::`/`File::`/`write_atomic`/`TcpStream` calls |
+//! | W3   | `lock-order`       | nested `lock()` against the hierarchy declared in `rust/LOCKS.md` |
+//! | W4   | `float-tolerance`  | `EPS`/`.abs() <` comparisons in `align/` outside tests |
+//! | W5   | `relaxed-handshake`| `Ordering::Relaxed` on the condvar-paired executor atomics |
+//! | W6   | `metrics-arity`    | TSV row-writer field count vs header column count |
+//!
+//! Suppression: `// lint: allow(<key>) <reason>` on the offending line
+//! or the line above.  A missing reason is itself a finding (W0), so
+//! every escape hatch in the tree carries its justification.
+//!
+//! The binary front-end is `src/bin/pallas_lint.rs`
+//! (`cargo run --bin pallas_lint -- --deny`); CI runs it as a required
+//! step and archives `LINT_REPORT.json`.
+
+pub mod config;
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+pub use config::LintConfig;
+pub use report::{Finding, Report, Rule};
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// One parsed `// lint: allow(key) reason` comment.
+struct Allow {
+    /// Inclusive line range the suppression applies to: the comment's
+    /// own line when it trails code, otherwise the next code line
+    /// through the end of that statement (so a multi-line builder chain
+    /// is covered by one comment above it).
+    first_line: usize,
+    last_line: usize,
+    key: String,
+    reason: String,
+}
+
+/// Lint a single file's source text.  `path` is only used for scoping
+/// (W1/W4 look at directory components) and for finding output; it does
+/// not need to exist on disk — fixture tests pass synthetic paths like
+/// `rust/src/engine/fixture.rs`.
+pub fn lint_source(path: &str, source: &str, cfg: &LintConfig) -> Vec<Finding> {
+    let scrubbed = lexer::scrub(source);
+    let test_mask = lexer::test_line_mask(&scrubbed);
+    let ctx = rules::FileContext { path, scrubbed: &scrubbed, test_mask: &test_mask, cfg };
+    let mut findings = rules::run_all(&ctx);
+
+    let (allows, mut syntax_findings) = collect_allows(path, &scrubbed);
+    for f in &mut findings {
+        let covered = allows.iter().find(|a| {
+            a.key == f.rule.allow_key() && (a.first_line..=a.last_line).contains(&f.line)
+        });
+        if let Some(a) = covered {
+            f.suppressed = true;
+            f.allow_reason = Some(a.reason.clone());
+        }
+    }
+    findings.append(&mut syntax_findings);
+    findings.sort_by(|a, b| (a.line, a.rule.id()).cmp(&(b.line, b.rule.id())));
+    findings
+}
+
+/// Parse every `lint: allow(...)` comment; malformed ones (unknown key,
+/// missing reason) become W0 findings that cannot themselves be
+/// suppressed.
+fn collect_allows(path: &str, scrubbed: &lexer::Scrubbed) -> (Vec<Allow>, Vec<Finding>) {
+    let mut allows = Vec::new();
+    let mut findings = Vec::new();
+    for c in &scrubbed.comments {
+        let Some(rest) = c.text.strip_prefix("lint:") else {
+            continue;
+        };
+        let rest = rest.trim_start();
+        let Some(rest) = rest.strip_prefix("allow(") else {
+            findings.push(Finding::new(
+                path,
+                c.line,
+                Rule::AllowSyntax,
+                "malformed lint comment; expected `lint: allow(<key>) <reason>`".to_string(),
+            ));
+            continue;
+        };
+        let Some(close) = rest.find(')') else {
+            findings.push(Finding::new(
+                path,
+                c.line,
+                Rule::AllowSyntax,
+                "unclosed `lint: allow(` comment".to_string(),
+            ));
+            continue;
+        };
+        let key = rest[..close].trim().to_string();
+        let reason = rest[close + 1..].trim().to_string();
+        if Rule::from_allow_key(&key).is_none() {
+            findings.push(Finding::new(
+                path,
+                c.line,
+                Rule::AllowSyntax,
+                format!("unknown lint key `{key}` in allow comment"),
+            ));
+            continue;
+        }
+        if reason.is_empty() {
+            findings.push(Finding::new(
+                path,
+                c.line,
+                Rule::AllowSyntax,
+                format!("`lint: allow({key})` needs a justification after the closing paren"),
+            ));
+            continue;
+        }
+        let (first_line, last_line) = allow_target_range(scrubbed, c.line);
+        allows.push(Allow { first_line, last_line, key, reason });
+    }
+    (allows, findings)
+}
+
+/// A trailing comment suppresses its own line; a standalone comment
+/// suppresses the next line that has code (comment-only and blank lines
+/// in between are blank in the scrubbed text and skipped) through the
+/// end of the statement starting there — the first `;` or block-opening
+/// `{` at bracket depth zero — so one comment covers a multi-line call
+/// chain.
+fn allow_target_range(scrubbed: &lexer::Scrubbed, comment_line: usize) -> (usize, usize) {
+    if line_has_code(scrubbed, comment_line) {
+        return (comment_line, comment_line);
+    }
+    let total = scrubbed.line_starts.len();
+    for line in comment_line + 1..=total {
+        if line_has_code(scrubbed, line) {
+            return (line, statement_end_line(scrubbed, line));
+        }
+    }
+    (comment_line, comment_line)
+}
+
+fn statement_end_line(scrubbed: &lexer::Scrubbed, line: usize) -> usize {
+    let text = scrubbed.text.as_bytes();
+    let Some(&start) = scrubbed.line_starts.get(line - 1) else {
+        return line;
+    };
+    let mut depth = 0i32;
+    let mut j = start;
+    while j < text.len() {
+        match text[j] {
+            b'(' | b'[' => depth += 1,
+            b')' | b']' => depth -= 1,
+            b';' | b'{' if depth == 0 => return scrubbed.line_of(j),
+            b'}' if depth == 0 => return scrubbed.line_of(j),
+            _ => {}
+        }
+        j += 1;
+    }
+    line
+}
+
+fn line_has_code(scrubbed: &lexer::Scrubbed, line: usize) -> bool {
+    let text = scrubbed.text.as_bytes();
+    let start = match scrubbed.line_starts.get(line - 1) {
+        Some(&s) => s,
+        None => return false,
+    };
+    let end = scrubbed.line_starts.get(line).copied().unwrap_or(text.len());
+    text[start..end].iter().any(|&b| !(b as char).is_whitespace())
+}
+
+/// Lint every `.rs` file under `<root>/rust/src`, deterministically
+/// ordered.  Paths in findings are repo-relative with forward slashes.
+pub fn lint_tree(root: &Path, cfg: &LintConfig) -> io::Result<Report> {
+    let src = root.join("rust").join("src");
+    let mut files = Vec::new();
+    collect_rs_files(&src, &mut files)?;
+    files.sort();
+    let mut report = Report::default();
+    for file in &files {
+        let source = fs::read_to_string(file)?;
+        let rel = file
+            .strip_prefix(root)
+            .unwrap_or(file)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy().into_owned())
+            .collect::<Vec<_>>()
+            .join("/");
+        report.findings.extend(lint_source(&rel, &source, cfg));
+        report.files_scanned += 1;
+    }
+    Ok(report)
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Load `rust/LOCKS.md` from the repo root.
+pub fn load_config(root: &Path) -> io::Result<LintConfig> {
+    let text = fs::read_to_string(root.join("rust").join("LOCKS.md"))?;
+    Ok(LintConfig::parse_locks_md(&text))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scrubber_preserves_offsets_and_collects_strings() {
+        let src = "let a = \"x\\ty\"; // trailing\nlet b = 'c';\n";
+        let s = lexer::scrub(src);
+        assert_eq!(s.text.len(), src.len());
+        assert_eq!(s.strings.len(), 1);
+        assert_eq!(s.strings[0].raw, "x\\ty");
+        assert_eq!(s.comments.len(), 1);
+        assert_eq!(s.comments[0].text, "trailing");
+        assert!(!s.text.contains("trailing"));
+    }
+
+    #[test]
+    fn test_mask_covers_mod_and_field() {
+        let src = "struct S {\n    a: u32,\n    #[cfg(test)]\n    hook: u8,\n}\n\
+                   #[cfg(test)]\nmod tests {\n    fn f() {}\n}\n";
+        let s = lexer::scrub(src);
+        let mask = lexer::test_line_mask(&s);
+        assert!(!mask[0]); // struct S {
+        assert!(!mask[1]); // a: u32,
+        assert!(mask[2]); // #[cfg(test)]
+        assert!(mask[3]); // hook: u8,
+        assert!(!mask[4]); // }
+        assert!(mask[5] && mask[6] && mask[7] && mask[8]); // test mod
+    }
+
+    #[test]
+    fn locks_md_parser_reads_all_sections() {
+        let md = "# Locks\n## Hierarchy\n1. `kill_lock` — outermost\n2. `deque`\n\
+                  \n## Helper lock acquisitions\n- `bump_epoch` acquires `epoch`\n\
+                  - `lock_state` returns `state`\n## Condvar-paired atomics\n- `shutdown` — flag\n";
+        let cfg = LintConfig::parse_locks_md(md);
+        assert_eq!(cfg.hierarchy, vec!["kill_lock", "deque"]);
+        assert_eq!(cfg.helpers.len(), 2);
+        assert_eq!(cfg.helpers[0].name, "bump_epoch");
+        assert_eq!(cfg.condvar_atomics, vec!["shutdown"]);
+    }
+
+    #[test]
+    fn allow_comment_suppresses_and_requires_reason() {
+        let cfg = LintConfig::default();
+        let src = "fn f(x: Option<u32>) -> u32 {\n    \
+                   // lint: allow(panic) checked by caller\n    x.unwrap()\n}\n";
+        let findings = lint_source("rust/src/engine/fx.rs", src, &cfg);
+        assert_eq!(findings.len(), 1);
+        assert!(findings[0].suppressed);
+        let bare = "fn f(x: Option<u32>) -> u32 {\n    // lint: allow(panic)\n    x.unwrap()\n}\n";
+        let findings = lint_source("rust/src/engine/fx.rs", bare, &cfg);
+        assert!(findings.iter().any(|f| f.rule == Rule::AllowSyntax));
+        assert!(findings.iter().any(|f| f.rule == Rule::PanicInWorker && !f.suppressed));
+    }
+
+    #[test]
+    fn report_json_is_well_formed_enough() {
+        let mut report = Report { files_scanned: 2, ..Default::default() };
+        report.findings.push(Finding::new(
+            "rust/src/engine/a.rs",
+            3,
+            Rule::PanicInWorker,
+            "say \"no\" to panics".to_string(),
+        ));
+        let json = report.to_json();
+        assert!(json.contains("\"files_scanned\": 2"));
+        assert!(json.contains("\\\"no\\\""));
+        assert!(json.contains("\"rule\": \"W1\""));
+    }
+}

@@ -1,0 +1,161 @@
+//! Finding type, rule identifiers, text rendering, and the
+//! hand-rolled `LINT_REPORT.json` writer (no serde in this tree).
+
+use std::fmt;
+
+/// Every rule `pallas-lint` enforces.  `W0` is the linter checking its
+/// own escape hatch: a malformed or reasonless `// lint: allow(...)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Rule {
+    AllowSyntax,
+    PanicInWorker,
+    LockAcrossIo,
+    LockOrder,
+    FloatTolerance,
+    RelaxedHandshake,
+    MetricsArity,
+}
+
+impl Rule {
+    /// Short ID printed in findings (`W1`…`W6`, `W0` for allow syntax).
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::AllowSyntax => "W0",
+            Rule::PanicInWorker => "W1",
+            Rule::LockAcrossIo => "W2",
+            Rule::LockOrder => "W3",
+            Rule::FloatTolerance => "W4",
+            Rule::RelaxedHandshake => "W5",
+            Rule::MetricsArity => "W6",
+        }
+    }
+
+    /// Key accepted inside `// lint: allow(<key>)`.
+    pub fn allow_key(self) -> &'static str {
+        match self {
+            Rule::AllowSyntax => "allow-syntax",
+            Rule::PanicInWorker => "panic",
+            Rule::LockAcrossIo => "lock-across-io",
+            Rule::LockOrder => "lock-order",
+            Rule::FloatTolerance => "float-tolerance",
+            Rule::RelaxedHandshake => "relaxed-handshake",
+            Rule::MetricsArity => "metrics-arity",
+        }
+    }
+
+    pub fn from_allow_key(key: &str) -> Option<Rule> {
+        [
+            Rule::PanicInWorker,
+            Rule::LockAcrossIo,
+            Rule::LockOrder,
+            Rule::FloatTolerance,
+            Rule::RelaxedHandshake,
+            Rule::MetricsArity,
+        ]
+        .into_iter()
+        .find(|r| r.allow_key() == key)
+    }
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} {}", self.id(), self.allow_key())
+    }
+}
+
+/// One lint finding, before or after suppression matching.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: Rule,
+    pub message: String,
+    /// Set when a `// lint: allow(...)` with a reason covers this line.
+    pub suppressed: bool,
+    pub allow_reason: Option<String>,
+}
+
+impl Finding {
+    pub fn new(file: &str, line: usize, rule: Rule, message: String) -> Finding {
+        let file = file.to_string();
+        Finding { file, line, rule, message, suppressed: false, allow_reason: None }
+    }
+
+    /// The `file:line rule message` line the CLI prints.
+    pub fn render(&self) -> String {
+        format!("{}:{} {} {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Full run output, serialized to `LINT_REPORT.json`.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+}
+
+impl Report {
+    pub fn unsuppressed(&self) -> impl Iterator<Item = &Finding> {
+        self.findings.iter().filter(|f| !f.suppressed)
+    }
+
+    pub fn unsuppressed_count(&self) -> usize {
+        self.unsuppressed().count()
+    }
+
+    pub fn suppressed_count(&self) -> usize {
+        self.findings.len() - self.unsuppressed_count()
+    }
+
+    /// Machine-readable report.  Schema:
+    /// `{"files_scanned":N,"unsuppressed":N,"suppressed":N,"findings":[...]}`
+    /// with each finding carrying `file,line,rule,key,message,suppressed`
+    /// and `allow_reason` when present.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n");
+        out.push_str(&format!("  \"files_scanned\": {},\n", self.files_scanned));
+        out.push_str(&format!("  \"unsuppressed\": {},\n", self.unsuppressed_count()));
+        out.push_str(&format!("  \"suppressed\": {},\n", self.suppressed_count()));
+        out.push_str("  \"findings\": [");
+        for (i, f) in self.findings.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str("\n    {");
+            out.push_str(&format!("\"file\": {}, ", json_str(&f.file)));
+            out.push_str(&format!("\"line\": {}, ", f.line));
+            out.push_str(&format!("\"rule\": {}, ", json_str(f.rule.id())));
+            out.push_str(&format!("\"key\": {}, ", json_str(f.rule.allow_key())));
+            out.push_str(&format!("\"message\": {}, ", json_str(&f.message)));
+            out.push_str(&format!("\"suppressed\": {}", f.suppressed));
+            if let Some(reason) = &f.allow_reason {
+                out.push_str(&format!(", \"allow_reason\": {}", json_str(reason)));
+            }
+            out.push('}');
+        }
+        if !self.findings.is_empty() {
+            out.push_str("\n  ");
+        }
+        out.push_str("]\n}\n");
+        out
+    }
+}
+
+/// Minimal JSON string escaping (quotes, backslash, control chars).
+pub fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}

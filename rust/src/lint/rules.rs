@@ -1,0 +1,816 @@
+//! The per-rule passes (W1–W6).  Every pass works on the scrubbed
+//! source (comments and string contents blanked, offsets stable) and
+//! skips lines covered by the `#[cfg(test)]` mask.
+//!
+//! These are lexical analyses, not type-checked ones; the known
+//! heuristic limits are documented per rule in `rust/LINTS.md`
+//! (poison-unwrap carve-out, intraprocedural lock tracking plus the
+//! helper declarations in `rust/LOCKS.md`, `let`-binding-only guard
+//! liveness).
+
+use super::config::{HelperKind, LintConfig};
+use super::lexer::{find_from, is_ident, Scrubbed};
+use super::report::{Finding, Rule};
+use std::collections::HashMap;
+
+/// Everything a rule pass needs to look at one file.
+pub struct FileContext<'a> {
+    /// Repo-relative path with forward slashes, e.g.
+    /// `rust/src/engine/executor.rs`.
+    pub path: &'a str,
+    pub scrubbed: &'a Scrubbed,
+    /// `test_mask[line-1]` is true inside `#[cfg(test)]` regions.
+    pub test_mask: &'a [bool],
+    pub cfg: &'a LintConfig,
+}
+
+impl FileContext<'_> {
+    fn in_test(&self, line: usize) -> bool {
+        self.test_mask.get(line.saturating_sub(1)).copied().unwrap_or(false)
+    }
+
+    fn line_of(&self, offset: usize) -> usize {
+        self.scrubbed.line_of(offset)
+    }
+}
+
+/// Run every rule on one file.
+pub fn run_all(ctx: &FileContext<'_>) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    check_panic_in_worker(ctx, &mut findings);
+    check_locks(ctx, &mut findings);
+    check_float_tolerance(ctx, &mut findings);
+    check_relaxed_handshake(ctx, &mut findings);
+    check_metrics_arity(ctx, &mut findings);
+    findings
+}
+
+// ---------------------------------------------------------------- W1 --
+
+/// Methods whose `.unwrap()`/`.expect(...)` only fires on a *poisoned*
+/// lock — i.e. after another thread already panicked.  The executor's
+/// `catch_unwind` turns worker panics into task errors, so propagating
+/// poison is the correct response, not a new panic path; these calls are
+/// carved out of W1 (documented in LINTS.md).
+const POISON_METHODS: &[&str] = &[
+    "lock",
+    "try_lock",
+    "read",
+    "write",
+    "wait",
+    "wait_timeout",
+    "wait_timeout_while",
+    "wait_while",
+];
+
+fn w1_in_scope(path: &str) -> bool {
+    ["engine/", "distmat/", "server/"].iter().any(|d| path.contains(d))
+}
+
+fn check_panic_in_worker(ctx: &FileContext<'_>, out: &mut Vec<Finding>) {
+    if !w1_in_scope(ctx.path) {
+        return;
+    }
+    let text = ctx.scrubbed.text.as_bytes();
+    let probes = [(&b".unwrap()"[..], "`.unwrap()`"), (&b".expect("[..], "`.expect(...)`")];
+    for (needle, what) in probes {
+        let mut from = 0usize;
+        while let Some(p) = find_from(text, needle, from) {
+            from = p + 1;
+            let line = ctx.line_of(p);
+            if ctx.in_test(line) || poison_carved(text, p) {
+                continue;
+            }
+            out.push(Finding::new(
+                ctx.path,
+                line,
+                Rule::PanicInWorker,
+                format!(
+                    "{what} in worker-reachable code can panic and defeat fault recovery; \
+                     return an error or justify with `// lint: allow(panic) <reason>`"
+                ),
+            ));
+        }
+    }
+    for mac in ["panic!", "todo!", "unimplemented!"] {
+        let needle = mac.as_bytes();
+        let mut from = 0usize;
+        while let Some(p) = find_from(text, needle, from) {
+            from = p + 1;
+            if p > 0 && is_ident(text[p - 1]) {
+                continue;
+            }
+            let line = ctx.line_of(p);
+            if ctx.in_test(line) {
+                continue;
+            }
+            out.push(Finding::new(
+                ctx.path,
+                line,
+                Rule::PanicInWorker,
+                format!(
+                    "`{mac}` in worker-reachable code defeats fault recovery; \
+                     return an error or justify with `// lint: allow(panic) <reason>`"
+                ),
+            ));
+        }
+    }
+}
+
+/// True when the call preceding `.unwrap()`/`.expect(` at `dot` is one
+/// of the poison-only methods (`x.lock().unwrap()` and friends).
+/// Whitespace between the call and the `.unwrap()` is skipped so a
+/// chain rustfmt broke across lines is still recognised.
+fn poison_carved(text: &[u8], dot: usize) -> bool {
+    let mut dot = dot;
+    while dot > 0 && (text[dot - 1] as char).is_whitespace() {
+        dot -= 1;
+    }
+    if dot == 0 || text[dot - 1] != b')' {
+        return false;
+    }
+    let mut depth = 0i32;
+    let mut j = dot - 1;
+    loop {
+        match text[j] {
+            b')' => depth += 1,
+            b'(' => depth -= 1,
+            _ => {}
+        }
+        if depth == 0 {
+            break;
+        }
+        if j == 0 {
+            return false;
+        }
+        j -= 1;
+    }
+    let end = j;
+    let mut start = j;
+    while start > 0 && is_ident(text[start - 1]) {
+        start -= 1;
+    }
+    let name = &text[start..end];
+    POISON_METHODS.iter().any(|m| m.as_bytes() == name)
+}
+
+// ----------------------------------------------------------- W2 + W3 --
+
+/// Calls that touch the filesystem or network; a live `MutexGuard`
+/// across any of these is W2.
+const IO_MARKERS: &[&str] = &[
+    "fs::",
+    "File::",
+    "OpenOptions::",
+    "write_atomic(",
+    "TcpStream",
+    "TcpListener",
+    ".read_to_end(",
+    ".read_exact(",
+    ".write_all(",
+    ".sync_all(",
+    ".seek(",
+    ".flush(",
+];
+
+struct Guard {
+    /// Lock name (`inner`, `deque`, …), from the receiver of `.lock()`
+    /// or the declared helper.
+    lock: String,
+    /// Binding variable, for `drop(var)` tracking.
+    var: String,
+    /// Brace depth at the `let`; the guard dies when the scope closes.
+    depth: usize,
+    /// Byte offset after which the guard is held (end of its `let`
+    /// statement) — events inside the initializer itself see only
+    /// *previously* held guards.
+    active_from: usize,
+}
+
+/// One linear walk handling both W2 (lock across I/O) and W3 (lock
+/// ordering).  Tracks `let`-bound guards per brace scope; every
+/// `.lock()` occurrence and declared-helper call is an acquisition
+/// event checked against the guards currently held.
+fn check_locks(ctx: &FileContext<'_>, out: &mut Vec<Finding>) {
+    let text = ctx.scrubbed.text.as_bytes();
+    let n = text.len();
+
+    // Pre-locate I/O markers and helper calls so the main walk is a
+    // cheap per-byte dispatch.
+    let mut io_at: HashMap<usize, &str> = HashMap::new();
+    for marker in IO_MARKERS {
+        let needle = marker.as_bytes();
+        let mut from = 0usize;
+        while let Some(p) = find_from(text, needle, from) {
+            from = p + 1;
+            if needle[0] != b'.' && p > 0 && is_ident(text[p - 1]) {
+                continue;
+            }
+            io_at.entry(p).or_insert(marker);
+        }
+    }
+    let mut helper_at: HashMap<usize, (&str, &str, HelperKind)> = HashMap::new();
+    for h in &ctx.cfg.helpers {
+        let needle = h.name.as_bytes();
+        let mut from = 0usize;
+        while let Some(p) = find_from(text, needle, from) {
+            from = p + 1;
+            if p > 0 && is_ident(text[p - 1]) {
+                continue;
+            }
+            let after = p + needle.len();
+            if after >= n || text[after] != b'(' {
+                continue;
+            }
+            // Skip the definition site (`fn name(`): preceded by `fn `.
+            if is_fn_def(text, p) {
+                continue;
+            }
+            helper_at.insert(p, (h.name.as_str(), h.lock.as_str(), h.kind));
+        }
+    }
+
+    let mut guards: Vec<Guard> = Vec::new();
+    let mut depth = 0usize;
+    let mut last_io_line = 0usize;
+    let mut i = 0usize;
+    while i < n {
+        let b = text[i];
+        match b {
+            b'{' => depth += 1,
+            b'}' => {
+                depth = depth.saturating_sub(1);
+                guards.retain(|g| g.depth <= depth);
+            }
+            b'.' if slice_is(text, i, b".lock()") => {
+                lock_event(ctx, i, &receiver_name(text, i), &guards, out);
+            }
+            b'l' if word_is(text, i, b"let") && !prev_word_is(text, i, &[b"if", b"while"]) => {
+                if let Some(g) = parse_guard_binding(ctx, text, i, depth) {
+                    guards.push(g);
+                }
+            }
+            b'd' if word_is(text, i, b"drop") => {
+                if let Some(var) = drop_target(text, i) {
+                    guards.retain(|g| g.var != var);
+                }
+            }
+            _ => {}
+        }
+        if let Some((_, lock, _)) = helper_at.get(&i) {
+            lock_event(ctx, i, lock, &guards, out);
+        }
+        if io_at.contains_key(&i) {
+            let line = ctx.line_of(i);
+            if !ctx.in_test(line) && line != last_io_line {
+                let live: Vec<&str> = guards
+                    .iter()
+                    .filter(|g| g.active_from <= i)
+                    .map(|g| g.lock.as_str())
+                    .collect();
+                if !live.is_empty() {
+                    last_io_line = line;
+                    out.push(Finding::new(
+                        ctx.path,
+                        line,
+                        Rule::LockAcrossIo,
+                        format!(
+                            "I/O call while holding MutexGuard(s) `{}`; \
+                             move the I/O outside the critical section",
+                            live.join("`, `")
+                        ),
+                    ));
+                }
+            }
+        }
+        i += 1;
+    }
+}
+
+/// W3 check at one acquisition event (`.lock()` or a declared helper).
+fn lock_event(
+    ctx: &FileContext<'_>,
+    offset: usize,
+    inner: &str,
+    guards: &[Guard],
+    out: &mut Vec<Finding>,
+) {
+    let line = ctx.line_of(offset);
+    if ctx.in_test(line) {
+        return;
+    }
+    for g in guards.iter().filter(|g| g.active_from <= offset) {
+        if g.lock == inner {
+            out.push(Finding::new(
+                ctx.path,
+                line,
+                Rule::LockOrder,
+                format!("re-acquiring `{inner}` while a guard on it is held (self-deadlock)"),
+            ));
+            continue;
+        }
+        match (ctx.cfg.rank(&g.lock), ctx.cfg.rank(inner)) {
+            (Some(outer_rank), Some(inner_rank)) => {
+                if outer_rank >= inner_rank {
+                    out.push(Finding::new(
+                        ctx.path,
+                        line,
+                        Rule::LockOrder,
+                        format!(
+                            "acquiring `{inner}` while holding `{}` inverts the declared \
+                             hierarchy in rust/LOCKS.md",
+                            g.lock
+                        ),
+                    ));
+                }
+            }
+            _ => {
+                let undeclared = if ctx.cfg.rank(&g.lock).is_none() { &g.lock } else { inner };
+                out.push(Finding::new(
+                    ctx.path,
+                    line,
+                    Rule::LockOrder,
+                    format!(
+                        "nested lock acquisition involves `{undeclared}`, which is not \
+                         declared in rust/LOCKS.md"
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+/// Parse `let [mut] name = <rhs>;` at `i` (which points at `let`) and
+/// return a `Guard` when the RHS yields a `MutexGuard`: it ends in
+/// `.lock()` / `.lock()?` / `.lock().unwrap()` / `.lock().expect(…)`,
+/// or is a call to a declared `returns`-kind helper.  Patterns
+/// (`let (a, b) = …`), `let _ = …`, and deref/borrow RHSes are not
+/// guards.  `if let` / `while let` scrutinees are excluded by the
+/// caller; their temporaries die at the end of the condition.
+fn parse_guard_binding(
+    ctx: &FileContext<'_>,
+    text: &[u8],
+    i: usize,
+    depth: usize,
+) -> Option<Guard> {
+    let n = text.len();
+    let line = ctx.line_of(i);
+    if ctx.in_test(line) {
+        return None;
+    }
+    let mut j = i + 3;
+    j = skip_ws(text, j);
+    if word_is(text, j, b"mut") {
+        j = skip_ws(text, j + 3);
+    }
+    if j >= n || !(text[j].is_ascii_alphabetic() || text[j] == b'_') {
+        return None; // pattern binding, not a simple ident
+    }
+    let var_start = j;
+    while j < n && is_ident(text[j]) {
+        j += 1;
+    }
+    let var = std::str::from_utf8(&text[var_start..j]).ok()?.to_string();
+    if var == "_" {
+        return None; // dropped immediately
+    }
+    j = skip_ws(text, j);
+    // Optional `: Type` up to the `=` at bracket depth 0.
+    let mut bdepth = 0i32;
+    let mut eq = None;
+    let mut k = j;
+    while k < n {
+        match text[k] {
+            b'(' | b'[' | b'<' => bdepth += 1,
+            b')' | b']' | b'>' => bdepth -= 1,
+            b'=' if bdepth <= 0 && (k + 1 >= n || text[k + 1] != b'=') => {
+                eq = Some(k);
+                break;
+            }
+            b';' | b'{' => break,
+            _ => {}
+        }
+        k += 1;
+    }
+    let eq = eq?;
+    let stmt_end = find_stmt_end(text, eq + 1);
+    let rhs_start = skip_ws(text, eq + 1);
+    let rhs = &text[rhs_start..stmt_end.min(n)];
+    let rhs_trim = trim_bytes(rhs);
+    if rhs_trim.first() == Some(&b'*') || rhs_trim.first() == Some(&b'&') {
+        return None; // deref/borrow of an existing guard, not a new one
+    }
+    // Case 1: …lock() [? | .unwrap() | .expect(…)] at the very end.
+    if let Some(lp) = rfind(rhs_trim, b".lock()") {
+        let tail = &rhs_trim[lp + b".lock()".len()..];
+        if guard_tail_ok(tail) {
+            let lock = receiver_name(rhs_trim, lp);
+            if !lock.is_empty() {
+                return Some(Guard { lock, var, depth, active_from: stmt_end });
+            }
+        }
+    }
+    // Case 2: call to a declared `returns`-guard helper.
+    if rhs_trim.last() == Some(&b')') {
+        let mut pd = 0i32;
+        let mut p = rhs_trim.len() - 1;
+        loop {
+            match rhs_trim[p] {
+                b')' => pd += 1,
+                b'(' => pd -= 1,
+                _ => {}
+            }
+            if pd == 0 {
+                break;
+            }
+            if p == 0 {
+                return None;
+            }
+            p -= 1;
+        }
+        let end = p;
+        let mut start = p;
+        while start > 0 && is_ident(rhs_trim[start - 1]) {
+            start -= 1;
+        }
+        let method = std::str::from_utf8(&rhs_trim[start..end]).ok()?;
+        if let Some(h) = ctx.cfg.helper(method) {
+            if h.kind == HelperKind::ReturnsGuard {
+                return Some(Guard {
+                    lock: h.lock.clone(),
+                    var,
+                    depth,
+                    active_from: stmt_end,
+                });
+            }
+        }
+    }
+    None
+}
+
+fn guard_tail_ok(tail: &[u8]) -> bool {
+    // Normalise away whitespace so multi-line chains still match.
+    let t: Vec<u8> = tail.iter().copied().filter(|&b| !(b as char).is_whitespace()).collect();
+    if t.is_empty() || t == b"?" || t == b".unwrap()" {
+        return true;
+    }
+    t.starts_with(b".expect(") && t.last() == Some(&b')')
+}
+
+/// Receiver name of `.lock()` at `dot`: the field/variable segment just
+/// before the dot, with one `[…]` index stripped
+/// (`self.shards[v].deque.lock()` → `deque`, `self.slots[p].lock()` →
+/// `slots`).
+fn receiver_name(text: &[u8], dot: usize) -> String {
+    let mut k = dot;
+    while k > 0 && text[k - 1] == b']' {
+        let mut depth = 0i32;
+        let mut j = k - 1;
+        loop {
+            match text[j] {
+                b']' => depth += 1,
+                b'[' => depth -= 1,
+                _ => {}
+            }
+            if depth == 0 || j == 0 {
+                break;
+            }
+            j -= 1;
+        }
+        k = j;
+    }
+    let end = k;
+    let mut start = k;
+    while start > 0 && is_ident(text[start - 1]) {
+        start -= 1;
+    }
+    String::from_utf8_lossy(&text[start..end]).into_owned()
+}
+
+fn drop_target(text: &[u8], i: usize) -> Option<String> {
+    let mut j = skip_ws(text, i + 4);
+    if j >= text.len() || text[j] != b'(' {
+        return None;
+    }
+    j = skip_ws(text, j + 1);
+    let start = j;
+    while j < text.len() && is_ident(text[j]) {
+        j += 1;
+    }
+    let end = j;
+    j = skip_ws(text, j);
+    if j >= text.len() || text[j] != b')' || start == end {
+        return None;
+    }
+    Some(String::from_utf8_lossy(&text[start..end]).into_owned())
+}
+
+/// `fn name(` — the definition of a helper, not a call to it.
+fn is_fn_def(text: &[u8], name_pos: usize) -> bool {
+    let mut j = name_pos;
+    while j > 0 && (text[j - 1] as char).is_whitespace() {
+        j -= 1;
+    }
+    j >= 2 && &text[j - 2..j] == b"fn" && (j == 2 || !is_ident(text[j - 3]))
+}
+
+// ---------------------------------------------------------------- W4 --
+
+fn check_float_tolerance(ctx: &FileContext<'_>, out: &mut Vec<Finding>) {
+    if !ctx.path.contains("align/") {
+        return;
+    }
+    let text = ctx.scrubbed.text.as_bytes();
+    let mut from = 0usize;
+    while let Some(p) = find_from(text, b"EPS", from) {
+        from = p + 1;
+        let before_ok = p == 0 || !is_ident(text[p - 1]);
+        let after = p + 3;
+        let after_ok = after >= text.len() || !is_ident(text[after]);
+        if !(before_ok && after_ok) {
+            continue;
+        }
+        let line = ctx.line_of(p);
+        if ctx.in_test(line) {
+            continue;
+        }
+        out.push(Finding::new(
+            ctx.path,
+            line,
+            Rule::FloatTolerance,
+            "`EPS` tolerance in alignment code; kernels must compare exactly \
+             (the float-EPS traceback bug class removed by the integer kernels)"
+                .to_string(),
+        ));
+    }
+    from = 0;
+    while let Some(p) = find_from(text, b".abs()", from) {
+        from = p + 1;
+        let mut j = skip_ws(text, p + b".abs()".len());
+        if j < text.len() && text[j] == b'<' {
+            j += 1;
+            if j < text.len() && text[j] == b'<' {
+                continue; // shift, not comparison
+            }
+            let line = ctx.line_of(p);
+            if ctx.in_test(line) {
+                continue;
+            }
+            out.push(Finding::new(
+                ctx.path,
+                line,
+                Rule::FloatTolerance,
+                "`.abs() < …` tolerance comparison in alignment code; \
+                 compare exactly or move the tolerance out of the kernel"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+// ---------------------------------------------------------------- W5 --
+
+const ATOMIC_OPS: &[&str] = &["load(", "store(", "swap(", "fetch_", "compare_"];
+
+fn check_relaxed_handshake(ctx: &FileContext<'_>, out: &mut Vec<Finding>) {
+    if ctx.cfg.condvar_atomics.is_empty() {
+        return;
+    }
+    let text = ctx.scrubbed.text.as_bytes();
+    let mut from = 0usize;
+    while let Some(p) = find_from(text, b"Ordering::Relaxed", from) {
+        from = p + 1;
+        let line = ctx.line_of(p);
+        if ctx.in_test(line) {
+            continue;
+        }
+        let start = stmt_start(text, p);
+        let span = &text[start..p];
+        for name in &ctx.cfg.condvar_atomics {
+            if atomic_op_in(span, name) {
+                out.push(Finding::new(
+                    ctx.path,
+                    line,
+                    Rule::RelaxedHandshake,
+                    format!(
+                        "`Ordering::Relaxed` on condvar-paired atomic `{name}`; the \
+                         sleep/wake handshake needs SeqCst (see rust/LOCKS.md)"
+                    ),
+                ));
+                break;
+            }
+        }
+    }
+}
+
+fn atomic_op_in(span: &[u8], name: &str) -> bool {
+    let needle = name.as_bytes();
+    let mut from = 0usize;
+    while let Some(p) = find_from(span, needle, from) {
+        from = p + 1;
+        if p > 0 && is_ident(span[p - 1]) {
+            continue;
+        }
+        let mut q = p + needle.len();
+        if q < span.len() && span[q] == b'[' {
+            let mut depth = 0i32;
+            while q < span.len() {
+                match span[q] {
+                    b'[' => depth += 1,
+                    b']' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            q += 1;
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                q += 1;
+            }
+        } else if q < span.len() && is_ident(span[q]) {
+            continue;
+        }
+        if q < span.len() && span[q] == b'.' {
+            let rest = &span[q + 1..];
+            if ATOMIC_OPS.iter().any(|op| rest.starts_with(op.as_bytes())) {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+// ---------------------------------------------------------------- W6 --
+
+fn check_metrics_arity(ctx: &FileContext<'_>, out: &mut Vec<Finding>) {
+    let text = ctx.scrubbed.text.as_bytes();
+    // Find `const <NAME-containing-HEADER>` and its string literal.
+    let mut header: Option<(usize, usize)> = None; // (offset, columns)
+    let mut from = 0usize;
+    while let Some(p) = find_from(text, b"const", from) {
+        from = p + 1;
+        if (p > 0 && is_ident(text[p - 1])) || (p + 5 < text.len() && is_ident(text[p + 5])) {
+            continue;
+        }
+        let mut j = skip_ws(text, p + 5);
+        let start = j;
+        while j < text.len() && is_ident(text[j]) {
+            j += 1;
+        }
+        if !contains_sub(&text[start..j], b"HEADER") {
+            continue;
+        }
+        let semi = find_from(text, b";", j).unwrap_or(text.len());
+        if let Some(lit) = ctx
+            .scrubbed
+            .strings
+            .iter()
+            .find(|s| s.offset > p && s.offset < semi && tab_count(&s.raw) > 0)
+        {
+            header = Some((lit.offset, tab_count(&lit.raw) + 1));
+            break;
+        }
+    }
+    let Some((header_offset, columns)) = header else {
+        return;
+    };
+    for lit in &ctx.scrubbed.strings {
+        if lit.offset == header_offset || ctx.in_test(lit.line) {
+            continue;
+        }
+        let tabs = tab_count(&lit.raw);
+        if tabs < 2 || placeholder_count(&lit.raw) == 0 {
+            continue;
+        }
+        let fields = tabs + 1;
+        if fields != columns {
+            out.push(Finding::new(
+                ctx.path,
+                lit.line,
+                Rule::MetricsArity,
+                format!(
+                    "row writer has {fields} tab-separated fields but the TSV header \
+                     in this file declares {columns} columns"
+                ),
+            ));
+        }
+    }
+}
+
+/// Occurrences of the two-byte escape `\t` as written in the source.
+fn tab_count(raw: &str) -> usize {
+    raw.as_bytes().windows(2).filter(|w| *w == b"\\t").count()
+}
+
+/// `{…}` placeholders, skipping the `{{` escape.
+fn placeholder_count(raw: &str) -> usize {
+    let b = raw.as_bytes();
+    let mut i = 0usize;
+    let mut count = 0usize;
+    while i < b.len() {
+        if b[i] == b'{' {
+            if i + 1 < b.len() && b[i + 1] == b'{' {
+                i += 2;
+                continue;
+            }
+            count += 1;
+        }
+        i += 1;
+    }
+    count
+}
+
+// ----------------------------------------------------------- shared --
+
+fn skip_ws(text: &[u8], mut i: usize) -> usize {
+    while i < text.len() && (text[i] as char).is_whitespace() {
+        i += 1;
+    }
+    i
+}
+
+fn trim_bytes(b: &[u8]) -> &[u8] {
+    let mut s = 0usize;
+    let mut e = b.len();
+    while s < e && (b[s] as char).is_whitespace() {
+        s += 1;
+    }
+    while e > s && (b[e - 1] as char).is_whitespace() {
+        e -= 1;
+    }
+    &b[s..e]
+}
+
+fn slice_is(text: &[u8], i: usize, pat: &[u8]) -> bool {
+    text.len() >= i + pat.len() && &text[i..i + pat.len()] == pat
+}
+
+/// `pat` starts at `i` as a whole word.
+fn word_is(text: &[u8], i: usize, pat: &[u8]) -> bool {
+    slice_is(text, i, pat)
+        && (i == 0 || !is_ident(text[i - 1]))
+        && (i + pat.len() >= text.len() || !is_ident(text[i + pat.len()]))
+}
+
+/// The word immediately before position `i` (skipping whitespace) is
+/// one of `words` — used to exclude `if let` / `while let`.
+fn prev_word_is(text: &[u8], i: usize, words: &[&[u8]]) -> bool {
+    let mut j = i;
+    while j > 0 && (text[j - 1] as char).is_whitespace() {
+        j -= 1;
+    }
+    let end = j;
+    let mut start = j;
+    while start > 0 && is_ident(text[start - 1]) {
+        start -= 1;
+    }
+    let w = &text[start..end];
+    words.iter().any(|p| *p == w)
+}
+
+/// End of the statement starting at `from`: the first `;` at combined
+/// bracket depth 0, or the position where the enclosing block closes.
+fn find_stmt_end(text: &[u8], from: usize) -> usize {
+    let mut depth = 0i32;
+    let mut j = from;
+    while j < text.len() {
+        match text[j] {
+            b'(' | b'[' | b'{' => depth += 1,
+            b')' | b']' => depth -= 1,
+            b'}' => {
+                depth -= 1;
+                if depth < 0 {
+                    return j;
+                }
+            }
+            b';' if depth == 0 => return j,
+            _ => {}
+        }
+        j += 1;
+    }
+    text.len()
+}
+
+/// Statement start for W5: scan back to the nearest `;`, `{`, or `}`.
+fn stmt_start(text: &[u8], pos: usize) -> usize {
+    let mut j = pos;
+    while j > 0 {
+        match text[j - 1] {
+            b';' | b'{' | b'}' => break,
+            _ => j -= 1,
+        }
+    }
+    j
+}
+
+fn rfind(hay: &[u8], needle: &[u8]) -> Option<usize> {
+    if needle.is_empty() || hay.len() < needle.len() {
+        return None;
+    }
+    (0..=hay.len() - needle.len()).rev().find(|&i| &hay[i..i + needle.len()] == needle)
+}
+
+fn contains_sub(hay: &[u8], needle: &[u8]) -> bool {
+    find_from(hay, needle, 0).is_some()
+}

@@ -10,6 +10,17 @@ use halign2::tree::distance::{jc_distance, pdistance_native};
 use halign2::tree::{neighbor_joining, neighbor_joining_src, NjConfig};
 use halign2::util::Rng;
 
+/// Case count for the property sweep: 100 by default, overridable via
+/// `HALIGN_STRESS_CASES` so the sanitizer CI jobs (ThreadSanitizer,
+/// Miri) can run the same test at instrumentation-friendly depth.
+fn stress_cases(default: u64) -> u64 {
+    std::env::var("HALIGN_STRESS_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(default)
+}
+
 fn random_aligned_rows(n: usize, width: usize, rng: &mut Rng) -> Vec<Sequence> {
     let residues = [b'A', b'C', b'G', b'T'];
     (0..n)
@@ -36,7 +47,7 @@ fn random_aligned_rows(n: usize, width: usize, rng: &mut Rng) -> Vec<Sequence> {
 #[test]
 fn tiled_nj_is_bit_identical_to_dense_across_100_cases() {
     let mut rng = Rng::seed_from_u64(0xD157_A7);
-    for case in 0..100u64 {
+    for case in 0..stress_cases(100) {
         let n = 4 + rng.below(24);
         let width = 24 + rng.below(48);
         let rows = random_aligned_rows(n, width, &mut rng);

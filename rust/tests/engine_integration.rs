@@ -42,11 +42,18 @@ fn multi_stage_pipeline_with_joins() {
 
 #[test]
 fn random_faults_do_not_change_results() {
+    // `HALIGN_STRESS_CASES` scales the seed sweep down for the
+    // sanitizer CI jobs (TSan/Miri run far slower per case).
+    let seeds: u64 = std::env::var("HALIGN_STRESS_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(5);
     let clean = {
         let c = Cluster::new(ClusterConfig::spark(3));
         wordcount(&c, &["x y z", "x x", "z"])
     };
-    for seed in 0..5 {
+    for seed in 0..seeds {
         let mut cfg = ClusterConfig::spark(3);
         cfg.fault = FaultPlan::random(0.4, seed);
         cfg.max_retries = 10;

@@ -1,0 +1,288 @@
+//! Fixture tests for `pallas-lint`: every rule has at least one
+//! must-fire and one must-not-fire snippet, checked by exact rule ID.
+//! The snippets are linted with [`halign2::lint::lint_source`] under
+//! synthetic paths (the linter scopes W1/W4 by path substring, so the
+//! files never need to exist on disk).
+
+use halign2::lint::{lint_source, Finding, LintConfig, Report, Rule};
+
+/// The declared-locks config the fixtures run against — parsed through
+/// the real `LOCKS.md` parser so the markdown grammar is exercised too.
+fn cfg() -> LintConfig {
+    LintConfig::parse_locks_md(
+        "## Hierarchy\n\
+         1. `kill_lock`\n\
+         2. `state`\n\
+         3. `deque`\n\
+         4. `epoch`\n\
+         ## Helper lock acquisitions\n\
+         - `lock_shard` returns `deque`\n\
+         - `bump_epoch` acquires `epoch`\n\
+         ## Condvar-paired atomics\n\
+         - `shutdown`\n",
+    )
+}
+
+fn ids(findings: &[Finding]) -> Vec<&'static str> {
+    findings.iter().filter(|f| !f.suppressed).map(|f| f.rule.id()).collect()
+}
+
+fn lint(path: &str, src: &str) -> Vec<Finding> {
+    lint_source(path, src, &cfg())
+}
+
+// ---------------------------------------------------------------- W1 --
+
+#[test]
+fn w1_fires_on_unwrap_in_engine() {
+    let src = "fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n";
+    let findings = lint("rust/src/engine/fx.rs", src);
+    assert_eq!(ids(&findings), ["W1"]);
+    assert_eq!(findings[0].line, 2);
+}
+
+#[test]
+fn w1_fires_on_panic_macro_and_expect() {
+    let src = "fn f(x: Option<u32>) -> u32 {\n    \
+               if x.is_none() { panic!(\"no\"); }\n    x.expect(\"checked\")\n}\n";
+    let findings = lint("rust/src/distmat/fx.rs", src);
+    assert_eq!(ids(&findings), ["W1", "W1"]);
+}
+
+#[test]
+fn w1_silent_outside_worker_dirs_and_in_tests() {
+    let src = "fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n";
+    assert!(ids(&lint("rust/src/align/fx.rs", src)).is_empty());
+    let test_src = "#[cfg(test)]\nmod tests {\n    fn f(x: Option<u32>) -> u32 {\n        \
+                    x.unwrap()\n    }\n}\n";
+    assert!(ids(&lint("rust/src/engine/fx.rs", test_src)).is_empty());
+}
+
+#[test]
+fn w1_poison_carve_out_spares_lock_unwrap() {
+    let src = "fn f(&self) -> usize {\n    self.inner.lock().unwrap().len()\n}\n";
+    assert!(ids(&lint("rust/src/engine/fx.rs", src)).is_empty());
+    // The carve-out must survive rustfmt breaking the chain.
+    let multiline = "fn f(&self) -> usize {\n    self.inner\n        .lock()\n        \
+                     .unwrap()\n        .len()\n}\n";
+    assert!(ids(&lint("rust/src/engine/fx.rs", multiline)).is_empty());
+}
+
+#[test]
+fn w1_ignores_unwrap_or_and_doc_mentions() {
+    let src = "// .unwrap() would panic! here\nfn f(x: Option<u32>) -> u32 {\n    \
+               x.unwrap_or(0)\n}\n";
+    assert!(ids(&lint("rust/src/engine/fx.rs", src)).is_empty());
+}
+
+// ---------------------------------------------------------------- W2 --
+
+#[test]
+fn w2_fires_on_io_under_guard() {
+    let src = "fn spill(&self) {\n    let g = self.inner.lock().unwrap();\n    \
+               fs::write(g.path(), b\"x\").ok();\n}\n";
+    let findings = lint("rust/src/distmat/fx.rs", src);
+    assert_eq!(ids(&findings), ["W2"]);
+    assert_eq!(findings[0].line, 3);
+}
+
+#[test]
+fn w2_silent_after_drop_or_scope_end() {
+    let dropped = "fn spill(&self) {\n    let g = self.inner.lock().unwrap();\n    \
+                   let p = g.path();\n    drop(g);\n    fs::write(p, b\"x\").ok();\n}\n";
+    assert!(ids(&lint("rust/src/distmat/fx.rs", dropped)).is_empty());
+    let scoped = "fn spill(&self) {\n    {\n        let g = self.inner.lock().unwrap();\n        \
+                  g.touch();\n    }\n    fs::write(\"p\", b\"x\").ok();\n}\n";
+    assert!(ids(&lint("rust/src/distmat/fx.rs", scoped)).is_empty());
+}
+
+#[test]
+fn w2_guard_not_live_inside_its_own_initializer() {
+    let src = "fn load(&self) {\n    let g = self.inner.lock().expect(\n        \
+               fs::read_to_string(\"p\").unwrap().as_str(),\n    );\n    g.touch();\n}\n";
+    // Contrived, but the I/O happens before the guard exists; only the
+    // worker-dir unwrap-on-read should fire, not W2.
+    let findings = lint("rust/src/distmat/fx.rs", src);
+    assert!(!ids(&findings).contains(&"W2"));
+}
+
+// ---------------------------------------------------------------- W3 --
+
+#[test]
+fn w3_fires_on_hierarchy_inversion() {
+    let src = "fn f(&self) {\n    let q = self.deque.lock().unwrap();\n    \
+               let s = self.state.lock().unwrap();\n    q.push(s.next());\n}\n";
+    let findings = lint("rust/src/engine/fx.rs", src);
+    assert_eq!(ids(&findings), ["W3"]);
+    assert_eq!(findings[0].line, 3);
+}
+
+#[test]
+fn w3_fires_on_self_deadlock_and_undeclared() {
+    let twice = "fn f(&self) {\n    let a = self.state.lock().unwrap();\n    \
+                 let b = self.state.lock().unwrap();\n    a.merge(b);\n}\n";
+    assert_eq!(ids(&lint("rust/src/engine/fx.rs", twice)), ["W3"]);
+    let undeclared = "fn f(&self) {\n    let a = self.mystery.lock().unwrap();\n    \
+                      let b = self.state.lock().unwrap();\n    a.merge(b);\n}\n";
+    assert_eq!(ids(&lint("rust/src/engine/fx.rs", undeclared)), ["W3"]);
+}
+
+#[test]
+fn w3_silent_on_declared_order_and_helpers() {
+    let ordered = "fn f(&self) {\n    let k = self.kill_lock.lock().unwrap();\n    \
+                   let q = self.deque.lock().unwrap();\n    q.clear();\n    k.done();\n}\n";
+    assert!(ids(&lint("rust/src/engine/fx.rs", ordered)).is_empty());
+    // `lock_shard` returns a `deque` guard; `bump_epoch` takes `epoch`
+    // internally — deque(3) before epoch(4) is the declared order.
+    let helpers = "fn f(&self, w: usize) {\n    let q = lock_shard(w);\n    \
+                   q.push(1);\n    bump_epoch();\n}\n";
+    assert!(ids(&lint("rust/src/engine/fx.rs", helpers)).is_empty());
+}
+
+#[test]
+fn w3_helper_guard_counts_as_outer_lock() {
+    let src = "fn f(&self, w: usize) {\n    let q = lock_shard(w);\n    \
+               let s = self.state.lock().unwrap();\n    q.push(s.next());\n}\n";
+    assert_eq!(ids(&lint("rust/src/engine/fx.rs", src)), ["W3"]);
+}
+
+// ---------------------------------------------------------------- W4 --
+
+#[test]
+fn w4_fires_on_eps_and_abs_tolerance_in_align() {
+    let src = "fn close(a: f64, b: f64) -> bool {\n    (a - b).abs() < EPS\n}\n";
+    let findings = lint("rust/src/align/fx.rs", src);
+    // Both the `EPS` token and the `.abs() <` comparison fire.
+    assert_eq!(ids(&findings), ["W4", "W4"]);
+}
+
+#[test]
+fn w4_silent_outside_align_in_tests_and_on_other_idents() {
+    let src = "fn close(a: f64, b: f64) -> bool {\n    (a - b).abs() < EPS\n}\n";
+    assert!(ids(&lint("rust/src/engine/fx.rs", src)).is_empty());
+    let test_src = "#[cfg(test)]\nmod tests {\n    fn close(a: f64, b: f64) -> bool {\n        \
+                    (a - b).abs() < EPS\n    }\n}\n";
+    assert!(ids(&lint("rust/src/align/fx.rs", test_src)).is_empty());
+    let other = "const STEPS: usize = 4;\nfn f(x: u64) -> u64 {\n    x.abs() << 1\n}\n";
+    assert!(ids(&lint("rust/src/align/fx.rs", other)).is_empty());
+}
+
+// ---------------------------------------------------------------- W5 --
+
+#[test]
+fn w5_fires_on_relaxed_condvar_atomic() {
+    let src = "fn stop(&self) {\n    self.shutdown.store(true, Ordering::Relaxed);\n}\n";
+    let findings = lint("rust/src/engine/fx.rs", src);
+    assert_eq!(ids(&findings), ["W5"]);
+    assert_eq!(findings[0].line, 2);
+}
+
+#[test]
+fn w5_silent_on_seqcst_and_unlisted_atomics() {
+    let seqcst = "fn stop(&self) {\n    self.shutdown.store(true, Ordering::SeqCst);\n}\n";
+    assert!(ids(&lint("rust/src/engine/fx.rs", seqcst)).is_empty());
+    let other = "fn tick(&self) {\n    self.counter.fetch_add(1, Ordering::Relaxed);\n}\n";
+    assert!(ids(&lint("rust/src/engine/fx.rs", other)).is_empty());
+}
+
+// ---------------------------------------------------------------- W6 --
+
+#[test]
+fn w6_fires_on_header_row_arity_skew() {
+    let src = "pub const TSV_HEADER: &str = \"a\\tb\\tc\";\n\
+               fn row() -> String {\n    \
+               format!(\"{}\\t{}\\t{}\\t{}\", 1, 2, 3, 4)\n}\n";
+    let findings = lint("rust/src/metrics/fx.rs", src);
+    assert_eq!(ids(&findings), ["W6"]);
+    assert_eq!(findings[0].line, 3);
+}
+
+#[test]
+fn w6_silent_on_matching_arity_and_tab_strings_without_placeholders() {
+    let matching = "pub const TSV_HEADER: &str = \"a\\tb\\tc\";\n\
+                    fn row() -> String {\n    \
+                    format!(\"{}\\t{}\\t{}\", 1, 2, 3)\n}\n";
+    assert!(ids(&lint("rust/src/metrics/fx.rs", matching)).is_empty());
+    let plain = "pub const TSV_HEADER: &str = \"a\\tb\\tc\";\n\
+                 const LEGEND: &str = \"x\\ty\\tz\\tw\";\n";
+    assert!(ids(&lint("rust/src/metrics/fx.rs", plain)).is_empty());
+}
+
+// -------------------------------------------------- suppression + W0 --
+
+#[test]
+fn allow_comment_suppresses_with_reason() {
+    let src = "fn f(x: Option<u32>) -> u32 {\n    \
+               // lint: allow(panic) caller guarantees Some\n    x.unwrap()\n}\n";
+    let findings = lint("rust/src/engine/fx.rs", src);
+    assert_eq!(findings.len(), 1);
+    assert!(findings[0].suppressed);
+    assert_eq!(findings[0].allow_reason.as_deref(), Some("caller guarantees Some"));
+    assert!(ids(&findings).is_empty());
+}
+
+#[test]
+fn allow_comment_covers_whole_statement() {
+    // One comment above a multi-line builder chain covers every line of
+    // the statement, including the `.expect(...)` on a later line.
+    let src = "fn f(&self) {\n    // lint: allow(panic) startup path, no tasks yet\n    \
+               let t = Builder::new()\n        .name(\"w\".into())\n        \
+               .spawn(run)\n        .expect(\"spawn\");\n    t.join();\n}\n";
+    let findings = lint("rust/src/engine/fx.rs", src);
+    assert!(ids(&findings).is_empty());
+    assert!(findings.iter().any(|f| f.suppressed && f.rule == Rule::PanicInWorker));
+}
+
+#[test]
+fn w0_fires_on_reasonless_or_unknown_allow() {
+    let reasonless = "fn f(x: Option<u32>) -> u32 {\n    \
+                      // lint: allow(panic)\n    x.unwrap()\n}\n";
+    let findings = lint("rust/src/engine/fx.rs", reasonless);
+    // The W0 *and* the now-unsuppressed W1 both surface.
+    assert_eq!(ids(&findings), ["W0", "W1"]);
+    let unknown = "// lint: allow(everything) because\nfn f() {}\n";
+    assert_eq!(ids(&lint("rust/src/engine/fx.rs", unknown)), ["W0"]);
+}
+
+#[test]
+fn w0_cannot_be_suppressed() {
+    let src = "// lint: allow(allow-syntax) nice try\nfn f() {}\n";
+    let findings = lint("rust/src/engine/fx.rs", src);
+    assert_eq!(ids(&findings), ["W0"]);
+}
+
+// ----------------------------------------------------- deny semantics --
+
+#[test]
+fn deny_exit_flips_on_unsuppressed_count() {
+    // `pallas_lint --deny` exits nonzero iff `unsuppressed_count() > 0`;
+    // assert the counter the binary branches on.
+    let denied = Report {
+        findings: lint(
+            "rust/src/engine/fx.rs",
+            "fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n",
+        ),
+        files_scanned: 1,
+    };
+    assert_eq!(denied.unsuppressed_count(), 1);
+    let clean = Report {
+        findings: lint(
+            "rust/src/engine/fx.rs",
+            "fn f(x: Option<u32>) -> u32 {\n    \
+             // lint: allow(panic) caller guarantees Some\n    x.unwrap()\n}\n",
+        ),
+        files_scanned: 1,
+    };
+    assert_eq!(clean.unsuppressed_count(), 0);
+    assert_eq!(clean.suppressed_count(), 1);
+}
+
+#[test]
+fn findings_render_stable_grep_format() {
+    let findings = lint(
+        "rust/src/engine/fx.rs",
+        "fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n",
+    );
+    let line = findings[0].render();
+    assert!(line.starts_with("rust/src/engine/fx.rs:2 W1 panic "), "got: {line}");
+}
