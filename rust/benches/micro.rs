@@ -8,7 +8,8 @@ mod common;
 use std::time::Instant;
 
 use halign2::align::banded::{banded_global, sw_align_i32, IntSwParams};
-use halign2::align::myers::{edit_distance_dp, myers_edit_distance};
+use halign2::align::myers::{edit_distance_dp, myers_edit_distance, pack_row};
+use halign2::tree::distance::{pdist_pair, pdist_pair_packed};
 use halign2::align::pairwise::global_dp;
 use halign2::align::sw::{sw_align, sw_matrix, SwParams};
 use halign2::align::trie::SegmentTrie;
@@ -127,6 +128,27 @@ fn main() {
             cells / median(times).max(1e-9)
         };
         let ip = IntSwParams::from_f32(&params).expect("built-in matrix is integer-valued");
+        // p-distance over aligned rows: the distance-matrix inner loop
+        // (scalar byte walk vs packed popcount; bit-identical ratios, see
+        // tree/distance.rs).
+        let m = if quick { 4096usize } else { 16384 };
+        let gap = Alphabet::Dna.gap();
+        let ra: Vec<u8> = (0..m)
+            .map(|_| if krng.chance(0.05) { gap } else { krng.below(4) as u8 })
+            .collect();
+        let rb: Vec<u8> = ra
+            .iter()
+            .map(|&c| {
+                if krng.chance(0.05) {
+                    gap
+                } else if c != gap && krng.chance(0.03) {
+                    krng.below(4) as u8
+                } else {
+                    c
+                }
+            })
+            .collect();
+        let (pa, pb) = (pack_row(&ra, gap), pack_row(&rb, gap));
         let rows: Vec<(String, &'static str, f64)> = vec![
             (
                 format!("global_{n}x{n}"),
@@ -168,6 +190,20 @@ fn main() {
                 "bitparallel",
                 rate(sw_cells, iters, &mut || {
                     std::hint::black_box(sw_align_i32(&a, &b, &ip));
+                }),
+            ),
+            (
+                format!("pdist_row_{m}"),
+                "scalar",
+                rate(m as f64, iters, &mut || {
+                    std::hint::black_box(pdist_pair(&ra, &rb, gap));
+                }),
+            ),
+            (
+                format!("pdist_row_{m}"),
+                "bitparallel",
+                rate(m as f64, iters, &mut || {
+                    std::hint::black_box(pdist_pair_packed(&pa, &pb));
                 }),
             ),
         ];

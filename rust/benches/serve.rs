@@ -1,0 +1,198 @@
+//! Serving-layer bench (ISSUE: "1 big job then 100 small appends"): a
+//! base alignment job followed by a chain of append requests, served
+//! through the content-hash result cache, against the no-cache baseline
+//! that recomputes every union from scratch.
+//!
+//! Emits BENCH_serve.json at the repo root (same convention as
+//! BENCH_micro.json).  The *counts* (hits/misses/appends) and the two
+//! correctness booleans are mode-independent — `scripts/bench_compare.py`
+//! pins them exactly and checks the speedup against a floor; raw
+//! wall-clock seconds are informational only and never compared across
+//! machines.
+use std::time::Instant;
+
+use halign2::align::append::{append_nucleotide, MsaArtifact};
+use halign2::align::center_star::{
+    align_nucleotide, align_nucleotide_with_artifact, CenterStarConfig,
+};
+use halign2::cache::{canonical_digest, ArtifactStore};
+use halign2::engine::{Cluster, ClusterConfig};
+use halign2::fasta::{Alphabet, Sequence};
+use halign2::util::Rng;
+
+/// Mutate `base`: substitutions at rate `subs`, insert/delete at rate
+/// `indels` (indel-free variants never widen the merged profile, which
+/// is what keeps most appends on the render-one-row fast path).
+fn variant(rng: &mut Rng, base: &[u8], subs: f64, indels: f64) -> Vec<u8> {
+    let mut out = Vec::with_capacity(base.len() + 8);
+    for &c in base {
+        if rng.chance(indels) {
+            if rng.chance(0.5) {
+                continue; // deletion
+            }
+            out.push(rng.below(4) as u8); // insertion
+            out.push(c);
+        } else if rng.chance(subs) {
+            out.push(rng.below(4) as u8);
+        } else {
+            out.push(c);
+        }
+    }
+    out
+}
+
+fn write_bench_serve_json(fields: &[(&str, String)]) {
+    let mut json = String::from("{\n  \"bench\": \"serve_append\",\n");
+    for (i, (k, v)) in fields.iter().enumerate() {
+        let comma = if i + 1 < fields.len() { "," } else { "" };
+        json.push_str(&format!("  \"{k}\": {v}{comma}\n"));
+    }
+    json.push_str("}\n");
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate dir has a parent")
+        .join("BENCH_serve.json");
+    std::fs::write(&path, json).expect("writing BENCH_serve.json");
+    println!("wrote {}", path.display());
+}
+
+fn main() {
+    let quick = std::env::var("QUICK").is_ok()
+        || std::env::args().any(|a| a == "--quick" || a == "--test");
+    // K is mode-independent so the hit/miss/append counts in
+    // BENCH_serve.json match the committed baseline in both modes; QUICK
+    // only shrinks the sequences and the base job.
+    let appends = 100usize;
+    let base_n = if quick { 16 } else { 48 };
+    let len = if quick { 320 } else { 500 };
+    let budget = 128 << 10;
+
+    let mut rng = Rng::seed_from_u64(0xA11C);
+    let reference: Vec<u8> = (0..len).map(|_| rng.below(4) as u8).collect();
+    let base: Vec<Sequence> = (0..base_n)
+        .map(|i| {
+            // The base set carries indels, so the merged profile starts
+            // non-trivial.
+            Sequence::new(format!("s{i}"), variant(&mut rng, &reference, 0.02, 0.004), Alphabet::Dna)
+        })
+        .collect();
+    // Appended sequences: mostly substitution-only (no widening), every
+    // 20th carries indels to exercise the widen-and-rerender path.
+    let extra: Vec<Sequence> = (0..appends)
+        .map(|i| {
+            let indels = if i % 20 == 19 { 0.01 } else { 0.0 };
+            Sequence::new(
+                format!("a{i}"),
+                variant(&mut rng, &reference, 0.02, indels),
+                Alphabet::Dna,
+            )
+        })
+        .collect();
+
+    let cluster = Cluster::new(ClusterConfig::spark(4));
+    let cfg = CenterStarConfig::default();
+    let store = ArtifactStore::new(
+        std::env::temp_dir().join(format!("halign2-serve-bench-{}", std::process::id())),
+        budget,
+    )
+    .expect("artifact store");
+    let mut max_artifact_bytes = 0usize;
+
+    // --- 1 big job -----------------------------------------------------------
+    let mut union = base.clone();
+    let base_key = canonical_digest(&union);
+    assert!(store.get(base_key).unwrap().is_none(), "fresh store must miss");
+    let t = Instant::now();
+    let (mut parent_msa, mut parent_art) =
+        align_nucleotide_with_artifact(&cluster, &union, &cfg).unwrap();
+    let base_secs = t.elapsed().as_secs_f64();
+    let bytes = parent_art.to_bytes();
+    max_artifact_bytes = max_artifact_bytes.max(bytes.len());
+    store.put(base_key, bytes).unwrap();
+    // Exact resubmission of the big job: decode + render, engine untouched.
+    let blob = store.get(base_key).unwrap().expect("stored job must hit");
+    let rendered = MsaArtifact::from_bytes(&blob).unwrap().render().unwrap();
+    let mut bit_identical = rendered.aligned.iter().zip(&parent_msa.aligned).all(|(a, b)| {
+        a.id == b.id && a.codes == b.codes
+    });
+
+    // --- 100 small appends (cached path) -------------------------------------
+    let mut rows_rendered_total = 0usize;
+    let mut widened_appends = 0usize;
+    let t = Instant::now();
+    for s in &extra {
+        union.push(s.clone());
+        let key = canonical_digest(&union);
+        assert!(store.get(key).unwrap().is_none(), "union job must be new");
+        let out =
+            append_nucleotide(&cluster, &parent_art, std::slice::from_ref(s), Some(&parent_msa))
+                .unwrap();
+        rows_rendered_total += out.rows_rendered;
+        widened_appends += usize::from(out.widened);
+        let bytes = out.artifact.to_bytes();
+        max_artifact_bytes = max_artifact_bytes.max(bytes.len());
+        store.put(key, bytes).unwrap();
+        parent_msa = out.msa;
+        parent_art = out.artifact;
+    }
+    let append_secs = t.elapsed().as_secs_f64();
+    // Resubmit the final union: it hits (re-read from disk if the LRU
+    // spilled it) and must render bit-identically.
+    let final_key = canonical_digest(&union);
+    let blob = store.get(final_key).unwrap().expect("final union must hit");
+    let from_cache = MsaArtifact::from_bytes(&blob).unwrap().render().unwrap();
+    bit_identical &= from_cache.aligned.iter().zip(&parent_msa.aligned).all(|(a, b)| {
+        a.id == b.id && a.codes == b.codes
+    });
+
+    // --- no-cache baseline: recompute every union from scratch ---------------
+    let t = Instant::now();
+    let mut scratch_msa = None;
+    for k in 0..appends {
+        let upto = &union[..base_n + k + 1];
+        scratch_msa = Some(align_nucleotide(&cluster, upto, &cfg).unwrap());
+    }
+    let recompute_secs = t.elapsed().as_secs_f64();
+    // The append chain must equal the from-scratch union bit for bit.
+    let scratch = scratch_msa.unwrap();
+    bit_identical &= scratch.width == parent_msa.width
+        && scratch.aligned.iter().zip(&parent_msa.aligned).all(|(a, b)| {
+            a.id == b.id && a.codes == b.codes
+        });
+
+    let speedup = recompute_secs / append_secs.max(1e-9);
+    let peak = store.peak_resident_bytes();
+    let peak_within_budget = peak <= budget + max_artifact_bytes;
+
+    println!("serve bench: 1 big job (n={base_n}, {base_secs:.3}s) + {appends} appends");
+    println!(
+        "  appends: {append_secs:.3}s total ({widened_appends} widened, \
+         {rows_rendered_total} rows rendered)"
+    );
+    println!("  recompute baseline: {recompute_secs:.3}s total");
+    println!("  append_speedup: {speedup:.1}x");
+    println!(
+        "  cache: {} hits / {} misses, peak {peak} bytes (budget {budget}, \
+         largest artifact {max_artifact_bytes})",
+        store.hits(),
+        store.misses()
+    );
+    println!("  bit_identical: {bit_identical}   peak_within_budget: {peak_within_budget}");
+
+    write_bench_serve_json(&[
+        ("hits", store.hits().to_string()),
+        ("misses", store.misses().to_string()),
+        ("appends", appends.to_string()),
+        ("widened_appends", widened_appends.to_string()),
+        ("append_secs", format!("{append_secs:.6}")),
+        ("recompute_secs", format!("{recompute_secs:.6}")),
+        ("speedup", format!("{speedup:.3}")),
+        ("cache_peak_bytes", peak.to_string()),
+        ("cache_budget_bytes", budget.to_string()),
+        ("cache_max_artifact_bytes", max_artifact_bytes.to_string()),
+        ("peak_within_budget", peak_within_budget.to_string()),
+        ("bit_identical", bit_identical.to_string()),
+    ]);
+    assert!(bit_identical, "append chain must be bit-identical to from-scratch unions");
+    assert!(peak_within_budget, "cache peak {peak} exceeds budget + one artifact");
+}

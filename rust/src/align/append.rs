@@ -1,0 +1,473 @@
+//! Incremental center-star: persistable MSA artifacts and the
+//! profile-append path that serves "same reference set + a few new
+//! sequences" traffic in O(new work) instead of an O(n) recompute.
+//!
+//! A finished nucleotide MSA is summarized by an [`MsaArtifact`]: the
+//! center choice, the merged column space-profile, and — per input row —
+//! the encoded edit path against the center.  That is exactly the state
+//! the two-round pipeline in [`super::center_star`] computes and then
+//! throws away; retaining it makes two operations cheap:
+//!
+//! * [`MsaArtifact::render`] — re-materialize the full alignment locally
+//!   (pure function of the artifact; no engine involved), which is what
+//!   a content-hash cache hit returns.
+//! * [`append_nucleotide`] — align only the `k` new sequences against
+//!   the stored center, widen the global profile by an element-wise max
+//!   merge, and re-render.  When no column widens the old rows are
+//!   byte-identical, so a caller that still holds the parent's rendered
+//!   rows can pass them in and only the `k` new rows are rendered.
+//!
+//! **Bit-identity certificate**: an appended result equals a from-scratch
+//! run on the union set bit for bit, because (a) the default center
+//! choice is index 0 and the parent's first sequence stays first in the
+//! union, (b) each pairwise path depends only on (query, center,
+//! segment_len, kernel) — all pinned by the artifact — (c) the profile
+//! merge is an element-wise max, independent of order and grouping, and
+//! (d) row rendering is a pure function of (row, path, global profile).
+//! `tests/append_prop.rs` pins this across worker counts, scheduler
+//! modes, kernel backends and mid-job kills.  The certificate requires
+//! the parent to have used the default center selection
+//! (`center_sample <= 1`); artifacts built with sampled centers render
+//! and append fine but only promise *valid* output, not union
+//! bit-identity.
+//!
+//! The on-disk form ([`MsaArtifact::to_bytes`]) is versioned
+//! (magic + format version + FNV checksum) and `from_bytes` rejects
+//! corrupt or foreign bytes — see `rust/CACHE.md`.
+
+use anyhow::{bail, ensure, Context as _, Result};
+use std::hash::Hasher as _;
+
+use super::center_star::repartition_plan;
+use super::pairwise::{
+    anchored_align_with, center_space_profile, decode_ops, encode_ops, merge_profiles,
+    path_consumes, render_query_row, PathOp,
+};
+use super::trie::SegmentTrie;
+use super::{KernelBackend, MsaResult};
+use crate::engine::Cluster;
+use crate::fasta::{Alphabet, Sequence};
+use crate::util::hash::FnvHasher;
+use crate::util::{Decode, Encode};
+
+/// Artifact format magic — never reuse for an incompatible layout.
+const MAGIC: [u8; 4] = *b"HA2A";
+/// Bump on any change to the encoded layout below.
+pub const ARTIFACT_VERSION: u16 = 1;
+
+/// One input row of a finished MSA: the original (ungapped) sequence and
+/// its encoded edit path against the center.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactRow {
+    pub id: String,
+    pub codes: Vec<u8>,
+    /// Encoded [`PathOp`]s (see [`encode_ops`]).
+    pub ops: Vec<u8>,
+}
+
+/// Persistable summary of a finished center-star MSA (see module docs).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MsaArtifact {
+    pub alphabet: Alphabet,
+    /// Index of the center row inside `rows`.
+    pub center_index: usize,
+    /// Trie segment length the parent run used — appends must reuse it
+    /// for the bit-identity certificate.
+    pub segment_len: usize,
+    /// Pairwise kernel backend the parent run used (ditto).
+    pub kernel: KernelBackend,
+    /// Merged column space-profile, length `center_len + 1`
+    /// (element `c` = gap columns inserted before center position `c`).
+    pub global: Vec<u32>,
+    /// One entry per input sequence, in input order.
+    pub rows: Vec<ArtifactRow>,
+}
+
+impl MsaArtifact {
+    /// Length of the (ungapped) center sequence.
+    pub fn center_len(&self) -> usize {
+        self.global.len() - 1
+    }
+
+    /// Width of the rendered alignment.
+    pub fn width(&self) -> usize {
+        self.center_len() + self.global.iter().sum::<u32>() as usize
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// The center's raw codes.
+    pub fn center_codes(&self) -> &[u8] {
+        &self.rows[self.center_index].codes
+    }
+
+    /// Reconstruct the original input sequences (input order) — what the
+    /// server hashes to key the union of a parent job and an append.
+    pub fn input_sequences(&self) -> Vec<Sequence> {
+        self.rows
+            .iter()
+            .map(|r| Sequence::new(r.id.clone(), r.codes.clone(), self.alphabet))
+            .collect()
+    }
+
+    /// Artifact of a single-sequence "alignment": the degenerate path is
+    /// all-[`PathOp::Diag`], which is exactly what the pipeline's
+    /// center-vs-center alignment produces, so appends onto it match a
+    /// from-scratch union run.
+    pub fn single(seq: &Sequence, cfg: &super::center_star::CenterStarConfig) -> Self {
+        MsaArtifact {
+            alphabet: seq.alphabet,
+            center_index: 0,
+            segment_len: cfg.segment_len,
+            kernel: cfg.kernel,
+            global: vec![0u32; seq.len() + 1],
+            rows: vec![ArtifactRow {
+                id: seq.id.clone(),
+                codes: seq.codes.clone(),
+                ops: encode_ops(&vec![PathOp::Diag; seq.len()]),
+            }],
+        }
+    }
+
+    fn render_row(&self, row: &ArtifactRow) -> Sequence {
+        let ops = decode_ops(&row.ops);
+        let own = center_space_profile(&ops, self.center_len());
+        let rendered = render_query_row(&row.codes, &ops, &self.global, &own, self.alphabet);
+        Sequence::new(row.id.clone(), rendered, self.alphabet)
+    }
+
+    /// Materialize the full alignment from the artifact.  Pure and local:
+    /// no engine, no I/O — the cache-hit path.  Bit-identical to the
+    /// `MsaResult` of the run that produced the artifact (rendering is a
+    /// deterministic function of path + profile).
+    pub fn render(&self) -> Result<MsaResult> {
+        let width = self.width();
+        let mut aligned = Vec::with_capacity(self.rows.len());
+        for (i, row) in self.rows.iter().enumerate() {
+            let seq = self.render_row(row);
+            ensure!(
+                seq.len() == width,
+                "artifact row {i} renders to {} columns, expected {width}",
+                seq.len()
+            );
+            aligned.push(seq);
+        }
+        Ok(MsaResult { aligned, center_index: self.center_index, width })
+    }
+
+    /// Versioned binary encoding: `MAGIC ++ version ++ payload ++
+    /// fnv64(payload)`.  See `rust/CACHE.md` for the layout contract.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut payload = Vec::new();
+        (self.alphabet as u8).encode(&mut payload);
+        (self.center_index as u64).encode(&mut payload);
+        (self.segment_len as u64).encode(&mut payload);
+        let kernel: u8 = match self.kernel {
+            KernelBackend::Scalar => 0,
+            KernelBackend::BitParallel => 1,
+        };
+        kernel.encode(&mut payload);
+        self.global.encode(&mut payload);
+        (self.rows.len() as u64).encode(&mut payload);
+        for row in &self.rows {
+            row.id.encode(&mut payload);
+            row.codes.encode(&mut payload);
+            row.ops.encode(&mut payload);
+        }
+        let mut h = FnvHasher::default();
+        h.write(&payload);
+        let mut out = Vec::with_capacity(payload.len() + 14);
+        out.extend_from_slice(&MAGIC);
+        ARTIFACT_VERSION.encode(&mut out);
+        out.extend_from_slice(&payload);
+        h.finish().encode(&mut out);
+        out
+    }
+
+    /// Decode and *validate* an artifact: magic, format version, payload
+    /// checksum, and the structural invariants rendering relies on.
+    /// Corrupt or truncated bytes are rejected, never half-decoded.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        ensure!(bytes.len() >= 14, "artifact too short ({} bytes)", bytes.len());
+        ensure!(bytes[..4] == MAGIC, "bad artifact magic");
+        let mut hdr = &bytes[4..6];
+        let version = u16::decode(&mut hdr)?;
+        ensure!(
+            version == ARTIFACT_VERSION,
+            "artifact format v{version}, this build reads v{ARTIFACT_VERSION}"
+        );
+        let payload = &bytes[6..bytes.len() - 8];
+        let mut tail = &bytes[bytes.len() - 8..];
+        let want_sum = u64::decode(&mut tail)?;
+        let mut h = FnvHasher::default();
+        h.write(payload);
+        ensure!(h.finish() == want_sum, "artifact checksum mismatch (corrupt bytes)");
+
+        let mut input = payload;
+        let alphabet = Alphabet::from_u8(u8::decode(&mut input)?)?;
+        let center_index = u64::decode(&mut input)? as usize;
+        let segment_len = u64::decode(&mut input)? as usize;
+        let kernel = match u8::decode(&mut input)? {
+            0 => KernelBackend::Scalar,
+            1 => KernelBackend::BitParallel,
+            other => bail!("bad kernel tag {other}"),
+        };
+        let global = Vec::<u32>::decode(&mut input)?;
+        let num_rows = u64::decode(&mut input)? as usize;
+        ensure!(num_rows > 0, "artifact with no rows");
+        ensure!(center_index < num_rows, "center index {center_index} out of range");
+        ensure!(!global.is_empty(), "empty space profile");
+        let mut rows = Vec::with_capacity(num_rows.min(1 << 20));
+        for i in 0..num_rows {
+            let id = String::decode(&mut input).with_context(|| format!("row {i} id"))?;
+            let codes = Vec::<u8>::decode(&mut input).with_context(|| format!("row {i} codes"))?;
+            let ops = Vec::<u8>::decode(&mut input).with_context(|| format!("row {i} ops"))?;
+            rows.push(ArtifactRow { id, codes, ops });
+        }
+        ensure!(input.is_empty(), "{} trailing bytes in artifact", input.len());
+        let center_len = global.len() - 1;
+        ensure!(
+            rows[center_index].codes.len() == center_len,
+            "center length {} disagrees with profile length {}",
+            rows[center_index].codes.len(),
+            global.len()
+        );
+        for (i, row) in rows.iter().enumerate() {
+            let (q, c) = path_consumes(&decode_ops(&row.ops));
+            ensure!(
+                q == row.codes.len() && c == center_len,
+                "row {i} path consumes ({q},{c}), expected ({},{center_len})",
+                row.codes.len()
+            );
+        }
+        Ok(MsaArtifact { alphabet, center_index, segment_len, kernel, global, rows })
+    }
+}
+
+/// Result of an append: the union alignment, its artifact (cacheable
+/// under the union's content hash), and what the fast path saved.
+#[derive(Debug, Clone)]
+pub struct AppendOutcome {
+    pub msa: MsaResult,
+    pub artifact: MsaArtifact,
+    /// Did the new sequences force new gap columns?  If not, every
+    /// parent row is byte-identical to its previous rendering.
+    pub widened: bool,
+    /// Rows actually rendered (== `k` on the no-widening fast path when
+    /// the parent's rendered rows were supplied, `n + k` otherwise).
+    pub rows_rendered: usize,
+}
+
+/// Append `new_seqs` onto a finished MSA: align each new sequence
+/// against the stored center only (distributed over the engine — `k`
+/// tasks, not `n + k`), merge its space profile into the global one, and
+/// render.  O(k·L) alignment work for `k` appends.
+///
+/// `parent_msa` is an optional fast-path input: the parent artifact's
+/// rendered rows (e.g. straight from [`MsaArtifact::render`]).  When the
+/// merge widens no column those rows are reused byte-for-byte and only
+/// the `k` new rows are rendered.  Correctness never depends on it —
+/// rendering is pure, so the output is bit-identical either way (and
+/// bit-identical to a from-scratch run on the union; see module docs).
+pub fn append_nucleotide(
+    cluster: &Cluster,
+    parent: &MsaArtifact,
+    new_seqs: &[Sequence],
+    parent_msa: Option<&MsaResult>,
+) -> Result<AppendOutcome> {
+    ensure!(!new_seqs.is_empty(), "no sequences to append");
+    ensure!(
+        new_seqs.iter().all(|s| s.alphabet == parent.alphabet && !s.is_empty()),
+        "appended sequences must be non-empty and share the parent's alphabet"
+    );
+    let center = parent.center_codes().to_vec();
+    let center_len = parent.center_len();
+    let segment_len = parent.segment_len;
+    let kernel = parent.kernel;
+
+    // Round-1-style map over the *new* sequences only.
+    let (base_parts, split_factor) = repartition_plan(
+        new_seqs,
+        cluster.config().default_partitions,
+        super::center_star::CenterStarConfig::default().target_residues_per_task,
+    );
+    let center_bc = cluster.broadcast(center)?;
+    let center_for_map = center_bc.arc();
+    let indexed: Vec<(u64, Sequence)> = new_seqs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| (i as u64, s.clone()))
+        .collect();
+    let rdd = cluster.parallelize(indexed, base_parts).split_partitions(split_factor);
+    let paths = rdd.map_partitions_with_index(move |_, items| {
+        if items.is_empty() {
+            return Vec::new();
+        }
+        let trie = SegmentTrie::build(&center_for_map, segment_len);
+        items
+            .into_iter()
+            .map(|(idx, seq)| {
+                let ops = anchored_align_with(&seq.codes, &center_for_map, &trie, kernel);
+                (idx, seq, encode_ops(&ops))
+            })
+            .collect()
+    });
+    let mut new_paths = paths.collect().context("aligning appended sequences")?;
+    new_paths.sort_by_key(|(idx, _, _)| *idx);
+    ensure!(new_paths.len() == new_seqs.len(), "append path count mismatch");
+
+    // Merge the new space profiles into the stored global profile.  The
+    // merge is an element-wise max: order- and grouping-independent, so
+    // folding k profiles onto the parent's reduction equals the union's
+    // single reduction exactly.
+    let mut global = parent.global.clone();
+    for (_, _, ops) in &new_paths {
+        let own = center_space_profile(&decode_ops(ops), center_len);
+        global = merge_profiles(global, &own);
+    }
+    let widened = global != parent.global;
+
+    let mut rows = parent.rows.clone();
+    rows.extend(new_paths.into_iter().map(|(_, seq, ops)| ArtifactRow {
+        id: seq.id,
+        codes: seq.codes,
+        ops,
+    }));
+    let artifact = MsaArtifact {
+        alphabet: parent.alphabet,
+        center_index: parent.center_index,
+        segment_len,
+        kernel,
+        global,
+        rows,
+    };
+
+    let k = new_seqs.len();
+    let reuse = match (widened, parent_msa) {
+        // Only reuse rows that provably match: same row count and the
+        // parent's rendering width equals the (unchanged) union width.
+        (false, Some(pm)) if pm.aligned.len() == parent.rows.len() && pm.width == artifact.width() => {
+            Some(pm)
+        }
+        _ => None,
+    };
+    let (msa, rows_rendered) = match reuse {
+        Some(pm) => {
+            let width = artifact.width();
+            let mut aligned = pm.aligned.clone();
+            for (i, row) in artifact.rows.iter().enumerate().skip(parent.rows.len()) {
+                let seq = artifact.render_row(row);
+                ensure!(
+                    seq.len() == width,
+                    "appended row {i} renders to {} columns, expected {width}",
+                    seq.len()
+                );
+                aligned.push(seq);
+            }
+            (MsaResult { aligned, center_index: artifact.center_index, width }, k)
+        }
+        None => (artifact.render()?, artifact.num_rows()),
+    };
+    Ok(AppendOutcome { msa, artifact, widened, rows_rendered })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::align::center_star::{align_nucleotide_with_artifact, CenterStarConfig};
+    use crate::data::DatasetSpec;
+    use crate::engine::{Cluster, ClusterConfig};
+
+    fn mito(n: usize, seed: u64) -> Vec<Sequence> {
+        DatasetSpec { count: n, ..DatasetSpec::mito(0.01, seed) }.generate()
+    }
+
+    #[test]
+    fn artifact_roundtrips_through_bytes() {
+        let c = Cluster::new(ClusterConfig::spark(2));
+        let seqs = mito(8, 41);
+        let (_, art) =
+            align_nucleotide_with_artifact(&c, &seqs, &CenterStarConfig::default()).unwrap();
+        let bytes = art.to_bytes();
+        let back = MsaArtifact::from_bytes(&bytes).unwrap();
+        assert_eq!(art, back);
+    }
+
+    #[test]
+    fn corrupt_bytes_are_rejected() {
+        let c = Cluster::new(ClusterConfig::spark(2));
+        let seqs = mito(4, 42);
+        let (_, art) =
+            align_nucleotide_with_artifact(&c, &seqs, &CenterStarConfig::default()).unwrap();
+        let good = art.to_bytes();
+        assert!(MsaArtifact::from_bytes(&good[..good.len() - 3]).is_err(), "truncation");
+        assert!(MsaArtifact::from_bytes(b"HA2Anope").is_err(), "garbage");
+        for pos in [0usize, 5, good.len() / 2, good.len() - 1] {
+            let mut bad = good.clone();
+            bad[pos] ^= 0x40;
+            assert!(
+                MsaArtifact::from_bytes(&bad).is_err(),
+                "flipped byte at {pos} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn render_matches_pipeline_output() {
+        let c = Cluster::new(ClusterConfig::spark(3));
+        let seqs = mito(10, 43);
+        let (msa, art) =
+            align_nucleotide_with_artifact(&c, &seqs, &CenterStarConfig::default()).unwrap();
+        let rendered = art.render().unwrap();
+        assert_eq!(rendered.width, msa.width);
+        assert_eq!(rendered.center_index, msa.center_index);
+        for (a, b) in rendered.aligned.iter().zip(&msa.aligned) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.codes, b.codes, "render must be bit-identical to the pipeline");
+        }
+    }
+
+    #[test]
+    fn append_equals_from_scratch_union() {
+        let c = Cluster::new(ClusterConfig::spark(3));
+        let all = mito(14, 44);
+        let (base, new) = all.split_at(10);
+        let cfg = CenterStarConfig::default();
+        let (base_msa, art) = align_nucleotide_with_artifact(&c, base, &cfg).unwrap();
+        let out = append_nucleotide(&c, &art, new, Some(&base_msa)).unwrap();
+        let (scratch, scratch_art) = align_nucleotide_with_artifact(&c, &all, &cfg).unwrap();
+        assert_eq!(out.msa.width, scratch.width);
+        for (a, b) in out.msa.aligned.iter().zip(&scratch.aligned) {
+            assert_eq!(a.codes, b.codes, "append must equal from-scratch union ({})", a.id);
+        }
+        assert_eq!(out.artifact, scratch_art, "artifacts must agree too");
+    }
+
+    #[test]
+    fn no_widening_append_renders_only_new_rows() {
+        let c = Cluster::new(ClusterConfig::spark(2));
+        // Identical sequences: appends can never widen the profile.
+        let seqs = vec![Sequence::from_text("a", "ACGTACGTACGTACGT", Alphabet::Dna); 6];
+        let cfg = CenterStarConfig::default();
+        let (msa, art) = align_nucleotide_with_artifact(&c, &seqs[..4], &cfg).unwrap();
+        let out = append_nucleotide(&c, &art, &seqs[4..], Some(&msa)).unwrap();
+        assert!(!out.widened);
+        assert_eq!(out.rows_rendered, 2, "fast path renders only appended rows");
+        assert_eq!(out.msa.aligned.len(), 6);
+    }
+
+    #[test]
+    fn single_sequence_artifact_appends_like_scratch() {
+        let c = Cluster::new(ClusterConfig::spark(2));
+        let all = mito(5, 45);
+        let cfg = CenterStarConfig::default();
+        let (_, art) = align_nucleotide_with_artifact(&c, &all[..1], &cfg).unwrap();
+        let out = append_nucleotide(&c, &art, &all[1..], None).unwrap();
+        let (scratch, _) = align_nucleotide_with_artifact(&c, &all, &cfg).unwrap();
+        for (a, b) in out.msa.aligned.iter().zip(&scratch.aligned) {
+            assert_eq!(a.codes, b.codes);
+        }
+    }
+}

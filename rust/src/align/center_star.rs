@@ -17,6 +17,7 @@
 
 use anyhow::{ensure, Context as _, Result};
 
+use super::append::{ArtifactRow, MsaArtifact};
 use super::pairwise::{
     anchored_align_with, center_space_profile, encode_ops, merge_profiles, render_center_row,
     render_query_row,
@@ -123,6 +124,29 @@ pub fn align_nucleotide(
     seqs: &[Sequence],
     cfg: &CenterStarConfig,
 ) -> Result<MsaResult> {
+    let (msa, _) = align_nucleotide_core(cluster, seqs, cfg, false)?;
+    Ok(msa)
+}
+
+/// Like [`align_nucleotide`], but also retains the [`MsaArtifact`] —
+/// center, merged space-profile, and per-row edit paths — that the
+/// pipeline computes anyway.  The artifact is what the result cache
+/// stores and what [`super::append::append_nucleotide`] extends.
+pub fn align_nucleotide_with_artifact(
+    cluster: &Cluster,
+    seqs: &[Sequence],
+    cfg: &CenterStarConfig,
+) -> Result<(MsaResult, MsaArtifact)> {
+    let (msa, art) = align_nucleotide_core(cluster, seqs, cfg, true)?;
+    Ok((msa, art.expect("want_artifact=true always yields an artifact")))
+}
+
+fn align_nucleotide_core(
+    cluster: &Cluster,
+    seqs: &[Sequence],
+    cfg: &CenterStarConfig,
+    want_artifact: bool,
+) -> Result<(MsaResult, Option<MsaArtifact>)> {
     ensure!(!seqs.is_empty(), "no sequences to align");
     let alphabet = seqs[0].alphabet;
     ensure!(
@@ -130,11 +154,13 @@ pub fn align_nucleotide(
         "sequences must share an alphabet and be non-empty"
     );
     if seqs.len() == 1 {
-        return Ok(MsaResult {
+        let msa = MsaResult {
             aligned: seqs.to_vec(),
             center_index: 0,
             width: seqs[0].len(),
-        });
+        };
+        let art = want_artifact.then(|| MsaArtifact::single(&seqs[0], cfg));
+        return Ok((msa, art));
     }
 
     let center_index = choose_center(seqs, cfg, cluster.config().seed);
@@ -223,7 +249,28 @@ pub fn align_nucleotide(
         center_codes.len()
     );
     let _ = render_center_row(&center_codes, &global, alphabet); // (kept for parity checks)
-    Ok(MsaResult { aligned, center_index, width })
+
+    // The artifact reuses the checkpointed round-1 paths — a re-read of
+    // already-persisted partitions, no new alignment work.
+    let artifact = if want_artifact {
+        let mut path_rows = paths.collect().context("collecting paths for artifact")?;
+        path_rows.sort_by_key(|(idx, _, _)| *idx);
+        ensure!(path_rows.len() == seqs.len(), "artifact path count mismatch");
+        Some(MsaArtifact {
+            alphabet,
+            center_index,
+            segment_len,
+            kernel: cfg.kernel,
+            global,
+            rows: path_rows
+                .into_iter()
+                .map(|(_, seq, ops)| ArtifactRow { id: seq.id, codes: seq.codes, ops })
+                .collect(),
+        })
+    } else {
+        None
+    };
+    Ok((MsaResult { aligned, center_index, width }, artifact))
 }
 
 #[cfg(test)]

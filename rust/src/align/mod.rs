@@ -9,7 +9,15 @@
 //! adaptive-width global DP, packed p-distance counts, and integer SW.
 //! Both backends produce bit-identical alignments and distances (the
 //! property suite pins this), so the switch is purely a speed knob.
+//!
+//! Finished nucleotide MSAs can be summarized into a persistable
+//! [`append::MsaArtifact`] (center + merged space-profile + per-row edit
+//! paths); [`append::append_nucleotide`] extends such an artifact with
+//! new sequences in O(k·L) while staying bit-identical to a from-scratch
+//! run on the union — the serving-layer memoization path (see
+//! `rust/CACHE.md`).
 
+pub mod append;
 pub mod banded;
 pub mod center_star;
 pub mod gotoh;

@@ -390,6 +390,7 @@ pub fn table5_tree(cfg: &BenchConfig, svc: Option<&XlaService>) -> Vec<RunReport
                 let tcfg = TreeConfig {
                     clustering: tree_cfg.clustering.clone(),
                     distmat: DistMatOptions { backend },
+                    ..Default::default()
                 };
                 let mut r = measure(tool, &name, "logML", || {
                     let engine = Cluster::new(ClusterConfig::spark(workers));

@@ -1,0 +1,139 @@
+//! Content-hash result memoization for the serving layer.
+//!
+//! Two pieces (see `rust/CACHE.md` for the full contract):
+//!
+//! * [`canonical_digest`] / [`DigestBuilder`] — a canonical FNV-1a
+//!   digest over a FASTA submission.  Whitespace, line wrapping, header
+//!   comments and residue case are already normalized away by the FASTA
+//!   parser, so the digest is computed over parsed `Sequence`s: two
+//!   submissions that differ only in formatting hash identically.
+//!   Sequence *order* is deliberately part of the hash — center-star
+//!   output depends on it (the center is picked from the input order),
+//!   so reordered submissions are different jobs with different (equally
+//!   correct) artifacts.
+//! * [`ArtifactStore`] — a byte-budgeted, LRU, spill-to-disk blob store
+//!   keyed by digest, holding encoded [`crate::align::append::MsaArtifact`]s.
+//!   Same discipline as the distmat `TileStore`: spill writes are atomic
+//!   (tmp+rename via `write_atomic`) and run outside the store mutex;
+//!   resident peak stays ≤ budget + one artifact.  Unlike `TileStore`,
+//!   a missing key is a normal cache miss (`Ok(None)`), not an error,
+//!   and hit/miss counters feed the server status page and
+//!   `BENCH_serve.json`.
+//!
+//! The cache serves three traffic shapes in `POST /align`: exact
+//! resubmissions (digest hit → render the stored artifact locally,
+//! engine untouched), appends (`?parent=<hash>` → extend the parent
+//! artifact in O(new work)), and fresh jobs (miss → full run, artifact
+//! stored under the submission digest).
+
+pub mod store;
+
+pub use store::ArtifactStore;
+
+use std::hash::Hasher as _;
+
+use crate::fasta::Sequence;
+use crate::util::hash::FnvHasher;
+
+/// Bump when the digest layout below changes — old cache entries must
+/// not be served to a new hashing scheme.
+pub const DIGEST_VERSION: u8 = 1;
+
+/// Streaming canonical digest over parsed sequence records.  Records can
+/// be fed from a slice ([`canonical_digest`]) or incrementally — the
+/// append path digests `parent rows ++ new sequences` without
+/// materializing the union.
+#[derive(Debug, Clone)]
+pub struct DigestBuilder {
+    h: FnvHasher,
+    records: u64,
+}
+
+impl DigestBuilder {
+    pub fn new() -> Self {
+        let mut h = FnvHasher::default();
+        h.write(b"halign2-fasta-digest");
+        h.write(&[DIGEST_VERSION]);
+        DigestBuilder { h, records: 0 }
+    }
+
+    /// Fold one record.  `0xFF` never occurs in UTF-8, so it terminates
+    /// the id unambiguously; codes get a length prefix so record
+    /// boundaries cannot alias (`("ab", "c")` vs `("a", "bc")`).
+    pub fn record(&mut self, id: &str, codes: &[u8], alphabet: crate::fasta::Alphabet) {
+        self.h.write(id.as_bytes());
+        self.h.write(&[0xFF]);
+        self.h.write(&(codes.len() as u64).to_le_bytes());
+        self.h.write(codes);
+        self.h.write(&[alphabet as u8]);
+        self.records += 1;
+    }
+
+    pub fn push(&mut self, seq: &Sequence) {
+        self.record(&seq.id, &seq.codes, seq.alphabet);
+    }
+
+    pub fn finish(mut self) -> u64 {
+        self.h.write(&self.records.to_le_bytes());
+        self.h.finish()
+    }
+}
+
+impl Default for DigestBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Canonical content hash of a submission (see module docs for what is
+/// and is not normalized).
+pub fn canonical_digest(seqs: &[Sequence]) -> u64 {
+    let mut b = DigestBuilder::new();
+    for s in seqs {
+        b.push(s);
+    }
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fasta::{read_fasta, Alphabet};
+
+    fn parse(text: &str) -> Vec<Sequence> {
+        read_fasta(text.as_bytes(), Alphabet::Dna).unwrap()
+    }
+
+    #[test]
+    fn formatting_does_not_change_the_digest() {
+        let a = parse(">s1 extra words\nACGTACGT\n>s2\nTTTTACGT\n");
+        let b = parse(">s1\tother comment\r\nacgt\r\nACGT\r\n>s2\ntttt\nACGT\n\n");
+        assert_eq!(canonical_digest(&a), canonical_digest(&b));
+    }
+
+    #[test]
+    fn order_content_and_boundaries_all_matter() {
+        let d = canonical_digest(&parse(">a\nACGT\n>b\nTTTT\n"));
+        assert_ne!(
+            d,
+            canonical_digest(&parse(">b\nTTTT\n>a\nACGT\n")),
+            "order is part of the job identity"
+        );
+        assert_ne!(d, canonical_digest(&parse(">a\nACGA\n>b\nTTTT\n")));
+        assert_ne!(d, canonical_digest(&parse(">a2\nACGT\n>b\nTTTT\n")));
+        // Residues must not slide across record boundaries.
+        assert_ne!(d, canonical_digest(&parse(">a\nACGTT\n>b\nTTT\n")));
+    }
+
+    #[test]
+    fn incremental_builder_equals_slice_digest() {
+        let seqs = parse(">a\nACGT\n>b\nTTTT\n>c\nGGGG\n");
+        let whole = canonical_digest(&seqs);
+        let mut b = DigestBuilder::new();
+        for s in &seqs[..2] {
+            b.push(s);
+        }
+        b.record(&seqs[2].id, &seqs[2].codes, Alphabet::Dna);
+        assert_eq!(b.finish(), whole, "union digest must be buildable incrementally");
+    }
+}

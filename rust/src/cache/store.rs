@@ -1,0 +1,355 @@
+//! Byte-budgeted artifact store: digest-keyed `Vec<u8>` blobs with LRU
+//! spill-to-disk — the `TileStore` discipline (see `distmat/store.rs`)
+//! applied to whole-job alignment artifacts.
+//!
+//! Same invariants as the tile store: spill writes are atomic
+//! (tmp+rename via `write_atomic` — pallas-lint rule W7 forbids anything
+//! else in this module) and run *outside* the store mutex via a
+//! versioned "spilling" side map, so a slow disk never blocks concurrent
+//! hits on resident artifacts; `put` replaces and keeps accounting
+//! stable under at-least-once producers; the resident peak stays
+//! `<= budget + one artifact`.
+//!
+//! Differences from the tile store, both because this is a *cache* and
+//! not a materialized working set:
+//!
+//! * a missing key is a normal miss — `get` returns `Ok(None)`, never an
+//!   error — and hits/misses are counted for the status page and the
+//!   serve bench;
+//! * the store always has a spill directory: artifacts must survive
+//!   eviction or a "cached" job would silently recompute.
+
+use std::collections::hash_map::Entry;
+use std::collections::{HashMap, HashSet};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context as _, Result};
+
+struct ResidentBlob {
+    data: Arc<Vec<u8>>,
+    last_access: u64,
+}
+
+struct SpillEntry {
+    data: Arc<Vec<u8>>,
+    version: u64,
+}
+
+struct PendingSpill {
+    key: u64,
+    path: PathBuf,
+    data: Arc<Vec<u8>>,
+    version: u64,
+}
+
+struct StoreInner {
+    resident: HashMap<u64, ResidentBlob>,
+    /// Monotone access counter: `get`/`put` stamp blobs in O(1); only
+    /// eviction (rare) scans for the minimum stamp.
+    tick: u64,
+    resident_bytes: usize,
+    /// Keys whose *current* bytes are already on disk (skip re-spill).
+    persisted: HashSet<u64>,
+    /// Per-key write generation, bumped by `put`: lets a `get` that read
+    /// the spill file outside the lock detect a concurrent supersede.
+    versions: HashMap<u64, u64>,
+    /// Evicted-but-not-yet-durable blobs (see `TileStore::spilling`).
+    spilling: HashMap<u64, SpillEntry>,
+    /// Every key ever stored — distinguishes "spilled to disk" from
+    /// "never seen" without touching the filesystem on a miss.
+    known: HashSet<u64>,
+}
+
+impl StoreInner {
+    fn next_tick(&mut self) -> u64 {
+        self.tick += 1;
+        self.tick
+    }
+
+    fn coldest(&self) -> Option<u64> {
+        self.resident.iter().min_by_key(|(_, b)| b.last_access).map(|(&k, _)| k)
+    }
+}
+
+/// Digest-keyed artifact cache (see module docs).
+pub struct ArtifactStore {
+    inner: Mutex<StoreInner>,
+    dir: PathBuf,
+    budget: usize,
+    peak: AtomicUsize,
+    spill_files: AtomicUsize,
+    spill_reads: AtomicUsize,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl ArtifactStore {
+    /// Budgeted cache spilling to `dir` (created if missing); the
+    /// directory is removed on drop.
+    pub fn new(dir: PathBuf, byte_budget: usize) -> Result<Self> {
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating artifact cache dir {}", dir.display()))?;
+        Ok(Self {
+            inner: Mutex::new(StoreInner {
+                resident: HashMap::new(),
+                tick: 0,
+                resident_bytes: 0,
+                persisted: HashSet::new(),
+                versions: HashMap::new(),
+                spilling: HashMap::new(),
+                known: HashSet::new(),
+            }),
+            dir,
+            budget: byte_budget,
+            peak: AtomicUsize::new(0),
+            spill_files: AtomicUsize::new(0),
+            spill_reads: AtomicUsize::new(0),
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+        })
+    }
+
+    pub fn byte_budget(&self) -> usize {
+        self.budget
+    }
+
+    pub fn resident_bytes(&self) -> usize {
+        self.inner.lock().unwrap().resident_bytes
+    }
+
+    /// High-water mark of resident bytes — bounded by
+    /// `byte_budget + largest artifact`, never O(all artifacts).
+    pub fn peak_resident_bytes(&self) -> usize {
+        self.peak.load(Ordering::Relaxed)
+    }
+
+    pub fn spill_files_written(&self) -> usize {
+        self.spill_files.load(Ordering::Relaxed)
+    }
+
+    pub fn spill_reads(&self) -> usize {
+        self.spill_reads.load(Ordering::Relaxed)
+    }
+
+    /// `get` calls that found an artifact (resident or spilled).
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// `get` calls for keys never stored.
+    pub fn misses(&self) -> usize {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Artifacts currently stored (resident or spilled).
+    pub fn entries(&self) -> usize {
+        self.inner.lock().unwrap().known.len()
+    }
+
+    fn blob_path(&self, key: u64) -> PathBuf {
+        self.dir.join(format!("artifact-{key:016x}.bin"))
+    }
+
+    /// Evict LRU blobs past the budget; keep the most recently touched
+    /// blob resident; hand unpersisted victims back for the caller to
+    /// write after releasing the lock (W2/W7: no I/O under the mutex,
+    /// all writes through `write_atomic`).
+    fn collect_spill_victims(&self, st: &mut StoreInner) -> Vec<PendingSpill> {
+        let mut victims = Vec::new();
+        while st.resident_bytes > self.budget && st.resident.len() > 1 {
+            let Some(key) = st.coldest() else { break };
+            let Some(blob) = st.resident.remove(&key) else { break };
+            st.resident_bytes -= blob.data.len();
+            if st.persisted.contains(&key) {
+                continue;
+            }
+            let version = st.versions.get(&key).copied().unwrap_or(0);
+            let path = self.blob_path(key);
+            match st.spilling.entry(key) {
+                Entry::Occupied(mut e) => {
+                    *e.get_mut() = SpillEntry { data: blob.data, version };
+                }
+                Entry::Vacant(slot) => {
+                    slot.insert(SpillEntry { data: blob.data.clone(), version });
+                    victims.push(PendingSpill { key, path, data: blob.data, version });
+                }
+            }
+        }
+        victims
+    }
+
+    /// Persist evicted blobs outside the store lock; identical protocol
+    /// to `TileStore::write_spills` (re-write until the spilling entry
+    /// and the file agree).
+    fn write_spills(&self, victims: Vec<PendingSpill>) -> Result<()> {
+        for mut job in victims {
+            loop {
+                crate::engine::shuffle::write_atomic(&job.path, &job.data)
+                    .with_context(|| format!("spilling artifact {}", job.path.display()))?;
+                self.spill_files.fetch_add(1, Ordering::Relaxed);
+                let mut st = self.inner.lock().unwrap();
+                match st.spilling.get(&job.key) {
+                    Some(e) if e.version != job.version => {
+                        job.data = e.data.clone();
+                        job.version = e.version;
+                    }
+                    _ => {
+                        if st.versions.get(&job.key).copied().unwrap_or(0) == job.version {
+                            st.persisted.insert(job.key);
+                        }
+                        st.spilling.remove(&job.key);
+                        break;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn admit(&self, st: &mut StoreInner, key: u64, data: Arc<Vec<u8>>) -> Vec<PendingSpill> {
+        let tick = st.next_tick();
+        let blob = ResidentBlob { data: data.clone(), last_access: tick };
+        if let Some(old) = st.resident.insert(key, blob) {
+            st.resident_bytes -= old.data.len();
+        }
+        st.resident_bytes += data.len();
+        self.peak.fetch_max(st.resident_bytes, Ordering::Relaxed);
+        self.collect_spill_victims(st)
+    }
+
+    /// Insert (or replace) the artifact for `key`.
+    pub fn put(&self, key: u64, data: Vec<u8>) -> Result<()> {
+        let victims = {
+            let mut st = self.inner.lock().unwrap();
+            st.known.insert(key);
+            st.persisted.remove(&key);
+            *st.versions.entry(key).or_insert(0) += 1;
+            self.admit(&mut st, key, Arc::new(data))
+        };
+        self.write_spills(victims)
+    }
+
+    /// Look up the artifact for `key`.  `Ok(None)` is a cache miss;
+    /// spilled entries are re-read from disk (outside the lock, with the
+    /// same version-race retry as `TileStore::get`) and re-admitted.
+    pub fn get(&self, key: u64) -> Result<Option<Arc<Vec<u8>>>> {
+        let mut counted = false;
+        loop {
+            let seen_version = {
+                let mut st = self.inner.lock().unwrap();
+                if !st.known.contains(&key) {
+                    self.misses.fetch_add(1, Ordering::Relaxed);
+                    return Ok(None);
+                }
+                if !counted {
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    counted = true;
+                }
+                let tick = st.next_tick();
+                if let Some(blob) = st.resident.get_mut(&key) {
+                    blob.last_access = tick;
+                    return Ok(Some(blob.data.clone()));
+                }
+                if let Some(e) = st.spilling.get(&key) {
+                    return Ok(Some(e.data.clone()));
+                }
+                st.versions.get(&key).copied().unwrap_or(0)
+            };
+            let path = self.blob_path(key);
+            let data = std::fs::read(&path)
+                .with_context(|| format!("reading spilled artifact {}", path.display()))?;
+            self.spill_reads.fetch_add(1, Ordering::Relaxed);
+            let arc = Arc::new(data);
+            let victims = {
+                let mut st = self.inner.lock().unwrap();
+                if let Some(raced) = st.resident.get(&key) {
+                    return Ok(Some(raced.data.clone()));
+                }
+                if let Some(e) = st.spilling.get(&key) {
+                    return Ok(Some(e.data.clone()));
+                }
+                if st.versions.get(&key).copied().unwrap_or(0) != seen_version {
+                    continue;
+                }
+                let victims = self.admit(&mut st, key, arc.clone());
+                st.persisted.insert(key);
+                victims
+            };
+            self.write_spills(victims)?;
+            return Ok(Some(arc));
+        }
+    }
+}
+
+impl Drop for ArtifactStore {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.dir);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("halign2-artifacts-{}-{tag}", std::process::id()))
+    }
+
+    #[test]
+    fn miss_then_hit_and_counters() {
+        let s = ArtifactStore::new(tmpdir("hits"), 1 << 20).unwrap();
+        assert!(s.get(1).unwrap().is_none());
+        assert_eq!((s.hits(), s.misses()), (0, 1));
+        s.put(1, vec![7u8; 100]).unwrap();
+        assert_eq!(s.get(1).unwrap().unwrap().as_slice(), &[7u8; 100][..]);
+        assert_eq!((s.hits(), s.misses()), (1, 1));
+        assert_eq!(s.entries(), 1);
+    }
+
+    #[test]
+    fn eviction_under_budget_spills_and_rereads_bit_exact() {
+        let budget = 300;
+        let s = ArtifactStore::new(tmpdir("evict"), budget).unwrap();
+        let blob = |k: u64| -> Vec<u8> { (0..120).map(|i| (k as u8).wrapping_mul(31).wrapping_add(i)).collect() };
+        for k in 0..8u64 {
+            s.put(k, blob(k)).unwrap();
+        }
+        assert!(s.resident_bytes() <= budget, "budget enforced");
+        assert!(s.spill_files_written() >= 5, "older artifacts spilled");
+        assert!(
+            s.peak_resident_bytes() <= budget + 120,
+            "peak {} must stay <= budget + one artifact",
+            s.peak_resident_bytes()
+        );
+        for k in 0..8u64 {
+            assert_eq!(
+                s.get(k).unwrap().unwrap().as_slice(),
+                blob(k).as_slice(),
+                "key {k}: spill must round-trip bit-exactly"
+            );
+        }
+        assert!(s.spill_reads() >= 5);
+    }
+
+    #[test]
+    fn replacement_keeps_accounting_stable() {
+        let s = ArtifactStore::new(tmpdir("replace"), 1 << 20).unwrap();
+        for _ in 0..5 {
+            s.put(9, vec![1u8; 400]).unwrap();
+        }
+        assert_eq!(s.resident_bytes(), 400, "replace, don't accumulate");
+        assert_eq!(s.entries(), 1);
+    }
+
+    #[test]
+    fn drop_removes_the_cache_dir() {
+        let dir = tmpdir("drop");
+        let s = ArtifactStore::new(dir.clone(), 64).unwrap();
+        s.put(1, vec![0u8; 256]).unwrap();
+        s.put(2, vec![0u8; 256]).unwrap();
+        drop(s);
+        assert!(!dir.exists());
+    }
+}

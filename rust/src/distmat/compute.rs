@@ -12,9 +12,18 @@
 //! unchanged.
 //!
 //! The per-pair kernels are shared with [`crate::tree::distance`]
-//! (`pdist_pair`, `jc_distance`, `kmer_profile`, `kmer_sqdist_pair`), so
-//! tiled entries are bit-identical to the dense matrices the single-node
-//! path materializes.
+//! (`pdist_pair_packed`, `jc_distance`, `kmer_profile`,
+//! `kmer_sqdist_pair`), so tiled entries are bit-identical to the dense
+//! matrices the single-node path materializes.  P-distance tiles pack
+//! each row block into [`crate::align::myers::RowBits`] bitplanes once
+//! and popcount — same integer counts as the scalar loop, ~64× fewer
+//! inner-loop iterations.
+//!
+//! Each tile task also stores a `(sum, min)` *sidecar* blob (key
+//! `num_tiles + tile_index`, built by [`super::exact::tile_sidecar`]):
+//! exact fixed-point partial row sums plus partial row minima, so NJ
+//! seeding via `row_stats` folds the tiny sidecars instead of faulting
+//! every spilled tile back through the byte budget.
 
 use std::sync::Arc;
 
@@ -22,9 +31,10 @@ use anyhow::{anyhow, ensure, Result};
 
 use super::tile::Tile;
 use super::{TileGrid, TileStore, TiledDist};
+use crate::align::myers::pack_row;
 use crate::engine::Cluster as Engine;
 use crate::fasta::Sequence;
-use crate::tree::distance::{jc_distance, kmer_profile, kmer_sqdist_pair, pdist_pair};
+use crate::tree::distance::{jc_distance, kmer_profile, kmer_sqdist_pair, pdist_pair_packed};
 
 /// Which distance the tile jobs compute.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -105,10 +115,15 @@ pub fn distance_tiled(
             tile.col_block
         );
         let entries = tile_entries(kind, &tile, &rows_i, &rows_j, gap, states);
+        // Sidecar first: once the tile blob is visible, its stats must
+        // be too (consumers only fold sidecars after distance_tiled
+        // returns, but keep the ordering conservative for re-puts).
+        let sidecar = super::exact::tile_sidecar(&tile, &entries);
+        store_task.put((grid_task.num_tiles() + part) as u64, sidecar)?;
         store_task.put(part as u64, entries)
     })?;
 
-    Ok(TiledDist::new(grid, store))
+    Ok(TiledDist::with_sidecars(grid, store))
 }
 
 /// Entries of one tile, row-major, diagonal cells zero.  Every cell is
@@ -126,13 +141,20 @@ fn tile_entries(
     let mut out = Vec::with_capacity(tile.num_entries());
     match kind {
         DistKind::PDistance { jukes_cantor } => {
-            for (r, a) in rows_i.iter().enumerate() {
-                for (c, b) in rows_j.iter().enumerate() {
+            // Pack each side once, compare with the popcount kernel:
+            // O(rows·cols·L/64) instead of O(rows·cols·L).  The packed
+            // counts are the same integers the scalar loop produces, so
+            // the f64 ratios are bit-identical (pinned in
+            // `tree::distance` tests).
+            let bi: Vec<_> = rows_i.iter().map(|s| pack_row(&s.codes, gap)).collect();
+            let bj: Vec<_> = rows_j.iter().map(|s| pack_row(&s.codes, gap)).collect();
+            for (r, a) in bi.iter().enumerate() {
+                for (c, b) in bj.iter().enumerate() {
                     if tile.row_lo + r == tile.col_lo + c {
                         out.push(0.0);
                         continue;
                     }
-                    let p = pdist_pair(&a.codes, &b.codes, gap);
+                    let p = pdist_pair_packed(a, b);
                     out.push(if jukes_cantor { jc_distance(p, states) } else { p });
                 }
             }
@@ -216,11 +238,13 @@ mod tests {
         let tiled = distance_tiled(&engine, &rows, &cfg).unwrap();
         let store = tiled.store_arc();
         assert!(store.spill_files_written() > 0, "budget this small must spill");
+        // Granularity slack: one blob, which may be a tile or (for small
+        // tiles) the larger cross-tile sidecar.
+        let blob = tiled.grid().max_tile_bytes().max(tiled.grid().max_sidecar_bytes());
         assert!(
-            tiled.peak_resident_bytes() <= budget + tiled.grid().max_tile_bytes(),
-            "peak {} must stay within budget {budget} + one tile {}",
+            tiled.peak_resident_bytes() <= budget + blob,
+            "peak {} must stay within budget {budget} + one blob {blob}",
             tiled.peak_resident_bytes(),
-            tiled.grid().max_tile_bytes()
         );
         // Spilled tiles still serve bit-exact reads.
         let dense = dense_jc(&rows);
@@ -244,6 +268,67 @@ mod tests {
         for i in 0..rows.len() {
             for j in 0..i {
                 assert_eq!(tiled.dist(i, j).unwrap().to_bits(), dense[i][j].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn sidecar_seeding_reads_zero_tile_blobs() {
+        let rows = aligned_rows(20, 13);
+        let engine = Cluster::new(ClusterConfig::spark(3));
+        let cfg = DistMatConfig { tile_rows: 4, byte_budget: 1 << 10, ..Default::default() };
+        let tiled = distance_tiled(&engine, &rows, &cfg).unwrap();
+        let store = tiled.store_arc();
+        let num_tiles = tiled.grid().num_tiles() as u64;
+        assert_eq!(tiled.row_key_base(), 2 * num_tiles, "sidecars claim a key band");
+        let before = store.gets_below(num_tiles);
+        let (sums, mins) = tiled.row_stats().unwrap();
+        assert_eq!(
+            store.gets_below(num_tiles),
+            before,
+            "row_stats must fold sidecars only — zero tile-blob reads"
+        );
+        // And the folded stats still match the dense reference bitwise.
+        let dense = dense_jc(&rows);
+        let (ds, dm) = DenseView(&dense).row_stats().unwrap();
+        for i in 0..rows.len() {
+            assert_eq!(sums[i].to_bits(), ds[i].to_bits(), "sum row {i}");
+            assert_eq!(mins[i].to_bits(), dm[i].to_bits(), "min row {i}");
+        }
+    }
+
+    #[test]
+    fn tile_entries_packed_matches_scalar_pair_kernel() {
+        use crate::tree::distance::pdist_pair;
+        let rows = aligned_rows(13, 17);
+        let gap = rows[0].alphabet.gap();
+        let states = rows[0].alphabet.residues();
+        let grid = TileGrid::new(rows.len(), 5);
+        for t in 0..grid.num_tiles() {
+            let tile = grid.tile(t);
+            let rows_i = rows[tile.row_lo..tile.row_hi].to_vec();
+            let rows_j = rows[tile.col_lo..tile.col_hi].to_vec();
+            let packed = tile_entries(
+                DistKind::PDistance { jukes_cantor: true },
+                &tile,
+                &rows_i,
+                &rows_j,
+                gap,
+                states,
+            );
+            for i in tile.row_lo..tile.row_hi {
+                for j in tile.col_lo..tile.col_hi {
+                    let want = if i == j {
+                        0.0
+                    } else {
+                        jc_distance(pdist_pair(&rows[i].codes, &rows[j].codes, gap), states)
+                    };
+                    assert_eq!(
+                        packed[tile.entry_offset(i, j)].to_bits(),
+                        want.to_bits(),
+                        "tile {t} ({i},{j}): packed tile kernel must match scalar"
+                    );
+                }
             }
         }
     }

@@ -1,0 +1,371 @@
+//! Exact row-sum accumulation for distance matrices.
+//!
+//! NJ branch lengths are functions of row sums, and the tree pipelines
+//! promise *bit-identical* results across dense, tiled-scan, and
+//! sidecar-fold backends.  f64 addition is not associative, so partial
+//! sums computed per tile cannot simply be f64-folded — the grouping
+//! would differ from the dense reference.  Instead, every distance is
+//! lifted to a fixed-point `i128` (LSB = 2⁻⁸⁰) where addition **is**
+//! associative and exact, summed, and rounded back to f64 once at the
+//! end.  Any grouping of the same values then yields the same bits,
+//! which is what lets per-tile `(sum, min)` sidecars seed NJ without
+//! re-reading spilled tiles.
+//!
+//! Representability: a finite non-negative f64 lifts exactly iff its
+//! ulp is ≥ 2⁻⁸⁰ — true for every real distance this codebase produces
+//! (p-distances are ratios of ≤2⁶⁴ integer counts but ≥ 2⁻²⁸ for any
+//! realistic length; JC distances are capped at 5.0; k-mer distances
+//! are sums of integer squares).  If *any* value fails to lift (or a
+//! sum overflows `i128`), every consumer falls back to the legacy
+//! naive ascending-`j` f64 accumulation **globally** — validity is a
+//! property of the value multiset, identical across backends, so dense
+//! and tiled never disagree about which mode they are in (values are
+//! non-negative, hence partial sums are monotone and overflow is
+//! decided by the row total alone).
+
+use anyhow::{ensure, Result};
+
+use super::tile::Tile;
+
+/// Binary point of the fixed representation: LSB = 2^-FIXED_SHIFT.
+const FIXED_SHIFT: i32 = 80;
+
+/// Lift a finite non-negative f64 into exact fixed point (LSB 2⁻⁸⁰).
+/// `None` when the value is negative, non-finite, or has bits below
+/// 2⁻⁸⁰ (not representable ⇒ callers fall back to naive f64 sums).
+pub fn to_fixed(v: f64) -> Option<i128> {
+    if !v.is_finite() || v.is_sign_negative() {
+        return if v == 0.0 { Some(0) } else { None };
+    }
+    if v == 0.0 {
+        return Some(0);
+    }
+    let bits = v.to_bits();
+    let frac = bits & ((1u64 << 52) - 1);
+    let biased = (bits >> 52) & 0x7ff;
+    let (mant, e) = if biased == 0 {
+        (frac, -1074i32) // subnormal
+    } else {
+        (frac | (1u64 << 52), biased as i32 - 1075)
+    };
+    let shift = e + FIXED_SHIFT;
+    if !(0..=74).contains(&shift) {
+        // < 0: bits below the binary point; > 74: mant << shift would
+        // not fit in the non-negative range of i128 (mant < 2⁵³).
+        return None;
+    }
+    Some((mant as i128) << shift)
+}
+
+/// Round an exact fixed-point sum back to f64.  `x as f64` rounds to
+/// nearest (ties to even) and the 2⁻⁸⁰ scale is a power of two, so the
+/// result is the correctly-rounded value of the exact rational sum.
+pub fn fixed_to_f64(x: i128) -> f64 {
+    (x as f64) * f64::from_bits(((1023 - FIXED_SHIFT as u64) << 52) as u64)
+}
+
+/// Exactly-rounded f64 sum of a value slice (test/reference helper).
+/// `None` if any value fails to lift or the sum overflows.
+pub fn exact_sum(values: &[f64]) -> Option<f64> {
+    let mut acc: i128 = 0;
+    for &v in values {
+        acc = acc.checked_add(to_fixed(v)?)?;
+    }
+    Some(fixed_to_f64(acc))
+}
+
+/// Dual accumulator for per-row `(sum, min)` stats: exact fixed-point
+/// sums alongside the legacy naive f64 sums, with one *global* validity
+/// flag (see module docs).  Feed values per row in the legacy order —
+/// the naive side is order-sensitive and must keep matching the old
+/// dense reference when the exact side is unavailable.
+pub struct RowSums {
+    exact: Vec<i128>,
+    naive: Vec<f64>,
+    valid: bool,
+}
+
+impl RowSums {
+    pub fn new(n: usize) -> Self {
+        RowSums { exact: vec![0i128; n], naive: vec![0f64; n], valid: true }
+    }
+
+    pub fn add(&mut self, i: usize, v: f64) {
+        self.naive[i] += v;
+        if self.valid {
+            match to_fixed(v).and_then(|f| self.exact[i].checked_add(f)) {
+                Some(x) => self.exact[i] = x,
+                None => self.valid = false,
+            }
+        }
+    }
+
+    /// Exact sums when every value lifted, naive sums otherwise.
+    pub fn finish(self) -> Vec<f64> {
+        if self.valid {
+            self.exact.into_iter().map(fixed_to_f64).collect()
+        } else {
+            self.naive
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Per-tile (sum, min) sidecars.
+//
+// Layout of a sidecar blob (Vec<f64>, stored in the TileStore under key
+// `num_tiles + tile.index`):
+//   [0]                    validity flag: 1.0 = exact sums valid
+//   rows section           5 f64 per tile row  (4 u32 chunks + min)
+//   cols section           5 f64 per tile col, cross tiles only
+//                          (mirror credits; diagonal tiles fold both
+//                          directions into the rows section)
+// The i128 sums are non-negative (< 2¹²⁷), split into four u32 chunks
+// stored as exact small-integer f64s — every chunk < 2³² < 2⁵³, so the
+// encoding round-trips bit-exactly through the store's f64 blobs.
+// ---------------------------------------------------------------------
+
+const CHUNKS: usize = 4;
+/// f64 slots per taxon in a sidecar section: 4 sum chunks + the min.
+pub const SLOTS_PER_TAXON: usize = CHUNKS + 1;
+
+fn encode_i128(x: i128, out: &mut Vec<f64>) {
+    debug_assert!(x >= 0);
+    let u = x as u128;
+    for c in 0..CHUNKS {
+        out.push(((u >> (32 * c)) & 0xffff_ffff) as u32 as f64);
+    }
+}
+
+fn decode_i128(chunks: &[f64]) -> Result<i128> {
+    let mut u: u128 = 0;
+    for (c, &raw) in chunks.iter().enumerate().take(CHUNKS) {
+        ensure!(
+            raw >= 0.0 && raw <= u32::MAX as f64 && raw.fract() == 0.0,
+            "corrupt sidecar sum chunk {raw}"
+        );
+        u |= (raw as u128) << (32 * c);
+    }
+    ensure!(u >> 127 == 0, "sidecar sum out of i128 range");
+    Ok(u as i128)
+}
+
+/// Accumulate one taxon's side of a section.
+struct SideAcc {
+    sums: Vec<i128>,
+    mins: Vec<f64>,
+    valid: bool,
+}
+
+impl SideAcc {
+    fn new(n: usize) -> Self {
+        SideAcc { sums: vec![0i128; n], mins: vec![f64::INFINITY; n], valid: true }
+    }
+
+    fn add(&mut self, slot: usize, v: f64) {
+        self.mins[slot] = self.mins[slot].min(v);
+        if self.valid {
+            match to_fixed(v).and_then(|f| self.sums[slot].checked_add(f)) {
+                Some(x) => self.sums[slot] = x,
+                None => self.valid = false,
+            }
+        }
+    }
+
+    fn write(&self, out: &mut Vec<f64>) {
+        for (s, m) in self.sums.iter().zip(&self.mins) {
+            encode_i128(*s, out);
+            out.push(*m);
+        }
+    }
+}
+
+/// Build the `(sum, min)` sidecar blob for one tile's entries (same
+/// `entries` vector the tile job stores: row-major over the tile
+/// rectangle, diagonal cells 0.0 on diagonal tiles).
+pub fn tile_sidecar(tile: &Tile, entries: &[f64]) -> Vec<f64> {
+    let rows = tile.rows();
+    let cols = tile.cols();
+    debug_assert_eq!(entries.len(), rows * cols);
+    let mut row_acc = SideAcc::new(rows);
+    // Diagonal tiles credit both pair members into the rows section
+    // (row and col ranges coincide); cross tiles keep a separate mirror
+    // section for their columns.
+    let mut col_acc = if tile.is_diagonal() { None } else { Some(SideAcc::new(cols)) };
+    for i in tile.row_lo..tile.row_hi {
+        for j in tile.col_lo..tile.col_hi {
+            if i == j {
+                continue;
+            }
+            let v = entries[tile.entry_offset(i, j)];
+            row_acc.add(i - tile.row_lo, v);
+            // Diagonal tiles store the full block square, so the mirror
+            // entry (j, i) is credited by its own loop iteration; cross
+            // tiles hold each pair once and need the explicit mirror.
+            if let Some(acc) = &mut col_acc {
+                acc.add(j - tile.col_lo, v);
+            }
+        }
+    }
+    let valid = row_acc.valid
+        && match &col_acc {
+            Some(a) => a.valid,
+            None => true,
+        };
+    let mut out = Vec::with_capacity(1 + SLOTS_PER_TAXON * (rows + cols));
+    out.push(if valid { 1.0 } else { 0.0 });
+    row_acc.write(&mut out);
+    if let Some(acc) = &col_acc {
+        acc.write(&mut out);
+    }
+    out
+}
+
+/// One decoded sidecar: exact per-taxon partial sums and mins for the
+/// tile's row range (and column range, for cross tiles).
+pub struct SidecarView {
+    pub valid: bool,
+    /// `(taxon, exact partial sum, partial min)` triples.
+    pub parts: Vec<(usize, i128, f64)>,
+}
+
+/// Decode a sidecar blob back into per-taxon contributions.
+pub fn decode_sidecar(tile: &Tile, blob: &[f64]) -> Result<SidecarView> {
+    let rows = tile.rows();
+    let cols = tile.cols();
+    let want = 1 + SLOTS_PER_TAXON * (rows + if tile.is_diagonal() { 0 } else { cols });
+    ensure!(blob.len() == want, "sidecar blob len {} != {want}", blob.len());
+    ensure!(blob[0] == 1.0 || blob[0] == 0.0, "corrupt sidecar flag {}", blob[0]);
+    let valid = blob[0] == 1.0;
+    let mut parts = Vec::with_capacity(rows + cols);
+    let mut off = 1;
+    for r in 0..rows {
+        let sum = decode_i128(&blob[off..off + CHUNKS])?;
+        parts.push((tile.row_lo + r, sum, blob[off + CHUNKS]));
+        off += SLOTS_PER_TAXON;
+    }
+    if !tile.is_diagonal() {
+        for c in 0..cols {
+            let sum = decode_i128(&blob[off..off + CHUNKS])?;
+            parts.push((tile.col_lo + c, sum, blob[off + CHUNKS]));
+            off += SLOTS_PER_TAXON;
+        }
+    }
+    Ok(SidecarView { valid, parts })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distmat::tile::TileGrid;
+
+    #[test]
+    fn fixed_point_roundtrips_distance_like_values() {
+        for v in [0.0, 0.25, 1.0, 5.0, 0.123456789, 1.0 / 3.0, 4.999999, 1e-8, 300.5] {
+            let f = to_fixed(v).unwrap();
+            assert_eq!(fixed_to_f64(f).to_bits(), v.to_bits(), "{v} must round-trip");
+        }
+    }
+
+    #[test]
+    fn unrepresentable_values_are_rejected() {
+        assert_eq!(to_fixed(-0.25), None);
+        assert_eq!(to_fixed(f64::NAN), None);
+        assert_eq!(to_fixed(f64::INFINITY), None);
+        assert_eq!(to_fixed(1e-40), None, "bits below 2^-80");
+        assert_eq!(to_fixed(f64::MAX), None, "would overflow the shift");
+        assert_eq!(to_fixed(0.0), Some(0));
+        assert_eq!(to_fixed(-0.0), Some(0), "negative zero is zero");
+    }
+
+    #[test]
+    fn exact_sum_is_grouping_independent() {
+        let mut rng = crate::util::Rng::seed_from_u64(7);
+        let vals: Vec<f64> = (0..257).map(|_| 0.05 + rng.f64()).collect();
+        let whole = exact_sum(&vals).unwrap();
+        for chunk in [1usize, 3, 16, 64] {
+            let acc = vals
+                .chunks(chunk)
+                .map(|c| {
+                    c.iter().map(|&v| to_fixed(v).unwrap()).sum::<i128>()
+                })
+                .sum::<i128>();
+            assert_eq!(
+                fixed_to_f64(acc).to_bits(),
+                whole.to_bits(),
+                "chunked-by-{chunk} fold must match"
+            );
+        }
+        // The exact result stays within rounding noise of the naive sum.
+        let naive: f64 = vals.iter().sum();
+        assert!((naive - whole).abs() < 1e-9);
+    }
+
+    #[test]
+    fn row_sums_falls_back_globally_on_bad_values() {
+        let mut rs = RowSums::new(2);
+        rs.add(0, 0.5);
+        rs.add(1, 1e-40); // unrepresentable: poisons the whole batch
+        rs.add(0, 0.25);
+        let sums = rs.finish();
+        assert_eq!(sums[0].to_bits(), (0.5f64 + 0.25).to_bits(), "naive fallback");
+        assert_eq!(sums[1].to_bits(), 1e-40f64.to_bits());
+    }
+
+    #[test]
+    fn sidecar_roundtrip_covers_diagonal_and_cross_tiles() {
+        let grid = TileGrid::new(7, 3);
+        let mut rng = crate::util::Rng::seed_from_u64(11);
+        for t in 0..grid.num_tiles() {
+            let tile = grid.tile(t);
+            let mut entries = vec![0f64; tile.num_entries()];
+            for i in tile.row_lo..tile.row_hi {
+                for j in tile.col_lo..tile.col_hi {
+                    if i != j {
+                        entries[tile.entry_offset(i, j)] = 0.05 + rng.f64();
+                    }
+                }
+            }
+            let blob = tile_sidecar(&tile, &entries);
+            let view = decode_sidecar(&tile, &blob).unwrap();
+            assert!(view.valid);
+            // Re-derive the expected per-taxon contributions directly.
+            let mut want_sum = std::collections::HashMap::new();
+            let mut want_min = std::collections::HashMap::new();
+            for i in tile.row_lo..tile.row_hi {
+                for j in tile.col_lo..tile.col_hi {
+                    if i == j {
+                        continue;
+                    }
+                    let v = entries[tile.entry_offset(i, j)];
+                    *want_sum.entry(i).or_insert(0i128) += to_fixed(v).unwrap();
+                    let m = want_min.entry(i).or_insert(f64::INFINITY);
+                    *m = m.min(v);
+                    if !tile.is_diagonal() {
+                        *want_sum.entry(j).or_insert(0i128) += to_fixed(v).unwrap();
+                        let m = want_min.entry(j).or_insert(f64::INFINITY);
+                        *m = m.min(v);
+                    }
+                }
+            }
+            for (taxon, sum, min) in &view.parts {
+                assert_eq!(*sum, want_sum.get(taxon).copied().unwrap_or(0), "tile {t} taxon {taxon}");
+                assert_eq!(
+                    min.to_bits(),
+                    want_min.get(taxon).copied().unwrap_or(f64::INFINITY).to_bits()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn invalid_entries_set_the_sidecar_flag() {
+        let grid = TileGrid::new(4, 2);
+        let tile = grid.tile(grid.tile_index(1, 0)); // cross tile
+        let mut entries = vec![0.5f64; tile.num_entries()];
+        entries[0] = 1e-42; // unrepresentable
+        let blob = tile_sidecar(&tile, &entries);
+        let view = decode_sidecar(&tile, &blob).unwrap();
+        assert!(!view.valid, "bad value must mark the sidecar invalid");
+    }
+}

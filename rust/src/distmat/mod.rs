@@ -20,11 +20,21 @@
 //!   (p-distance + optional Jukes-Cantor, or k-mer-profile distances).
 //!
 //! Bit-identity contract: every backend must return the *same f64 bits*
-//! for d(i, j) as the dense single-node path, and `row_stats` must
-//! accumulate row sums in ascending-j order (f64 addition is not
-//! associative).  The tile kernels share the per-pair code with
-//! `tree::distance`, and the NJ property tests pin the end-to-end
-//! guarantee across tile sizes, worker counts and fault plans.
+//! for d(i, j) as the dense single-node path.  `row_stats` sums are
+//! computed in exact fixed-point arithmetic ([`exact::RowSums`]) —
+//! grouping-independent, so the dense pass, the tiled scan, and the
+//! per-tile sidecar fold all round to identical f64 bits; when a value
+//! is not fixed-point representable, *every* backend falls back to the
+//! legacy naive ascending-j f64 accumulation together.  The tile
+//! kernels share the per-pair code with `tree::distance`, and the NJ
+//! property tests pin the end-to-end guarantee across tile sizes,
+//! worker counts and fault plans.
+//!
+//! Sidecars: tile jobs also store a per-tile `(sum, min)` sidecar blob
+//! (key `num_tiles + tile_index`), so [`TiledDist::row_stats`] can seed
+//! NJ by folding `num_tiles` tiny sidecars instead of faulting every
+//! spilled tile back through the byte budget — zero tile-blob reads,
+//! pinned by a test in [`compute`].
 //!
 //! At-least-once interaction: tile jobs may run more than once under
 //! speculation/retry; `TileStore::put` replaces (accounting released
@@ -32,6 +42,7 @@
 //! harmless — the same discipline as the shuffle spill path.
 
 pub mod compute;
+pub mod exact;
 pub mod store;
 pub mod tile;
 
@@ -84,18 +95,20 @@ pub trait DistSource: Send + Sync {
 
     /// `(row_sums, row_mins)` over `j != i` — the NJ seed data, computed
     /// in one pass so a tiled backend reads each spilled tile once
-    /// instead of once per row.
+    /// instead of once per row.  Sums are exact fixed-point
+    /// ([`exact::RowSums`]) with a naive-f64 fallback, so every backend
+    /// produces identical bits (see the module docs).
     fn row_stats(&self) -> Result<(Vec<f64>, Vec<f64>)> {
         let n = self.num_taxa();
-        let mut sums = vec![0f64; n];
+        let mut sums = exact::RowSums::new(n);
         let mut mins = vec![f64::INFINITY; n];
         for i in 0..n {
             self.stream_row(i, &mut |_, v| {
-                sums[i] += v;
+                sums.add(i, v);
                 mins[i] = mins[i].min(v);
             })?;
         }
-        Ok((sums, mins))
+        Ok((sums.finish(), mins))
     }
 
     /// Per-row minima (rapid-NJ seed caches); see [`row_stats`].
@@ -140,11 +153,22 @@ impl DistSource for DenseF32<'_> {
 pub struct TiledDist {
     grid: TileGrid,
     store: Arc<TileStore>,
+    /// Whether the producer also stored `(sum, min)` sidecar blobs under
+    /// keys `num_tiles + t` (see [`exact::tile_sidecar`]).  Manually
+    /// populated stores (tests) default to no sidecars and take the
+    /// scan path in [`DistSource::row_stats`].
+    has_sidecars: bool,
 }
 
 impl TiledDist {
     pub fn new(grid: TileGrid, store: Arc<TileStore>) -> Self {
-        Self { grid, store }
+        Self { grid, store, has_sidecars: false }
+    }
+
+    /// A tiled matrix whose store also holds per-tile sidecar blobs
+    /// (written by [`compute::distance_tiled`]).
+    pub fn with_sidecars(grid: TileGrid, store: Arc<TileStore>) -> Self {
+        Self { grid, store, has_sidecars: true }
     }
 
     pub fn grid(&self) -> &TileGrid {
@@ -152,14 +176,48 @@ impl TiledDist {
     }
 
     /// Shared handle to the backing store — NJ reuses it (with keys
-    /// offset past `grid.num_tiles()`) for its merged-row working set so
-    /// one byte budget governs the whole tree build.
+    /// offset past [`Self::row_key_base`]) for its merged-row working
+    /// set so one byte budget governs the whole tree build.
     pub fn store_arc(&self) -> Arc<TileStore> {
         self.store.clone()
     }
 
+    /// First store key free for consumers: tile blobs occupy
+    /// `0..num_tiles` and sidecars (when present) the next `num_tiles`.
+    pub fn row_key_base(&self) -> u64 {
+        self.grid.num_tiles() as u64 * if self.has_sidecars { 2 } else { 1 }
+    }
+
     pub fn peak_resident_bytes(&self) -> usize {
         self.store.peak_resident_bytes()
+    }
+
+    /// Fold the per-tile sidecars into `(sums, mins)` without touching
+    /// any tile blob.  `None` when any sidecar is marked invalid or the
+    /// exact fold overflows — callers fall back to the tile scan, which
+    /// lands in the identical naive mode (global-validity argument in
+    /// [`exact`]'s module docs).
+    fn row_stats_from_sidecars(&self) -> Result<Option<(Vec<f64>, Vec<f64>)>> {
+        let n = self.num_taxa();
+        let num_tiles = self.grid.num_tiles();
+        let mut sums = vec![0i128; n];
+        let mut mins = vec![f64::INFINITY; n];
+        for t in 0..num_tiles {
+            let tile = self.grid.tile(t);
+            let blob = self.store.get((num_tiles + t) as u64)?;
+            let view = exact::decode_sidecar(&tile, &blob)?;
+            if !view.valid {
+                return Ok(None);
+            }
+            for (taxon, sum, min) in view.parts {
+                match sums[taxon].checked_add(sum) {
+                    Some(x) => sums[taxon] = x,
+                    None => return Ok(None),
+                }
+                mins[taxon] = mins[taxon].min(min);
+            }
+        }
+        Ok(Some((sums.into_iter().map(exact::fixed_to_f64).collect(), mins)))
     }
 }
 
@@ -207,13 +265,22 @@ impl DistSource for TiledDist {
     }
 
     fn row_stats(&self) -> Result<(Vec<f64>, Vec<f64>)> {
-        // One pass over tiles in index order.  For any row i this visits
-        // its entries in ascending-j order (row-side tiles (rb, cb) come
-        // in ascending cb, then column-side tiles (rb2, rb) in ascending
-        // rb2), so the f64 row sums match the dense reference bit for
-        // bit.
+        // Sidecar fast path: fold num_tiles tiny (sum, min) blobs — no
+        // tile blob is faulted back through the byte budget.  Exact
+        // fixed-point sums make the fold bit-identical to the dense
+        // reference regardless of grouping.
+        if self.has_sidecars {
+            if let Some(stats) = self.row_stats_from_sidecars()? {
+                return Ok(stats);
+            }
+        }
+        // Scan path: one pass over tiles in index order.  For any row i
+        // this visits its entries in ascending-j order (row-side tiles
+        // (rb, cb) come in ascending cb, then column-side tiles
+        // (rb2, rb) in ascending rb2), so the naive-fallback f64 row
+        // sums match the dense reference bit for bit.
         let n = self.num_taxa();
-        let mut sums = vec![0f64; n];
+        let mut sums = exact::RowSums::new(n);
         let mut mins = vec![f64::INFINITY; n];
         for t in 0..self.grid.num_tiles() {
             let tile = self.grid.tile(t);
@@ -224,18 +291,18 @@ impl DistSource for TiledDist {
                         continue;
                     }
                     let v = data[tile.entry_offset(i, j)];
-                    sums[i] += v;
+                    sums.add(i, v);
                     mins[i] = mins[i].min(v);
                     if !tile.is_diagonal() {
                         // Cross tiles hold each pair once; credit the
                         // column row's mirror entry here.
-                        sums[j] += v;
+                        sums.add(j, v);
                         mins[j] = mins[j].min(v);
                     }
                 }
             }
         }
-        Ok((sums, mins))
+        Ok((sums.finish(), mins))
     }
 }
 
@@ -279,8 +346,11 @@ mod tests {
         assert_eq!(v.num_taxa(), 6);
         assert_eq!(v.dist(2, 5).unwrap(), d[2][5]);
         let (sums, mins) = v.row_stats().unwrap();
-        let want: f64 = (0..6).filter(|&j| j != 3).map(|j| d[3][j]).sum();
-        assert_eq!(sums[3], want);
+        let row: Vec<f64> = (0..6).filter(|&j| j != 3).map(|j| d[3][j]).collect();
+        let want = exact::exact_sum(&row).unwrap();
+        assert_eq!(sums[3].to_bits(), want.to_bits(), "exact row sum");
+        let naive: f64 = row.iter().sum();
+        assert!((sums[3] - naive).abs() < 1e-9, "within rounding of the naive sum");
         assert!(mins.iter().all(|m| m.is_finite()));
     }
 
@@ -302,6 +372,34 @@ mod tests {
             let (ts, tm) = t.row_stats().unwrap();
             let (ds, dm) = v.row_stats().unwrap();
             for i in 0..17 {
+                assert_eq!(ts[i].to_bits(), ds[i].to_bits(), "tile={tile_rows} sum row {i}");
+                assert_eq!(tm[i].to_bits(), dm[i].to_bits(), "tile={tile_rows} min row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn sidecar_fold_matches_dense_row_stats_bitwise() {
+        let d = dense(13, 4);
+        for tile_rows in [1usize, 2, 5, 13] {
+            let grid = TileGrid::new(d.len(), tile_rows);
+            let store = Arc::new(TileStore::in_memory());
+            for t in 0..grid.num_tiles() {
+                let tile = grid.tile(t);
+                let mut entries = Vec::with_capacity(tile.num_entries());
+                for i in tile.row_lo..tile.row_hi {
+                    for j in tile.col_lo..tile.col_hi {
+                        entries.push(d[i][j]);
+                    }
+                }
+                store.put((grid.num_tiles() + t) as u64, exact::tile_sidecar(&tile, &entries)).unwrap();
+                store.put(t as u64, entries).unwrap();
+            }
+            let td = TiledDist::with_sidecars(grid, store);
+            assert_eq!(td.row_key_base(), 2 * td.grid().num_tiles() as u64);
+            let (ts, tm) = td.row_stats().unwrap();
+            let (ds, dm) = DenseView(&d).row_stats().unwrap();
+            for i in 0..d.len() {
                 assert_eq!(ts[i].to_bits(), ds[i].to_bits(), "tile={tile_rows} sum row {i}");
                 assert_eq!(tm[i].to_bits(), dm[i].to_bits(), "tile={tile_rows} min row {i}");
             }

@@ -70,6 +70,10 @@ struct StoreInner {
     /// and a re-eviction of a re-put key refreshes the entry in place
     /// for that owner to pick up (never a second concurrent writer).
     spilling: HashMap<u64, SpillEntry>,
+    /// Per-key `get` counter (resident hits included).  Lets tests pin
+    /// access patterns — e.g. that sidecar-seeded NJ stats fault in
+    /// zero tile blobs.
+    get_counts: HashMap<u64, u64>,
 }
 
 impl StoreInner {
@@ -130,6 +134,7 @@ impl TileStore {
                 persisted: HashSet::new(),
                 versions: HashMap::new(),
                 spilling: HashMap::new(),
+                get_counts: HashMap::new(),
             }),
             dir,
             budget,
@@ -164,6 +169,14 @@ impl TileStore {
     /// Spilled blobs re-read from disk on `get`.
     pub fn spill_reads(&self) -> usize {
         self.spill_reads.load(Ordering::Relaxed)
+    }
+
+    /// Total `get` calls (resident hits included) for keys `< bound`.
+    /// With tile blobs keyed `0..num_tiles` and sidecars above, passing
+    /// `num_tiles` counts exactly the tile-blob accesses.
+    pub fn gets_below(&self, bound: u64) -> u64 {
+        let st = self.inner.lock().unwrap();
+        st.get_counts.iter().filter(|(&k, _)| k < bound).map(|(_, &c)| c).sum()
     }
 
     fn blob_path(&self, key: u64) -> Option<PathBuf> {
@@ -285,9 +298,14 @@ impl TileStore {
     /// the read is in flight (version bump), the stale bytes are
     /// discarded and the lookup retries.
     pub fn get(&self, key: u64) -> Result<Arc<Vec<f64>>> {
+        let mut counted = false;
         loop {
             let seen_version = {
                 let mut st = self.inner.lock().unwrap();
+                if !counted {
+                    *st.get_counts.entry(key).or_insert(0) += 1;
+                    counted = true;
+                }
                 let tick = st.next_tick();
                 if let Some(blob) = st.resident.get_mut(&key) {
                     blob.last_access = tick;

@@ -133,6 +133,15 @@ impl TileGrid {
     pub fn max_tile_bytes(&self) -> usize {
         self.rows_per_block * self.rows_per_block * std::mem::size_of::<f64>()
     }
+
+    /// Bytes of the largest per-tile `(sum, min)` sidecar blob (cross
+    /// tiles carry a row *and* a mirror column section; see
+    /// [`super::exact`]) — the extra store granularity sidecar-writing
+    /// pipelines add on top of [`Self::max_tile_bytes`].
+    pub fn max_sidecar_bytes(&self) -> usize {
+        (1 + super::exact::SLOTS_PER_TAXON * (2 * self.rows_per_block))
+            * std::mem::size_of::<f64>()
+    }
 }
 
 #[cfg(test)]

@@ -48,7 +48,21 @@
 //!                 ([`align::banded`]), certified bit-identical to the
 //!                 full DP before a result is accepted.  All tracebacks
 //!                 compare with exact equality; there are no epsilon
-//!                 comparisons left in the alignment kernels.
+//!                 comparisons left in the alignment kernels.  Finished
+//!                 nucleotide MSAs can retain an [`align::append::MsaArtifact`]
+//!                 (center + merged space-profile + per-row edit paths);
+//!                 [`align::append::append_nucleotide`] extends it with k
+//!                 new sequences in O(k·L), bit-identical to a
+//!                 from-scratch run on the union.
+//! * [`cache`]   — content-hash result memoization for the serving
+//!                 layer: a canonical FASTA digest (`canonical_digest`;
+//!                 formatting-invariant, order-sensitive — see
+//!                 `rust/CACHE.md`) keys a byte-budgeted LRU
+//!                 `ArtifactStore` that spills encoded artifacts to disk
+//!                 with the same atomic tmp+rename discipline as the
+//!                 tile store.  Knobs: the store's `byte_budget` (server
+//!                 default 64 MiB) and the artifact format version
+//!                 (`align::append::ARTIFACT_VERSION`).
 //! * [`distmat`] — distributed tiled distance matrices: a `TileGrid`
 //!                 plans the n×n lower triangle as fixed-size tiles, each
 //!                 one stealable engine job (via the
@@ -76,18 +90,20 @@
 //! * [`bench`]   — the in-tree benchmark harness regenerating every table
 //!                 and figure of the paper's evaluation.
 //! * [`lint`]    — `pallas-lint`, the project-native static-analysis
-//!                 pass (binary: `cargo run --bin pallas_lint`): W1–W6
+//!                 pass (binary: `cargo run --bin pallas_lint`): W1–W7
 //!                 rules pinning the bug classes past PRs paid for
 //!                 (worker panics, lock-across-I/O, lock ordering vs
 //!                 `rust/LOCKS.md`, float tolerances in kernels,
-//!                 relaxed condvar handshakes, TSV arity skew).  See
-//!                 `rust/LINTS.md`.
+//!                 relaxed condvar handshakes, TSV arity skew, raw
+//!                 `fs` writes in cache/store modules that bypass
+//!                 `write_atomic`).  See `rust/LINTS.md`.
 
 #![forbid(unsafe_code)]
 
 pub mod align;
 pub mod baselines;
 pub mod bench;
+pub mod cache;
 pub mod data;
 pub mod distmat;
 pub mod engine;

@@ -21,6 +21,7 @@
 //! | W4   | `float-tolerance`  | `EPS`/`.abs() <` comparisons in `align/` outside tests |
 //! | W5   | `relaxed-handshake`| `Ordering::Relaxed` on the condvar-paired executor atomics |
 //! | W6   | `metrics-arity`    | TSV row-writer field count vs header column count |
+//! | W7   | `cache-atomic-write`| direct `fs::write`/`fs::rename`/`File::create`/`OpenOptions` in `cache/` bypassing `write_atomic` |
 //!
 //! Suppression: `// lint: allow(<key>) <reason>` on the offending line
 //! or the line above.  A missing reason is itself a finding (W0), so

@@ -14,10 +14,11 @@ pub enum Rule {
     FloatTolerance,
     RelaxedHandshake,
     MetricsArity,
+    CacheAtomicWrite,
 }
 
 impl Rule {
-    /// Short ID printed in findings (`W1`…`W6`, `W0` for allow syntax).
+    /// Short ID printed in findings (`W1`…`W7`, `W0` for allow syntax).
     pub fn id(self) -> &'static str {
         match self {
             Rule::AllowSyntax => "W0",
@@ -27,6 +28,7 @@ impl Rule {
             Rule::FloatTolerance => "W4",
             Rule::RelaxedHandshake => "W5",
             Rule::MetricsArity => "W6",
+            Rule::CacheAtomicWrite => "W7",
         }
     }
 
@@ -40,6 +42,7 @@ impl Rule {
             Rule::FloatTolerance => "float-tolerance",
             Rule::RelaxedHandshake => "relaxed-handshake",
             Rule::MetricsArity => "metrics-arity",
+            Rule::CacheAtomicWrite => "cache-atomic-write",
         }
     }
 
@@ -51,6 +54,7 @@ impl Rule {
             Rule::FloatTolerance,
             Rule::RelaxedHandshake,
             Rule::MetricsArity,
+            Rule::CacheAtomicWrite,
         ]
         .into_iter()
         .find(|r| r.allow_key() == key)

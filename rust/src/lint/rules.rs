@@ -1,4 +1,4 @@
-//! The per-rule passes (W1–W6).  Every pass works on the scrubbed
+//! The per-rule passes (W1–W7).  Every pass works on the scrubbed
 //! source (comments and string contents blanked, offsets stable) and
 //! skips lines covered by the `#[cfg(test)]` mask.
 //!
@@ -42,6 +42,7 @@ pub fn run_all(ctx: &FileContext<'_>) -> Vec<Finding> {
     check_float_tolerance(ctx, &mut findings);
     check_relaxed_handshake(ctx, &mut findings);
     check_metrics_arity(ctx, &mut findings);
+    check_cache_atomic_write(ctx, &mut findings);
     findings
 }
 
@@ -719,6 +720,47 @@ fn placeholder_count(raw: &str) -> usize {
         i += 1;
     }
     count
+}
+
+// ---------------------------------------------------------------- W7 --
+
+/// Mutating filesystem calls that bypass the tmp+rename discipline.
+/// Read-side and directory-lifecycle calls (`fs::read`,
+/// `fs::create_dir_all`, `fs::remove_*`) are fine; blob *writes* must go
+/// through `write_atomic` so a crash mid-write can never leave a
+/// half-written artifact that a later `get` serves as cached truth.
+const DIRECT_WRITE_MARKERS: &[&str] =
+    &["fs::write(", "fs::rename(", "fs::copy(", "File::create(", "OpenOptions::"];
+
+fn check_cache_atomic_write(ctx: &FileContext<'_>, out: &mut Vec<Finding>) {
+    if !ctx.path.contains("cache/") {
+        return;
+    }
+    let text = ctx.scrubbed.text.as_bytes();
+    for marker in DIRECT_WRITE_MARKERS {
+        let needle = marker.as_bytes();
+        let mut from = 0usize;
+        while let Some(p) = find_from(text, needle, from) {
+            from = p + 1;
+            if p > 0 && is_ident(text[p - 1]) {
+                continue;
+            }
+            let line = ctx.line_of(p);
+            if ctx.in_test(line) {
+                continue;
+            }
+            out.push(Finding::new(
+                ctx.path,
+                line,
+                Rule::CacheAtomicWrite,
+                format!(
+                    "`{}` in the artifact cache bypasses `write_atomic`; write blobs \
+                     via tmp+rename or justify with `// lint: allow(cache-atomic-write) <reason>`",
+                    marker.trim_end_matches('(')
+                ),
+            ));
+        }
+    }
 }
 
 // ----------------------------------------------------------- shared --

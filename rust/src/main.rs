@@ -277,7 +277,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let cluster = args.cluster()?;
     let svc = args.service();
     let addr = args.get("addr").unwrap_or("127.0.0.1:8080").to_string();
-    let server = halign2::server::Server::new(cluster, svc);
+    let server = halign2::server::Server::new(cluster, svc)?;
     let running = server.serve(&addr)?;
     println!("halign2 web server listening on {addr} (port {})", running.port);
     println!("  GET  /          status    |  GET /health");

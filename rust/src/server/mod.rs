@@ -17,6 +17,14 @@
 //! One OS thread per connection (the engine inside serializes onto the
 //! worker pool); requests are independent jobs, which is exactly the
 //! paper's deployment model.
+//!
+//! DNA `/align` jobs are memoized in a content-hash result cache
+//! ([`crate::cache`]): an exact resubmission (same sequences, any
+//! formatting) is served by rendering the stored [`MsaArtifact`] locally
+//! — the engine never runs — and `?parent=<job hash>` appends the body's
+//! sequences onto a cached parent alignment in O(new work).  Every DNA
+//! response carries `X-Job-Hash` (the digest to pass back as `parent`)
+//! and `X-Cache: hit|append|miss`.
 
 mod http;
 
@@ -27,8 +35,11 @@ use std::sync::Arc;
 
 use anyhow::{Context as _, Result};
 
-use crate::align::center_star::{align_nucleotide, CenterStarConfig};
+use crate::align::append::{append_nucleotide, MsaArtifact};
+use crate::align::center_star::{align_nucleotide_with_artifact, CenterStarConfig};
 use crate::align::protein::{align_protein, ProteinConfig};
+use crate::align::MsaResult;
+use crate::cache::{canonical_digest, ArtifactStore, DigestBuilder};
 use crate::engine::Cluster;
 use crate::fasta::{io as fio, Alphabet};
 use crate::runtime::XlaService;
@@ -48,6 +59,9 @@ pub struct ServerOptions {
     /// Declared Content-Length cap; larger bodies are answered 413
     /// before a byte of them is read or buffered.
     pub max_body_bytes: usize,
+    /// Resident byte budget of the DNA alignment result cache; evicted
+    /// artifacts spill to disk and stay servable.
+    pub cache_budget_bytes: usize,
 }
 
 impl Default for ServerOptions {
@@ -56,6 +70,7 @@ impl Default for ServerOptions {
             read_timeout: std::time::Duration::from_secs(30),
             write_timeout: std::time::Duration::from_secs(30),
             max_body_bytes: 256 << 20,
+            cache_budget_bytes: 64 << 20,
         }
     }
 }
@@ -64,6 +79,7 @@ pub struct Server {
     cluster: Cluster,
     svc: Option<XlaService>,
     options: ServerOptions,
+    cache: ArtifactStore,
     requests: AtomicUsize,
     shutdown: AtomicBool,
 }
@@ -87,7 +103,7 @@ impl RunningServer {
 }
 
 impl Server {
-    pub fn new(cluster: Cluster, svc: Option<XlaService>) -> Arc<Self> {
+    pub fn new(cluster: Cluster, svc: Option<XlaService>) -> Result<Arc<Self>> {
         Self::with_options(cluster, svc, ServerOptions::default())
     }
 
@@ -95,14 +111,22 @@ impl Server {
         cluster: Cluster,
         svc: Option<XlaService>,
         options: ServerOptions,
-    ) -> Arc<Self> {
-        Arc::new(Self {
+    ) -> Result<Arc<Self>> {
+        static CACHE_DIR_SEQ: AtomicUsize = AtomicUsize::new(0);
+        let dir = std::env::temp_dir().join(format!(
+            "halign2-server-cache-{}-{}",
+            std::process::id(),
+            CACHE_DIR_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let cache = ArtifactStore::new(dir, options.cache_budget_bytes)?;
+        Ok(Arc::new(Self {
             cluster,
             svc,
             options,
+            cache,
             requests: AtomicUsize::new(0),
             shutdown: AtomicBool::new(false),
-        })
+        }))
     }
 
     /// Bind to `addr` (use port 0 for an ephemeral port) and serve on a
@@ -176,21 +200,96 @@ impl Server {
         let alphabet = Self::alphabet_of(req);
         let seqs = fio::read_fasta(req.body.as_slice(), alphabet)?;
         anyhow::ensure!(!seqs.is_empty(), "empty FASTA body");
-        let msa = match alphabet {
-            Alphabet::Dna => {
-                align_nucleotide(&self.cluster, &seqs, &CenterStarConfig::default())?
-            }
+        match alphabet {
+            Alphabet::Dna => self.align_dna(req, seqs),
             Alphabet::Protein => {
-                align_protein(&self.cluster, &seqs, self.svc.as_ref(), &ProteinConfig::default())?
+                let msa = align_protein(
+                    &self.cluster,
+                    &seqs,
+                    self.svc.as_ref(),
+                    &ProteinConfig::default(),
+                )?;
+                let sp = msa.avg_sp_distributed(&self.cluster)?;
+                Self::msa_response(&msa, sp)
             }
-        };
-        let sp = msa.avg_sp_distributed(&self.cluster)?;
+        }
+    }
+
+    fn msa_response(msa: &MsaResult, sp: f64) -> Result<Response> {
         let mut body = Vec::new();
         fio::write_fasta(&mut body, &msa.aligned)?;
         let mut resp = Response::bytes(200, "text/x-fasta", body);
         resp.headers.push(("X-Avg-SP".into(), format!("{sp:.4}")));
         resp.headers.push(("X-Width".into(), msa.width.to_string()));
         Ok(resp)
+    }
+
+    /// Look up `key` and decode it; a corrupt or version-skewed blob is a
+    /// miss (the job recomputes and overwrites it), never an error.
+    fn cached_artifact(&self, key: u64) -> Option<MsaArtifact> {
+        let bytes = self.cache.get(key).ok()??;
+        MsaArtifact::from_bytes(&bytes).ok()
+    }
+
+    /// DNA alignment with content-hash memoization (see module docs):
+    /// `?parent=<hash>` appends the body onto a cached parent job,
+    /// otherwise the submission digest is looked up before the engine is
+    /// touched.
+    fn align_dna(&self, req: &Request, seqs: Vec<crate::fasta::Sequence>) -> Result<Response> {
+        if let Some(parent_hex) = req.query.get("parent") {
+            let parent_key = u64::from_str_radix(parent_hex, 16)
+                .with_context(|| format!("bad parent job hash {parent_hex:?}"))?;
+            let Some(parent) = self.cached_artifact(parent_key) else {
+                return Ok(Response::text(
+                    404,
+                    &format!("unknown parent job {parent_key:016x}\n"),
+                ));
+            };
+            // The union job's identity: parent rows ++ appended rows.
+            let mut b = DigestBuilder::new();
+            for row in &parent.rows {
+                b.record(&row.id, &row.codes, parent.alphabet);
+            }
+            for s in &seqs {
+                b.push(s);
+            }
+            let union_key = b.finish();
+            if let Some(art) = self.cached_artifact(union_key) {
+                let msa = art.render()?;
+                let sp = msa.avg_sp()?;
+                let mut resp = Self::msa_response(&msa, sp)?;
+                Self::cache_headers(&mut resp, "hit", union_key);
+                return Ok(resp);
+            }
+            let out = append_nucleotide(&self.cluster, &parent, &seqs, None)?;
+            self.cache.put(union_key, out.artifact.to_bytes())?;
+            let sp = out.msa.avg_sp_distributed(&self.cluster)?;
+            let mut resp = Self::msa_response(&out.msa, sp)?;
+            Self::cache_headers(&mut resp, "append", union_key);
+            return Ok(resp);
+        }
+
+        let key = canonical_digest(&seqs);
+        if let Some(art) = self.cached_artifact(key) {
+            // Hit: render locally — no engine job runs at all.
+            let msa = art.render()?;
+            let sp = msa.avg_sp()?;
+            let mut resp = Self::msa_response(&msa, sp)?;
+            Self::cache_headers(&mut resp, "hit", key);
+            return Ok(resp);
+        }
+        let (msa, artifact) =
+            align_nucleotide_with_artifact(&self.cluster, &seqs, &CenterStarConfig::default())?;
+        self.cache.put(key, artifact.to_bytes())?;
+        let sp = msa.avg_sp_distributed(&self.cluster)?;
+        let mut resp = Self::msa_response(&msa, sp)?;
+        Self::cache_headers(&mut resp, "miss", key);
+        Ok(resp)
+    }
+
+    fn cache_headers(resp: &mut Response, outcome: &str, key: u64) {
+        resp.headers.push(("X-Cache".into(), outcome.into()));
+        resp.headers.push(("X-Job-Hash".into(), format!("{key:016x}")));
     }
 
     fn do_tree(&self, req: &Request) -> Result<Response> {
@@ -225,8 +324,9 @@ impl Server {
                  tasks run:      {}\n\
                  shuffle bytes:  {} written / {} read\n\
                  avg max memory: {:.2} MB/worker\n\
-                 artifacts:      {}\n\n\
-                 POST /align (FASTA body, ?alphabet=dna|protein)\n\
+                 artifacts:      {}\n\
+                 result cache:   {} jobs, {} hits / {} misses, {} resident bytes (budget {})\n\n\
+                 POST /align (FASTA body, ?alphabet=dna|protein, ?parent=<job hash>)\n\
                  POST /tree  (aligned FASTA body)\n",
                 stats.workers,
                 self.cluster.backend(),
@@ -236,6 +336,11 @@ impl Server {
                 stats.shuffle_bytes_read,
                 stats.avg_max_memory_bytes / (1 << 20) as f64,
                 artifacts,
+                self.cache.entries(),
+                self.cache.hits(),
+                self.cache.misses(),
+                self.cache.resident_bytes(),
+                self.cache.byte_budget(),
             ),
         )
     }
@@ -249,7 +354,7 @@ mod tests {
 
     fn start() -> RunningServer {
         let cluster = Cluster::new(ClusterConfig::spark(2));
-        Server::new(cluster, None).serve("127.0.0.1:0").unwrap()
+        Server::new(cluster, None).unwrap().serve("127.0.0.1:0").unwrap()
     }
 
     fn talk(port: u16, raw: &str) -> String {
@@ -289,6 +394,97 @@ mod tests {
         srv.stop();
     }
 
+    fn header_value<'a>(resp: &'a str, name: &str) -> &'a str {
+        resp.lines()
+            .find_map(|l| l.strip_prefix(&format!("{name}: ")))
+            .unwrap_or_else(|| panic!("missing header {name} in {resp}"))
+            .trim_end()
+    }
+
+    fn body_of(resp: &str) -> &str {
+        resp.split_once("\r\n\r\n").expect("no body").1
+    }
+
+    #[test]
+    fn resubmission_hits_the_cache_bit_identically_without_engine_work() {
+        let srv = start();
+        let post = |path: &str, body: &str| {
+            talk(
+                srv.port,
+                &format!(
+                    "POST {path} HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{}",
+                    body.len(),
+                    body
+                ),
+            )
+        };
+        let fasta = ">a\nACGTACGTAA\n>b\nACGTACGTA\n>c\nACGTTCGTAA\n";
+        let first = post("/align", fasta);
+        assert!(first.starts_with("HTTP/1.1 200"), "{first}");
+        assert_eq!(header_value(&first, "X-Cache"), "miss");
+        let tasks_after_miss: usize = {
+            let status = talk(srv.port, "GET / HTTP/1.1\r\nHost: x\r\n\r\n");
+            header_like(&status, "tasks run:")
+        };
+        // Same job, different formatting: must hit and return the exact
+        // same bytes, without running a single engine task.
+        let reformatted = ">a trailing words\nacgtACGTAA\n>b\nACGT\nACGTA\n>c\nACGTTCGTAA\n";
+        let second = post("/align", reformatted);
+        assert_eq!(header_value(&second, "X-Cache"), "hit", "{second}");
+        assert_eq!(header_value(&first, "X-Job-Hash"), header_value(&second, "X-Job-Hash"));
+        assert_eq!(body_of(&first), body_of(&second), "hit must be bit-identical");
+        let status = talk(srv.port, "GET / HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert_eq!(
+            header_like(&status, "tasks run:"),
+            tasks_after_miss,
+            "a cache hit must not touch the engine"
+        );
+        srv.stop();
+    }
+
+    fn header_like(status: &str, label: &str) -> usize {
+        status
+            .lines()
+            .find_map(|l| l.trim().strip_prefix(label))
+            .and_then(|v| v.trim().split_whitespace().next())
+            .and_then(|v| v.parse().ok())
+            .unwrap_or_else(|| panic!("no {label} in {status}"))
+    }
+
+    #[test]
+    fn append_extends_a_cached_job_and_matches_the_union() {
+        let srv = start();
+        let post = |path: &str, body: &str| {
+            talk(
+                srv.port,
+                &format!(
+                    "POST {path} HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{}",
+                    body.len(),
+                    body
+                ),
+            )
+        };
+        let base = ">a\nACGTACGTAA\n>b\nACGTACGTA\n>c\nACGTTCGTAA\n";
+        let extra = ">d\nACGGACGTAA\n>e\nACGTACGTAAT\n";
+        let first = post("/align", base);
+        let parent = header_value(&first, "X-Job-Hash").to_string();
+        let appended = post(&format!("/align?parent={parent}"), extra);
+        assert!(appended.starts_with("HTTP/1.1 200"), "{appended}");
+        assert_eq!(header_value(&appended, "X-Cache"), "append");
+        // From-scratch on the union was cached under the union digest by
+        // the append, so posting the union now must *hit* and agree
+        // byte-for-byte — the incremental path equals the full job.
+        let union = format!("{base}{extra}");
+        let scratch = post("/align", &union);
+        assert_eq!(header_value(&scratch, "X-Cache"), "hit", "{scratch}");
+        assert_eq!(header_value(&scratch, "X-Job-Hash"), header_value(&appended, "X-Job-Hash"));
+        assert_eq!(body_of(&scratch), body_of(&appended));
+        // An unknown parent is a clean 404, not a recompute.
+        let nope = post("/align?parent=00000000deadbeef", extra);
+        assert!(nope.starts_with("HTTP/1.1 404"), "{nope}");
+        srv.stop();
+    }
+
     #[test]
     fn tree_endpoint_returns_newick() {
         let srv = start();
@@ -312,7 +508,8 @@ mod tests {
             read_timeout: std::time::Duration::from_millis(200),
             ..ServerOptions::default()
         };
-        let srv = Server::with_options(cluster, None, opts).serve("127.0.0.1:0").unwrap();
+        let srv =
+            Server::with_options(cluster, None, opts).unwrap().serve("127.0.0.1:0").unwrap();
         let start = std::time::Instant::now();
         let mut s = TcpStream::connect(("127.0.0.1", srv.port)).unwrap();
         // Declare a 10-byte body but send only 2 bytes and stall.
@@ -334,7 +531,8 @@ mod tests {
     fn oversized_body_gets_413() {
         let cluster = Cluster::new(ClusterConfig::spark(2));
         let opts = ServerOptions { max_body_bytes: 1024, ..ServerOptions::default() };
-        let srv = Server::with_options(cluster, None, opts).serve("127.0.0.1:0").unwrap();
+        let srv =
+            Server::with_options(cluster, None, opts).unwrap().serve("127.0.0.1:0").unwrap();
         let resp = talk(
             srv.port,
             "POST /align HTTP/1.1\r\nHost: x\r\nContent-Length: 10000\r\n\r\n",

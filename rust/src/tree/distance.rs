@@ -157,6 +157,62 @@ pub fn pdistance_native_with(rows: &[Sequence], kernel: KernelBackend) -> Result
     Ok(d)
 }
 
+/// Extend an n×n p-distance matrix to (n+k)×(n+k) for `k` appended
+/// rows, computing only the new pairs: O(k·(n+k)) kernel calls instead
+/// of O((n+k)²).
+///
+/// `rows` is the FULL aligned union (old n rows + k new, all one
+/// width).  The old block is copied bit-for-bit from `old`.  This is
+/// sound even though an append may have *widened* the alignment:
+/// widening inserts the same all-gap columns into every old row, and
+/// [`pdist_pair`] skips any column where either side is a gap, so the
+/// integer (compared, mismatch) counts between two old rows — and hence
+/// their p-distance bits — are unchanged.  The result is therefore
+/// bit-identical to `pdistance_native_with(rows, kernel)` from scratch
+/// (pinned in tests).
+pub fn pdistance_extend_with(
+    old: &[Vec<f64>],
+    rows: &[Sequence],
+    kernel: KernelBackend,
+) -> Result<Vec<Vec<f64>>> {
+    let n = old.len();
+    let m = rows.len();
+    ensure!(m >= n, "union has fewer rows ({m}) than the old matrix ({n})");
+    ensure!(old.iter().all(|r| r.len() == n), "old matrix must be square");
+    let mut d = vec![vec![0f64; m]; m];
+    for (i, row) in old.iter().enumerate() {
+        d[i][..n].copy_from_slice(row);
+    }
+    if m == n {
+        return Ok(d);
+    }
+    let gap = rows[0].alphabet.gap();
+    let width = rows[0].len();
+    ensure!(rows.iter().all(|r| r.len() == width), "rows must be aligned");
+    match kernel {
+        KernelBackend::Scalar => {
+            for j in n..m {
+                for i in 0..j {
+                    let p = pdist_pair(&rows[i].codes, &rows[j].codes, gap);
+                    d[i][j] = p;
+                    d[j][i] = p;
+                }
+            }
+        }
+        KernelBackend::BitParallel => {
+            let packed: Vec<RowBits> = rows.iter().map(|r| pack_row(&r.codes, gap)).collect();
+            for j in n..m {
+                for i in 0..j {
+                    let p = pdist_pair_packed(&packed[i], &packed[j]);
+                    d[i][j] = p;
+                    d[j][i] = p;
+                }
+            }
+        }
+    }
+    Ok(d)
+}
+
 /// Pairwise p-distances, via the XLA match-count kernel when a bucket
 /// covers (rows, width); exact native fallback otherwise.
 pub fn pdistance_matrix(rows: &[Sequence], svc: Option<&XlaService>) -> Result<Vec<Vec<f64>>> {
@@ -294,6 +350,57 @@ mod tests {
             let scalar = pdistance_native_with(&rows, KernelBackend::Scalar).unwrap();
             let packed = pdistance_native_with(&rows, KernelBackend::BitParallel).unwrap();
             assert_eq!(scalar, packed, "case {case}");
+        }
+    }
+
+    #[test]
+    fn extend_matches_from_scratch_bitwise_after_widening() {
+        use crate::util::Rng;
+        let mut rng = Rng::seed_from_u64(0xE7E);
+        for kernel in [KernelBackend::Scalar, KernelBackend::BitParallel] {
+            // "Old" rows at width 40; the union widened to 46 by gap
+            // columns inserted identically into the old rows.
+            let old_rows: Vec<Sequence> = (0..7)
+                .map(|k| {
+                    let codes: Vec<u8> = (0..40)
+                        .map(|_| if rng.chance(0.1) { 5 } else { rng.below(4) as u8 })
+                        .collect();
+                    Sequence::new(format!("o{k}"), codes, Alphabet::Dna)
+                })
+                .collect();
+            let old = pdistance_native_with(&old_rows, kernel).unwrap();
+            let gap_cols = [3usize, 17, 18, 25, 33, 39];
+            let widen = |codes: &[u8]| -> Vec<u8> {
+                let mut out = Vec::with_capacity(46);
+                for (c, &x) in codes.iter().enumerate() {
+                    if gap_cols.contains(&c) {
+                        out.push(5);
+                    }
+                    out.push(x);
+                }
+                out
+            };
+            let mut union: Vec<Sequence> = old_rows
+                .iter()
+                .map(|s| Sequence::new(s.id.clone(), widen(&s.codes), Alphabet::Dna))
+                .collect();
+            for k in 0..3 {
+                let codes: Vec<u8> = (0..46)
+                    .map(|_| if rng.chance(0.2) { 5 } else { rng.below(4) as u8 })
+                    .collect();
+                union.push(Sequence::new(format!("n{k}"), codes, Alphabet::Dna));
+            }
+            let extended = pdistance_extend_with(&old, &union, kernel).unwrap();
+            let scratch = pdistance_native_with(&union, kernel).unwrap();
+            for i in 0..union.len() {
+                for j in 0..union.len() {
+                    assert_eq!(
+                        extended[i][j].to_bits(),
+                        scratch[i][j].to_bits(),
+                        "{kernel:?} ({i},{j})"
+                    );
+                }
+            }
         }
     }
 

@@ -215,7 +215,7 @@ fn tiled_subtree_for_cluster(
     let labels: Vec<String> = members.iter().map(|s| s.id.clone()).collect();
     let nj_cfg = NjConfig {
         row_store: Some(tiled.store_arc()),
-        row_key_base: tiled.grid().num_tiles() as u64,
+        row_key_base: tiled.row_key_base(),
     };
     let tree = neighbor_joining_src(&labels, &tiled, &nj_cfg)?;
     Ok((tree, tiled.peak_resident_bytes() as u64))
@@ -334,6 +334,7 @@ mod tests {
             distmat: DistMatOptions {
                 backend: DistBackend::Tiled { tile_rows: 4, byte_budget },
             },
+            ..Default::default()
         };
         let dense = build_tree(&engine, &rows, None, &dense_cfg).unwrap();
         let tiled = build_tree(&engine, &rows, None, &tiled_cfg).unwrap();
@@ -345,8 +346,13 @@ mod tests {
         assert_eq!(dense.num_clusters, tiled.num_clusters);
         // Memory story: dense reports the largest cluster's O(n²)
         // matrices; tiled stays within budget + one blob (the largest
-        // blob is a merged-row vector of ~2·cluster_size f64s).
-        let blob_slack = 2 * 12 * 8 + 4 * 4 * 8;
+        // single blob is either a merged-row vector of ~2·cluster_size
+        // f64s, a full tile, or a cross-tile (sum,min) sidecar).
+        let grid_slack = {
+            let g = crate::distmat::tile::TileGrid::new(12, 4);
+            g.max_tile_bytes().max(g.max_sidecar_bytes())
+        };
+        let blob_slack = (2 * 12 * 8).max(grid_slack);
         assert!(
             tiled.distmat_peak_bytes <= (byte_budget + blob_slack) as u64,
             "tiled peak {} must honor the byte budget {byte_budget}",

@@ -347,7 +347,7 @@ mod tests {
             let tiled = TiledDist::new(grid, store);
             let cfg = NjConfig {
                 row_store: Some(tiled.store_arc()),
-                row_key_base: tiled.grid().num_tiles() as u64,
+                row_key_base: tiled.row_key_base(),
             };
             let tiled_tree = neighbor_joining_src(&lbl, &tiled, &cfg).unwrap();
             assert_eq!(

@@ -1,0 +1,222 @@
+//! Property tests for the incremental-append + memoization subsystem:
+//! the bit-identity certificate (`align/append.rs` module docs) says an
+//! appended alignment equals a from-scratch run on the union, bit for
+//! bit, across worker counts, scheduler modes, kernel backends and
+//! mid-job worker kills.  This suite is that certificate's enforcement
+//! arm, plus the cache-side properties the server leans on: eviction
+//! never exceeds budget + one artifact and never loses bytes, and
+//! corrupt artifacts are rejected rather than half-decoded.
+
+use halign2::align::append::{append_nucleotide, MsaArtifact};
+use halign2::align::center_star::{align_nucleotide_with_artifact, CenterStarConfig};
+use halign2::align::KernelBackend;
+use halign2::cache::ArtifactStore;
+use halign2::data::DatasetSpec;
+use halign2::engine::{Cluster, ClusterConfig, FaultPlan, SchedulerMode};
+use halign2::util::Rng;
+
+/// Case count for the property sweep: overridable via
+/// `HALIGN_STRESS_CASES` so the sanitizer CI jobs (ThreadSanitizer,
+/// Miri) can run the same tests at instrumentation-friendly depth.
+fn stress_cases(default: u64) -> u64 {
+    std::env::var("HALIGN_STRESS_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(default)
+}
+
+/// A small mito-like family: shared ancestor, per-case divergence.  The
+/// `indel_rate` knob is what decides whether appends widen the profile,
+/// so sweeping it exercises both the fast path and the re-render path.
+fn family(n: usize, indel_rate: f64, seed: u64) -> Vec<halign2::fasta::Sequence> {
+    DatasetSpec {
+        count: n,
+        base_len: 96,
+        indel_rate,
+        ..DatasetSpec::mito(0.01, seed)
+    }
+    .generate()
+}
+
+/// ≥100 seeded cases: split a family into a base job and `k` appended
+/// sequences, run the parent job, append onto its artifact, and require
+/// the result — alignment *and* artifact — to equal a from-scratch run
+/// on the union exactly.  Cases vary worker count, scheduler mode,
+/// kernel backend, widening vs non-widening divergence, duplicate
+/// appends, and (every fifth case) a worker killed mid-append; a third
+/// of the cases also round-trip the parent artifact through its byte
+/// encoding first, the way the server's cache serves it.
+#[test]
+fn append_is_bit_identical_to_scratch_across_100_cases() {
+    let mut rng = Rng::seed_from_u64(0xA99E_4D);
+    for case in 0..stress_cases(100) {
+        let base_n = 2 + rng.below(10);
+        let k = 1 + rng.below(5);
+        // Low indel rates keep most appends inside the parent's column
+        // space (fast path); high ones force widening merges.
+        let indel_rate = [0.0, 0.0005, 0.002, 0.01][rng.below(4)];
+        let mut all = family(base_n + k, indel_rate, 0x5EED + case);
+        if rng.chance(0.25) {
+            // Duplicate traffic: an appended sequence that already exists
+            // in the base set (same residues, fresh id) must still match
+            // the scratch run on the same union.
+            let src = rng.below(base_n);
+            let dup = all.len() - 1;
+            all[dup].codes = all[src].codes.clone();
+        }
+        let (base, new) = all.split_at(base_n);
+
+        let workers = [2usize, 3, 4, 8, 16][rng.below(5)];
+        let mut ccfg = ClusterConfig::spark(workers);
+        ccfg.scheduler.mode = if rng.chance(0.5) {
+            SchedulerMode::Sharded
+        } else {
+            SchedulerMode::GlobalLock
+        };
+        if case % 5 == 0 {
+            ccfg.fault = FaultPlan::kill_worker_at(rng.below(workers), rng.below(6));
+        }
+        let cluster = Cluster::new(ccfg);
+        let cfg = CenterStarConfig {
+            kernel: if rng.chance(0.5) {
+                KernelBackend::Scalar
+            } else {
+                KernelBackend::BitParallel
+            },
+            ..CenterStarConfig::default()
+        };
+
+        let (base_msa, art) = align_nucleotide_with_artifact(&cluster, base, &cfg)
+            .unwrap_or_else(|e| panic!("case {case}: base job failed: {e:#}"));
+        // A third of the cases decode the artifact from bytes first —
+        // the shape a cache hit hands the append path.
+        let art = if rng.chance(0.33) {
+            MsaArtifact::from_bytes(&art.to_bytes())
+                .unwrap_or_else(|e| panic!("case {case}: artifact round-trip failed: {e:#}"))
+        } else {
+            art
+        };
+        let parent_msa = if rng.chance(0.5) { Some(&base_msa) } else { None };
+        let out = append_nucleotide(&cluster, &art, new, parent_msa)
+            .unwrap_or_else(|e| panic!("case {case}: append failed: {e:#}"));
+
+        let (scratch, scratch_art) = align_nucleotide_with_artifact(&cluster, &all, &cfg)
+            .unwrap_or_else(|e| panic!("case {case}: scratch union failed: {e:#}"));
+        assert_eq!(
+            out.msa.width, scratch.width,
+            "case {case}: n={base_n} k={k} w={workers} — widths differ"
+        );
+        for (a, b) in out.msa.aligned.iter().zip(&scratch.aligned) {
+            assert_eq!(
+                a.codes, b.codes,
+                "case {case}: n={base_n} k={k} w={workers} indel={indel_rate} \
+                 — append must equal from-scratch union bit for bit ({})",
+                a.id
+            );
+        }
+        assert_eq!(
+            out.artifact, scratch_art,
+            "case {case}: appended artifact must equal the scratch artifact"
+        );
+        if !out.widened && parent_msa.is_some() {
+            assert_eq!(
+                out.rows_rendered, k,
+                "case {case}: no-widening fast path must render only the {k} new rows"
+            );
+        }
+    }
+}
+
+/// Seeded eviction sweep: hammer an `ArtifactStore` with random-sized
+/// blobs under a tiny budget and require (a) peak residency never
+/// exceeds budget + one artifact, (b) every key remains readable, and
+/// (c) every read returns the exact bytes that were put — LRU spilling
+/// must lose nothing and corrupt nothing.
+#[test]
+fn eviction_under_budget_loses_no_bytes_across_cases() {
+    let mut rng = Rng::seed_from_u64(0xE71C_7104);
+    for case in 0..stress_cases(30) {
+        let budget = 256 + rng.below(2048);
+        let dir = std::env::temp_dir().join(format!(
+            "halign2-appendprop-evict-{}-{case}",
+            std::process::id()
+        ));
+        let store = ArtifactStore::new(dir, budget).unwrap();
+        let n_blobs = 4 + rng.below(24);
+        let mut blobs: Vec<(u64, Vec<u8>)> = Vec::with_capacity(n_blobs);
+        let mut max_blob = 0usize;
+        for i in 0..n_blobs {
+            let len = 1 + rng.below(budget);
+            let data: Vec<u8> = (0..len).map(|j| (i * 31 + j) as u8 ^ case as u8).collect();
+            max_blob = max_blob.max(data.len());
+            store.put(i as u64, data.clone()).unwrap();
+            blobs.push((i as u64, data));
+            if rng.chance(0.3) {
+                // Interleave reads so the LRU order is non-trivial.
+                let (k, want) = &blobs[rng.below(blobs.len())];
+                let got = store.get(*k).unwrap().expect("known key must hit");
+                assert_eq!(&*got, want, "case {case}: read-back during churn");
+            }
+        }
+        assert!(
+            store.peak_resident_bytes() <= budget + max_blob,
+            "case {case}: peak {} must stay within budget {budget} + one blob {max_blob}",
+            store.peak_resident_bytes()
+        );
+        for (k, want) in &blobs {
+            let got = store.get(*k).unwrap().unwrap_or_else(|| {
+                panic!("case {case}: key {k} lost after eviction churn")
+            });
+            assert_eq!(&*got, want, "case {case}: key {k} bytes must survive spilling");
+        }
+        assert_eq!(store.entries(), n_blobs, "case {case}: every key stays known");
+    }
+}
+
+/// Seeded corruption sweep: random byte flips, truncations and junk
+/// prefixes over a real artifact encoding must all be rejected by
+/// `from_bytes` — the checksum + structural validation is what lets the
+/// cache treat a decodable blob as truth.
+#[test]
+fn corrupt_artifacts_are_rejected_across_cases() {
+    let cluster = Cluster::new(ClusterConfig::spark(2));
+    let seqs = family(6, 0.002, 0xC0FF);
+    let (_, art) =
+        align_nucleotide_with_artifact(&cluster, &seqs, &CenterStarConfig::default()).unwrap();
+    let good = art.to_bytes();
+    assert!(MsaArtifact::from_bytes(&good).is_ok());
+
+    let mut rng = Rng::seed_from_u64(0xBAD_B17);
+    for case in 0..stress_cases(100) {
+        let mut bad = good.clone();
+        match rng.below(3) {
+            0 => {
+                // Flip 1-4 random bits.
+                for _ in 0..1 + rng.below(4) {
+                    let pos = rng.below(bad.len());
+                    bad[pos] ^= 1 << rng.below(8);
+                }
+            }
+            1 => {
+                // Truncate anywhere, including inside the header.
+                bad.truncate(rng.below(bad.len()));
+            }
+            _ => {
+                // Append trailing junk past the checksum.
+                for _ in 0..1 + rng.below(16) {
+                    bad.push(rng.below(256) as u8);
+                }
+            }
+        }
+        if bad == good {
+            continue;
+        }
+        assert!(
+            MsaArtifact::from_bytes(&bad).is_err(),
+            "case {case}: corrupted artifact ({} bytes vs {} good) must be rejected",
+            bad.len(),
+            good.len()
+        );
+    }
+}

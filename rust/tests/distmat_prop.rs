@@ -80,9 +80,11 @@ fn tiled_nj_is_bit_identical_to_dense_across_100_cases() {
         };
         let tiled = distance_tiled(&engine, &rows, &cfg)
             .unwrap_or_else(|e| panic!("case {case}: tile jobs failed: {e:#}"));
+        // Key base past the tile *and* sidecar blobs (`distance_tiled`
+        // writes per-tile (sum,min) sidecars above the tiles).
         let nj_cfg = NjConfig {
             row_store: Some(tiled.store_arc()),
-            row_key_base: tiled.grid().num_tiles() as u64,
+            row_key_base: tiled.row_key_base(),
         };
         let tiled_tree = neighbor_joining_src(&labels, &tiled, &nj_cfg)
             .unwrap_or_else(|e| panic!("case {case}: tiled NJ failed: {e:#}"));

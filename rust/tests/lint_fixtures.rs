@@ -208,6 +208,51 @@ fn w6_silent_on_matching_arity_and_tab_strings_without_placeholders() {
     assert!(ids(&lint("rust/src/metrics/fx.rs", plain)).is_empty());
 }
 
+// ---------------------------------------------------------------- W7 --
+
+#[test]
+fn w7_fires_on_direct_write_in_cache_module() {
+    let src = "fn persist(&self, p: &Path, data: &[u8]) {\n    \
+               fs::write(p, data).ok();\n}\n";
+    let findings = lint("rust/src/cache/fx.rs", src);
+    assert_eq!(ids(&findings), ["W7"]);
+    assert_eq!(findings[0].line, 2);
+    let create = "fn persist(&self, p: &Path) {\n    let f = File::create(p);\n    drop(f);\n}\n";
+    assert_eq!(ids(&lint("rust/src/cache/fx.rs", create)), ["W7"]);
+    let rename = "fn swap(&self) {\n    fs::rename(\"a\", \"b\").ok();\n}\n";
+    assert_eq!(ids(&lint("rust/src/cache/fx.rs", rename)), ["W7"]);
+}
+
+#[test]
+fn w7_silent_on_write_atomic_reads_and_other_modules() {
+    // The blessed path plus the read/lifecycle calls the store uses.
+    let blessed = "fn persist(&self, p: &Path, data: &[u8]) -> Result<()> {\n    \
+                   write_atomic(p, data)\n}\n\
+                   fn load(&self, p: &Path) -> Vec<u8> {\n    \
+                   std::fs::read(p).unwrap_or_default()\n}\n\
+                   fn init(&self) {\n    std::fs::create_dir_all(&self.dir).ok();\n    \
+                   std::fs::remove_dir_all(&self.dir).ok();\n}\n";
+    assert!(ids(&lint("rust/src/cache/fx.rs", blessed)).is_empty());
+    // Same direct write outside cache/ is not W7's business (W2 handles
+    // the under-lock case there).
+    let elsewhere = "fn persist(p: &Path, data: &[u8]) {\n    fs::write(p, data).ok();\n}\n";
+    assert!(!ids(&lint("rust/src/engine/fx.rs", elsewhere)).contains(&"W7"));
+    // Test code inside cache/ may write directly (corruption fixtures).
+    let test_src = "#[cfg(test)]\nmod tests {\n    fn corrupt(p: &Path) {\n        \
+                    fs::write(p, b\"junk\").ok();\n    }\n}\n";
+    assert!(ids(&lint("rust/src/cache/fx.rs", test_src)).is_empty());
+}
+
+#[test]
+fn w7_suppressible_with_reason() {
+    let src = "fn persist(&self, p: &Path, data: &[u8]) {\n    \
+               // lint: allow(cache-atomic-write) metadata sidecar, rewritten on startup\n    \
+               fs::write(p, data).ok();\n}\n";
+    let findings = lint("rust/src/cache/fx.rs", src);
+    assert!(ids(&findings).is_empty());
+    assert!(findings.iter().any(|f| f.suppressed && f.rule == Rule::CacheAtomicWrite));
+}
+
 // -------------------------------------------------- suppression + W0 --
 
 #[test]

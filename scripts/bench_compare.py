@@ -1,0 +1,184 @@
+#!/usr/bin/env python3
+"""Compare fresh BENCH_*.json files against the committed baselines.
+
+Required CI gate: after the bench smoke steps write BENCH_micro.json and
+BENCH_serve.json at the repo root, this script diffs them against
+BENCH_micro.baseline.json / BENCH_serve.baseline.json (also committed at
+the repo root) and exits nonzero on any regression past the threshold.
+
+What is compared — and deliberately what is not:
+
+* Raw wall-clock seconds and absolute cells/sec are NEVER compared:
+  they track the host, not the code, and a shared-runner gate on them
+  would flake forever.
+* micro: the bitparallel/scalar *ratio* per kernel is compared against
+  the baseline ratio as a floor (measured >= baseline * (1 - threshold)).
+  The ratio cancels the host's absolute speed; one-sided so a faster
+  kernel never fails the gate.  Kernel names are normalized by stripping
+  the trailing problem-size suffix (`global_400x400` -> `global`) so the
+  QUICK and full modes hit the same baseline rows.
+* serve: the scenario is deterministic by construction, so the cache
+  counters (hits/misses/appends) are pinned exactly, the two correctness
+  booleans must be true, and the measured speedup must meet the
+  `min_speedup` floor (ratio of two same-host timings, so it is
+  host-independent enough to gate on).
+
+`--update` rewrites the baselines from the current BENCH files (keeping
+serve's `min_speedup` floor); commit the result.
+"""
+
+import argparse
+import json
+import re
+import sys
+from pathlib import Path
+
+SIZE_SUFFIX = re.compile(r"_\d+(x\d+)?$")
+
+
+def normalize_kernel(name):
+    """global_400x400 / global_160x160 -> global; pdist_row_16384 -> pdist_row."""
+    return SIZE_SUFFIX.sub("", name)
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        print(f"bench_compare: missing {path}", file=sys.stderr)
+        sys.exit(2)
+    except json.JSONDecodeError as e:
+        print(f"bench_compare: unparseable {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+
+
+def micro_ratios(bench):
+    """{normalized kernel: bitparallel cells_per_sec / scalar cells_per_sec}."""
+    by_kernel = {}
+    for row in bench.get("rows", []):
+        by_kernel.setdefault(normalize_kernel(row["kernel"]), {})[row["backend"]] = row[
+            "cells_per_sec"
+        ]
+    ratios = {}
+    for kernel, backends in sorted(by_kernel.items()):
+        if "scalar" in backends and "bitparallel" in backends and backends["scalar"] > 0:
+            ratios[kernel] = backends["bitparallel"] / backends["scalar"]
+    return ratios
+
+
+def compare_micro(current, baseline, threshold):
+    failures = []
+    measured = micro_ratios(current)
+    expected = baseline.get("kernels", {})
+    for kernel, base in sorted(expected.items()):
+        floor = base["min_ratio"] * (1.0 - threshold)
+        got = measured.get(kernel)
+        if got is None:
+            failures.append(f"micro: kernel `{kernel}` missing from BENCH_micro.json")
+        elif got < floor:
+            failures.append(
+                f"micro: {kernel} bitparallel/scalar ratio {got:.2f} below "
+                f"baseline {base['min_ratio']:.2f} - {threshold:.0%} = {floor:.2f}"
+            )
+        else:
+            print(f"  micro {kernel:<16} ratio {got:8.2f}  (floor {floor:.2f})  ok")
+    for kernel in sorted(set(measured) - set(expected)):
+        failures.append(
+            f"micro: new kernel `{kernel}` has no baseline row "
+            f"(run with --update and commit)"
+        )
+    return failures
+
+
+def compare_serve(current, baseline):
+    failures = []
+    for key in ("hits", "misses", "appends"):
+        want, got = baseline[key], current.get(key)
+        if got != want:
+            failures.append(f"serve: {key} = {got}, baseline pins {want}")
+        else:
+            print(f"  serve {key:<18} {got}  ok")
+    for key in ("bit_identical", "peak_within_budget"):
+        if current.get(key) is not True:
+            failures.append(f"serve: {key} = {current.get(key)}, must be true")
+        else:
+            print(f"  serve {key:<18} true  ok")
+    floor = baseline["min_speedup"]
+    speedup = current.get("speedup", 0.0)
+    if speedup < floor:
+        failures.append(f"serve: append speedup {speedup:.1f}x below the {floor:.1f}x floor")
+    else:
+        print(f"  serve speedup            {speedup:.1f}x  (floor {floor:.1f}x)  ok")
+    return failures
+
+
+def update_baselines(root, micro, serve, old_serve_baseline):
+    micro_base = {
+        "bench": "micro_kernel_ab",
+        "note": "floors for the bitparallel/scalar cells_per_sec ratio; "
+        "kernel names are size-normalized",
+        "kernels": {
+            kernel: {"min_ratio": round(ratio, 2)}
+            for kernel, ratio in sorted(micro_ratios(micro).items())
+        },
+    }
+    serve_base = {
+        "bench": "serve_append",
+        "hits": serve["hits"],
+        "misses": serve["misses"],
+        "appends": serve["appends"],
+        "bit_identical": True,
+        "peak_within_budget": True,
+        "min_speedup": old_serve_baseline.get("min_speedup", 5.0),
+    }
+    for name, data in [
+        ("BENCH_micro.baseline.json", micro_base),
+        ("BENCH_serve.baseline.json", serve_base),
+    ]:
+        path = root / name
+        path.write_text(json.dumps(data, indent=2) + "\n")
+        print(f"rewrote {path}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--root",
+        type=Path,
+        default=Path(__file__).resolve().parent.parent,
+        help="repo root holding BENCH_*.json and the baselines (default: ../ of this script)",
+    )
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.10,
+        help="allowed fractional slack under a baseline ratio floor (default 0.10)",
+    )
+    ap.add_argument(
+        "--update",
+        action="store_true",
+        help="rewrite the baselines from the current BENCH files instead of comparing",
+    )
+    args = ap.parse_args()
+
+    micro = load(args.root / "BENCH_micro.json")
+    serve = load(args.root / "BENCH_serve.json")
+    serve_baseline = load(args.root / "BENCH_serve.baseline.json")
+    if args.update:
+        update_baselines(args.root, micro, serve, serve_baseline)
+        return
+    micro_baseline = load(args.root / "BENCH_micro.baseline.json")
+
+    failures = compare_micro(micro, micro_baseline, args.threshold)
+    failures += compare_serve(serve, serve_baseline)
+    if failures:
+        print(f"\nbench_compare: {len(failures)} regression(s):", file=sys.stderr)
+        for f in failures:
+            print(f"  FAIL {f}", file=sys.stderr)
+        sys.exit(1)
+    print("bench_compare: all benchmarks within thresholds")
+
+
+if __name__ == "__main__":
+    main()
