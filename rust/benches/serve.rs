@@ -18,6 +18,7 @@ use halign2::align::center_star::{
 use halign2::cache::{canonical_digest, ArtifactStore};
 use halign2::engine::{Cluster, ClusterConfig};
 use halign2::fasta::{Alphabet, Sequence};
+use halign2::obs::Histogram;
 use halign2::util::Rng;
 
 /// Mutate `base`: substitutions at rate `subs`, insert/delete at rate
@@ -117,6 +118,10 @@ fn main() {
     });
 
     // --- 100 small appends (cached path) -------------------------------------
+    // Per-append latency goes into an obs log2 histogram; the JSON
+    // reports p50/p99 and their ratio (tail shape is host-independent
+    // enough to gate, absolute milliseconds are not).
+    let append_hist = Histogram::new();
     let mut rows_rendered_total = 0usize;
     let mut widened_appends = 0usize;
     let t = Instant::now();
@@ -124,9 +129,11 @@ fn main() {
         union.push(s.clone());
         let key = canonical_digest(&union);
         assert!(store.get(key).unwrap().is_none(), "union job must be new");
+        let one = Instant::now();
         let out =
             append_nucleotide(&cluster, &parent_art, std::slice::from_ref(s), Some(&parent_msa))
                 .unwrap();
+        append_hist.record(one.elapsed().as_nanos() as u64);
         rows_rendered_total += out.rows_rendered;
         widened_appends += usize::from(out.widened);
         let bytes = out.artifact.to_bytes();
@@ -136,6 +143,11 @@ fn main() {
         parent_art = out.artifact;
     }
     let append_secs = t.elapsed().as_secs_f64();
+    let append_snap = append_hist.snapshot();
+    let append_p50_ms = append_snap.percentile(0.50) as f64 / 1e6;
+    let append_p99_ms = append_snap.percentile(0.99) as f64 / 1e6;
+    let latency_tail_ratio =
+        append_snap.percentile(0.99) as f64 / (append_snap.percentile(0.50).max(1)) as f64;
     // Resubmit the final union: it hits (re-read from disk if the LRU
     // spilled it) and must render bit-identically.
     let final_key = canonical_digest(&union);
@@ -169,6 +181,10 @@ fn main() {
         "  appends: {append_secs:.3}s total ({widened_appends} widened, \
          {rows_rendered_total} rows rendered)"
     );
+    println!(
+        "  append latency: p50 {append_p50_ms:.3}ms, p99 {append_p99_ms:.3}ms \
+         (tail ratio {latency_tail_ratio:.1}x)"
+    );
     println!("  recompute baseline: {recompute_secs:.3}s total");
     println!("  append_speedup: {speedup:.1}x");
     println!(
@@ -185,6 +201,9 @@ fn main() {
         ("appends", appends.to_string()),
         ("widened_appends", widened_appends.to_string()),
         ("append_secs", format!("{append_secs:.6}")),
+        ("append_p50_ms", format!("{append_p50_ms:.6}")),
+        ("append_p99_ms", format!("{append_p99_ms:.6}")),
+        ("latency_tail_ratio", format!("{latency_tail_ratio:.3}")),
         ("recompute_secs", format!("{recompute_secs:.6}")),
         ("speedup", format!("{speedup:.3}")),
         ("cache_peak_bytes", peak.to_string()),

@@ -123,6 +123,8 @@ pub fn measure<T>(
                 lock_contentions: None,
                 speculative_launches: None,
                 distmat_peak_mb: None,
+                p50_ms: None,
+                p99_ms: None,
                 dnf: None,
             };
             if let Some(engine) = engine {
@@ -546,6 +548,96 @@ pub fn fig6_skew(cfg: &BenchConfig) -> Vec<RunReport> {
     out
 }
 
+/// Figure 6 companion — scheduler lifecycle traces: the fig6 MSA job run
+/// with the obs trace rings enabled, followed by three deterministic
+/// stages that force one steal batch, one speculative duplicate and one
+/// kill-drain, so the exported Chrome trace JSON provably contains every
+/// scheduler event kind — under BOTH queue architectures.  Returns
+/// `(mode_label, chrome_trace_json)` pairs; the bench binary writes them
+/// next to the TSV so CI archives a Perfetto-loadable artifact
+/// (see rust/OBSERVABILITY.md).
+pub fn fig6_trace(cfg: &BenchConfig) -> Vec<(&'static str, String)> {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::{Arc, Condvar, Mutex};
+
+    use crate::obs::chrome_trace_json;
+
+    let (_, spec) = cfg.dna_tiers().into_iter().next().unwrap();
+    let seqs = spec.generate();
+    let mut out = Vec::new();
+    for (label, mode) in
+        [("sharded", SchedulerMode::Sharded), ("global", SchedulerMode::GlobalLock)]
+    {
+        let mut ccfg = ClusterConfig::spark(3);
+        ccfg.scheduler.mode = mode;
+        ccfg.scheduler.trace_capacity = 1 << 14;
+        let engine = Cluster::new(ccfg);
+        align_nucleotide(&engine, &seqs, &CenterStarConfig::default())
+            .expect("fig6 trace MSA");
+
+        // Steal: task 0 blocks its owning worker until every peer task
+        // has run, so the tasks queued behind it can only finish via
+        // steal batches (same gate as the executor's stealing tests).
+        let sync = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let s = sync.clone();
+        engine
+            .executor()
+            .run_tasks(24, 0, move |task| {
+                let (count, cv) = &*s;
+                if task == 0 {
+                    let done = count.lock().unwrap();
+                    let (_, timeout) = cv
+                        .wait_timeout_while(done, Duration::from_secs(20), |c| *c < 23)
+                        .unwrap();
+                    anyhow::ensure!(!timeout.timed_out(), "steal gate never opened");
+                } else {
+                    *count.lock().unwrap() += 1;
+                    cv.notify_all();
+                }
+                Ok(())
+            })
+            .expect("steal stage");
+
+        // Speculation: task 0's first attempt straggles until its
+        // speculative duplicate has run, so the duplicate's completion
+        // is what finishes the stage.
+        let sync = Arc::new((Mutex::new(false), Condvar::new()));
+        let execs = Arc::new(AtomicUsize::new(0));
+        let (s, e) = (sync.clone(), execs.clone());
+        engine
+            .executor()
+            .run_tasks(8, 0, move |task| {
+                if task != 0 {
+                    return Ok(());
+                }
+                let (dup_ran, cv) = &*s;
+                if e.fetch_add(1, Ordering::SeqCst) == 0 {
+                    let flag = dup_ran.lock().unwrap();
+                    let (_, timeout) = cv
+                        .wait_timeout_while(flag, Duration::from_secs(20), |ran| !*ran)
+                        .unwrap();
+                    anyhow::ensure!(
+                        !timeout.timed_out(),
+                        "no speculative duplicate was launched"
+                    );
+                } else {
+                    *dup_ran.lock().unwrap() = true;
+                    cv.notify_all();
+                }
+                Ok(())
+            })
+            .expect("speculation stage");
+
+        // Kill-drain: retire a worker; the drain event lands on the
+        // driver lane even when the deque is already empty.
+        assert!(engine.executor().kill_worker(0), "kill must succeed");
+
+        let events = engine.trace().drain_new();
+        out.push((label, chrome_trace_json(&events, engine.trace().num_lanes())));
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -643,6 +735,33 @@ mod tests {
             );
         }
         assert!(rows.iter().all(|r| r.busy_skew.is_some() && r.lock_contentions.is_some()));
+    }
+
+    #[test]
+    fn fig6_trace_exports_every_scheduler_event_in_both_modes() {
+        // ISSUE-9 acceptance: a fig6 job's exported trace is a valid
+        // Chrome trace-event array containing steal, speculation and
+        // kill-drain events, from both queue architectures.
+        let traces = fig6_trace(&quick());
+        assert_eq!(traces.len(), 2, "sharded and global traces");
+        assert!(traces.iter().any(|(l, _)| *l == "sharded"));
+        assert!(traces.iter().any(|(l, _)| *l == "global"));
+        for (label, json) in &traces {
+            assert!(
+                crate::obs::is_json_array(json),
+                "{label}: export must be a valid JSON array"
+            );
+            for needle in [
+                "\"steal\"",
+                "\"speculative_launch\"",
+                "\"kill_drain\"",
+                "\"task\"",
+                "\"enqueue\"",
+                "\"driver\"",
+            ] {
+                assert!(json.contains(needle), "{label}: trace must contain {needle}");
+            }
+        }
     }
 
     #[test]

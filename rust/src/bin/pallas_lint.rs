@@ -1,5 +1,5 @@
 //! `pallas-lint` CLI: walk `rust/src/**`, enforce the project
-//! invariants (W1–W6, see `rust/LINTS.md`), print findings as
+//! invariants (W1–W8, see `rust/LINTS.md`), print findings as
 //! `file:line rule message`, and write `LINT_REPORT.json` at the repo
 //! root.
 //!

@@ -123,6 +123,12 @@ pub fn distance_tiled(
         store_task.put(part as u64, entries)
     })?;
 
+    // Fold this store's spill activity into the cluster-wide registry
+    // counters (the store itself stays registry-agnostic; later spills
+    // during NJ row streaming are credited by the next job's fold).
+    engine.io().distmat_spill_files.add(store.spill_files_written() as u64);
+    engine.io().distmat_spill_reads.add(store.spill_reads() as u64);
+
     Ok(TiledDist::with_sidecars(grid, store))
 }
 

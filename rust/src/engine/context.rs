@@ -3,7 +3,7 @@
 //! `SparkContext` analogue.
 
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -14,6 +14,7 @@ use super::fault::FaultPlan;
 use super::memory::MemoryTracker;
 use super::rdd::{Data, Rdd};
 use super::shuffle::Backend;
+use crate::obs::{Counter, Registry, TraceSink};
 
 /// Engine configuration — the knobs the paper's experiments sweep.
 #[derive(Debug, Clone)]
@@ -74,18 +75,63 @@ impl ClusterConfig {
     }
 }
 
-/// Cluster-wide I/O counters (shuffle + checkpoint traffic).
-#[derive(Debug, Default)]
+/// Cluster-wide I/O counters (shuffle + checkpoint + spill traffic).
+/// Each field is a [`Counter`] registered in the cluster's metrics
+/// registry, so the same atomics that feed `ClusterStats` are scraped
+/// verbatim by `GET /metrics`; `Counter` keeps `fetch_add`/`fetch_sub`/
+/// `load` shims so call sites read like the bare atomics they replaced.
+#[derive(Debug)]
 pub struct IoCounters {
-    pub shuffle_bytes_written: AtomicU64,
-    pub shuffle_bytes_read: AtomicU64,
-    pub spill_files: AtomicUsize,
-    pub shuffles_executed: AtomicUsize,
+    pub shuffle_bytes_written: Arc<Counter>,
+    pub shuffle_bytes_read: Arc<Counter>,
+    pub spill_files: Arc<Counter>,
+    pub shuffles_executed: Arc<Counter>,
     /// Payload bytes actually decoded from checkpoint files.  With the
     /// per-element offset index a tail slice decodes only its own range,
     /// so this stays proportional to elements consumed, not file size
     /// (regression hook for the seek-instead-of-prefix-decode path).
-    pub checkpoint_bytes_decoded: AtomicU64,
+    pub checkpoint_bytes_decoded: Arc<Counter>,
+    /// Distance-matrix tiles spilled to disk by the `TileStore`.
+    pub distmat_spill_files: Arc<Counter>,
+    /// Spilled tiles read back from disk for row streaming / NJ merges.
+    pub distmat_spill_reads: Arc<Counter>,
+}
+
+impl IoCounters {
+    /// Single registration site for the I/O metric families (W8 pins
+    /// that); called once per cluster with the executor's registry.
+    pub fn register(registry: &Registry) -> Self {
+        Self {
+            shuffle_bytes_written: registry.register_counter(
+                "halign_shuffle_bytes_written_total",
+                "Bytes written to shuffle map outputs",
+            ),
+            shuffle_bytes_read: registry.register_counter(
+                "halign_shuffle_bytes_read_total",
+                "Bytes read from shuffle map outputs",
+            ),
+            spill_files: registry.register_counter(
+                "halign_spill_files_total",
+                "Shuffle spill files written (DiskKv backend x replication)",
+            ),
+            shuffles_executed: registry.register_counter(
+                "halign_shuffles_executed_total",
+                "Shuffle stages executed",
+            ),
+            checkpoint_bytes_decoded: registry.register_counter(
+                "halign_checkpoint_bytes_decoded_total",
+                "Payload bytes decoded from checkpoint files",
+            ),
+            distmat_spill_files: registry.register_counter(
+                "halign_distmat_spill_files_total",
+                "Distance-matrix tiles spilled to disk by the TileStore",
+            ),
+            distmat_spill_reads: registry.register_counter(
+                "halign_distmat_spill_reads_total",
+                "Spilled distance-matrix tiles read back from disk",
+            ),
+        }
+    }
 }
 
 pub(crate) struct ClusterInner {
@@ -111,6 +157,9 @@ impl Cluster {
             config.scheduler.clone(),
         );
         let memory = MemoryTracker::new(config.workers);
+        // All subsystems share the executor's registry: one scrape
+        // surface per cluster.
+        let io = IoCounters::register(executor.registry());
         let scratch_dir = std::env::temp_dir().join(format!(
             "halign2-{}-{}",
             std::process::id(),
@@ -121,7 +170,7 @@ impl Cluster {
                 config,
                 executor,
                 memory,
-                io: IoCounters::default(),
+                io,
                 shuffle_seq: AtomicUsize::new(0),
                 scratch_dir,
             }),
@@ -146,6 +195,18 @@ impl Cluster {
 
     pub fn io(&self) -> &IoCounters {
         &self.inner.io
+    }
+
+    /// The cluster-wide metrics registry (engine + I/O families; the
+    /// server adds its request/cache families to the same instance).
+    pub fn registry(&self) -> &Arc<Registry> {
+        self.inner.executor.registry()
+    }
+
+    /// The executor's lifecycle trace sink (enabled via
+    /// `ClusterConfig::scheduler.trace_capacity`).
+    pub fn trace(&self) -> &Arc<TraceSink> {
+        self.inner.executor.trace()
     }
 
     pub(crate) fn executor(&self) -> &Executor {
@@ -214,9 +275,11 @@ impl Cluster {
                 .sum(),
             total_busy: m.total_busy(),
             busy_skew: m.busy_skew(),
-            shuffle_bytes_written: self.inner.io.shuffle_bytes_written.load(Ordering::Relaxed),
-            shuffle_bytes_read: self.inner.io.shuffle_bytes_read.load(Ordering::Relaxed),
-            shuffles_executed: self.inner.io.shuffles_executed.load(Ordering::Relaxed),
+            task_p50_ms: m.obs().task_exec.percentile_ms(0.50),
+            task_p99_ms: m.obs().task_exec.percentile_ms(0.99),
+            shuffle_bytes_written: self.inner.io.shuffle_bytes_written.get(),
+            shuffle_bytes_read: self.inner.io.shuffle_bytes_read.get(),
+            shuffles_executed: self.inner.io.shuffles_executed.get() as usize,
             avg_max_memory_bytes: self.inner.memory.avg_max_bytes(),
             max_peak_memory_bytes: self.inner.memory.max_peak_bytes(),
         }
@@ -251,6 +314,11 @@ pub struct ClusterStats {
     pub total_busy: Duration,
     /// Max/mean per-worker busy nanos (1.0 = perfectly balanced).
     pub busy_skew: f64,
+    /// Median worker-side task execution latency in milliseconds, from
+    /// the registry's log2 histogram (0.0 before any task ran).
+    pub task_p50_ms: f64,
+    /// 99th-percentile task execution latency in milliseconds.
+    pub task_p99_ms: f64,
     pub shuffle_bytes_written: u64,
     pub shuffle_bytes_read: u64,
     pub shuffles_executed: usize,

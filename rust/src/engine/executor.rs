@@ -53,6 +53,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use super::fault::FaultPlan;
+use crate::obs::{EngineObs, Registry, TraceKind, TraceSink};
 
 /// A unit of queued work; receives the id of the worker that executes it.
 type Job = Box<dyn FnOnce(usize) + Send>;
@@ -91,6 +92,10 @@ pub struct ExecutorOptions {
     pub steal_sample_threshold: usize,
     /// Queue architecture (sharded deques vs single global mutex).
     pub mode: SchedulerMode,
+    /// Per-lane capacity of the lifecycle trace rings ([`crate::obs`]);
+    /// 0 (the default) disables tracing entirely — `emit` returns after
+    /// one field load, so un-traced runs pay nothing on the hot path.
+    pub trace_capacity: usize,
 }
 
 impl Default for ExecutorOptions {
@@ -103,6 +108,7 @@ impl Default for ExecutorOptions {
             speculation_sigma: 3.0,
             steal_sample_threshold: 128,
             mode: SchedulerMode::Sharded,
+            trace_capacity: 0,
         }
     }
 }
@@ -167,10 +173,11 @@ struct GlobalQueues {
     state: Mutex<SchedState>,
     cv: Condvar,
     steal: bool,
+    obs: Arc<EngineObs>,
 }
 
 impl GlobalQueues {
-    fn new(workers: usize, steal: bool) -> Self {
+    fn new(workers: usize, steal: bool, obs: Arc<EngineObs>) -> Self {
         Self {
             state: Mutex::new(SchedState {
                 queues: (0..workers).map(|_| VecDeque::new()).collect(),
@@ -179,6 +186,7 @@ impl GlobalQueues {
             }),
             cv: Condvar::new(),
             steal,
+            obs,
         }
     }
 
@@ -189,6 +197,7 @@ impl GlobalQueues {
                 if let Some(m) = m {
                     m.lock_contention.fetch_add(1, Ordering::Relaxed);
                 }
+                self.obs.lock_contention.inc();
                 self.state.lock().unwrap()
             }
         }
@@ -212,6 +221,9 @@ impl GlobalQueues {
                 if let Some(job) = victim.and_then(|v| st.queues[v].pop_back()) {
                     m.steals.fetch_add(1, Ordering::Relaxed);
                     m.steal_batches.fetch_add(1, Ordering::Relaxed);
+                    self.obs.tasks_stolen.inc();
+                    self.obs.steal_batches.inc();
+                    self.obs.trace.emit(w, TraceKind::Steal, 1);
                     return Some(job);
                 }
             }
@@ -235,6 +247,7 @@ impl GlobalQueues {
     }
 
     fn kill(&self, w: usize) -> bool {
+        let drained_count;
         {
             let mut st = self.lock_state(None);
             if w >= st.alive.len() || !st.alive[w] {
@@ -245,12 +258,16 @@ impl GlobalQueues {
             }
             st.alive[w] = false;
             let drained: Vec<Job> = st.queues[w].drain(..).collect();
+            drained_count = drained.len();
             for job in drained {
                 // lint: allow(panic) alive count checked > 1 above under this state lock
                 let target = st.least_loaded_alive().expect("one alive worker remains");
                 st.queues[target].push_back(job);
             }
         }
+        // Driver lane (one past the workers) records the drain.
+        let lanes = self.obs.trace.num_lanes();
+        self.obs.trace.emit(lanes.saturating_sub(1), TraceKind::KillDrain, drained_count as u64);
         self.cv.notify_all();
         true
     }
@@ -294,10 +311,11 @@ struct ShardedQueues {
     sample_above: usize,
     /// Monotone counter feeding the victim-sampling hash.
     steal_tick: AtomicU64,
+    obs: Arc<EngineObs>,
 }
 
 impl ShardedQueues {
-    fn new(workers: usize, steal: bool, sample_above: usize) -> Self {
+    fn new(workers: usize, steal: bool, sample_above: usize, obs: Arc<EngineObs>) -> Self {
         Self {
             shards: (0..workers)
                 .map(|_| Shard { deque: Mutex::new(VecDeque::new()), len: AtomicUsize::new(0) })
@@ -310,6 +328,7 @@ impl ShardedQueues {
             steal,
             sample_above,
             steal_tick: AtomicU64::new(0),
+            obs,
         }
     }
 
@@ -324,6 +343,7 @@ impl ShardedQueues {
                 if let Some(m) = m {
                     m.lock_contention.fetch_add(1, Ordering::Relaxed);
                 }
+                self.obs.lock_contention.inc();
                 self.shards[s].deque.lock().unwrap()
             }
         }
@@ -402,6 +422,9 @@ impl ShardedQueues {
         };
         m.steals.fetch_add(batch.len(), Ordering::Relaxed);
         m.steal_batches.fetch_add(1, Ordering::Relaxed);
+        self.obs.tasks_stolen.add(batch.len() as u64);
+        self.obs.steal_batches.inc();
+        self.obs.trace.emit(w, TraceKind::Steal, batch.len() as u64);
         let first = batch.pop_front()?;
         if !batch.is_empty() {
             let mut q = self.lock_shard(w, Some(m));
@@ -497,6 +520,7 @@ impl ShardedQueues {
         };
         // Redistribute to the least-loaded alive workers; targets cannot
         // die concurrently because kills are serialized.
+        let drained_count = drained.len();
         for job in drained {
             // lint: allow(panic) kill refuses to remove the last alive worker above
             let target = self.least_loaded_alive().expect("one alive worker remains");
@@ -504,6 +528,8 @@ impl ShardedQueues {
             q.push_back(job);
             self.shards[target].len.store(q.len(), Ordering::Relaxed);
         }
+        // Driver lane (one past the workers) records the drain.
+        self.obs.trace.emit(self.shards.len(), TraceKind::KillDrain, drained_count as u64);
         self.bump_epoch();
         true
     }
@@ -567,6 +593,7 @@ impl Queues {
 struct Shared {
     queues: Queues,
     metrics: Vec<Arc<WorkerMetrics>>,
+    obs: Arc<EngineObs>,
 }
 
 struct TaskDone {
@@ -582,6 +609,10 @@ pub struct Executor {
     handles: Vec<Option<std::thread::JoinHandle<()>>>,
     fault: FaultPlan,
     opts: ExecutorOptions,
+    /// The cluster-wide metrics registry every subsystem registers into
+    /// (engine families here; shuffle/spill via `IoCounters`, cache and
+    /// request families via the server).
+    registry: Arc<Registry>,
     task_counter: AtomicUsize,
     /// Mean worker-side execution nanos of the most recent stage — the
     /// quantity the speculation deadline is derived from (regression
@@ -606,19 +637,23 @@ impl Executor {
 
     pub fn with_options(num_workers: usize, fault: FaultPlan, opts: ExecutorOptions) -> Self {
         assert!(num_workers > 0);
+        let registry = Registry::new();
+        let obs = EngineObs::register(&registry, num_workers, opts.trace_capacity);
         let queues = match opts.mode {
             SchedulerMode::Sharded => Queues::Sharded(ShardedQueues::new(
                 num_workers,
                 opts.work_stealing,
                 opts.steal_sample_threshold,
+                obs.clone(),
             )),
             SchedulerMode::GlobalLock => {
-                Queues::Global(GlobalQueues::new(num_workers, opts.work_stealing))
+                Queues::Global(GlobalQueues::new(num_workers, opts.work_stealing, obs.clone()))
             }
         };
         let shared = Arc::new(Shared {
             queues,
             metrics: (0..num_workers).map(|_| Arc::new(WorkerMetrics::default())).collect(),
+            obs,
         });
         let mut handles = Vec::with_capacity(num_workers);
         for w in 0..num_workers {
@@ -636,6 +671,7 @@ impl Executor {
             handles,
             fault,
             opts,
+            registry,
             task_counter: AtomicUsize::new(0),
             last_stage_avg_exec_nanos: AtomicU64::new(0),
             last_stage_deadline_nanos: AtomicU64::new(0),
@@ -652,6 +688,22 @@ impl Executor {
 
     pub fn options(&self) -> &ExecutorOptions {
         &self.opts
+    }
+
+    /// The cluster-wide metrics registry (scraped by `GET /metrics`).
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.registry
+    }
+
+    /// The engine's registered instruments (counters + task latency).
+    pub fn obs(&self) -> &Arc<EngineObs> {
+        &self.shared.obs
+    }
+
+    /// The lifecycle trace sink (disabled unless
+    /// `ExecutorOptions::trace_capacity > 0`).
+    pub fn trace(&self) -> &Arc<TraceSink> {
+        &self.shared.obs.trace
     }
 
     /// Mean worker-side execution nanos per completed task in the most
@@ -771,6 +823,7 @@ impl Executor {
                     Ordering::Release,
                 );
                 let m = &shared.metrics[exec_w];
+                shared.obs.trace.emit(exec_w, TraceKind::Start, task as u64);
                 let start = Instant::now();
                 let result = if fail_this {
                     m.failures.fetch_add(1, Ordering::Relaxed);
@@ -784,9 +837,26 @@ impl Executor {
                 let exec_nanos = start.elapsed().as_nanos() as u64;
                 m.busy_nanos.fetch_add(exec_nanos, Ordering::Relaxed);
                 m.tasks.fetch_add(1, Ordering::Relaxed);
+                shared.obs.tasks_run.inc();
+                if result.is_err() {
+                    shared.obs.task_failures.inc();
+                }
+                shared.obs.task_exec.record(exec_nanos);
+                shared.obs.trace.emit(exec_w, TraceKind::Finish, task as u64);
                 let _ = done.send(TaskDone { task, speculative, result, exec_nanos });
             });
+            // Enqueue/speculation decisions happen on the driver lane.
+            let driver_lane = self.num_workers();
+            if speculative {
+                self.shared.obs.speculative_launches.inc();
+                self.shared.obs.trace.emit(
+                    driver_lane,
+                    TraceKind::SpeculativeLaunch,
+                    task as u64,
+                );
+            }
             let target = self.shared.queues.enqueue(owner, job)?;
+            self.shared.obs.trace.emit(driver_lane, TraceKind::Enqueue, task as u64);
             if speculative {
                 // Counted against the worker the duplicate actually
                 // landed on (the preferred owner may be dead).

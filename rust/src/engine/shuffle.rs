@@ -13,12 +13,13 @@
 use std::collections::HashMap;
 use std::io::Read;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use anyhow::{Context as _, Result};
 
 use super::context::Cluster;
+use crate::obs::Counter;
 use crate::util::{Decode, Encode};
 
 /// Write a spill file atomically (unique tmp name + rename), so a reader
@@ -56,17 +57,17 @@ impl<K: std::hash::Hash + Eq> CreditOnce<K> {
         key: K,
         bytes: u64,
         files: usize,
-        bytes_counter: &AtomicU64,
-        files_counter: &AtomicUsize,
+        bytes_counter: &Counter,
+        files_counter: &Counter,
     ) {
         let mut slots = self.slots.lock().unwrap();
         let prev = slots.insert(key, (bytes, files));
         if let Some((prev_bytes, prev_files)) = prev {
             bytes_counter.fetch_sub(prev_bytes, Ordering::Relaxed);
-            files_counter.fetch_sub(prev_files, Ordering::Relaxed);
+            files_counter.fetch_sub(prev_files as u64, Ordering::Relaxed);
         }
         bytes_counter.fetch_add(bytes, Ordering::Relaxed);
-        files_counter.fetch_add(files, Ordering::Relaxed);
+        files_counter.fetch_add(files as u64, Ordering::Relaxed);
     }
 }
 
@@ -464,7 +465,7 @@ mod tests {
         );
         assert_eq!(
             c.io().spill_files.load(Ordering::Relaxed),
-            2 * c.config().disk_replication,
+            2 * c.config().disk_replication as u64,
             "two buckets x replication, regardless of re-puts"
         );
     }

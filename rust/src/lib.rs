@@ -86,17 +86,26 @@
 //! * [`baselines`] — HAlign-v1 (Hadoop mode), SparkSW, MUSCLE/MAFFT-like
 //!                 progressive, IQ-TREE-like ML search.
 //! * [`runtime`] — PJRT service + shape-bucket batcher over the artifacts.
+//! * [`obs`]     — unified observability: a process-wide registry of
+//!                 named counters/gauges/log2-bucketed latency
+//!                 histograms (lock-free record, exact merge,
+//!                 percentile extraction, Prometheus text rendering)
+//!                 plus bounded per-worker trace rings drained into
+//!                 Chrome trace-event JSON.  Engine, distmat spill,
+//!                 shuffle, cache, and server counters all register
+//!                 here; naming contract in `rust/OBSERVABILITY.md`.
 //! * [`metrics`] — wall-clock/memory reporting, paper-table printers.
 //! * [`bench`]   — the in-tree benchmark harness regenerating every table
 //!                 and figure of the paper's evaluation.
 //! * [`lint`]    — `pallas-lint`, the project-native static-analysis
-//!                 pass (binary: `cargo run --bin pallas_lint`): W1–W7
+//!                 pass (binary: `cargo run --bin pallas_lint`): W1–W8
 //!                 rules pinning the bug classes past PRs paid for
 //!                 (worker panics, lock-across-I/O, lock ordering vs
 //!                 `rust/LOCKS.md`, float tolerances in kernels,
 //!                 relaxed condvar handshakes, TSV arity skew, raw
 //!                 `fs` writes in cache/store modules that bypass
-//!                 `write_atomic`).  See `rust/LINTS.md`.
+//!                 `write_atomic`, metric names undeclared in
+//!                 `rust/OBSERVABILITY.md`).  See `rust/LINTS.md`.
 
 #![forbid(unsafe_code)]
 
@@ -110,6 +119,7 @@ pub mod engine;
 pub mod fasta;
 pub mod lint;
 pub mod metrics;
+pub mod obs;
 pub mod runtime;
 pub mod server;
 pub mod tree;

@@ -1,9 +1,12 @@
-//! Parser for `rust/LOCKS.md` — the declared lock hierarchy, the helper
-//! functions that acquire or return locks, and the atomics that pair
-//! with the executor's wake-epoch condvar.
+//! Parsers for the markdown files `pallas-lint` treats as config:
+//! `rust/LOCKS.md` (the declared lock hierarchy, the helper functions
+//! that acquire or return locks, and the atomics that pair with the
+//! executor's wake-epoch condvar) and `rust/OBSERVABILITY.md` (the
+//! declared metric family names, rule W8).
 //!
-//! The file is ordinary markdown; `pallas-lint` only reads three
-//! sections (matched case-insensitively on their headings):
+//! Both files are ordinary markdown; `pallas-lint` only reads specific
+//! sections.  From `LOCKS.md`, three (matched case-insensitively on
+//! their headings):
 //!
 //! * a heading containing **"hierarchy"**: numbered list items whose
 //!   first backticked token is a lock name, outermost first
@@ -15,8 +18,12 @@
 //! * a heading containing **"atomic"**: bullet items naming the
 //!   condvar-paired atomics (`- \`shutdown\` — …`).
 //!
+//! From `OBSERVABILITY.md`, one: a heading containing **"famil"**
+//! (e.g. *Metric families*), whose table rows / bullet items declare
+//! one backticked family name each (`| \`halign_tasks_run_total\` | …`).
+//!
 //! Unknown lines are ignored, so the prose around the lists can grow
-//! freely without breaking the parser.
+//! freely without breaking the parsers.
 
 /// How a declared helper interacts with its lock.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -46,6 +53,10 @@ pub struct LintConfig {
     /// Atomics that participate in the executor sleep/wake handshake;
     /// `Ordering::Relaxed` on these is rule W5.
     pub condvar_atomics: Vec<String>,
+    /// Metric family names declared in `rust/OBSERVABILITY.md`;
+    /// registering an undeclared (or duplicate) family is rule W8.
+    /// Empty when the file is absent, which leaves W8 inert.
+    pub metric_names: Vec<String>,
 }
 
 #[derive(Clone, Copy, PartialEq)]
@@ -125,6 +136,32 @@ impl LintConfig {
             }
         }
         cfg
+    }
+
+    /// Parse the markdown text of `rust/OBSERVABILITY.md` into the list
+    /// of declared metric family names.  Only sections whose heading
+    /// contains "famil" (case-insensitive) are read; inside one, every
+    /// table row (`| \`name\` | …`) or bullet (`- \`name\` — …`) whose
+    /// first backticked token exists declares a family.  Header and
+    /// separator rows carry no backticks and are skipped naturally.
+    pub fn parse_observability_md(text: &str) -> Vec<String> {
+        let mut names = Vec::new();
+        let mut in_families = false;
+        for line in text.lines() {
+            let trimmed = line.trim();
+            if trimmed.starts_with('#') {
+                in_families = trimmed.to_ascii_lowercase().contains("famil");
+                continue;
+            }
+            if in_families && (trimmed.starts_with('|') || trimmed.starts_with('-')) {
+                if let Some(name) = first_backticked(trimmed) {
+                    if !names.contains(&name) {
+                        names.push(name);
+                    }
+                }
+            }
+        }
+        names
     }
 }
 

@@ -22,6 +22,7 @@
 //! | W5   | `relaxed-handshake`| `Ordering::Relaxed` on the condvar-paired executor atomics |
 //! | W6   | `metrics-arity`    | TSV row-writer field count vs header column count |
 //! | W7   | `cache-atomic-write`| direct `fs::write`/`fs::rename`/`File::create`/`OpenOptions` in `cache/` bypassing `write_atomic` |
+//! | W8   | `metric-name-registry` | metric families registered with names undeclared in `rust/OBSERVABILITY.md`, non-snake_case, or registered twice |
 //!
 //! Suppression: `// lint: allow(<key>) <reason>` on the offending line
 //! or the line above.  A missing reason is itself a finding (W0), so
@@ -186,12 +187,20 @@ fn line_has_code(scrubbed: &lexer::Scrubbed, line: usize) -> bool {
 
 /// Lint every `.rs` file under `<root>/rust/src`, deterministically
 /// ordered.  Paths in findings are repo-relative with forward slashes.
+///
+/// On top of the per-file passes, this is where the cross-file half of
+/// W8 runs: a metric family must have exactly one registration site in
+/// the whole tree, so a family registered in two *different* files is a
+/// finding even though each file looks clean in isolation.  Like W0,
+/// these structural findings cannot be suppressed — there is no single
+/// line an allow comment could bless.
 pub fn lint_tree(root: &Path, cfg: &LintConfig) -> io::Result<Report> {
     let src = root.join("rust").join("src");
     let mut files = Vec::new();
     collect_rs_files(&src, &mut files)?;
     files.sort();
     let mut report = Report::default();
+    let mut metric_sites: Vec<(String, String, usize)> = Vec::new(); // (family, file, line)
     for file in &files {
         let source = fs::read_to_string(file)?;
         let rel = file
@@ -202,7 +211,39 @@ pub fn lint_tree(root: &Path, cfg: &LintConfig) -> io::Result<Report> {
             .collect::<Vec<_>>()
             .join("/");
         report.findings.extend(lint_source(&rel, &source, cfg));
+        if !cfg.metric_names.is_empty() {
+            let scrubbed = lexer::scrub(&source);
+            let test_mask = lexer::test_line_mask(&scrubbed);
+            let ctx = rules::FileContext {
+                path: &rel,
+                scrubbed: &scrubbed,
+                test_mask: &test_mask,
+                cfg,
+            };
+            for (name, line) in rules::metric_registrations(&ctx) {
+                metric_sites.push((name, rel.clone(), line));
+            }
+        }
         report.files_scanned += 1;
+    }
+    // Sorted by (family, file, line): the first site for each family is
+    // canonical, and every site in a *different* file is flagged.
+    metric_sites.sort();
+    for i in 0..metric_sites.len() {
+        let (name, file, line) = &metric_sites[i];
+        let first = metric_sites.iter().find(|(n, _, _)| n == name).expect("name is present");
+        if &first.1 != file {
+            report.findings.push(Finding::new(
+                file,
+                *line,
+                Rule::MetricNameRegistry,
+                format!(
+                    "metric family `{name}` is also registered in {}:{}; each family \
+                     has exactly one registration site in the tree",
+                    first.1, first.2
+                ),
+            ));
+        }
     }
     Ok(report)
 }
@@ -220,10 +261,16 @@ fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
     Ok(())
 }
 
-/// Load `rust/LOCKS.md` from the repo root.
+/// Load `rust/LOCKS.md` (required) and `rust/OBSERVABILITY.md`
+/// (optional — when absent, no metric names are declared and W8 stays
+/// inert rather than failing the run) from the repo root.
 pub fn load_config(root: &Path) -> io::Result<LintConfig> {
     let text = fs::read_to_string(root.join("rust").join("LOCKS.md"))?;
-    Ok(LintConfig::parse_locks_md(&text))
+    let mut cfg = LintConfig::parse_locks_md(&text);
+    if let Ok(obs) = fs::read_to_string(root.join("rust").join("OBSERVABILITY.md")) {
+        cfg.metric_names = LintConfig::parse_observability_md(&obs);
+    }
+    Ok(cfg)
 }
 
 #[cfg(test)]
@@ -266,6 +313,21 @@ mod tests {
         assert_eq!(cfg.helpers.len(), 2);
         assert_eq!(cfg.helpers[0].name, "bump_epoch");
         assert_eq!(cfg.condvar_atomics, vec!["shutdown"]);
+    }
+
+    #[test]
+    fn observability_md_parser_reads_family_table() {
+        let md = "# Observability\nprose with `halign_stray` backticks\n\
+                  ## Metric families\n| family | kind |\n|---|---|\n\
+                  | `halign_tasks_run_total` | counter |\n\
+                  | `halign_request_seconds` | histogram |\n\
+                  - `halign_workers` — gauge bullet form\n\
+                  ## The /metrics endpoint\n- `curl /metrics` is not a family\n";
+        let names = LintConfig::parse_observability_md(md);
+        assert_eq!(
+            names,
+            vec!["halign_tasks_run_total", "halign_request_seconds", "halign_workers"]
+        );
     }
 
     #[test]

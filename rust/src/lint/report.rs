@@ -15,10 +15,11 @@ pub enum Rule {
     RelaxedHandshake,
     MetricsArity,
     CacheAtomicWrite,
+    MetricNameRegistry,
 }
 
 impl Rule {
-    /// Short ID printed in findings (`W1`…`W7`, `W0` for allow syntax).
+    /// Short ID printed in findings (`W1`…`W8`, `W0` for allow syntax).
     pub fn id(self) -> &'static str {
         match self {
             Rule::AllowSyntax => "W0",
@@ -29,6 +30,7 @@ impl Rule {
             Rule::RelaxedHandshake => "W5",
             Rule::MetricsArity => "W6",
             Rule::CacheAtomicWrite => "W7",
+            Rule::MetricNameRegistry => "W8",
         }
     }
 
@@ -43,6 +45,7 @@ impl Rule {
             Rule::RelaxedHandshake => "relaxed-handshake",
             Rule::MetricsArity => "metrics-arity",
             Rule::CacheAtomicWrite => "cache-atomic-write",
+            Rule::MetricNameRegistry => "metric-name-registry",
         }
     }
 
@@ -55,6 +58,7 @@ impl Rule {
             Rule::RelaxedHandshake,
             Rule::MetricsArity,
             Rule::CacheAtomicWrite,
+            Rule::MetricNameRegistry,
         ]
         .into_iter()
         .find(|r| r.allow_key() == key)

@@ -1,4 +1,4 @@
-//! The per-rule passes (W1–W7).  Every pass works on the scrubbed
+//! The per-rule passes (W1–W8).  Every pass works on the scrubbed
 //! source (comments and string contents blanked, offsets stable) and
 //! skips lines covered by the `#[cfg(test)]` mask.
 //!
@@ -43,6 +43,7 @@ pub fn run_all(ctx: &FileContext<'_>) -> Vec<Finding> {
     check_relaxed_handshake(ctx, &mut findings);
     check_metrics_arity(ctx, &mut findings);
     check_cache_atomic_write(ctx, &mut findings);
+    check_metric_names(ctx, &mut findings);
     findings
 }
 
@@ -759,6 +760,109 @@ fn check_cache_atomic_write(ctx: &FileContext<'_>, out: &mut Vec<Finding>) {
                     marker.trim_end_matches('(')
                 ),
             ));
+        }
+    }
+}
+
+// ---------------------------------------------------------------- W8 --
+
+/// The `Registry` methods that mint a new metric family.  Each marker
+/// carries its trailing `(` so `register_counter(` never matches inside
+/// `register_counter_labeled(`.
+const REGISTER_MARKERS: &[&str] = &[
+    "register_counter(",
+    "register_counter_labeled(",
+    "register_gauge(",
+    "register_histogram(",
+    "register_histogram_labeled(",
+];
+
+/// Metric family registrations in one file: `(family name, line)` for
+/// every non-test call to a `REGISTER_MARKERS` method whose first
+/// argument is a string literal.  Calls passing a variable name (the
+/// registry's own `register_counter` → `register_counter_labeled`
+/// delegation) and `fn` definition sites have no literal after the
+/// paren and fall out naturally.  Shared by [`check_metric_names`]
+/// (in-file checks) and `lint_tree` (the cross-file exactly-once check).
+pub fn metric_registrations(ctx: &FileContext<'_>) -> Vec<(String, usize)> {
+    let text = ctx.scrubbed.text.as_bytes();
+    let mut sites = Vec::new();
+    for marker in REGISTER_MARKERS {
+        let needle = marker.as_bytes();
+        let mut from = 0usize;
+        while let Some(p) = find_from(text, needle, from) {
+            from = p + 1;
+            if p > 0 && is_ident(text[p - 1]) {
+                continue;
+            }
+            let q = skip_ws(text, p + needle.len());
+            if q >= text.len() || text[q] != b'"' {
+                continue;
+            }
+            let line = ctx.line_of(p);
+            if ctx.in_test(line) {
+                continue;
+            }
+            // The scrubbed text keeps the delimiting quotes; the raw
+            // (unblanked) name lives in the string table at this offset.
+            if let Some(lit) = ctx.scrubbed.strings.iter().find(|s| s.offset == q) {
+                sites.push((lit.raw.clone(), line));
+            }
+        }
+    }
+    sites.sort_by(|a, b| a.1.cmp(&b.1));
+    sites
+}
+
+fn is_snake_case(name: &str) -> bool {
+    name.starts_with(|c: char| c.is_ascii_lowercase())
+        && name.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+}
+
+/// W8: every registered family name must be declared in
+/// `rust/OBSERVABILITY.md`, be snake_case, and be registered at exactly
+/// one site per file (labeled instances reuse the one site inside a
+/// loop).  Inert when no names are declared (the file is absent).
+fn check_metric_names(ctx: &FileContext<'_>, out: &mut Vec<Finding>) {
+    if ctx.cfg.metric_names.is_empty() {
+        return;
+    }
+    let mut first_seen: HashMap<String, usize> = HashMap::new();
+    for (name, line) in metric_registrations(ctx) {
+        if !is_snake_case(&name) {
+            out.push(Finding::new(
+                ctx.path,
+                line,
+                Rule::MetricNameRegistry,
+                format!(
+                    "metric family `{name}` is not snake_case; the naming contract in \
+                     rust/OBSERVABILITY.md requires `[a-z][a-z0-9_]*`"
+                ),
+            ));
+        } else if !ctx.cfg.metric_names.iter().any(|n| n == &name) {
+            out.push(Finding::new(
+                ctx.path,
+                line,
+                Rule::MetricNameRegistry,
+                format!(
+                    "metric family `{name}` is not declared in rust/OBSERVABILITY.md; \
+                     add it to the family table (or fix the name)"
+                ),
+            ));
+        }
+        match first_seen.get(&name) {
+            Some(&first) => out.push(Finding::new(
+                ctx.path,
+                line,
+                Rule::MetricNameRegistry,
+                format!(
+                    "metric family `{name}` is registered more than once in this file \
+                     (first at line {first}); register once and share the handle"
+                ),
+            )),
+            None => {
+                first_seen.insert(name, line);
+            }
         }
     }
 }

@@ -83,14 +83,21 @@ impl Args {
         })
     }
 
-    fn cluster(&self) -> Result<Cluster> {
+    fn cluster_config(&self) -> Result<ClusterConfig> {
         let workers = self.parse_or("workers", 8usize)?;
-        let cfg = match self.get("backend").unwrap_or("spark") {
+        let mut cfg = match self.get("backend").unwrap_or("spark") {
             "spark" => ClusterConfig::spark(workers),
             "hadoop" => ClusterConfig::hadoop(workers),
             other => bail!("--backend must be spark|hadoop, got {other:?}"),
         };
-        Ok(Cluster::new(cfg))
+        // 0 disables the lifecycle trace rings (the default everywhere
+        // except `serve`, which overrides it to feed /trace/<job>).
+        cfg.scheduler.trace_capacity = self.parse_or("trace-capacity", 0usize)?;
+        Ok(cfg)
+    }
+
+    fn cluster(&self) -> Result<Cluster> {
+        Ok(Cluster::new(self.cluster_config()?))
     }
 
     fn service(&self) -> Option<XlaService> {
@@ -136,8 +143,8 @@ fn print_usage() {
          USAGE:\n  halign2 gen --family mito|rrna|protein --count N [--length-scale F] [--seed S] --out data.fasta\n  \
          halign2 align --in data.fasta [--alphabet dna|protein] [--workers N] [--backend spark|hadoop]\n               [--artifacts DIR] [--out msa.fasta] [--tree tree.nwk]\n  \
          halign2 tree --in msa.fasta [--alphabet dna|protein] [--workers N] [--out tree.nwk]\n  \
-         halign2 bench-table --table t2|t3|t4|t5|f5|f6 [--quick true] [--scale F] [--workers N]\n  \
-         halign2 serve [--addr 127.0.0.1:8080] [--workers N] [--backend spark|hadoop]\n  \
+         halign2 bench-table --table t2|t3|t4|t5|f5|f6|f6skew|f6trace [--quick true] [--scale F] [--workers N]\n  \
+         halign2 serve [--addr 127.0.0.1:8080] [--workers N] [--backend spark|hadoop] [--trace-capacity N]\n  \
          halign2 info [--artifacts DIR]"
     );
 }
@@ -230,7 +237,7 @@ fn cmd_tree(args: &Args) -> Result<()> {
 }
 
 fn cmd_bench(args: &Args) -> Result<()> {
-    let table = args.get("table").context("--table t2|t3|t4|t5|f5|f6|f6skew required")?;
+    let table = args.get("table").context("--table t2|t3|t4|t5|f5|f6|f6skew|f6trace required")?;
     let cfg = BenchConfig {
         workers: args.parse_or("workers", 8usize)?,
         scale: args.parse_or("scale", 1.0f64)?,
@@ -238,6 +245,20 @@ fn cmd_bench(args: &Args) -> Result<()> {
         quick: args.parse_or("quick", false)?,
         seed: args.parse_or("seed", 0xBEEFu64)?,
     };
+    if table == "f6trace" {
+        // Exported scheduler traces (both queue architectures) instead
+        // of a TSV table; CI validates and archives these JSON files.
+        for (label, json) in bench::fig6_trace(&cfg) {
+            anyhow::ensure!(
+                halign2::obs::is_json_array(&json),
+                "trace {label} must be a valid JSON array"
+            );
+            let path = format!("trace_{label}.json");
+            std::fs::write(&path, &json)?;
+            println!("wrote {path} ({} bytes) — load in Perfetto / chrome://tracing", json.len());
+        }
+        return Ok(());
+    }
     let svc = args.service();
     let (title, rows) = match table {
         "t2" => ("Table 2 — genome MSA (time + avg SP)", bench::table2_genome(&cfg)),
@@ -274,13 +295,20 @@ fn cmd_bench(args: &Args) -> Result<()> {
 
 /// The paper's web-server contribution: POST /align and /tree over HTTP.
 fn cmd_serve(args: &Args) -> Result<()> {
-    let cluster = args.cluster()?;
+    let mut cfg = args.cluster_config()?;
+    if cfg.scheduler.trace_capacity == 0 {
+        // Serving defaults to traced: GET /trace/<job> needs live rings
+        // (pass --trace-capacity explicitly to resize).
+        cfg.scheduler.trace_capacity = 1 << 12;
+    }
+    let cluster = Cluster::new(cfg);
     let svc = args.service();
     let addr = args.get("addr").unwrap_or("127.0.0.1:8080").to_string();
     let server = halign2::server::Server::new(cluster, svc)?;
     let running = server.serve(&addr)?;
     println!("halign2 web server listening on {addr} (port {})", running.port);
-    println!("  GET  /          status    |  GET /health");
+    println!("  GET  /          status    |  GET /health  |  GET /metrics");
+    println!("  GET  /trace/<job hash>    Chrome trace-event JSON");
     println!("  POST /align     FASTA in, aligned FASTA out (?alphabet=dna|protein)");
     println!("  POST /tree      aligned FASTA in, Newick out");
     loop {

@@ -35,6 +35,12 @@ pub struct RunReport {
     /// Peak resident distance-matrix MB (tree rows: dense = O(n²) in the
     /// largest cluster, tiled = bounded by the distmat byte budget).
     pub distmat_peak_mb: Option<f64>,
+    /// Median worker-side task execution latency (ms), from the obs
+    /// registry's log2 histogram.
+    pub p50_ms: Option<f64>,
+    /// 99th-percentile task execution latency (ms) — the tail signal
+    /// means hide (see OBSERVABILITY.md).
+    pub p99_ms: Option<f64>,
     /// "-" rows: tool did not finish (OOM / unsupported / over budget).
     pub dnf: Option<String>,
 }
@@ -56,6 +62,8 @@ impl RunReport {
             lock_contentions: None,
             speculative_launches: None,
             distmat_peak_mb: None,
+            p50_ms: None,
+            p99_ms: None,
             dnf: Some(reason.into()),
         }
     }
@@ -71,6 +79,8 @@ impl RunReport {
         self.steal_batches = Some(stats.steal_batches);
         self.lock_contentions = Some(stats.lock_contentions);
         self.speculative_launches = Some(stats.speculative_launches);
+        self.p50_ms = Some(stats.task_p50_ms);
+        self.p99_ms = Some(stats.task_p99_ms);
         self
     }
 }
@@ -122,13 +132,13 @@ pub fn print_table(title: &str, reports: &[RunReport]) {
 
 /// Column names matching [`tsv_line`]'s fields — keep the two in sync
 /// here so every TSV emitter prints the same header.
-pub const TSV_HEADER: &str = "tool\tdataset\twall_s\tbusy_s\tmetric\tavg_max_mem_mb\tbusy_skew\tstolen\tsteal_batches\tlock_contention\tspeculative\tdistmat_peak_mb\tstatus";
+pub const TSV_HEADER: &str = "tool\tdataset\twall_s\tbusy_s\tmetric\tavg_max_mem_mb\tbusy_skew\tstolen\tsteal_batches\tlock_contention\tspeculative\tdistmat_peak_mb\tp50_ms\tp99_ms\tstatus";
 
 /// Machine-readable one-line record (appended to bench logs); fields as
 /// in [`TSV_HEADER`].
 pub fn tsv_line(r: &RunReport) -> String {
     format!(
-        "{}\t{}\t{:.3}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}",
+        "{}\t{}\t{:.3}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}",
         r.tool,
         r.dataset,
         r.wall.as_secs_f64(),
@@ -141,6 +151,8 @@ pub fn tsv_line(r: &RunReport) -> String {
         r.lock_contentions.map(|s| s.to_string()).unwrap_or_else(|| "-".into()),
         r.speculative_launches.map(|s| s.to_string()).unwrap_or_else(|| "-".into()),
         r.distmat_peak_mb.map(|m| format!("{m:.4}")).unwrap_or_else(|| "-".into()),
+        r.p50_ms.map(|m| format!("{m:.3}")).unwrap_or_else(|| "-".into()),
+        r.p99_ms.map(|m| format!("{m:.3}")).unwrap_or_else(|| "-".into()),
         r.dnf.clone().unwrap_or_else(|| "ok".into()),
     )
 }
@@ -150,7 +162,7 @@ mod tests {
     use super::*;
 
     #[test]
-    fn tsv_has_thirteen_fields() {
+    fn tsv_has_fifteen_fields() {
         let r = RunReport {
             tool: "halign2".into(),
             dataset: "dna1x".into(),
@@ -166,14 +178,23 @@ mod tests {
             lock_contentions: Some(2),
             speculative_launches: Some(1),
             distmat_peak_mb: Some(0.0625),
+            p50_ms: Some(1.5),
+            p99_ms: Some(42.75),
             dnf: None,
         };
         let line = tsv_line(&r);
-        assert_eq!(line.split('\t').count(), 13);
-        assert_eq!(TSV_HEADER.split('\t').count(), 13, "header matches row arity");
+        assert_eq!(line.split('\t').count(), 15);
+        assert_eq!(TSV_HEADER.split('\t').count(), 15, "header matches row arity");
         assert!(line.contains("1.250"));
         assert!(line.contains("0.0625"), "distmat peak column must render");
         assert!(TSV_HEADER.contains("distmat_peak_mb"));
+        assert!(line.contains("42.750"), "latency percentiles must render");
+        // The table5 smoke greps column 11 for distmat_peak_mb: the new
+        // latency columns must come after it, never shift it.
+        assert_eq!(TSV_HEADER.split('\t').nth(11), Some("distmat_peak_mb"));
+        assert_eq!(TSV_HEADER.split('\t').nth(12), Some("p50_ms"));
+        assert_eq!(TSV_HEADER.split('\t').nth(13), Some("p99_ms"));
+        assert!(TSV_HEADER.ends_with("status"));
     }
 
     #[test]

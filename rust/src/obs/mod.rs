@@ -1,0 +1,105 @@
+//! Unified observability: one metrics registry, one trace sink.
+//!
+//! Before this module, runtime statistics lived in five disconnected
+//! places — `WorkerMetrics`, `ClusterStats`, the cache counters, the
+//! TileStore spill counters, and `IoCounters` — none of them
+//! percentile-aware and none machine-scrapeable.  `obs` is the
+//! substrate they all register into:
+//!
+//! * [`registry`] — named atomic [`Counter`]s, [`Gauge`]s, and
+//!   log2-bucketed [`Histogram`]s behind a process-wide [`Registry`]
+//!   that renders the Prometheus text exposition format for the
+//!   server's `GET /metrics`.
+//! * [`trace`] — bounded per-lane ring buffers recording task
+//!   lifecycle events, drained into Chrome trace-event JSON so a fig6
+//!   run renders as a worker×time Gantt chart in Perfetto.
+//!
+//! Everything is `std`-only and lock-free on the record path; the
+//! naming contract and the machine-parsed family table live in
+//! `rust/OBSERVABILITY.md` (enforced by pallas-lint W8).
+
+pub mod registry;
+pub mod trace;
+
+use std::sync::Arc;
+
+pub use registry::{Counter, Gauge, HistSnapshot, Histogram, Registry};
+pub use trace::{chrome_trace_json, is_json_array, TraceEvent, TraceKind, TraceSink};
+
+/// The executor's registered instruments, created once per cluster in
+/// `Executor::with_options` and shared (via `Arc`) with both scheduler
+/// backends.  This is the single registration site for the engine
+/// metric families (pallas-lint W8 pins that).
+#[derive(Debug)]
+pub struct EngineObs {
+    /// Tasks whose closures ran to completion (either attempt).
+    pub tasks_run: Arc<Counter>,
+    /// Task closures that panicked or were failed by fault injection.
+    pub task_failures: Arc<Counter>,
+    /// Jobs moved between workers by steals (sum of batch sizes).
+    pub tasks_stolen: Arc<Counter>,
+    /// Steal operations (each moving one or more jobs).
+    pub steal_batches: Arc<Counter>,
+    /// `try_lock` misses on the scheduler locks (sharded: shard deques;
+    /// global: the single state lock).
+    pub lock_contention: Arc<Counter>,
+    /// Speculative re-launches of straggler tasks.
+    pub speculative_launches: Arc<Counter>,
+    /// Worker-side task execution latency, recorded in nanoseconds.
+    pub task_exec: Arc<Histogram>,
+    /// Worker thread count for this cluster.
+    pub workers: Arc<Gauge>,
+    /// Lifecycle trace rings (capacity 0 = tracing disabled).
+    pub trace: Arc<TraceSink>,
+}
+
+impl EngineObs {
+    pub fn register(
+        registry: &Registry,
+        num_workers: usize,
+        trace_capacity: usize,
+    ) -> Arc<EngineObs> {
+        let trace_dropped = registry.register_counter(
+            "halign_trace_dropped_total",
+            "Trace events dropped to ring-buffer overflow",
+        );
+        let workers = registry.register_gauge(
+            "halign_workers",
+            "Worker threads in the executor pool",
+        );
+        workers.set(num_workers as u64);
+        Arc::new(EngineObs {
+            tasks_run: registry.register_counter(
+                "halign_tasks_run_total",
+                "Task closures executed to completion",
+            ),
+            task_failures: registry.register_counter(
+                "halign_task_failures_total",
+                "Task closures that panicked or were fault-injected",
+            ),
+            tasks_stolen: registry.register_counter(
+                "halign_tasks_stolen_total",
+                "Jobs migrated between workers by work-stealing",
+            ),
+            steal_batches: registry.register_counter(
+                "halign_steal_batches_total",
+                "Steal operations (each moves a batch of jobs)",
+            ),
+            lock_contention: registry.register_counter(
+                "halign_lock_contention_total",
+                "Scheduler lock try_lock misses",
+            ),
+            speculative_launches: registry.register_counter(
+                "halign_speculative_launches_total",
+                "Straggler tasks re-launched speculatively",
+            ),
+            task_exec: registry.register_histogram(
+                "halign_task_exec_seconds",
+                "Worker-side task execution latency",
+            ),
+            workers,
+            // Driver gets its own lane after the workers.
+            trace: TraceSink::new(num_workers + 1, trace_capacity, trace_dropped),
+        })
+    }
+}

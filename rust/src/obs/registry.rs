@@ -1,0 +1,551 @@
+//! Process-wide metrics registry: named counters, gauges and
+//! log2-bucketed latency histograms behind `Arc` handles.
+//!
+//! Design constraints (see `rust/OBSERVABILITY.md` for the contract):
+//!
+//! * **Lock-free on the record path.**  A [`Counter`] increment is one
+//!   `fetch_add`; a [`Histogram::record`] is three `fetch_add`s plus a
+//!   conditional `fetch_max` — no mutex is ever taken while recording,
+//!   so instrumented code (including the executor's worker hot path)
+//!   cannot block on observability.  The registry's own mutex guards
+//!   only registration and scrape-time enumeration, both cold paths.
+//! * **Exact merge.**  Histograms are plain per-bucket counts, so two
+//!   snapshots merge by integer addition with no approximation beyond
+//!   the bucketing itself.
+//! * **Dependency-free rendering.**  [`Registry::render_prometheus`]
+//!   emits the Prometheus text exposition format by hand (the
+//!   `server/http.rs` discipline): `# HELP`/`# TYPE` preambles,
+//!   `family{labels} value` samples, and cumulative `_bucket`/`_sum`/
+//!   `_count` series for histograms.
+//!
+//! Unit convention: histograms record **nanoseconds** and their family
+//! names end in `_seconds`; rendering divides by 1e9 so scrapes see
+//! base-unit seconds, while in-process percentile math stays integer.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Monotonic counter.  Also exposes `AtomicU64`-shaped shims
+/// (`fetch_add`/`fetch_sub`/`load`) so a struct field that used to be a
+/// bare atomic can become a registered counter without touching every
+/// call site; the shims ignore the caller's ordering and use `Relaxed`
+/// (counters are statistics, not synchronization).
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.v.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+
+    /// `AtomicU64` compatibility shim (ordering ignored, always Relaxed).
+    pub fn fetch_add(&self, n: u64, _order: Ordering) -> u64 {
+        self.v.fetch_add(n, Ordering::Relaxed)
+    }
+
+    /// `AtomicU64` compatibility shim; used by the shuffle re-put
+    /// correction, which retracts a duplicate map task's bytes before
+    /// crediting the fresh ones.
+    pub fn fetch_sub(&self, n: u64, _order: Ordering) -> u64 {
+        self.v.fetch_sub(n, Ordering::Relaxed)
+    }
+
+    /// `AtomicU64` compatibility shim (ordering ignored, always Relaxed).
+    pub fn load(&self, _order: Ordering) -> u64 {
+        self.get()
+    }
+}
+
+/// Last-write-wins instantaneous value (resident bytes, worker count).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    v: AtomicU64,
+}
+
+impl Gauge {
+    pub fn set(&self, n: u64) {
+        self.v.store(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Bucket count: one per power of two plus the zero bucket —
+/// `bucket_index` maps 0 → 0 and v ∈ [2^(k-1), 2^k) → k, so index 64
+/// catches values in the top half of the u64 range.
+pub const NUM_BUCKETS: usize = 65;
+
+/// Which bucket a recorded value lands in (0 for 0, else
+/// `64 - leading_zeros`, i.e. one past the highest set bit).
+pub fn bucket_index(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        64 - v.leading_zeros() as usize
+    }
+}
+
+/// Inclusive lower bound of bucket `i` (0 for the zero bucket).
+pub fn bucket_lower_bound(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else {
+        1u64 << (i - 1)
+    }
+}
+
+/// Inclusive upper bound of bucket `i` (`u64::MAX` for the top bucket).
+pub fn bucket_upper_bound(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else if i >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << i) - 1
+    }
+}
+
+/// Log2-bucketed histogram.  Recording is a few relaxed atomic RMWs on
+/// per-bucket counters — safe from any number of threads concurrently,
+/// never blocking.  Reads go through [`Histogram::snapshot`].
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>, // NUM_BUCKETS slots
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self {
+            buckets: (0..NUM_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one observation (by convention, nanoseconds).
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Point-in-time copy.  The count is derived from the bucket counts
+    /// themselves, so `count == buckets.sum()` holds by construction
+    /// even under concurrent recording (sum/max may lag by in-flight
+    /// records; bucket counts are individually exact).
+    pub fn snapshot(&self) -> HistSnapshot {
+        let buckets: Vec<u64> =
+            self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let count = buckets.iter().sum();
+        HistSnapshot {
+            buckets,
+            count,
+            sum: self.sum.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Shorthand: percentile of a fresh snapshot, in milliseconds
+    /// (recording convention is nanoseconds).
+    pub fn percentile_ms(&self, q: f64) -> f64 {
+        self.snapshot().percentile(q) as f64 / 1e6
+    }
+}
+
+/// Frozen histogram state: mergeable and queryable.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub sum: u64,
+    pub max: u64,
+}
+
+impl HistSnapshot {
+    pub fn empty() -> Self {
+        Self { buckets: vec![0; NUM_BUCKETS], count: 0, sum: 0, max: 0 }
+    }
+
+    /// Exact merge: integer addition per bucket (associative and
+    /// commutative — the property the obs_prop suite pins).
+    pub fn merge(&self, other: &HistSnapshot) -> HistSnapshot {
+        let buckets: Vec<u64> = (0..NUM_BUCKETS)
+            .map(|i| {
+                self.buckets.get(i).copied().unwrap_or(0)
+                    + other.buckets.get(i).copied().unwrap_or(0)
+            })
+            .collect();
+        let count = buckets.iter().sum();
+        HistSnapshot {
+            buckets,
+            count,
+            sum: self.sum + other.sum,
+            max: self.max.max(other.max),
+        }
+    }
+
+    /// Value at quantile `q` in [0, 1]: the upper bound of the bucket
+    /// where the cumulative count crosses `ceil(q * count)`, capped at
+    /// the recorded max so tail quantiles never exceed any observation.
+    /// Returns 0 for an empty snapshot.  Monotone in `q` by cumulative
+    /// construction.
+    pub fn percentile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_upper_bound(i).min(self.max);
+            }
+        }
+        self.max
+    }
+}
+
+/// What a family holds; a family's kind is fixed by its first
+/// registration.
+#[derive(Debug, Clone)]
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+impl Metric {
+    fn kind(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Histogram(_) => "histogram",
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Instance {
+    labels: Vec<(String, String)>,
+    metric: Metric,
+}
+
+#[derive(Debug)]
+struct Family {
+    help: String,
+    instances: Vec<Instance>,
+}
+
+/// Named metric families, each holding one instance per distinct label
+/// set.  Registration is idempotent: re-registering the same
+/// (family, labels) pair returns the existing handle, so a lazy
+/// register-on-use call site stays cheap and never double-counts.
+#[derive(Debug, Default)]
+pub struct Registry {
+    families: Mutex<BTreeMap<String, Family>>,
+}
+
+impl Registry {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    pub fn register_counter(&self, name: &str, help: &str) -> Arc<Counter> {
+        self.register_counter_labeled(name, help, &[])
+    }
+
+    pub fn register_counter_labeled(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+    ) -> Arc<Counter> {
+        let fresh = Metric::Counter(Arc::new(Counter::default()));
+        match self.intern(name, help, labels, fresh) {
+            Metric::Counter(c) => c,
+            // Kind clash with an existing family: hand back a live but
+            // unregistered counter rather than corrupting the family
+            // (pallas-lint W8 keeps registrations single-sited, so this
+            // arm is a programming-error escape hatch, not a code path).
+            _ => Arc::new(Counter::default()),
+        }
+    }
+
+    pub fn register_gauge(&self, name: &str, help: &str) -> Arc<Gauge> {
+        let fresh = Metric::Gauge(Arc::new(Gauge::default()));
+        match self.intern(name, help, &[], fresh) {
+            Metric::Gauge(g) => g,
+            _ => Arc::new(Gauge::default()),
+        }
+    }
+
+    pub fn register_histogram(&self, name: &str, help: &str) -> Arc<Histogram> {
+        self.register_histogram_labeled(name, help, &[])
+    }
+
+    pub fn register_histogram_labeled(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+    ) -> Arc<Histogram> {
+        let fresh = Metric::Histogram(Arc::new(Histogram::default()));
+        match self.intern(name, help, labels, fresh) {
+            Metric::Histogram(h) => h,
+            _ => Arc::new(Histogram::default()),
+        }
+    }
+
+    fn intern(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        fresh: Metric,
+    ) -> Metric {
+        let labels: Vec<(String, String)> =
+            labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+        let mut fams = self.families.lock().unwrap();
+        let fam = fams.entry(name.to_string()).or_insert_with(|| Family {
+            help: help.to_string(),
+            instances: Vec::new(),
+        });
+        if let Some(inst) = fam.instances.iter().find(|i| i.labels == labels) {
+            return inst.metric.clone();
+        }
+        if let Some(first) = fam.instances.first() {
+            if first.metric.kind() != fresh.kind() {
+                return fresh; // kind clash: caller gets an unregistered handle
+            }
+        }
+        fam.instances.push(Instance { labels, metric: fresh.clone() });
+        fresh
+    }
+
+    /// Every registered family name, sorted (drives the W8 fixture
+    /// assertions and the status page).
+    pub fn family_names(&self) -> Vec<String> {
+        self.families.lock().unwrap().keys().cloned().collect()
+    }
+
+    /// All instances of a histogram family as (rendered label set,
+    /// handle) pairs — the status page's per-route percentile source.
+    pub fn histograms(&self, family: &str) -> Vec<(String, Arc<Histogram>)> {
+        let fams = self.families.lock().unwrap();
+        let Some(fam) = fams.get(family) else {
+            return Vec::new();
+        };
+        fam.instances
+            .iter()
+            .filter_map(|i| match &i.metric {
+                Metric::Histogram(h) => Some((label_str(&i.labels), h.clone())),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Prometheus text exposition format (version 0.0.4), hand-rolled.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        let fams = self.families.lock().unwrap();
+        for (name, fam) in fams.iter() {
+            let Some(kind) = fam.instances.first().map(|i| i.metric.kind()) else {
+                continue;
+            };
+            out.push_str(&format!("# HELP {name} {}\n", fam.help));
+            out.push_str(&format!("# TYPE {name} {kind}\n"));
+            for inst in &fam.instances {
+                let labels = label_str(&inst.labels);
+                match &inst.metric {
+                    Metric::Counter(c) => {
+                        out.push_str(&sample(name, "", &labels, &c.get().to_string()));
+                    }
+                    Metric::Gauge(g) => {
+                        out.push_str(&sample(name, "", &labels, &g.get().to_string()));
+                    }
+                    Metric::Histogram(h) => {
+                        render_histogram(&mut out, name, &labels, &h.snapshot());
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One exposition line: `name[_suffix]{labels} value`.
+fn sample(name: &str, suffix: &str, labels: &str, value: &str) -> String {
+    if labels.is_empty() {
+        format!("{name}{suffix} {value}\n")
+    } else {
+        format!("{name}{suffix}{{{labels}}} {value}\n")
+    }
+}
+
+/// Cumulative `_bucket` series over the non-empty log2 buckets, plus
+/// the mandatory `+Inf` bucket and `_sum`/`_count`.  `le` bounds and
+/// `_sum` are converted from recorded nanoseconds to seconds (the
+/// `_seconds` naming convention).
+fn render_histogram(out: &mut String, name: &str, labels: &str, snap: &HistSnapshot) {
+    let mut cum = 0u64;
+    for (i, &c) in snap.buckets.iter().enumerate() {
+        if c == 0 {
+            continue;
+        }
+        cum += c;
+        let le = bucket_upper_bound(i) as f64 / 1e9;
+        let with_le = if labels.is_empty() {
+            format!("le=\"{le}\"")
+        } else {
+            format!("{labels},le=\"{le}\"")
+        };
+        out.push_str(&sample(name, "_bucket", &with_le, &cum.to_string()));
+    }
+    let inf = if labels.is_empty() {
+        "le=\"+Inf\"".to_string()
+    } else {
+        format!("{labels},le=\"+Inf\"")
+    };
+    out.push_str(&sample(name, "_bucket", &inf, &snap.count.to_string()));
+    out.push_str(&sample(name, "_sum", labels, &format!("{}", snap.sum as f64 / 1e9)));
+    out.push_str(&sample(name, "_count", labels, &snap.count.to_string()));
+}
+
+fn label_str(labels: &[(String, String)]) -> String {
+    labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_bounds_bracket_their_values() {
+        for v in [0u64, 1, 2, 3, 7, 8, 1023, 1024, u64::MAX / 2, u64::MAX] {
+            let i = bucket_index(v);
+            assert!(bucket_lower_bound(i) <= v, "lower({i}) <= {v}");
+            assert!(v <= bucket_upper_bound(i), "{v} <= upper({i})");
+        }
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+    }
+
+    #[test]
+    fn percentiles_are_monotone_and_capped_at_max() {
+        let h = Histogram::new();
+        for v in [10u64, 20, 30, 1000, 5000] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 5);
+        let mut prev = 0;
+        for q in [0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+            let p = s.percentile(q);
+            assert!(p >= prev, "percentile must be monotone in q");
+            assert!(p <= s.max, "percentile can never exceed the recorded max");
+            prev = p;
+        }
+        assert_eq!(s.percentile(1.0), 5000, "p100 of this set is its max");
+        assert_eq!(HistSnapshot::empty().percentile(0.5), 0);
+    }
+
+    #[test]
+    fn merge_is_exact_and_associative() {
+        let mk = |vals: &[u64]| {
+            let h = Histogram::new();
+            for &v in vals {
+                h.record(v);
+            }
+            h.snapshot()
+        };
+        let a = mk(&[1, 2, 3]);
+        let b = mk(&[100, 200]);
+        let c = mk(&[7]);
+        assert_eq!(a.merge(&b).merge(&c), a.merge(&b.merge(&c)));
+        assert_eq!(a.merge(&b).count, 5);
+        assert_eq!(a.merge(&b).sum, 306);
+        assert_eq!(a.merge(&b).max, 200);
+        assert_eq!(a.merge(&b), b.merge(&a), "merge is commutative");
+    }
+
+    #[test]
+    fn registration_is_idempotent_per_label_set() {
+        let r = Registry::new();
+        let c1 = r.register_counter("requests_total", "requests");
+        let c2 = r.register_counter("requests_total", "requests");
+        c1.inc();
+        assert_eq!(c2.get(), 1, "same family+labels must share one counter");
+        let l1 = r.register_counter_labeled("requests_total", "requests", &[("route", "a")]);
+        l1.add(5);
+        assert_eq!(c1.get(), 1, "labeled instance is distinct");
+        assert_eq!(r.family_names(), vec!["requests_total".to_string()]);
+    }
+
+    #[test]
+    fn prometheus_rendering_has_types_samples_and_buckets() {
+        let r = Registry::new();
+        r.register_counter("jobs_total", "jobs").add(3);
+        r.register_gauge("resident_bytes", "bytes").set(42);
+        let h = r.register_histogram_labeled(
+            "req_seconds",
+            "latency",
+            &[("route", "align")],
+        );
+        h.record(1_000_000); // 1ms
+        h.record(2_000_000);
+        let text = r.render_prometheus();
+        assert!(text.contains("# TYPE jobs_total counter"));
+        assert!(text.contains("jobs_total 3"));
+        assert!(text.contains("# TYPE resident_bytes gauge"));
+        assert!(text.contains("resident_bytes 42"));
+        assert!(text.contains("# TYPE req_seconds histogram"));
+        assert!(text.contains("req_seconds_bucket{route=\"align\",le=\"+Inf\"} 2"));
+        assert!(text.contains("req_seconds_count{route=\"align\"} 2"));
+        assert!(text.contains("req_seconds_sum{route=\"align\"}"));
+    }
+
+    #[test]
+    fn histogram_family_enumeration_feeds_the_status_page() {
+        let r = Registry::new();
+        r.register_histogram_labeled("req_seconds", "latency", &[("route", "a")])
+            .record(5);
+        r.register_histogram_labeled("req_seconds", "latency", &[("route", "b")])
+            .record(7);
+        let all = r.histograms("req_seconds");
+        assert_eq!(all.len(), 2);
+        assert_eq!(all[0].0, "route=\"a\"");
+        assert!(r.histograms("nope").is_empty());
+    }
+}

@@ -1,0 +1,547 @@
+//! Task-lifecycle tracing: bounded per-lane ring buffers drained into
+//! Chrome trace-event JSON (loadable in Perfetto / `chrome://tracing`).
+//!
+//! The recording path is built for the executor's worker hot loop:
+//!
+//! * **Never blocks.**  [`TraceSink::emit`] claims a slot with one
+//!   `fetch_add` on the lane's head counter and writes three atomic
+//!   words — no mutex, no allocation, no syscall.  When the ring is
+//!   full the claim simply wraps, dropping the oldest event and
+//!   bumping the shared `trace_dropped` counter; a slow drainer can
+//!   lose history but can never stall a worker.
+//! * **Compiles to a cheap no-op when disabled.**  A sink built with
+//!   capacity 0 returns from `emit` after a single field load, so
+//!   un-traced runs (the default) pay essentially nothing.
+//! * **Tear-resistant drain.**  Each slot is three `AtomicU64` words;
+//!   the writer stores the kind word last with `Release` and the
+//!   drainer reads it first with `Acquire`, then discards any slot
+//!   whose absolute index could have been overwritten while copying
+//!   (`index + capacity < head_after`).  A drain that races a burst of
+//!   writes may miss a bounded number of in-flight events; it never
+//!   yields a torn one and is exact once writers quiesce (the normal
+//!   case: traces are drained at job boundaries).
+//!
+//! Lane convention: lanes `0..num_workers` are worker threads, lane
+//! `num_workers` is the driver.  Timestamps are nanoseconds since sink
+//! creation, rendered as microsecond `ts` values in the trace JSON.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::registry::Counter;
+
+/// Task lifecycle event kinds.  Discriminants start at 1 so a zeroed
+/// (never-written) slot word can be recognized and skipped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceKind {
+    /// Task handed to a queue; payload = task ordinal.
+    Enqueue = 1,
+    /// Thief moved work from a victim; payload = batch size.
+    Steal = 2,
+    /// Straggler re-launched; payload = task ordinal.
+    SpeculativeLaunch = 3,
+    /// Worker began executing; payload = task ordinal.
+    Start = 4,
+    /// Worker finished executing; payload = task ordinal.
+    Finish = 5,
+    /// Killed worker's deque drained back to the pool; payload =
+    /// number of drained jobs.
+    KillDrain = 6,
+    /// Tile or artifact spilled to disk; payload = bytes.
+    Spill = 7,
+    /// Artifact cache hit; payload = 0.
+    CacheHit = 8,
+    /// Artifact cache profile-append; payload = 0.
+    CacheAppend = 9,
+    /// Artifact cache miss (full recompute); payload = 0.
+    CacheMiss = 10,
+}
+
+impl TraceKind {
+    fn from_u64(v: u64) -> Option<TraceKind> {
+        use TraceKind::*;
+        Some(match v {
+            1 => Enqueue,
+            2 => Steal,
+            3 => SpeculativeLaunch,
+            4 => Start,
+            5 => Finish,
+            6 => KillDrain,
+            7 => Spill,
+            8 => CacheHit,
+            9 => CacheAppend,
+            10 => CacheMiss,
+            _ => return None,
+        })
+    }
+
+    /// Event name in the exported trace.
+    pub fn name(self) -> &'static str {
+        use TraceKind::*;
+        match self {
+            Enqueue => "enqueue",
+            Steal => "steal",
+            SpeculativeLaunch => "speculative_launch",
+            Start => "task",
+            Finish => "task",
+            KillDrain => "kill_drain",
+            Spill => "spill",
+            CacheHit => "cache_hit",
+            CacheAppend => "cache_append",
+            CacheMiss => "cache_miss",
+        }
+    }
+}
+
+/// One drained event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub nanos: u64,
+    pub lane: usize,
+    pub kind: TraceKind,
+    pub payload: u64,
+}
+
+/// Fixed-capacity multi-writer ring.  Slots are claimed by a
+/// `fetch_add` on `head` (every claim gets a unique absolute index, so
+/// concurrent writers never share a slot); claims past capacity wrap
+/// and overwrite the oldest slot.
+struct TraceRing {
+    /// 3 words per slot: nanos, kind, payload.  Kind is written last
+    /// (Release) and read first (Acquire) so a non-zero kind implies
+    /// the other two words are from the same event.
+    slots: Vec<AtomicU64>,
+    head: AtomicU64,
+    capacity: usize,
+}
+
+impl TraceRing {
+    fn new(capacity: usize) -> Self {
+        Self {
+            slots: (0..capacity * 3).map(|_| AtomicU64::new(0)).collect(),
+            head: AtomicU64::new(0),
+            capacity,
+        }
+    }
+
+    /// Returns true if this push displaced an older event.
+    fn push(&self, nanos: u64, kind: TraceKind, payload: u64) -> bool {
+        let h = self.head.fetch_add(1, Ordering::Relaxed);
+        let base = (h as usize % self.capacity) * 3;
+        self.slots[base].store(nanos, Ordering::Relaxed);
+        self.slots[base + 2].store(payload, Ordering::Relaxed);
+        self.slots[base + 1].store(kind as u64, Ordering::Release);
+        h as usize >= self.capacity
+    }
+
+    /// Copy out events with absolute index in `[since, head)`, skipping
+    /// overwritten and in-flight slots.  Returns (events tagged with
+    /// their absolute index, head at drain time).
+    fn drain_since(&self, lane: usize, since: u64) -> (Vec<(u64, TraceEvent)>, u64) {
+        let head_before = self.head.load(Ordering::Acquire);
+        let lo = since.max(head_before.saturating_sub(self.capacity as u64));
+        let mut out = Vec::new();
+        for idx in lo..head_before {
+            let base = (idx as usize % self.capacity) * 3;
+            let kind_word = self.slots[base + 1].load(Ordering::Acquire);
+            let Some(kind) = TraceKind::from_u64(kind_word) else {
+                continue; // claimed but not yet fully written
+            };
+            let nanos = self.slots[base].load(Ordering::Relaxed);
+            let payload = self.slots[base + 2].load(Ordering::Relaxed);
+            out.push((idx, TraceEvent { nanos, lane, kind, payload }));
+        }
+        // Any slot whose index could have been reclaimed while we were
+        // copying may hold a mix of old and new words: discard it.
+        let head_after = self.head.load(Ordering::Acquire);
+        out.retain(|(idx, _)| idx + self.capacity as u64 >= head_after);
+        (out, head_before)
+    }
+}
+
+/// Per-lane trace rings plus the shared drop counter.  Cheaply
+/// shareable (`Arc`) between the executor, the driver, and the server.
+pub struct TraceSink {
+    rings: Vec<TraceRing>,
+    origin: Instant,
+    dropped: Arc<Counter>,
+    /// Per-lane absolute index of the last `drain_new` high-water mark.
+    /// Cold path only (job boundaries); never taken while emitting.
+    watermarks: Mutex<Vec<u64>>,
+    capacity: usize,
+    lanes: usize,
+}
+
+impl TraceSink {
+    /// `capacity` is per lane; 0 disables tracing entirely.
+    pub fn new(num_lanes: usize, capacity: usize, dropped: Arc<Counter>) -> Arc<Self> {
+        let rings = if capacity == 0 {
+            Vec::new()
+        } else {
+            (0..num_lanes).map(|_| TraceRing::new(capacity)).collect()
+        };
+        Arc::new(Self {
+            rings,
+            origin: Instant::now(),
+            dropped,
+            watermarks: Mutex::new(vec![0; num_lanes]),
+            capacity,
+            lanes: num_lanes,
+        })
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.capacity > 0
+    }
+
+    pub fn num_lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Record one event.  No-op when disabled or the lane is out of
+    /// range; never blocks.
+    pub fn emit(&self, lane: usize, kind: TraceKind, payload: u64) {
+        if self.capacity == 0 {
+            return;
+        }
+        let Some(ring) = self.rings.get(lane) else {
+            return;
+        };
+        let nanos = self.origin.elapsed().as_nanos() as u64;
+        if ring.push(nanos, kind, payload) {
+            self.dropped.inc();
+        }
+    }
+
+    /// Drain every event recorded since the previous `drain_new` call,
+    /// across all lanes, sorted by timestamp.  Intended for job
+    /// boundaries: each job's trace is the delta since the last drain.
+    pub fn drain_new(&self) -> Vec<TraceEvent> {
+        let mut marks = self.watermarks.lock().unwrap();
+        let mut events = Vec::new();
+        for (lane, ring) in self.rings.iter().enumerate() {
+            let (mut chunk, head) = ring.drain_since(lane, marks[lane]);
+            marks[lane] = head;
+            events.extend(chunk.drain(..).map(|(_, e)| e));
+        }
+        events.sort_by_key(|e| (e.nanos, e.lane));
+        events
+    }
+
+    /// Total events dropped to overflow across all lanes.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.get()
+    }
+}
+
+impl std::fmt::Debug for TraceSink {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TraceSink")
+            .field("lanes", &self.rings.len())
+            .field("capacity", &self.capacity)
+            .field("dropped", &self.dropped.get())
+            .finish()
+    }
+}
+
+/// Render drained events as a Chrome trace-event JSON array.
+///
+/// * `Start`/`Finish` pairs become `B`/`E` duration events (a worker
+///   runs one task at a time, so they nest correctly per thread).
+/// * Everything else becomes a thread-scoped instant event (`"i"`).
+/// * Lane `n` maps to `tid` `n + 1`; the last lane is named `driver`,
+///   the rest `worker <n>`, via `thread_name` metadata events.
+/// * `ts` is microseconds (float) since the sink's origin, the unit
+///   the trace-event spec expects.
+pub fn chrome_trace_json(events: &[TraceEvent], num_lanes: usize) -> String {
+    let mut parts: Vec<String> = Vec::with_capacity(events.len() + num_lanes);
+    for lane in 0..num_lanes {
+        let name = if lane + 1 == num_lanes && num_lanes > 1 {
+            "driver".to_string()
+        } else {
+            format!("worker {lane}")
+        };
+        parts.push(format!(
+            "{{\"ph\":\"M\",\"name\":\"thread_name\",\"pid\":1,\"tid\":{},\
+             \"args\":{{\"name\":\"{name}\"}}}}",
+            lane + 1
+        ));
+    }
+    for e in events {
+        let ts = e.nanos as f64 / 1000.0;
+        let tid = e.lane + 1;
+        let name = e.kind.name();
+        let part = match e.kind {
+            TraceKind::Start => format!(
+                "{{\"ph\":\"B\",\"name\":\"{name}\",\"cat\":\"task\",\
+                 \"pid\":1,\"tid\":{tid},\"ts\":{ts},\
+                 \"args\":{{\"ordinal\":{}}}}}",
+                e.payload
+            ),
+            TraceKind::Finish => format!(
+                "{{\"ph\":\"E\",\"name\":\"{name}\",\"cat\":\"task\",\
+                 \"pid\":1,\"tid\":{tid},\"ts\":{ts},\
+                 \"args\":{{\"ordinal\":{}}}}}",
+                e.payload
+            ),
+            _ => format!(
+                "{{\"ph\":\"i\",\"name\":\"{name}\",\"cat\":\"sched\",\
+                 \"pid\":1,\"tid\":{tid},\"ts\":{ts},\"s\":\"t\",\
+                 \"args\":{{\"payload\":{}}}}}",
+                e.payload
+            ),
+        };
+        parts.push(part);
+    }
+    format!("[{}]", parts.join(","))
+}
+
+/// Minimal JSON validator: true iff `text` is one syntactically valid
+/// JSON array (the Chrome trace-event container format).  Used by the
+/// fig6 trace test and the serve bench to verify exports in-tree
+/// without a JSON dependency.
+pub fn is_json_array(text: &str) -> bool {
+    let b = text.as_bytes();
+    let mut pos = 0usize;
+    skip_ws(b, &mut pos);
+    if pos >= b.len() || b[pos] != b'[' {
+        return false;
+    }
+    if !parse_value(b, &mut pos) {
+        return false;
+    }
+    skip_ws(b, &mut pos);
+    pos == b.len()
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> bool {
+    skip_ws(b, pos);
+    let Some(&c) = b.get(*pos) else {
+        return false;
+    };
+    match c {
+        b'[' => parse_seq(b, pos, b']', |b, pos| parse_value(b, pos)),
+        b'{' => parse_seq(b, pos, b'}', |b, pos| {
+            skip_ws(b, pos);
+            if !parse_string(b, pos) {
+                return false;
+            }
+            skip_ws(b, pos);
+            if b.get(*pos) != Some(&b':') {
+                return false;
+            }
+            *pos += 1;
+            parse_value(b, pos)
+        }),
+        b'"' => parse_string(b, pos),
+        b't' => eat(b, pos, b"true"),
+        b'f' => eat(b, pos, b"false"),
+        b'n' => eat(b, pos, b"null"),
+        b'-' | b'0'..=b'9' => parse_number(b, pos),
+        _ => false,
+    }
+}
+
+fn parse_seq(
+    b: &[u8],
+    pos: &mut usize,
+    close: u8,
+    mut item: impl FnMut(&[u8], &mut usize) -> bool,
+) -> bool {
+    *pos += 1; // opening bracket/brace
+    skip_ws(b, pos);
+    if b.get(*pos) == Some(&close) {
+        *pos += 1;
+        return true;
+    }
+    loop {
+        if !item(b, pos) {
+            return false;
+        }
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            Some(&b',') => {
+                *pos += 1;
+            }
+            Some(&c) if c == close => {
+                *pos += 1;
+                return true;
+            }
+            _ => return false,
+        }
+    }
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> bool {
+    if b.get(*pos) != Some(&b'"') {
+        return false;
+    }
+    *pos += 1;
+    while let Some(&c) = b.get(*pos) {
+        match c {
+            b'"' => {
+                *pos += 1;
+                return true;
+            }
+            b'\\' => *pos += 2,
+            _ => *pos += 1,
+        }
+    }
+    false
+}
+
+fn parse_number(b: &[u8], pos: &mut usize) -> bool {
+    let start = *pos;
+    if b.get(*pos) == Some(&b'-') {
+        *pos += 1;
+    }
+    let digits_start = *pos;
+    while matches!(b.get(*pos), Some(b'0'..=b'9')) {
+        *pos += 1;
+    }
+    if *pos == digits_start {
+        return false;
+    }
+    if b.get(*pos) == Some(&b'.') {
+        *pos += 1;
+        while matches!(b.get(*pos), Some(b'0'..=b'9')) {
+            *pos += 1;
+        }
+    }
+    if matches!(b.get(*pos), Some(b'e') | Some(b'E')) {
+        *pos += 1;
+        if matches!(b.get(*pos), Some(b'+') | Some(b'-')) {
+            *pos += 1;
+        }
+        let exp_start = *pos;
+        while matches!(b.get(*pos), Some(b'0'..=b'9')) {
+            *pos += 1;
+        }
+        if *pos == exp_start {
+            return false;
+        }
+    }
+    *pos > start
+}
+
+fn eat(b: &[u8], pos: &mut usize, word: &[u8]) -> bool {
+    if b.len() >= *pos + word.len() && &b[*pos..*pos + word.len()] == word {
+        *pos += word.len();
+        true
+    } else {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sink(lanes: usize, cap: usize) -> Arc<TraceSink> {
+        TraceSink::new(lanes, cap, Arc::new(Counter::default()))
+    }
+
+    #[test]
+    fn disabled_sink_is_a_noop() {
+        let s = sink(2, 0);
+        assert!(!s.enabled());
+        s.emit(0, TraceKind::Start, 1);
+        assert!(s.drain_new().is_empty());
+        assert_eq!(s.dropped(), 0);
+    }
+
+    #[test]
+    fn events_round_trip_in_timestamp_order() {
+        let s = sink(3, 64);
+        s.emit(2, TraceKind::Enqueue, 7);
+        s.emit(0, TraceKind::Start, 7);
+        s.emit(0, TraceKind::Finish, 7);
+        let ev = s.drain_new();
+        assert_eq!(ev.len(), 3);
+        assert!(ev.windows(2).all(|w| w[0].nanos <= w[1].nanos));
+        assert_eq!(ev[0].kind, TraceKind::Enqueue);
+        assert_eq!(ev[0].lane, 2);
+        assert_eq!(ev[0].payload, 7);
+        assert!(s.drain_new().is_empty(), "second drain sees only new events");
+        s.emit(1, TraceKind::Steal, 4);
+        assert_eq!(s.drain_new().len(), 1, "delta drain picks up the new event");
+    }
+
+    #[test]
+    fn overflow_drops_oldest_and_counts_exactly() {
+        let s = sink(1, 8);
+        for i in 0..20u64 {
+            s.emit(0, TraceKind::Enqueue, i);
+        }
+        assert_eq!(s.dropped(), 12, "drops = pushes - capacity, exactly");
+        let ev = s.drain_new();
+        assert_eq!(ev.len(), 8, "ring retains exactly its capacity");
+        let payloads: Vec<u64> = ev.iter().map(|e| e.payload).collect();
+        assert_eq!(payloads, (12..20).collect::<Vec<u64>>(), "oldest were dropped");
+    }
+
+    #[test]
+    fn wrap_does_not_corrupt_events() {
+        let s = sink(1, 4);
+        // Push 3 full wraps of distinguishable events; after each wave
+        // the drained payload/kind pairs must be internally consistent.
+        for wave in 0..3u64 {
+            for i in 0..4u64 {
+                let kind = if i % 2 == 0 { TraceKind::Start } else { TraceKind::Finish };
+                s.emit(0, kind, wave * 100 + i);
+            }
+            for e in s.drain_new() {
+                let expect = if e.payload % 2 == 0 { TraceKind::Start } else { TraceKind::Finish };
+                assert_eq!(e.kind, expect, "kind/payload pairing survives wrap");
+            }
+        }
+    }
+
+    #[test]
+    fn chrome_export_is_a_valid_trace_array() {
+        let s = sink(2, 16);
+        s.emit(1, TraceKind::Enqueue, 0);
+        s.emit(0, TraceKind::Start, 0);
+        s.emit(0, TraceKind::Steal, 3);
+        s.emit(0, TraceKind::Finish, 0);
+        let json = chrome_trace_json(&s.drain_new(), 2);
+        assert!(is_json_array(&json), "export must parse as a JSON array");
+        assert!(json.contains("\"thread_name\""));
+        assert!(json.contains("\"driver\""));
+        assert!(json.contains("\"ph\":\"B\""));
+        assert!(json.contains("\"ph\":\"E\""));
+        assert!(json.contains("\"steal\""));
+    }
+
+    #[test]
+    fn json_validator_accepts_and_rejects() {
+        for good in [
+            "[]",
+            "[1,2,3]",
+            "[{\"a\":1},{\"b\":[true,null,\"x\"]}]",
+            " [ {\"ts\": 1.5e3, \"s\": \"t\"} ] ",
+            "[-0.5]",
+        ] {
+            assert!(is_json_array(good), "should accept {good:?}");
+        }
+        for bad in [
+            "",
+            "{}",
+            "[1,",
+            "[1,]",
+            "[01x]",
+            "[\"unterminated]",
+            "[1] trailing",
+            "[{\"a\" 1}]",
+        ] {
+            assert!(!is_json_array(bad), "should reject {bad:?}");
+        }
+    }
+}

@@ -7,12 +7,24 @@
 //! [`XlaService`]), and answered with plain text / FASTA / Newick.
 //!
 //! Endpoints:
-//!   GET  /            — status page (cluster config, stats, artifacts)
+//!   GET  /            — status page (cluster config, stats, artifacts,
+//!                       per-route latency percentiles)
 //!   GET  /health      — liveness probe ("ok")
+//!   GET  /metrics     — Prometheus text exposition of the cluster's
+//!                       obs registry (engine + I/O + server families)
+//!   GET  /trace/<h>   — Chrome trace-event JSON for job hash `<h>`
+//!                       (recorded when the cluster's trace rings are
+//!                       enabled; load in Perfetto / chrome://tracing)
 //!   POST /align       — body: FASTA; query: ?alphabet=dna|protein
 //!                       returns the aligned FASTA + an X-Avg-SP header
 //!   POST /tree        — body: aligned FASTA; returns Newick +
 //!                       X-Log-Likelihood header
+//!
+//! Every response carries `X-Request-Id`; request latency is recorded
+//! into `halign_request_seconds{route,cache}` histograms (the status
+//! page renders their p50/p95/p99).  Malformed bodies (unparsable or
+//! empty FASTA, bad `parent` hash) are client errors — 400 with a
+//! reason line — while engine faults stay 500.
 //!
 //! One OS thread per connection (the engine inside serializes onto the
 //! worker pool); requests are independent jobs, which is exactly the
@@ -28,10 +40,12 @@
 
 mod http;
 
+use std::collections::VecDeque;
 use std::io::Write as _;
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use anyhow::{Context as _, Result};
 
@@ -42,10 +56,130 @@ use crate::align::MsaResult;
 use crate::cache::{canonical_digest, ArtifactStore, DigestBuilder};
 use crate::engine::Cluster;
 use crate::fasta::{io as fio, Alphabet};
+use crate::obs::{chrome_trace_json, Counter, Gauge, Histogram, Registry, TraceKind};
 use crate::runtime::XlaService;
 use crate::tree::{build_tree, TreeConfig};
 
 use http::{ReadError, Request, Response};
+
+/// Route labels of the request metric families (fixed vocabulary so
+/// `/metrics` cardinality is bounded no matter what paths clients probe).
+const ROUTES: [&str; 7] = ["align", "tree", "health", "status", "metrics", "trace", "other"];
+
+/// `cache` label values of `halign_request_seconds` (`X-Cache` outcomes
+/// on `/align`; everything else records under "none").
+const CACHE_OUTCOMES: [&str; 4] = ["hit", "append", "miss", "none"];
+
+/// Exported traces retained for `GET /trace/<job-hash>` (one per engine
+/// job, oldest evicted).
+const TRACE_KEEP: usize = 16;
+
+/// Server-side metric families, registered in the *cluster's* registry
+/// at construction — a fresh server's `/metrics` already lists every
+/// family, and engine + server metrics share one scrape surface.  All
+/// label instances are pre-registered here (handles stored, lookups are
+/// array scans), so the request path never takes the registry mutex.
+struct ServerObs {
+    requests: Vec<(&'static str, Arc<Counter>)>,
+    latency: Vec<(&'static str, &'static str, Arc<Histogram>)>,
+    cache_hits: Arc<Counter>,
+    cache_misses: Arc<Counter>,
+    cache_appends: Arc<Counter>,
+    cache_resident_bytes: Arc<Gauge>,
+    cache_entries: Arc<Gauge>,
+    cache_spill_files: Arc<Gauge>,
+}
+
+impl ServerObs {
+    fn register(registry: &Registry) -> Self {
+        let mut requests = Vec::new();
+        let mut latency = Vec::new();
+        for route in ROUTES {
+            requests.push((
+                route,
+                registry.register_counter_labeled(
+                    "halign_requests_total",
+                    "HTTP requests by route",
+                    &[("route", route)],
+                ),
+            ));
+            // /align gets a histogram per X-Cache outcome; every other
+            // route only ever records under cache="none".
+            let outcomes: &[&'static str] =
+                if route == "align" { &CACHE_OUTCOMES } else { &["none"] };
+            for outcome in outcomes {
+                latency.push((
+                    route,
+                    *outcome,
+                    registry.register_histogram_labeled(
+                        "halign_request_seconds",
+                        "HTTP request latency by route and cache outcome",
+                        &[("route", route), ("cache", outcome)],
+                    ),
+                ));
+            }
+        }
+        Self {
+            requests,
+            latency,
+            cache_hits: registry.register_counter(
+                "halign_cache_hits_total",
+                "POST /align requests answered from the result cache",
+            ),
+            cache_misses: registry.register_counter(
+                "halign_cache_misses_total",
+                "POST /align requests that ran the full engine job",
+            ),
+            cache_appends: registry.register_counter(
+                "halign_cache_appends_total",
+                "POST /align?parent= requests served by profile-append",
+            ),
+            cache_resident_bytes: registry.register_gauge(
+                "halign_cache_resident_bytes",
+                "Result-cache bytes resident in memory (scrape-time)",
+            ),
+            cache_entries: registry.register_gauge(
+                "halign_cache_entries",
+                "Result-cache artifacts stored (scrape-time)",
+            ),
+            cache_spill_files: registry.register_gauge(
+                "halign_cache_spill_files",
+                "Result-cache artifacts spilled to disk (scrape-time)",
+            ),
+        }
+    }
+
+    fn count_request(&self, route: &str) {
+        if let Some((_, c)) = self.requests.iter().find(|(r, _)| *r == route) {
+            c.inc();
+        }
+    }
+
+    fn record_latency(&self, route: &str, outcome: &str, nanos: u64) {
+        let hist = self
+            .latency
+            .iter()
+            .find(|(r, o, _)| *r == route && *o == outcome)
+            .or_else(|| self.latency.iter().find(|(r, o, _)| *r == route && *o == "none"));
+        if let Some((_, _, h)) = hist {
+            h.record(nanos);
+        }
+    }
+}
+
+/// Which metric route label a request records under (bounded vocabulary;
+/// unknown paths all land in "other").
+fn route_label(method: &str, path: &str) -> &'static str {
+    match (method, path) {
+        ("POST", "/align") => "align",
+        ("POST", "/tree") => "tree",
+        ("GET", "/health") => "health",
+        ("GET", "/") => "status",
+        ("GET", "/metrics") => "metrics",
+        _ if path.starts_with("/trace/") => "trace",
+        _ => "other",
+    }
+}
 
 /// Socket-hygiene knobs: a public-facing endpoint must bound how long a
 /// connection can stall and how large a body it will accept.
@@ -80,6 +214,11 @@ pub struct Server {
     svc: Option<XlaService>,
     options: ServerOptions,
     cache: ArtifactStore,
+    obs: ServerObs,
+    /// Exported engine traces by job hash, newest-last (bounded at
+    /// [`TRACE_KEEP`]); only populated when the cluster's trace rings
+    /// are enabled.
+    traces: Mutex<VecDeque<(u64, String)>>,
     requests: AtomicUsize,
     shutdown: AtomicBool,
 }
@@ -119,11 +258,14 @@ impl Server {
             CACHE_DIR_SEQ.fetch_add(1, Ordering::Relaxed)
         ));
         let cache = ArtifactStore::new(dir, options.cache_budget_bytes)?;
+        let obs = ServerObs::register(cluster.registry());
         Ok(Arc::new(Self {
             cluster,
             svc,
             options,
             cache,
+            obs,
+            traces: Mutex::new(VecDeque::new()),
             requests: AtomicUsize::new(0),
             shutdown: AtomicBool::new(false),
         }))
@@ -171,10 +313,28 @@ impl Server {
                 return Ok(());
             }
         };
-        self.requests.fetch_add(1, Ordering::Relaxed);
-        let resp = self.route(&request).unwrap_or_else(|e| {
+        let seq = self.requests.fetch_add(1, Ordering::Relaxed);
+        let route = route_label(&request.method, &request.path);
+        let started = Instant::now();
+        let mut resp = self.route(&request).unwrap_or_else(|e| {
             Response::text(500, &format!("error: {e:#}\n"))
         });
+        // Latency lands in the route's histogram keyed by the X-Cache
+        // outcome the response carries (cache="none" elsewhere), so
+        // hit/append/miss tails are separable on the status page.
+        let outcome = resp
+            .headers
+            .iter()
+            .find(|(k, _)| k == "X-Cache")
+            .map(|(_, v)| v.as_str())
+            .unwrap_or("none")
+            .to_string();
+        self.obs.count_request(route);
+        self.obs.record_latency(route, &outcome, started.elapsed().as_nanos() as u64);
+        resp.headers.push((
+            "X-Request-Id".into(),
+            format!("{:x}-{seq:06x}", std::process::id()),
+        ));
         stream.write_all(&resp.to_bytes())?;
         Ok(())
     }
@@ -183,10 +343,70 @@ impl Server {
         match (req.method.as_str(), req.path.as_str()) {
             ("GET", "/health") => Ok(Response::text(200, "ok\n")),
             ("GET", "/") => Ok(self.status_page()),
+            ("GET", "/metrics") => Ok(self.do_metrics()),
+            ("GET", p) if p.starts_with("/trace/") => Ok(self.do_trace(p)),
             ("POST", "/align") => self.do_align(req),
             ("POST", "/tree") => self.do_tree(req),
             _ => Ok(Response::text(404, "not found\n")),
         }
+    }
+
+    /// Prometheus text exposition of the cluster-wide registry.  The
+    /// result-cache gauges are sampled here (scrape-time values), then
+    /// every family renders in one pass.
+    fn do_metrics(&self) -> Response {
+        self.obs.cache_resident_bytes.set(self.cache.resident_bytes() as u64);
+        self.obs.cache_entries.set(self.cache.entries() as u64);
+        self.obs.cache_spill_files.set(self.cache.spill_files_written() as u64);
+        Response::bytes(
+            200,
+            "text/plain; version=0.0.4; charset=utf-8",
+            self.cluster.registry().render_prometheus().into_bytes(),
+        )
+    }
+
+    /// Chrome trace-event JSON for a completed engine job; 404 for
+    /// unknown hashes or when tracing is disabled.
+    fn do_trace(&self, path: &str) -> Response {
+        let hex = path.trim_start_matches("/trace/");
+        let Ok(key) = u64::from_str_radix(hex, 16) else {
+            return Response::text(400, &format!("bad request: bad job hash {hex:?}\n"));
+        };
+        let traces = self.traces.lock().unwrap();
+        match traces.iter().find(|(k, _)| *k == key) {
+            Some((_, json)) => Response::bytes(200, "application/json", json.clone().into_bytes()),
+            None => Response::text(404, &format!("no trace for job {key:016x}\n")),
+        }
+    }
+
+    /// After an engine job ran for job `key`, drain the trace rings and
+    /// retain the Chrome JSON for `GET /trace/<key>` (no-op when the
+    /// cluster's trace rings are disabled).
+    fn retain_trace(&self, key: u64) {
+        let sink = self.cluster.trace();
+        if !sink.enabled() {
+            return;
+        }
+        let json = chrome_trace_json(&sink.drain_new(), sink.num_lanes());
+        let mut traces = self.traces.lock().unwrap();
+        traces.retain(|(k, _)| *k != key);
+        traces.push_back((key, json));
+        while traces.len() > TRACE_KEEP {
+            traces.pop_front();
+        }
+    }
+
+    /// Cache-outcome bookkeeping shared by the `/align` paths: the
+    /// obs counter plus a trace instant on the driver lane.
+    fn note_cache_outcome(&self, outcome: &str, key: u64) {
+        let (counter, kind) = match outcome {
+            "hit" => (&self.obs.cache_hits, TraceKind::CacheHit),
+            "append" => (&self.obs.cache_appends, TraceKind::CacheAppend),
+            _ => (&self.obs.cache_misses, TraceKind::CacheMiss),
+        };
+        counter.inc();
+        let sink = self.cluster.trace();
+        sink.emit(sink.num_lanes().saturating_sub(1), kind, key);
     }
 
     fn alphabet_of(req: &Request) -> Alphabet {
@@ -196,10 +416,26 @@ impl Server {
         }
     }
 
+    /// Parse the request body as FASTA, classifying failures as client
+    /// errors: an unparsable or empty body is the submitter's fault and
+    /// answers 400 with the reason, never a 500 (engine faults keep
+    /// that status).
+    fn parse_fasta_body(req: &Request, alphabet: Alphabet) -> Result<Vec<crate::fasta::Sequence>, Response> {
+        match fio::read_fasta(req.body.as_slice(), alphabet) {
+            Ok(seqs) if seqs.is_empty() => {
+                Err(Response::text(400, "bad request: empty FASTA body\n"))
+            }
+            Ok(seqs) => Ok(seqs),
+            Err(e) => Err(Response::text(400, &format!("bad request: {e:#}\n"))),
+        }
+    }
+
     fn do_align(&self, req: &Request) -> Result<Response> {
         let alphabet = Self::alphabet_of(req);
-        let seqs = fio::read_fasta(req.body.as_slice(), alphabet)?;
-        anyhow::ensure!(!seqs.is_empty(), "empty FASTA body");
+        let seqs = match Self::parse_fasta_body(req, alphabet) {
+            Ok(seqs) => seqs,
+            Err(resp) => return Ok(resp),
+        };
         match alphabet {
             Alphabet::Dna => self.align_dna(req, seqs),
             Alphabet::Protein => {
@@ -237,8 +473,12 @@ impl Server {
     /// touched.
     fn align_dna(&self, req: &Request, seqs: Vec<crate::fasta::Sequence>) -> Result<Response> {
         if let Some(parent_hex) = req.query.get("parent") {
-            let parent_key = u64::from_str_radix(parent_hex, 16)
-                .with_context(|| format!("bad parent job hash {parent_hex:?}"))?;
+            let Ok(parent_key) = u64::from_str_radix(parent_hex, 16) else {
+                return Ok(Response::text(
+                    400,
+                    &format!("bad request: bad parent job hash {parent_hex:?}\n"),
+                ));
+            };
             let Some(parent) = self.cached_artifact(parent_key) else {
                 return Ok(Response::text(
                     404,
@@ -259,6 +499,7 @@ impl Server {
                 let sp = msa.avg_sp()?;
                 let mut resp = Self::msa_response(&msa, sp)?;
                 Self::cache_headers(&mut resp, "hit", union_key);
+                self.note_cache_outcome("hit", union_key);
                 return Ok(resp);
             }
             let out = append_nucleotide(&self.cluster, &parent, &seqs, None)?;
@@ -266,6 +507,8 @@ impl Server {
             let sp = out.msa.avg_sp_distributed(&self.cluster)?;
             let mut resp = Self::msa_response(&out.msa, sp)?;
             Self::cache_headers(&mut resp, "append", union_key);
+            self.note_cache_outcome("append", union_key);
+            self.retain_trace(union_key);
             return Ok(resp);
         }
 
@@ -276,6 +519,7 @@ impl Server {
             let sp = msa.avg_sp()?;
             let mut resp = Self::msa_response(&msa, sp)?;
             Self::cache_headers(&mut resp, "hit", key);
+            self.note_cache_outcome("hit", key);
             return Ok(resp);
         }
         let (msa, artifact) =
@@ -284,6 +528,8 @@ impl Server {
         let sp = msa.avg_sp_distributed(&self.cluster)?;
         let mut resp = Self::msa_response(&msa, sp)?;
         Self::cache_headers(&mut resp, "miss", key);
+        self.note_cache_outcome("miss", key);
+        self.retain_trace(key);
         Ok(resp)
     }
 
@@ -294,7 +540,10 @@ impl Server {
 
     fn do_tree(&self, req: &Request) -> Result<Response> {
         let alphabet = Self::alphabet_of(req);
-        let rows = fio::read_fasta(req.body.as_slice(), alphabet)?;
+        let rows = match Self::parse_fasta_body(req, alphabet) {
+            Ok(rows) => rows,
+            Err(resp) => return Ok(resp),
+        };
         let result = build_tree(&self.cluster, &rows, self.svc.as_ref(), &TreeConfig::default())?;
         let mut resp = Response::text(200, &format!("{}\n", result.tree.to_newick()));
         resp.headers.push((
@@ -304,6 +553,30 @@ impl Server {
         resp.headers
             .push(("X-Clusters".into(), result.num_clusters.to_string()));
         Ok(resp)
+    }
+
+    /// Per-instance p50/p95/p99 lines of `halign_request_seconds` with
+    /// at least one observation, e.g.
+    /// `  route="align",cache="miss"  p50=12.4ms p95=30.1ms p99=30.1ms n=3`.
+    fn latency_block(&self) -> String {
+        let mut out = String::new();
+        for (labels, hist) in self.cluster.registry().histograms("halign_request_seconds") {
+            let snap = hist.snapshot();
+            if snap.count == 0 {
+                continue;
+            }
+            out.push_str(&format!(
+                "  {labels}  p50={:.3}ms p95={:.3}ms p99={:.3}ms n={}\n",
+                snap.percentile(0.50) as f64 / 1e6,
+                snap.percentile(0.95) as f64 / 1e6,
+                snap.percentile(0.99) as f64 / 1e6,
+                snap.count,
+            ));
+        }
+        if out.is_empty() {
+            out.push_str("  (no requests observed yet)\n");
+        }
+        out
     }
 
     fn status_page(&self) -> Response {
@@ -322,16 +595,23 @@ impl Server {
                  backend:        {}\n\
                  requests:       {}\n\
                  tasks run:      {}\n\
+                 task latency:   p50={:.3}ms p99={:.3}ms\n\
                  shuffle bytes:  {} written / {} read\n\
                  avg max memory: {:.2} MB/worker\n\
                  artifacts:      {}\n\
-                 result cache:   {} jobs, {} hits / {} misses, {} resident bytes (budget {})\n\n\
+                 result cache:   {} jobs, {} hits / {} misses, {} resident bytes (budget {})\n\
+                 request latency (from halign_request_seconds):\n\
+                 {}\n\
+                 GET  /metrics (Prometheus text format)\n\
+                 GET  /trace/<job hash> (Chrome trace JSON, when tracing is on)\n\
                  POST /align (FASTA body, ?alphabet=dna|protein, ?parent=<job hash>)\n\
                  POST /tree  (aligned FASTA body)\n",
                 stats.workers,
                 self.cluster.backend(),
                 self.requests.load(Ordering::Relaxed),
                 stats.tasks_run,
+                stats.task_p50_ms,
+                stats.task_p99_ms,
                 stats.shuffle_bytes_written,
                 stats.shuffle_bytes_read,
                 stats.avg_max_memory_bytes / (1 << 20) as f64,
@@ -341,6 +621,7 @@ impl Server {
                 self.cache.misses(),
                 self.cache.resident_bytes(),
                 self.cache.byte_budget(),
+                self.latency_block(),
             ),
         )
     }
@@ -545,10 +826,132 @@ mod tests {
     #[test]
     fn bad_requests_get_4xx() {
         let srv = start();
+        // Headerless FASTA is the *submitter's* fault: 400 with the
+        // parse reason, not a 500 (that status is reserved for engine
+        // faults).
         let resp = talk(srv.port, "POST /align HTTP/1.1\r\nHost: x\r\nContent-Length: 4\r\n\r\nACGT");
-        assert!(resp.starts_with("HTTP/1.1 500"), "{resp}"); // headerless FASTA
+        assert!(resp.starts_with("HTTP/1.1 400"), "{resp}");
+        assert!(body_of(&resp).starts_with("bad request:"), "{resp}");
+        // An empty (but well-formed) body is equally a client error.
+        let resp = talk(srv.port, "POST /align HTTP/1.1\r\nHost: x\r\nContent-Length: 0\r\n\r\n");
+        assert!(resp.starts_with("HTTP/1.1 400"), "{resp}");
+        assert!(body_of(&resp).contains("empty FASTA"), "{resp}");
+        // Unparsable parent hash: 400, not 500.
+        let fasta = ">a\nACGT\n";
+        let resp = talk(
+            srv.port,
+            &format!(
+                "POST /align?parent=zzzz HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{}",
+                fasta.len(),
+                fasta
+            ),
+        );
+        assert!(resp.starts_with("HTTP/1.1 400"), "{resp}");
         let resp = talk(srv.port, "GET /nope HTTP/1.1\r\nHost: x\r\n\r\n");
         assert!(resp.starts_with("HTTP/1.1 404"));
+        srv.stop();
+    }
+
+    #[test]
+    fn every_response_carries_a_request_id() {
+        let srv = start();
+        let ok = talk(srv.port, "GET /health HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(ok.contains("X-Request-Id: "), "{ok}");
+        let a = header_value(&ok, "X-Request-Id").to_string();
+        let missing = talk(srv.port, "GET /nope HTTP/1.1\r\nHost: x\r\n\r\n");
+        let b = header_value(&missing, "X-Request-Id").to_string();
+        assert_ne!(a, b, "request ids must be distinct per request");
+        srv.stop();
+    }
+
+    #[test]
+    fn metrics_endpoint_serves_every_family() {
+        let srv = start();
+        // A fresh server must already expose every family (CI greps
+        // these names before any job has run).
+        let scrape = talk(srv.port, "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(scrape.starts_with("HTTP/1.1 200"), "{scrape}");
+        for family in [
+            "# TYPE halign_requests_total counter",
+            "# TYPE halign_request_seconds histogram",
+            "# TYPE halign_cache_hits_total counter",
+            "# TYPE halign_cache_misses_total counter",
+            "# TYPE halign_cache_appends_total counter",
+            "# TYPE halign_cache_resident_bytes gauge",
+            "# TYPE halign_tasks_stolen_total counter",
+            "# TYPE halign_tasks_run_total counter",
+            "# TYPE halign_task_exec_seconds histogram",
+            "# TYPE halign_shuffle_bytes_written_total counter",
+            "# TYPE halign_workers gauge",
+        ] {
+            assert!(scrape.contains(family), "missing {family:?} in scrape");
+        }
+        // After one align job the labeled series must have moved.
+        let fasta = ">a\nACGTACGTAA\n>b\nACGTACGTA\n>c\nACGTACGTAA\n";
+        let req = format!(
+            "POST /align HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{}",
+            fasta.len(),
+            fasta
+        );
+        assert!(talk(srv.port, &req).starts_with("HTTP/1.1 200"));
+        let scrape = talk(srv.port, "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(
+            scrape.contains("halign_requests_total{route=\"align\"} 1"),
+            "align request must be counted: {scrape}"
+        );
+        assert!(scrape.contains("halign_cache_misses_total 1"), "{scrape}");
+        assert!(
+            scrape.contains("halign_request_seconds_count{route=\"align\",cache=\"miss\"} 1"),
+            "{scrape}"
+        );
+        assert!(scrape.contains("halign_tasks_run_total "), "{scrape}");
+        srv.stop();
+    }
+
+    #[test]
+    fn status_page_renders_request_percentiles() {
+        let srv = start();
+        let before = talk(srv.port, "GET / HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(before.contains("task latency:"), "{before}");
+        // That first status request is itself recorded, so the second
+        // one must render a populated latency line.
+        let after = talk(srv.port, "GET / HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(
+            after.contains("route=\"status\",cache=\"none\""),
+            "status route percentiles missing: {after}"
+        );
+        assert!(after.contains("p50="), "{after}");
+        assert!(after.contains("p99="), "{after}");
+        srv.stop();
+    }
+
+    #[test]
+    fn trace_endpoint_serves_chrome_json_for_traced_jobs() {
+        let mut cfg = ClusterConfig::spark(2);
+        cfg.scheduler.trace_capacity = 1 << 12;
+        let cluster = Cluster::new(cfg);
+        let srv = Server::new(cluster, None).unwrap().serve("127.0.0.1:0").unwrap();
+        let fasta = ">a\nACGTACGTAA\n>b\nACGTACGTA\n>c\nACGTTCGTAA\n";
+        let req = format!(
+            "POST /align HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{}",
+            fasta.len(),
+            fasta
+        );
+        let resp = talk(srv.port, &req);
+        assert_eq!(header_value(&resp, "X-Cache"), "miss", "{resp}");
+        let job = header_value(&resp, "X-Job-Hash").to_string();
+        let trace = talk(srv.port, &format!("GET /trace/{job} HTTP/1.1\r\nHost: x\r\n\r\n"));
+        assert!(trace.starts_with("HTTP/1.1 200"), "{trace}");
+        assert!(trace.contains("application/json"), "{trace}");
+        let body = body_of(&trace);
+        assert!(crate::obs::is_json_array(body), "trace must be valid JSON: {body}");
+        assert!(body.contains("\"task\""), "trace must contain task events: {body}");
+        assert!(body.contains("\"cache_miss\""), "miss instant must be traced: {body}");
+        // Unknown hash: 404.  Malformed hash: 400.
+        let nope = talk(srv.port, "GET /trace/00000000deadbeef HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(nope.starts_with("HTTP/1.1 404"), "{nope}");
+        let bad = talk(srv.port, "GET /trace/zzzz HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(bad.starts_with("HTTP/1.1 400"), "{bad}");
         srv.stop();
     }
 }

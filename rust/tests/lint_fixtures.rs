@@ -23,6 +23,21 @@ fn cfg() -> LintConfig {
     )
 }
 
+/// `cfg()` plus a declared metric-family table, parsed through the real
+/// `OBSERVABILITY.md` parser (the markdown grammar is exercised too).
+fn obs_cfg() -> LintConfig {
+    let mut cfg = cfg();
+    cfg.metric_names = LintConfig::parse_observability_md(
+        "## Metric families\n\
+         | family | kind |\n\
+         |---|---|\n\
+         | `halign_tasks_run_total` | counter |\n\
+         | `halign_request_seconds` | histogram |\n\
+         - `halign_workers` — gauge, bullet form\n",
+    );
+    cfg
+}
+
 fn ids(findings: &[Finding]) -> Vec<&'static str> {
     findings.iter().filter(|f| !f.suppressed).map(|f| f.rule.id()).collect()
 }
@@ -251,6 +266,79 @@ fn w7_suppressible_with_reason() {
     let findings = lint("rust/src/cache/fx.rs", src);
     assert!(ids(&findings).is_empty());
     assert!(findings.iter().any(|f| f.suppressed && f.rule == Rule::CacheAtomicWrite));
+}
+
+// ---------------------------------------------------------------- W8 --
+
+#[test]
+fn w8_fires_on_undeclared_family() {
+    let src = "fn obs(r: &Registry) {\n    \
+               let c = r.register_counter(\"halign_mystery_total\", \"?\");\n    drop(c);\n}\n";
+    let findings = lint_source("rust/src/obs/fx.rs", src, &obs_cfg());
+    assert_eq!(ids(&findings), ["W8"]);
+    assert_eq!(findings[0].line, 2);
+    assert!(findings[0].message.contains("halign_mystery_total"));
+}
+
+#[test]
+fn w8_fires_on_non_snake_case_and_duplicate() {
+    let camel = "fn obs(r: &Registry) {\n    \
+                 let c = r.register_gauge(\"halignWorkers\", \"?\");\n    drop(c);\n}\n";
+    let findings = lint_source("rust/src/obs/fx.rs", camel, &obs_cfg());
+    assert_eq!(ids(&findings), ["W8"]);
+    assert!(findings[0].message.contains("snake_case"));
+    // Same family registered twice in one file: the second site fires.
+    let twice = "fn obs(r: &Registry) {\n    \
+                 let a = r.register_counter(\"halign_tasks_run_total\", \"a\");\n    \
+                 let b = r.register_counter(\"halign_tasks_run_total\", \"b\");\n    \
+                 drop((a, b));\n}\n";
+    let findings = lint_source("rust/src/obs/fx.rs", twice, &obs_cfg());
+    assert_eq!(ids(&findings), ["W8"]);
+    assert_eq!(findings[0].line, 3);
+    assert!(findings[0].message.contains("more than once"));
+}
+
+#[test]
+fn w8_silent_on_declared_names_multiline_and_labeled() {
+    // The real registration idiom: name literal on its own line, labeled
+    // variants, one site per family.
+    let src = "fn obs(r: &Registry) {\n    \
+               let c = r.register_counter(\n        \
+               \"halign_tasks_run_total\",\n        \"tasks\",\n    );\n    \
+               let h = r.register_histogram_labeled(\n        \
+               \"halign_request_seconds\",\n        \"latency\",\n        \
+               &[(\"route\", \"align\")],\n    );\n    \
+               let g = r.register_gauge(\"halign_workers\", \"workers\");\n    \
+               drop((c, h, g));\n}\n";
+    assert!(ids(&lint_source("rust/src/obs/fx.rs", src, &obs_cfg())).is_empty());
+}
+
+#[test]
+fn w8_skips_pass_through_definitions_tests_and_stays_inert_unconfigured() {
+    // The registry's own delegation passes `name` (a variable, not a
+    // literal) and its `fn` definitions are not registrations.
+    let passthrough = "impl Registry {\n    \
+                       pub fn register_counter(&self, name: &str, help: &str) -> Arc<Counter> {\n        \
+                       self.register_counter_labeled(name, help, &[])\n    }\n}\n";
+    assert!(ids(&lint_source("rust/src/obs/fx.rs", passthrough, &obs_cfg())).is_empty());
+    // Unit tests may register undeclared scratch names.
+    let test_src = "#[cfg(test)]\nmod tests {\n    fn t(r: &Registry) {\n        \
+                    r.register_counter(\"requests_total\", \"t\").inc();\n    }\n}\n";
+    assert!(ids(&lint_source("rust/src/obs/fx.rs", test_src, &obs_cfg())).is_empty());
+    // With no OBSERVABILITY.md (empty declared list) the rule is inert.
+    let undeclared = "fn obs(r: &Registry) {\n    \
+                      r.register_counter(\"halign_mystery_total\", \"?\").inc();\n}\n";
+    assert!(ids(&lint_source("rust/src/obs/fx.rs", undeclared, &cfg())).is_empty());
+}
+
+#[test]
+fn w8_suppressible_with_reason() {
+    let src = "fn obs(r: &Registry) {\n    \
+               // lint: allow(metric-name-registry) migration shim, removed next release\n    \
+               r.register_counter(\"halign_legacy_total\", \"old name\").inc();\n}\n";
+    let findings = lint_source("rust/src/obs/fx.rs", src, &obs_cfg());
+    assert!(ids(&findings).is_empty());
+    assert!(findings.iter().any(|f| f.suppressed && f.rule == Rule::MetricNameRegistry));
 }
 
 // -------------------------------------------------- suppression + W0 --

@@ -1,0 +1,252 @@
+//! Property tests for the observability substrate (`src/obs/`): the
+//! histogram's exact-merge algebra and percentile contract, and the
+//! trace ring's overflow/concurrency discipline.  Randomness is the
+//! project's seeded [`halign2::util::Rng`], so every run checks the
+//! same cases — failures reproduce, and the suite stays dependency-free.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+
+use halign2::obs::{
+    registry::{bucket_index, bucket_lower_bound, bucket_upper_bound, NUM_BUCKETS},
+    Counter, HistSnapshot, Histogram, TraceKind, TraceSink,
+};
+use halign2::util::Rng;
+
+/// A random value with a log-uniform-ish spread: small latencies and
+/// huge outliers both show up, which is what exercises bucket edges.
+fn sample(rng: &mut Rng) -> u64 {
+    let magnitude = rng.below(50) as u32;
+    let base = 1u64 << magnitude;
+    base + rng.below(base.min(1 << 20) as usize + 1) as u64 - 1
+}
+
+fn record_all(values: &[u64]) -> HistSnapshot {
+    let h = Histogram::new();
+    for &v in values {
+        h.record(v);
+    }
+    h.snapshot()
+}
+
+// ------------------------------------------------------- histogram --
+
+#[test]
+fn prop_bucket_bounds_contain_their_values() {
+    let mut rng = Rng::seed_from_u64(0x0B5);
+    for _ in 0..10_000 {
+        let v = sample(&mut rng);
+        let i = bucket_index(v);
+        assert!(i < NUM_BUCKETS);
+        assert!(
+            bucket_lower_bound(i) <= v && v <= bucket_upper_bound(i),
+            "value {v} outside bucket {i} bounds [{}, {}]",
+            bucket_lower_bound(i),
+            bucket_upper_bound(i),
+        );
+    }
+    // The edges the random sweep is unlikely to hit exactly.
+    for v in [0, 1, 2, 3, 4, u64::MAX - 1, u64::MAX] {
+        let i = bucket_index(v);
+        assert!(bucket_lower_bound(i) <= v && v <= bucket_upper_bound(i));
+    }
+}
+
+#[test]
+fn prop_merge_is_exact_associative_and_commutative() {
+    let mut rng = Rng::seed_from_u64(0xABBA);
+    for _ in 0..64 {
+        let mut make = |n: usize| -> Vec<u64> { (0..n).map(|_| sample(&mut rng)).collect() };
+        let (a, b, c) = (make(37), make(11), make(53));
+
+        let (sa, sb, sc) = (record_all(&a), record_all(&b), record_all(&c));
+        // Exact: merging snapshots equals recording the union.
+        let union: Vec<u64> = a.iter().chain(&b).copied().collect();
+        assert_eq!(sa.merge(&sb), record_all(&union), "merge must equal the recorded union");
+        // Commutative and associative, and the empty snapshot is the
+        // identity — counts, sums, maxes, and every bucket.
+        assert_eq!(sa.merge(&sb), sb.merge(&sa));
+        assert_eq!(sa.merge(&sb).merge(&sc), sa.merge(&sb.merge(&sc)));
+        assert_eq!(sa.merge(&HistSnapshot::empty()), sa);
+    }
+}
+
+#[test]
+fn prop_percentiles_are_monotone_and_bounded() {
+    let mut rng = Rng::seed_from_u64(0xCAFE);
+    for round in 0..64 {
+        let n = 1 + rng.below(300);
+        let values: Vec<u64> = (0..n).map(|_| sample(&mut rng)).collect();
+        let snap = record_all(&values);
+        let max = *values.iter().max().unwrap();
+        let min = *values.iter().min().unwrap();
+
+        let qs = [0.0, 0.01, 0.25, 0.5, 0.75, 0.9, 0.99, 0.999, 1.0];
+        let ps: Vec<u64> = qs.iter().map(|&q| snap.percentile(q)).collect();
+        assert!(
+            ps.windows(2).all(|w| w[0] <= w[1]),
+            "percentiles must be monotone in q (round {round}): {ps:?}"
+        );
+        // Never above the largest observation, and p100 reaches it
+        // exactly; never below the smallest observation's bucket floor.
+        assert!(ps.iter().all(|&p| p <= max));
+        assert_eq!(snap.percentile(1.0), max);
+        assert!(snap.percentile(0.0) >= bucket_lower_bound(bucket_index(min)));
+    }
+    assert_eq!(HistSnapshot::empty().percentile(0.5), 0, "empty snapshot reads 0");
+}
+
+#[test]
+fn prop_concurrent_recording_loses_nothing() {
+    const THREADS: u64 = 8;
+    const PER_THREAD: u64 = 10_000;
+    let h = Arc::new(Histogram::new());
+    // Deterministic per-thread value streams, so the expected bucket
+    // counts can be recomputed serially and compared exactly.
+    let value_at = |t: u64, j: u64| -> u64 {
+        let mix = (t.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ j.wrapping_mul(0xBF58_476D_1CE4_E5B9))
+            .rotate_left((j % 63) as u32);
+        mix >> (mix % 50)
+    };
+    let workers: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let h = Arc::clone(&h);
+            thread::spawn(move || {
+                for j in 0..PER_THREAD {
+                    h.record(value_at(t, j));
+                }
+            })
+        })
+        .collect();
+    for w in workers {
+        w.join().unwrap();
+    }
+
+    let expected = record_all(
+        &(0..THREADS)
+            .flat_map(|t| (0..PER_THREAD).map(move |j| value_at(t, j)))
+            .collect::<Vec<u64>>(),
+    );
+    let got = h.snapshot();
+    assert_eq!(got, expected, "concurrent recording must match the serial recording exactly");
+    assert_eq!(got.count, THREADS * PER_THREAD);
+}
+
+// ------------------------------------------------------ trace ring --
+
+fn sink(lanes: usize, capacity: usize) -> Arc<TraceSink> {
+    TraceSink::new(lanes, capacity, Arc::new(Counter::default()))
+}
+
+/// The kind/payload pairing every fixture event carries, so a torn slot
+/// (old kind, new payload or vice versa) is detectable after any wrap.
+fn kind_for(payload: u64) -> TraceKind {
+    match payload % 3 {
+        0 => TraceKind::Enqueue,
+        1 => TraceKind::Steal,
+        _ => TraceKind::KillDrain,
+    }
+}
+
+#[test]
+fn prop_overflow_keeps_newest_and_counts_drops_exactly() {
+    let mut rng = Rng::seed_from_u64(0x71AC);
+    for _ in 0..32 {
+        let capacity = 1 + rng.below(64);
+        let pushes = 1 + rng.below(capacity * 4);
+        let s = sink(1, capacity);
+        for i in 0..pushes as u64 {
+            s.emit(0, kind_for(i), i);
+        }
+        let expected_drops = pushes.saturating_sub(capacity) as u64;
+        assert_eq!(s.dropped(), expected_drops, "drops = pushes - capacity, exactly");
+        let ev = s.drain_new();
+        assert_eq!(ev.len(), pushes.min(capacity), "ring retains min(pushes, capacity)");
+        let payloads: Vec<u64> = ev.iter().map(|e| e.payload).collect();
+        let newest: Vec<u64> = (expected_drops..pushes as u64).collect();
+        assert_eq!(payloads, newest, "exactly the oldest events are displaced");
+        assert!(ev.iter().all(|e| e.kind == kind_for(e.payload)));
+    }
+}
+
+#[test]
+fn prop_concurrent_wrap_never_tears_an_event() {
+    const WRITERS: u64 = 4;
+    const PER_WRITER: u64 = 5_000;
+    const CAPACITY: usize = 32; // tiny ring: every writer wraps it many times over
+    let s = sink(1, CAPACITY);
+    let stop = Arc::new(AtomicBool::new(false));
+
+    // A concurrent drainer races the writers: drained events may be an
+    // arbitrary subset (overwritten slots are discarded), but every one
+    // must carry a consistent kind/payload pair.
+    let drainer = {
+        let s = Arc::clone(&s);
+        let stop = Arc::clone(&stop);
+        thread::spawn(move || {
+            let mut seen = 0usize;
+            while !stop.load(Ordering::SeqCst) {
+                for e in s.drain_new() {
+                    assert_eq!(e.kind, kind_for(e.payload), "torn slot escaped the drain guard");
+                    seen += 1;
+                }
+            }
+            seen
+        })
+    };
+    let writers: Vec<_> = (0..WRITERS)
+        .map(|t| {
+            let s = Arc::clone(&s);
+            thread::spawn(move || {
+                for j in 0..PER_WRITER {
+                    let payload = t * PER_WRITER + j;
+                    s.emit(0, kind_for(payload), payload);
+                }
+            })
+        })
+        .collect();
+    for w in writers {
+        w.join().unwrap();
+    }
+    stop.store(true, Ordering::SeqCst);
+    drainer.join().unwrap();
+
+    // After quiesce: one final drain is tear-free too, and the drop
+    // counter is exact even under multi-writer contention (every claim
+    // past the capacity watermark counted exactly once).
+    for e in s.drain_new() {
+        assert_eq!(e.kind, kind_for(e.payload));
+    }
+    assert_eq!(s.dropped(), WRITERS * PER_WRITER - CAPACITY as u64);
+}
+
+#[test]
+fn prop_quiesced_multiwriter_ring_retains_exactly_capacity() {
+    const WRITERS: u64 = 4;
+    const PER_WRITER: u64 = 2_000;
+    const CAPACITY: usize = 64;
+    // No mid-flight drains here, so the final drain must surface the
+    // full window: exactly `capacity` events, all well-formed, with
+    // nondecreasing timestamps after the sink's (nanos, lane) sort.
+    let s = sink(2, CAPACITY);
+    let writers: Vec<_> = (0..WRITERS)
+        .map(|t| {
+            let s = Arc::clone(&s);
+            thread::spawn(move || {
+                for j in 0..PER_WRITER {
+                    let payload = t * PER_WRITER + j;
+                    s.emit((t % 2) as usize, kind_for(payload), payload);
+                }
+            })
+        })
+        .collect();
+    for w in writers {
+        w.join().unwrap();
+    }
+    let ev = s.drain_new();
+    assert_eq!(ev.len(), 2 * CAPACITY, "both lanes retain exactly their capacity");
+    assert!(ev.windows(2).all(|w| w[0].nanos <= w[1].nanos), "drain is time-sorted");
+    assert!(ev.iter().all(|e| e.kind == kind_for(e.payload)));
+    assert_eq!(s.dropped(), WRITERS * PER_WRITER - 2 * CAPACITY as u64);
+}

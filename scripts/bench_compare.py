@@ -21,10 +21,16 @@ What is compared — and deliberately what is not:
   counters (hits/misses/appends) are pinned exactly, the two correctness
   booleans must be true, and the measured speedup must meet the
   `min_speedup` floor (ratio of two same-host timings, so it is
-  host-independent enough to gate on).
+  host-independent enough to gate on).  The per-append latency
+  percentiles are gated the same way: absolute p50/p99 milliseconds are
+  informational, but their ratio (`latency_tail_ratio` = p99/p50) must
+  stay under the baseline's `max_tail_ratio` ceiling — a tail blowup is
+  a code smell (one append falling off the incremental path) regardless
+  of host speed.
 
 `--update` rewrites the baselines from the current BENCH files (keeping
-serve's `min_speedup` floor); commit the result.
+serve's `min_speedup` floor and `max_tail_ratio` ceiling); commit the
+result.
 """
 
 import argparse
@@ -110,6 +116,17 @@ def compare_serve(current, baseline):
         failures.append(f"serve: append speedup {speedup:.1f}x below the {floor:.1f}x floor")
     else:
         print(f"  serve speedup            {speedup:.1f}x  (floor {floor:.1f}x)  ok")
+    ceiling = baseline.get("max_tail_ratio", 50.0)
+    tail = current.get("latency_tail_ratio")
+    if tail is None:
+        failures.append("serve: latency_tail_ratio missing from BENCH_serve.json")
+    elif tail > ceiling:
+        failures.append(
+            f"serve: append p99/p50 latency ratio {tail:.1f} above the "
+            f"{ceiling:.1f} ceiling"
+        )
+    else:
+        print(f"  serve latency_tail_ratio {tail:.1f}  (ceiling {ceiling:.1f})  ok")
     return failures
 
 
@@ -131,6 +148,7 @@ def update_baselines(root, micro, serve, old_serve_baseline):
         "bit_identical": True,
         "peak_within_budget": True,
         "min_speedup": old_serve_baseline.get("min_speedup", 5.0),
+        "max_tail_ratio": old_serve_baseline.get("max_tail_ratio", 50.0),
     }
     for name, data in [
         ("BENCH_micro.baseline.json", micro_base),
