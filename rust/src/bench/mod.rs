@@ -28,6 +28,7 @@ use crate::data::DatasetSpec;
 use crate::engine::{Cluster, ClusterConfig, SchedulerMode};
 use crate::fasta::Sequence;
 use crate::metrics::RunReport;
+use crate::obs::{Profile, TraceKind};
 use crate::runtime::XlaService;
 use crate::distmat::DistBackend;
 use crate::tree::{build_tree, ClusterConfig as TreeClusterConfig, DistMatOptions, TreeConfig};
@@ -161,6 +162,75 @@ fn guard_budget(
 }
 
 // ---------------------------------------------------------------------------
+// Machine-readable bench telemetry
+// ---------------------------------------------------------------------------
+
+/// Write `BENCH_<scenario>.json` at the repo root, next to the committed
+/// `BENCH_<scenario>.baseline.json` that `scripts/bench_compare.py` diffs
+/// it against.  The scenario and every key must be string literals at the
+/// call site: pallas-lint W9 cross-checks them against the baseline's key
+/// set, so a new key can only land together with its baseline row.
+/// Best-effort on purpose — a bench run from a read-only checkout prints
+/// its table and just warns about the JSON.
+pub fn write_bench_json(scenario: &str, fields: &[(&str, String)]) {
+    let mut json = format!("{{\n  \"bench\": \"{scenario}\",\n");
+    for (i, (k, v)) in fields.iter().enumerate() {
+        let comma = if i + 1 < fields.len() { "," } else { "" };
+        json.push_str(&format!("  \"{k}\": {v}{comma}\n"));
+    }
+    json.push_str("}\n");
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .unwrap_or_else(|| std::path::Path::new("."))
+        .join(format!("BENCH_{scenario}.json"));
+    match std::fs::write(&path, json) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("warning: could not write {}: {e}", path.display()),
+    }
+}
+
+/// Scheduler counters + critical-path fraction distilled from one traced
+/// job's drained rings — the host-independent numbers every
+/// `BENCH_*.json` scenario section reports.
+struct TraceTelemetry {
+    tasks: u64,
+    steals: u64,
+    speculative_launches: u64,
+    kill_drained: u64,
+    critical_path_frac: f64,
+    wall_secs: f64,
+}
+
+impl TraceTelemetry {
+    fn from_cluster(engine: &Cluster, wall_secs: f64) -> TraceTelemetry {
+        let events = engine.trace().drain_new();
+        let count = |kind: TraceKind| events.iter().filter(|e| e.kind == kind).count() as u64;
+        let profile = Profile::from_events(&events, engine.trace().num_lanes());
+        TraceTelemetry {
+            tasks: count(TraceKind::Finish),
+            steals: count(TraceKind::Steal),
+            speculative_launches: count(TraceKind::SpeculativeLaunch),
+            kill_drained: count(TraceKind::KillDrain),
+            critical_path_frac: profile.critical_path_frac,
+            wall_secs,
+        }
+    }
+}
+
+/// Run `f` on a fresh traced cluster and distill its rings.
+fn traced_telemetry(
+    workers: usize,
+    f: impl FnOnce(&Cluster) -> Result<()>,
+) -> Result<TraceTelemetry> {
+    let mut ccfg = ClusterConfig::spark(workers);
+    ccfg.scheduler.trace_capacity = 1 << 14;
+    let engine = Cluster::new(ccfg);
+    let t0 = Instant::now();
+    f(&engine)?;
+    Ok(TraceTelemetry::from_cluster(&engine, t0.elapsed().as_secs_f64()))
+}
+
+// ---------------------------------------------------------------------------
 // Tables
 // ---------------------------------------------------------------------------
 
@@ -211,6 +281,38 @@ pub fn table2_genome(cfg: &BenchConfig) -> Vec<RunReport> {
             let sp = msa.avg_sp_distributed(&engine)?;
             Ok((msa, Some(sp), Some(engine)))
         }));
+    }
+
+    // Machine-readable section: re-run the smallest tier traced so the
+    // scheduler counters and critical-path fraction come from real
+    // rings; the v1-vs-v2 SP agreement is the correctness flag.
+    let sp_match = {
+        let tier = |tool: &str| {
+            out.iter().find(|r| r.tool == tool && r.dnf.is_none()).and_then(|r| r.metric)
+        };
+        tier("halign_v1") == tier("halign2") && tier("halign2").is_some()
+    };
+    if let Some((_, spec)) = cfg.dna_tiers().into_iter().next() {
+        let seqs = spec.generate();
+        let tel = traced_telemetry(cfg.workers, |engine| {
+            align_nucleotide(engine, &seqs, &CenterStarConfig::default()).map(|_| ())
+        });
+        if let Ok(tel) = tel {
+            let throughput = seqs.len() as f64 / tel.wall_secs.max(1e-9);
+            write_bench_json(
+                "table2",
+                &[
+                    ("sp_match", sp_match.to_string()),
+                    ("tasks_run", tel.tasks.to_string()),
+                    ("steals", tel.steals.to_string()),
+                    ("speculative_launches", tel.speculative_launches.to_string()),
+                    ("kill_drained", tel.kill_drained.to_string()),
+                    ("critical_path_frac", format!("{:.6}", tel.critical_path_frac)),
+                    ("throughput_seqs_per_sec", format!("{throughput:.3}")),
+                    ("wall_secs", format!("{:.6}", tel.wall_secs)),
+                ],
+            );
+        }
     }
     out
 }
@@ -379,6 +481,9 @@ pub fn table5_tree(cfg: &BenchConfig, svc: Option<&XlaService>) -> Vec<RunReport
     // jobs scale with workers while results stay bit-identical).  The
     // distmat_peak_mb column is the headline: dense reports the largest
     // cluster's O(n²) matrices, tiled stays under its byte budget.
+    let mut dense_peak_bytes = 0u64;
+    let mut tiled_peak_bytes = 0u64;
+    let mut backends_agree = true;
     if let Some((label, rows)) = jobs.first() {
         let tile_rows = if cfg.quick { 6 } else { 24 };
         let byte_budget: usize = 16 * tile_rows * tile_rows * 8;
@@ -389,6 +494,7 @@ pub fn table5_tree(cfg: &BenchConfig, svc: Option<&XlaService>) -> Vec<RunReport
             ] {
                 let name = format!("{label}@w{workers}");
                 let peak_mb = std::cell::Cell::new(None);
+                let peak_bytes = std::cell::Cell::new(0u64);
                 let tcfg = TreeConfig {
                     clustering: tree_cfg.clustering.clone(),
                     distmat: DistMatOptions { backend },
@@ -402,11 +508,55 @@ pub fn table5_tree(cfg: &BenchConfig, svc: Option<&XlaService>) -> Vec<RunReport
                     let res = build_tree(&engine, rows, None, &tcfg)?;
                     peak_mb
                         .set(Some(res.distmat_peak_bytes as f64 / (1u64 << 20) as f64));
+                    peak_bytes.set(res.distmat_peak_bytes as u64);
                     Ok(((), Some(res.log_likelihood), Some(engine)))
                 });
                 r.distmat_peak_mb = peak_mb.get();
+                match tool {
+                    "halign2_dense" => {
+                        dense_peak_bytes = dense_peak_bytes.max(peak_bytes.get());
+                    }
+                    _ => tiled_peak_bytes = tiled_peak_bytes.max(peak_bytes.get()),
+                }
                 out.push(r);
             }
+            let pair = &out[out.len() - 2..];
+            backends_agree &= pair[0].metric == pair[1].metric
+                && pair.iter().all(|r| r.dnf.is_none());
+        }
+
+        // Machine-readable section: one extra traced tiled run supplies
+        // the scheduler counters and critical-path fraction; the
+        // dense/tiled peak-bytes ratio is the headline the gate caps.
+        let tcfg = TreeConfig {
+            clustering: tree_cfg.clustering.clone(),
+            distmat: DistMatOptions {
+                backend: DistBackend::Tiled { tile_rows, byte_budget },
+            },
+            ..Default::default()
+        };
+        let tel = traced_telemetry(cfg.workers, |engine| {
+            build_tree(engine, rows, None, &tcfg).map(|_| ())
+        });
+        if let Ok(tel) = tel {
+            let ratio = tiled_peak_bytes as f64 / dense_peak_bytes.max(1) as f64;
+            let throughput = rows.len() as f64 / tel.wall_secs.max(1e-9);
+            write_bench_json(
+                "table5",
+                &[
+                    ("distmat_peak_bytes_dense", dense_peak_bytes.to_string()),
+                    ("distmat_peak_bytes_tiled", tiled_peak_bytes.to_string()),
+                    ("peak_bytes_ratio", format!("{ratio:.6}")),
+                    ("backends_agree", backends_agree.to_string()),
+                    ("tasks_run", tel.tasks.to_string()),
+                    ("steals", tel.steals.to_string()),
+                    ("speculative_launches", tel.speculative_launches.to_string()),
+                    ("kill_drained", tel.kill_drained.to_string()),
+                    ("critical_path_frac", format!("{:.6}", tel.critical_path_frac)),
+                    ("throughput_rows_per_sec", format!("{throughput:.3}")),
+                    ("wall_secs", format!("{:.6}", tel.wall_secs)),
+                ],
+            );
         }
     }
     out
@@ -565,6 +715,7 @@ pub fn fig6_trace(cfg: &BenchConfig) -> Vec<(&'static str, String)> {
     let (_, spec) = cfg.dna_tiers().into_iter().next().unwrap();
     let seqs = spec.generate();
     let mut out = Vec::new();
+    let mut telemetry: Vec<(&'static str, TraceTelemetry)> = Vec::new();
     for (label, mode) in
         [("sharded", SchedulerMode::Sharded), ("global", SchedulerMode::GlobalLock)]
     {
@@ -572,6 +723,7 @@ pub fn fig6_trace(cfg: &BenchConfig) -> Vec<(&'static str, String)> {
         ccfg.scheduler.mode = mode;
         ccfg.scheduler.trace_capacity = 1 << 14;
         let engine = Cluster::new(ccfg);
+        let t0 = Instant::now();
         align_nucleotide(&engine, &seqs, &CenterStarConfig::default())
             .expect("fig6 trace MSA");
 
@@ -633,7 +785,47 @@ pub fn fig6_trace(cfg: &BenchConfig) -> Vec<(&'static str, String)> {
         assert!(engine.executor().kill_worker(0), "kill must succeed");
 
         let events = engine.trace().drain_new();
+        let count = |kind: TraceKind| events.iter().filter(|e| e.kind == kind).count() as u64;
+        let profile = Profile::from_events(&events, engine.trace().num_lanes());
+        telemetry.push((
+            label,
+            TraceTelemetry {
+                tasks: count(TraceKind::Finish),
+                steals: count(TraceKind::Steal),
+                speculative_launches: count(TraceKind::SpeculativeLaunch),
+                kill_drained: count(TraceKind::KillDrain),
+                critical_path_frac: profile.critical_path_frac,
+                wall_secs: t0.elapsed().as_secs_f64(),
+            },
+        ));
         out.push((label, chrome_trace_json(&events, engine.trace().num_lanes())));
+    }
+
+    // Machine-readable section: both queue architectures must show the
+    // forced steal / speculation / kill-drain episodes, and the critical
+    // path must stay a strict fraction of the wall-clock (the
+    // speculation stage's deadline wait is wall with no path on it).
+    if let (Some(s), Some(g)) = (
+        telemetry.iter().find(|(l, _)| *l == "sharded").map(|(_, t)| t),
+        telemetry.iter().find(|(l, _)| *l == "global").map(|(_, t)| t),
+    ) {
+        write_bench_json(
+            "fig6",
+            &[
+                ("sharded_tasks_run", s.tasks.to_string()),
+                ("sharded_steals", s.steals.to_string()),
+                ("sharded_speculative_launches", s.speculative_launches.to_string()),
+                ("sharded_kill_drained", s.kill_drained.to_string()),
+                ("sharded_critical_path_frac", format!("{:.6}", s.critical_path_frac)),
+                ("sharded_wall_secs", format!("{:.6}", s.wall_secs)),
+                ("global_tasks_run", g.tasks.to_string()),
+                ("global_steals", g.steals.to_string()),
+                ("global_speculative_launches", g.speculative_launches.to_string()),
+                ("global_kill_drained", g.kill_drained.to_string()),
+                ("global_critical_path_frac", format!("{:.6}", g.critical_path_frac)),
+                ("global_wall_secs", format!("{:.6}", g.wall_secs)),
+            ],
+        );
     }
     out
 }
@@ -644,6 +836,17 @@ mod tests {
 
     fn quick() -> BenchConfig {
         BenchConfig { quick: true, workers: 2, budget: Duration::from_secs(10), ..Default::default() }
+    }
+
+    /// The fresh scenario section the scenario run just wrote, read back
+    /// from the repo root.
+    fn bench_json(scenario: &str) -> String {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .unwrap()
+            .join(format!("BENCH_{scenario}.json"));
+        std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()))
     }
 
     #[test]
@@ -657,6 +860,13 @@ mod tests {
             let v1 = rows.iter().find(|r| r.tool == "halign_v1" && r.dataset == d).unwrap();
             let v2 = rows.iter().find(|r| r.tool == "halign2" && r.dataset == d).unwrap();
             assert_eq!(v1.metric, v2.metric, "same center-star, same SP");
+        }
+        // Machine-readable section written next to the baselines.
+        let json = bench_json("table2");
+        assert!(crate::obs::is_json_object(&json), "{json}");
+        assert!(json.contains("\"sp_match\": true"), "{json}");
+        for key in ["tasks_run", "critical_path_frac", "steals"] {
+            assert!(json.contains(key), "BENCH_table2.json missing {key}: {json}");
         }
     }
 
@@ -689,6 +899,19 @@ mod tests {
                 "row arity matches the header (which carries distmat_peak_mb)"
             );
             assert!(!line.split('\t').nth(11).unwrap().contains('-'), "peak cell is numeric");
+        }
+        // Machine-readable section: the tiled/dense peak ratio and the
+        // critical-path fraction the bench gate caps.
+        let json = bench_json("table5");
+        assert!(crate::obs::is_json_object(&json), "{json}");
+        assert!(json.contains("\"backends_agree\": true"), "{json}");
+        for key in [
+            "distmat_peak_bytes_dense",
+            "distmat_peak_bytes_tiled",
+            "peak_bytes_ratio",
+            "critical_path_frac",
+        ] {
+            assert!(json.contains(key), "BENCH_table5.json missing {key}: {json}");
         }
     }
 
@@ -761,6 +984,19 @@ mod tests {
             ] {
                 assert!(json.contains(needle), "{label}: trace must contain {needle}");
             }
+        }
+        // Machine-readable section: both modes' counters and fractions.
+        let json = bench_json("fig6");
+        assert!(crate::obs::is_json_object(&json), "{json}");
+        for key in [
+            "sharded_steals",
+            "sharded_speculative_launches",
+            "sharded_kill_drained",
+            "sharded_critical_path_frac",
+            "global_steals",
+            "global_critical_path_frac",
+        ] {
+            assert!(json.contains(key), "BENCH_fig6.json missing {key}: {json}");
         }
     }
 

@@ -282,6 +282,7 @@ impl Cluster {
             shuffles_executed: self.inner.io.shuffles_executed.get() as usize,
             avg_max_memory_bytes: self.inner.memory.avg_max_bytes(),
             max_peak_memory_bytes: self.inner.memory.max_peak_bytes(),
+            stage_edges: stage_dependency_edges(m.stages_run()),
         }
     }
 }
@@ -324,6 +325,17 @@ pub struct ClusterStats {
     pub shuffles_executed: usize,
     pub avg_max_memory_bytes: f64,
     pub max_peak_memory_bytes: usize,
+    /// Stage dependency edges `(from, to)` over the stage ids packed
+    /// into trace payloads.  `run_tasks` is a barrier, so the stages a
+    /// job ran form a sequential chain — exactly the shuffle ordering
+    /// the engine enforces — and the profiler's critical path walks it.
+    pub stage_edges: Vec<(u64, u64)>,
+}
+
+/// The dependency edges implied by barrier-ordered stages `1..=stages`:
+/// stage `s + 1` cannot start before stage `s` finished.
+pub fn stage_dependency_edges(stages: u64) -> Vec<(u64, u64)> {
+    (1..stages).map(|s| (s, s + 1)).collect()
 }
 
 #[cfg(test)]
@@ -350,6 +362,16 @@ mod tests {
         assert_eq!(st.lock_contentions, 0);
         assert_eq!(st.speculative_launches, 0);
         assert_eq!(st.busy_skew, 1.0, "idle cluster is trivially balanced");
+    }
+
+    #[test]
+    fn stats_export_stage_dependency_edges() {
+        let c = Cluster::new(ClusterConfig::spark(2));
+        assert!(c.stats().stage_edges.is_empty(), "no stages yet, no edges");
+        c.executor_probe(4).unwrap();
+        c.executor_probe(4).unwrap();
+        c.executor_probe(4).unwrap();
+        assert_eq!(c.stats().stage_edges, vec![(1, 2), (2, 3)], "barrier chain");
     }
 
     #[test]

@@ -614,6 +614,12 @@ pub struct Executor {
     /// request families via the server).
     registry: Arc<Registry>,
     task_counter: AtomicUsize,
+    /// Stages executed via `run_tasks`, numbered from 1 in submission
+    /// order.  The stage id is packed into the high 32 bits of every
+    /// task-lifecycle trace payload (`(stage << 32) | task`), so the
+    /// post-hoc profiler can group spans per stage and walk the
+    /// barrier-ordered stage chain as its dependency edges.
+    stage_counter: AtomicU64,
     /// Mean worker-side execution nanos of the most recent stage — the
     /// quantity the speculation deadline is derived from (regression
     /// hook: queue wait must never leak into it).
@@ -673,6 +679,7 @@ impl Executor {
             opts,
             registry,
             task_counter: AtomicUsize::new(0),
+            stage_counter: AtomicU64::new(0),
             last_stage_avg_exec_nanos: AtomicU64::new(0),
             last_stage_deadline_nanos: AtomicU64::new(0),
         }
@@ -704,6 +711,14 @@ impl Executor {
     /// `ExecutorOptions::trace_capacity > 0`).
     pub fn trace(&self) -> &Arc<TraceSink> {
         &self.shared.obs.trace
+    }
+
+    /// Stages executed so far via [`Executor::run_tasks`].  Stage ids in
+    /// trace payloads count from 1 up to this value; `run_tasks` is a
+    /// barrier, so stage `s` depends on stage `s - 1` — the edge list the
+    /// profiler's critical-path extraction walks.
+    pub fn stages_run(&self) -> u64 {
+        self.stage_counter.load(Ordering::Relaxed)
     }
 
     /// Mean worker-side execution nanos per completed task in the most
@@ -781,6 +796,9 @@ impl Executor {
         if num_tasks == 0 {
             return Ok(());
         }
+        // Stage ids count from 1; 0 in a payload's high half means the
+        // event predates stage packing (or isn't a task-lifecycle event).
+        let stage = self.stage_counter.fetch_add(1, Ordering::Relaxed) + 1;
         let f = Arc::new(f);
         let (done_tx, done_rx) = channel::<TaskDone>();
         let completed: Arc<Vec<AtomicBool>> =
@@ -809,6 +827,9 @@ impl Executor {
             // (results stay correct either way — only which attempts
             // fail varies).
             let fail_this = self.fault.should_fail(owner, ordinal, attempt);
+            // Trace payload: stage in the high 32 bits, task ordinal in
+            // the low 32 — one u64 identifies the span across lanes.
+            let span = (stage << 32) | task as u64;
             let f = f.clone();
             let done = done_tx.clone();
             let completed = completed.clone();
@@ -823,7 +844,7 @@ impl Executor {
                     Ordering::Release,
                 );
                 let m = &shared.metrics[exec_w];
-                shared.obs.trace.emit(exec_w, TraceKind::Start, task as u64);
+                shared.obs.trace.emit(exec_w, TraceKind::Start, span);
                 let start = Instant::now();
                 let result = if fail_this {
                     m.failures.fetch_add(1, Ordering::Relaxed);
@@ -842,21 +863,17 @@ impl Executor {
                     shared.obs.task_failures.inc();
                 }
                 shared.obs.task_exec.record(exec_nanos);
-                shared.obs.trace.emit(exec_w, TraceKind::Finish, task as u64);
+                shared.obs.trace.emit(exec_w, TraceKind::Finish, span);
                 let _ = done.send(TaskDone { task, speculative, result, exec_nanos });
             });
             // Enqueue/speculation decisions happen on the driver lane.
             let driver_lane = self.num_workers();
             if speculative {
                 self.shared.obs.speculative_launches.inc();
-                self.shared.obs.trace.emit(
-                    driver_lane,
-                    TraceKind::SpeculativeLaunch,
-                    task as u64,
-                );
+                self.shared.obs.trace.emit(driver_lane, TraceKind::SpeculativeLaunch, span);
             }
             let target = self.shared.queues.enqueue(owner, job)?;
-            self.shared.obs.trace.emit(driver_lane, TraceKind::Enqueue, task as u64);
+            self.shared.obs.trace.emit(driver_lane, TraceKind::Enqueue, span);
             if speculative {
                 // Counted against the worker the duplicate actually
                 // landed on (the preferred owner may be dead).
@@ -1431,6 +1448,25 @@ mod tests {
         .unwrap();
         let stolen: usize = ex.metrics().iter().map(|m| m.steals.load(Ordering::SeqCst)).sum();
         assert!(stolen >= 4, "worker 0's queued tasks must have been stolen (got {stolen})");
+    }
+
+    #[test]
+    fn stage_ids_are_packed_into_trace_payloads() {
+        let opts = ExecutorOptions { trace_capacity: 1 << 10, ..no_spec() };
+        let ex = Executor::with_options(2, FaultPlan::none(), opts);
+        ex.run_tasks(4, 0, |_| Ok(())).unwrap();
+        ex.run_tasks(3, 0, |_| Ok(())).unwrap();
+        assert_eq!(ex.stages_run(), 2);
+        let mut seen = [false; 2];
+        for e in ex.trace().drain_new() {
+            if matches!(e.kind, TraceKind::Enqueue | TraceKind::Start | TraceKind::Finish) {
+                let (stage, task) = (e.payload >> 32, e.payload & 0xffff_ffff);
+                assert!((1..=2).contains(&stage), "stage {stage} out of range");
+                assert!(task < 4, "task {task} out of range");
+                seen[stage as usize - 1] = true;
+            }
+        }
+        assert!(seen[0] && seen[1], "both stages must appear in the trace");
     }
 
     #[test]

@@ -24,7 +24,7 @@ pub mod rdd;
 pub mod shuffle;
 
 pub use broadcast::Broadcast;
-pub use context::{Cluster, ClusterConfig, ClusterStats};
+pub use context::{stage_dependency_edges, Cluster, ClusterConfig, ClusterStats};
 pub use executor::{ExecutorOptions, SchedulerMode, WorkerMetrics};
 pub use fault::FaultPlan;
 pub use memory::{MemSize, MemoryTracker};

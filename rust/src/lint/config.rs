@@ -57,6 +57,12 @@ pub struct LintConfig {
     /// registering an undeclared (or duplicate) family is rule W8.
     /// Empty when the file is absent, which leaves W8 inert.
     pub metric_names: Vec<String>,
+    /// Bench scenarios with committed baselines at the repo root:
+    /// `(scenario, declared keys)` parsed from each
+    /// `BENCH_<scenario>.baseline.json`.  A `write_bench_json` call
+    /// whose scenario or keys are undeclared is rule W9.  Empty when no
+    /// baselines exist, which leaves W9 inert.
+    pub bench_baseline_keys: Vec<(String, Vec<String>)>,
 }
 
 #[derive(Clone, Copy, PartialEq)]
@@ -162,6 +168,44 @@ impl LintConfig {
             }
         }
         names
+    }
+
+    /// Extract the top-level keys of a `BENCH_<scenario>.baseline.json`
+    /// file.  The scan is lexical, not a JSON parse: every quoted
+    /// string directly followed (after whitespace) by a `:` is a key.
+    /// That is exact for the flat objects the baselines are — and for
+    /// W9's purpose a nested key is still a declared key.
+    pub fn parse_bench_baseline(text: &str) -> Vec<String> {
+        let bytes = text.as_bytes();
+        let mut keys: Vec<String> = Vec::new();
+        let mut i = 0usize;
+        while i < bytes.len() {
+            if bytes[i] != b'"' {
+                i += 1;
+                continue;
+            }
+            let start = i + 1;
+            let mut j = start;
+            while j < bytes.len() && bytes[j] != b'"' {
+                if bytes[j] == b'\\' {
+                    j += 1;
+                }
+                j += 1;
+            }
+            if j >= bytes.len() {
+                break;
+            }
+            let lit = &text[start..j];
+            let mut k = j + 1;
+            while k < bytes.len() && (bytes[k] as char).is_ascii_whitespace() {
+                k += 1;
+            }
+            if k < bytes.len() && bytes[k] == b':' && !keys.iter().any(|s| s == lit) {
+                keys.push(lit.to_string());
+            }
+            i = j + 1;
+        }
+        keys
     }
 }
 

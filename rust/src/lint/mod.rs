@@ -23,6 +23,7 @@
 //! | W6   | `metrics-arity`    | TSV row-writer field count vs header column count |
 //! | W7   | `cache-atomic-write`| direct `fs::write`/`fs::rename`/`File::create`/`OpenOptions` in `cache/` bypassing `write_atomic` |
 //! | W8   | `metric-name-registry` | metric families registered with names undeclared in `rust/OBSERVABILITY.md`, non-snake_case, or registered twice |
+//! | W9   | `bench-json-schema`    | `write_bench_json` calls whose scenario lacks a committed `BENCH_<scenario>.baseline.json` or whose keys are undeclared in it |
 //!
 //! Suppression: `// lint: allow(<key>) <reason>` on the offending line
 //! or the line above.  A missing reason is itself a finding (W0), so
@@ -261,14 +262,32 @@ fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
     Ok(())
 }
 
-/// Load `rust/LOCKS.md` (required) and `rust/OBSERVABILITY.md`
-/// (optional — when absent, no metric names are declared and W8 stays
-/// inert rather than failing the run) from the repo root.
+/// Load `rust/LOCKS.md` (required), `rust/OBSERVABILITY.md` (optional —
+/// when absent, no metric names are declared and W8 stays inert rather
+/// than failing the run), and the committed `BENCH_*.baseline.json`
+/// files at the repo root (optional the same way — none present leaves
+/// W9 inert).
 pub fn load_config(root: &Path) -> io::Result<LintConfig> {
     let text = fs::read_to_string(root.join("rust").join("LOCKS.md"))?;
     let mut cfg = LintConfig::parse_locks_md(&text);
     if let Ok(obs) = fs::read_to_string(root.join("rust").join("OBSERVABILITY.md")) {
         cfg.metric_names = LintConfig::parse_observability_md(&obs);
+    }
+    if let Ok(entries) = fs::read_dir(root) {
+        let mut found = Vec::new();
+        for entry in entries.flatten() {
+            let name = entry.file_name().to_string_lossy().into_owned();
+            let Some(scenario) =
+                name.strip_prefix("BENCH_").and_then(|n| n.strip_suffix(".baseline.json"))
+            else {
+                continue;
+            };
+            if let Ok(text) = fs::read_to_string(entry.path()) {
+                found.push((scenario.to_string(), LintConfig::parse_bench_baseline(&text)));
+            }
+        }
+        found.sort();
+        cfg.bench_baseline_keys = found;
     }
     Ok(cfg)
 }

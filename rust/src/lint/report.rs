@@ -16,10 +16,11 @@ pub enum Rule {
     MetricsArity,
     CacheAtomicWrite,
     MetricNameRegistry,
+    BenchJsonSchema,
 }
 
 impl Rule {
-    /// Short ID printed in findings (`W1`…`W8`, `W0` for allow syntax).
+    /// Short ID printed in findings (`W1`…`W9`, `W0` for allow syntax).
     pub fn id(self) -> &'static str {
         match self {
             Rule::AllowSyntax => "W0",
@@ -31,6 +32,7 @@ impl Rule {
             Rule::MetricsArity => "W6",
             Rule::CacheAtomicWrite => "W7",
             Rule::MetricNameRegistry => "W8",
+            Rule::BenchJsonSchema => "W9",
         }
     }
 
@@ -46,6 +48,7 @@ impl Rule {
             Rule::MetricsArity => "metrics-arity",
             Rule::CacheAtomicWrite => "cache-atomic-write",
             Rule::MetricNameRegistry => "metric-name-registry",
+            Rule::BenchJsonSchema => "bench-json-schema",
         }
     }
 
@@ -59,6 +62,7 @@ impl Rule {
             Rule::MetricsArity,
             Rule::CacheAtomicWrite,
             Rule::MetricNameRegistry,
+            Rule::BenchJsonSchema,
         ]
         .into_iter()
         .find(|r| r.allow_key() == key)

@@ -44,6 +44,7 @@ pub fn run_all(ctx: &FileContext<'_>) -> Vec<Finding> {
     check_metrics_arity(ctx, &mut findings);
     check_cache_atomic_write(ctx, &mut findings);
     check_metric_names(ctx, &mut findings);
+    check_bench_json_schema(ctx, &mut findings);
     findings
 }
 
@@ -862,6 +863,79 @@ fn check_metric_names(ctx: &FileContext<'_>, out: &mut Vec<Finding>) {
             )),
             None => {
                 first_seen.insert(name, line);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- W9 --
+
+/// W9: every `write_bench_json("<scenario>", ...)` call must target a
+/// scenario with a committed `BENCH_<scenario>.baseline.json` at the
+/// repo root, and every snake_case string literal inside the call (the
+/// field keys, per the writer's literal-key contract) must be declared
+/// in that baseline — so the CI gate in `scripts/bench_compare.py`
+/// never meets a key it has no floor or ceiling for.  Inert when no
+/// baselines exist.  Heuristic limit (LINTS.md): any snake_case literal
+/// inside the statement is treated as a key, so value expressions must
+/// not contain snake_case string literals.
+fn check_bench_json_schema(ctx: &FileContext<'_>, out: &mut Vec<Finding>) {
+    if ctx.cfg.bench_baseline_keys.is_empty() {
+        return;
+    }
+    let text = ctx.scrubbed.text.as_bytes();
+    let needle = b"write_bench_json(";
+    let mut from = 0usize;
+    while let Some(p) = find_from(text, needle, from) {
+        from = p + 1;
+        if p > 0 && is_ident(text[p - 1]) {
+            continue;
+        }
+        // The scenario must be a string literal right after the paren;
+        // the writer's own `fn` definition (`scenario: &str`) and any
+        // pass-through call have an identifier there instead.
+        let q = skip_ws(text, p + needle.len());
+        if q >= text.len() || text[q] != b'"' {
+            continue;
+        }
+        let line = ctx.line_of(p);
+        if ctx.in_test(line) {
+            continue;
+        }
+        let Some(scenario) = ctx.scrubbed.strings.iter().find(|s| s.offset == q) else {
+            continue;
+        };
+        let stmt_end = find_stmt_end(text, p);
+        match ctx.cfg.bench_baseline_keys.iter().find(|(s, _)| s == &scenario.raw) {
+            None => out.push(Finding::new(
+                ctx.path,
+                line,
+                Rule::BenchJsonSchema,
+                format!(
+                    "bench scenario `{0}` has no committed BENCH_{0}.baseline.json at the \
+                     repo root; commit the baseline with the gate knobs (or fix the name)",
+                    scenario.raw
+                ),
+            )),
+            Some((_, declared)) => {
+                for lit in &ctx.scrubbed.strings {
+                    if lit.offset <= q || lit.offset >= stmt_end || !is_snake_case(&lit.raw) {
+                        continue;
+                    }
+                    if !declared.iter().any(|k| k == &lit.raw) {
+                        out.push(Finding::new(
+                            ctx.path,
+                            lit.line,
+                            Rule::BenchJsonSchema,
+                            format!(
+                                "bench JSON key `{}` is not declared in \
+                                 BENCH_{}.baseline.json; add the baseline row in the same \
+                                 commit (or fix the key)",
+                                lit.raw, scenario.raw
+                            ),
+                        ));
+                    }
+                }
             }
         }
     }

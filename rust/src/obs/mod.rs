@@ -13,18 +13,26 @@
 //! * [`trace`] — bounded per-lane ring buffers recording task
 //!   lifecycle events, drained into Chrome trace-event JSON so a fig6
 //!   run renders as a worker×time Gantt chart in Perfetto.
+//! * [`profile`] — post-hoc analysis over drained traces: per-lane ×
+//!   per-stage self-time (collapsed-stack flamegraph export),
+//!   scheduler gap classification (idle / steal-wait / drain-wait),
+//!   and critical-path extraction with `critical_path_frac`.
 //!
 //! Everything is `std`-only and lock-free on the record path; the
 //! naming contract and the machine-parsed family table live in
 //! `rust/OBSERVABILITY.md` (enforced by pallas-lint W8).
 
+pub mod profile;
 pub mod registry;
 pub mod trace;
 
 use std::sync::Arc;
 
+pub use profile::Profile;
 pub use registry::{Counter, Gauge, HistSnapshot, Histogram, Registry};
-pub use trace::{chrome_trace_json, is_json_array, TraceEvent, TraceKind, TraceSink};
+pub use trace::{
+    chrome_trace_json, is_json_array, is_json_object, TraceEvent, TraceKind, TraceSink,
+};
 
 /// The executor's registered instruments, created once per cluster in
 /// `Executor::with_options` and shared (via `Arc`) with both scheduler

@@ -1,0 +1,543 @@
+//! Post-hoc profiling over the trace rings: turns a drained event list
+//! into the three views a perf investigation needs.
+//!
+//! * **Span aggregation** — `Start`/`Finish` pairs fold into per-lane ×
+//!   per-stage self-time / count / max tables, exported in collapsed-
+//!   stack format (`worker0;stage1;task 420`) so any flamegraph tool
+//!   (inferno, flamegraph.pl, speedscope) renders them directly.
+//! * **Scheduler gap analysis** — the gaps between consecutive spans on
+//!   a worker lane partition its wall-clock into self / steal-wait /
+//!   drain-wait / idle exactly (integer nanos, no residue), and the
+//!   `Enqueue` instants yield the enqueue→start queueing delay.
+//! * **Critical-path extraction** — `run_tasks` is a barrier, so the
+//!   stages of a job form a sequential dependency chain (the
+//!   `ClusterStats::stage_edges` the engine exports).  Within a stage
+//!   the *winning attempt* of each task (earliest `Finish`, which is
+//!   what unblocks the barrier under speculation) is selected, and the
+//!   longest winner per stage is the stage's critical task; the path is
+//!   the chain of those, with `critical_path_frac = path / wall_clock`
+//!   as the headline number.  Winner spans of successive stages are
+//!   time-disjoint (a stage's winners all end before the next stage
+//!   submits), so the path never exceeds the wall-clock by
+//!   construction.
+//!
+//! Everything here runs on already-drained `Vec<TraceEvent>` — no locks,
+//! no interaction with live rings — so the server can profile a retained
+//! trace long after the job finished.
+
+use std::collections::BTreeMap;
+
+use super::trace::{TraceEvent, TraceKind};
+
+/// One aggregate row: everything lane `lane` spent executing tasks of
+/// stage `stage`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StageRow {
+    pub lane: usize,
+    pub stage: u64,
+    /// Completed spans folded into this row.
+    pub count: u64,
+    /// Total execution nanos (the flamegraph weight).
+    pub self_nanos: u64,
+    /// Longest single span in the row.
+    pub max_nanos: u64,
+}
+
+/// Exact partition of one worker lane's wall-clock: task execution plus
+/// classified gaps.  `self + steal_wait + drain_wait + idle` equals the
+/// job wall-clock exactly (integer nanos).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LaneGaps {
+    pub lane: usize,
+    pub self_nanos: u64,
+    /// Gap containing a `Steal` instant on this lane: the worker was
+    /// out of local work and went stealing.
+    pub steal_wait_nanos: u64,
+    /// Gap containing a `KillDrain` instant (any lane): the scheduler
+    /// was redistributing a dead worker's deque.
+    pub drain_wait_nanos: u64,
+    /// Everything else: parked with no work available.
+    pub idle_nanos: u64,
+}
+
+/// Enqueue→start queueing delay, aggregated over every task whose
+/// `Enqueue` instant and first `Start` both appear in the trace.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct QueueDelay {
+    pub samples: u64,
+    pub total_nanos: u64,
+    pub max_nanos: u64,
+}
+
+/// One link of the critical path: the stage's slowest winning task.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PathEntry {
+    pub stage: u64,
+    pub task: u64,
+    pub dur_nanos: u64,
+}
+
+/// The full post-hoc profile of one drained trace.
+#[derive(Debug, Clone)]
+pub struct Profile {
+    /// Last event minus first event across all lanes (0 when the trace
+    /// holds fewer than two events).
+    pub wall_nanos: u64,
+    pub num_lanes: usize,
+    /// Per-lane × per-stage self-time table, sorted by (lane, stage).
+    pub aggregate: Vec<StageRow>,
+    /// Gap analysis per worker lane (the driver lane runs no spans and
+    /// is omitted).
+    pub lanes: Vec<LaneGaps>,
+    pub queue: QueueDelay,
+    /// Stage chain, ascending; one entry per stage with completed spans.
+    pub critical_path: Vec<PathEntry>,
+    /// Sum of the path entries' durations.
+    pub critical_path_nanos: u64,
+    /// `critical_path_nanos / wall_nanos`; in `(0, 1]` whenever the
+    /// trace holds at least one completed span, else 0.
+    pub critical_path_frac: f64,
+}
+
+/// A completed execution span recovered from a `Start`/`Finish` pair.
+#[derive(Debug, Clone, Copy)]
+struct Span {
+    lane: usize,
+    stage: u64,
+    task: u64,
+    start: u64,
+    end: u64,
+}
+
+impl Span {
+    fn dur(&self) -> u64 {
+        self.end - self.start
+    }
+}
+
+/// Human lane label matching the Chrome export (`worker N` / `driver`).
+pub fn lane_label(lane: usize, num_lanes: usize) -> String {
+    if lane + 1 == num_lanes && num_lanes > 1 {
+        "driver".to_string()
+    } else {
+        format!("worker{lane}")
+    }
+}
+
+impl Profile {
+    /// Build the profile from a drained event list (the output of
+    /// `TraceSink::drain_new`; any order is accepted, events are
+    /// re-sorted).  `num_lanes` follows the sink's convention: lanes
+    /// `0..num_lanes-1` are workers, the last lane is the driver.
+    pub fn from_events(events: &[TraceEvent], num_lanes: usize) -> Profile {
+        let mut evs: Vec<TraceEvent> =
+            events.iter().filter(|e| e.lane < num_lanes).copied().collect();
+        evs.sort_by_key(|e| (e.nanos, e.lane));
+        let wall_lo = evs.first().map(|e| e.nanos).unwrap_or(0);
+        let wall_hi = evs.last().map(|e| e.nanos).unwrap_or(0);
+        let wall_nanos = wall_hi - wall_lo;
+
+        // ---- Span pairing: a worker runs one task at a time, so each
+        // lane carries at most one open span; a Start whose Finish was
+        // lost (ring overflow, killed worker) is superseded by the next
+        // Start and dropped.
+        let mut pending: Vec<Option<(u64, u64)>> = vec![None; num_lanes];
+        let mut spans: Vec<Span> = Vec::new();
+        let mut steal_times: Vec<Vec<u64>> = vec![Vec::new(); num_lanes];
+        let mut drain_times: Vec<u64> = Vec::new();
+        let mut enqueue_at: BTreeMap<u64, u64> = BTreeMap::new();
+        let mut first_start_at: BTreeMap<u64, u64> = BTreeMap::new();
+        for e in &evs {
+            match e.kind {
+                TraceKind::Start => {
+                    pending[e.lane] = Some((e.payload, e.nanos));
+                    first_start_at.entry(e.payload).or_insert(e.nanos);
+                }
+                TraceKind::Finish => {
+                    if let Some((payload, start)) = pending[e.lane] {
+                        if payload == e.payload {
+                            spans.push(Span {
+                                lane: e.lane,
+                                stage: payload >> 32,
+                                task: payload & 0xffff_ffff,
+                                start,
+                                end: e.nanos.max(start),
+                            });
+                            pending[e.lane] = None;
+                        }
+                    }
+                }
+                TraceKind::Steal => steal_times[e.lane].push(e.nanos),
+                TraceKind::KillDrain => drain_times.push(e.nanos),
+                TraceKind::Enqueue => {
+                    enqueue_at.entry(e.payload).or_insert(e.nanos);
+                }
+                _ => {}
+            }
+        }
+
+        // ---- Aggregation per (lane, stage).
+        let mut agg: BTreeMap<(usize, u64), (u64, u64, u64)> = BTreeMap::new();
+        for sp in &spans {
+            let row = agg.entry((sp.lane, sp.stage)).or_insert((0, 0, 0));
+            row.0 += 1;
+            row.1 += sp.dur();
+            row.2 = row.2.max(sp.dur());
+        }
+        let aggregate: Vec<StageRow> = agg
+            .into_iter()
+            .map(|((lane, stage), (count, self_nanos, max_nanos))| StageRow {
+                lane,
+                stage,
+                count,
+                self_nanos,
+                max_nanos,
+            })
+            .collect();
+
+        // ---- Gap analysis: walk each worker lane's timeline from
+        // wall_lo to wall_hi; spans and classified gaps partition it
+        // exactly.  A gap is steal-wait if a Steal instant on this lane
+        // falls inside it, else drain-wait if any KillDrain does, else
+        // idle.
+        let worker_lanes = if num_lanes > 1 { num_lanes - 1 } else { num_lanes };
+        let mut lanes_out: Vec<LaneGaps> = Vec::with_capacity(worker_lanes);
+        for lane in 0..worker_lanes {
+            let mut lane_spans: Vec<&Span> = spans.iter().filter(|s| s.lane == lane).collect();
+            lane_spans.sort_by_key(|s| s.start);
+            let mut g = LaneGaps {
+                lane,
+                self_nanos: 0,
+                steal_wait_nanos: 0,
+                drain_wait_nanos: 0,
+                idle_nanos: 0,
+            };
+            let in_window = |ts: &[u64], lo: u64, hi: u64| ts.iter().any(|&t| t >= lo && t < hi);
+            let mut classify = |lo: u64, hi: u64| {
+                let dur = hi - lo;
+                if in_window(&steal_times[lane], lo, hi) {
+                    g.steal_wait_nanos += dur;
+                } else if in_window(&drain_times, lo, hi) {
+                    g.drain_wait_nanos += dur;
+                } else {
+                    g.idle_nanos += dur;
+                }
+            };
+            let mut cursor = wall_lo;
+            for sp in lane_spans {
+                let start = sp.start.max(cursor);
+                classify(cursor, start);
+                g.self_nanos += sp.end.saturating_sub(start);
+                cursor = cursor.max(sp.end);
+            }
+            classify(cursor, wall_hi.max(cursor));
+            lanes_out.push(g);
+        }
+
+        // ---- Queue delay: enqueue instant → first start, per payload.
+        let mut queue = QueueDelay::default();
+        for (payload, &enq) in &enqueue_at {
+            if let Some(&start) = first_start_at.get(payload) {
+                if start >= enq {
+                    let d = start - enq;
+                    queue.samples += 1;
+                    queue.total_nanos += d;
+                    queue.max_nanos = queue.max_nanos.max(d);
+                }
+            }
+        }
+
+        // ---- Critical path: winning attempt (earliest Finish) per
+        // (stage, task), then the longest winner per stage, chained in
+        // stage order.
+        let mut winners: BTreeMap<(u64, u64), (u64, u64)> = BTreeMap::new(); // (end, dur)
+        for sp in &spans {
+            let w = winners.entry((sp.stage, sp.task)).or_insert((sp.end, sp.dur()));
+            if sp.end < w.0 {
+                *w = (sp.end, sp.dur());
+            }
+        }
+        let mut per_stage: BTreeMap<u64, (u64, u64)> = BTreeMap::new(); // stage -> (task, dur)
+        for (&(stage, task), &(_, dur)) in &winners {
+            let e = per_stage.entry(stage).or_insert((task, dur));
+            if dur > e.1 {
+                *e = (task, dur);
+            }
+        }
+        let critical_path: Vec<PathEntry> = per_stage
+            .into_iter()
+            .map(|(stage, (task, dur_nanos))| PathEntry { stage, task, dur_nanos })
+            .collect();
+        let critical_path_nanos: u64 = critical_path.iter().map(|p| p.dur_nanos).sum();
+        let critical_path_frac = if wall_nanos == 0 {
+            // A degenerate trace (all events share one timestamp) still
+            // counts as fully on-path when it ran anything at all.
+            if critical_path.is_empty() {
+                0.0
+            } else {
+                1.0
+            }
+        } else {
+            // Zero-duration winner spans can make the sum 0 while work
+            // clearly happened; clamp into (0, 1] whenever a span
+            // completed so the headline stays an honest fraction.
+            let raw = critical_path_nanos as f64 / wall_nanos as f64;
+            if critical_path.is_empty() {
+                0.0
+            } else {
+                raw.clamp(f64::MIN_POSITIVE, 1.0)
+            }
+        };
+
+        Profile {
+            wall_nanos,
+            num_lanes,
+            aggregate,
+            lanes: lanes_out,
+            queue,
+            critical_path,
+            critical_path_nanos,
+            critical_path_frac,
+        }
+    }
+
+    /// Collapsed-stack flamegraph lines: one per aggregate row,
+    /// `<lane>;stage<stage>;task <weight-micros>`, weight floored at 1
+    /// so every line carries a positive integer weight.
+    pub fn collapsed_stack(&self) -> String {
+        let mut out = String::new();
+        for row in &self.aggregate {
+            let micros = ((row.self_nanos + 500) / 1000).max(1);
+            out.push_str(&format!(
+                "{};stage{};task {micros}\n",
+                lane_label(row.lane, self.num_lanes),
+                row.stage
+            ));
+        }
+        out
+    }
+
+    /// The `k` stages with the most total self-time across lanes,
+    /// descending: `(stage, self_nanos)`.
+    pub fn top_self_stages(&self, k: usize) -> Vec<(u64, u64)> {
+        let mut per_stage: BTreeMap<u64, u64> = BTreeMap::new();
+        for row in &self.aggregate {
+            *per_stage.entry(row.stage).or_insert(0) += row.self_nanos;
+        }
+        let mut v: Vec<(u64, u64)> = per_stage.into_iter().collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        v.truncate(k);
+        v
+    }
+
+    /// The profile as one JSON object (hand-rolled, std-only — same
+    /// policy as the Chrome export and the bench JSON writers).
+    pub fn to_json(&self) -> String {
+        let aggregate: Vec<String> = self
+            .aggregate
+            .iter()
+            .map(|r| {
+                format!(
+                    "{{\"lane\":\"{}\",\"stage\":{},\"count\":{},\
+                     \"self_nanos\":{},\"max_nanos\":{}}}",
+                    lane_label(r.lane, self.num_lanes),
+                    r.stage,
+                    r.count,
+                    r.self_nanos,
+                    r.max_nanos
+                )
+            })
+            .collect();
+        let lanes: Vec<String> = self
+            .lanes
+            .iter()
+            .map(|g| {
+                format!(
+                    "{{\"lane\":\"{}\",\"self_nanos\":{},\"steal_wait_nanos\":{},\
+                     \"drain_wait_nanos\":{},\"idle_nanos\":{}}}",
+                    lane_label(g.lane, self.num_lanes),
+                    g.self_nanos,
+                    g.steal_wait_nanos,
+                    g.drain_wait_nanos,
+                    g.idle_nanos
+                )
+            })
+            .collect();
+        let path: Vec<String> = self
+            .critical_path
+            .iter()
+            .map(|p| {
+                format!(
+                    "{{\"stage\":{},\"task\":{},\"dur_nanos\":{}}}",
+                    p.stage, p.task, p.dur_nanos
+                )
+            })
+            .collect();
+        let avg_queue = if self.queue.samples == 0 {
+            0
+        } else {
+            self.queue.total_nanos / self.queue.samples
+        };
+        format!(
+            "{{\"wall_nanos\":{},\"num_lanes\":{},\"aggregate\":[{}],\
+             \"lanes\":[{}],\
+             \"queue\":{{\"samples\":{},\"avg_nanos\":{avg_queue},\"max_nanos\":{}}},\
+             \"critical_path\":[{}],\"critical_path_nanos\":{},\
+             \"critical_path_frac\":{:.6}}}",
+            self.wall_nanos,
+            self.num_lanes,
+            aggregate.join(","),
+            lanes.join(","),
+            self.queue.samples,
+            self.queue.max_nanos,
+            path.join(","),
+            self.critical_path_nanos,
+            self.critical_path_frac
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::is_json_object;
+
+    fn ev(nanos: u64, lane: usize, kind: TraceKind, payload: u64) -> TraceEvent {
+        TraceEvent { nanos, lane, kind, payload }
+    }
+
+    fn pack(stage: u64, task: u64) -> u64 {
+        (stage << 32) | task
+    }
+
+    #[test]
+    fn empty_trace_profiles_to_zeroes() {
+        let p = Profile::from_events(&[], 3);
+        assert_eq!(p.wall_nanos, 0);
+        assert!(p.aggregate.is_empty());
+        assert!(p.critical_path.is_empty());
+        assert_eq!(p.critical_path_frac, 0.0);
+        assert!(p.collapsed_stack().is_empty());
+    }
+
+    #[test]
+    fn spans_aggregate_per_lane_and_stage() {
+        // Lane 0 runs two stage-1 tasks (10ns, 30ns); lane 1 one
+        // stage-2 task (50ns).  Driver is lane 2.
+        let events = [
+            ev(0, 0, TraceKind::Start, pack(1, 0)),
+            ev(10, 0, TraceKind::Finish, pack(1, 0)),
+            ev(20, 0, TraceKind::Start, pack(1, 1)),
+            ev(50, 0, TraceKind::Finish, pack(1, 1)),
+            ev(60, 1, TraceKind::Start, pack(2, 0)),
+            ev(110, 1, TraceKind::Finish, pack(2, 0)),
+        ];
+        let p = Profile::from_events(&events, 3);
+        assert_eq!(p.wall_nanos, 110);
+        assert_eq!(p.aggregate.len(), 2);
+        let r0 = &p.aggregate[0];
+        assert_eq!((r0.lane, r0.stage, r0.count, r0.self_nanos, r0.max_nanos), (0, 1, 2, 40, 30));
+        let r1 = &p.aggregate[1];
+        assert_eq!((r1.lane, r1.stage, r1.count, r1.self_nanos, r1.max_nanos), (1, 2, 1, 50, 50));
+        // Collapsed stack: arity 3 on ';', positive integer weight.
+        let stack = p.collapsed_stack();
+        for line in stack.lines() {
+            let (frames, weight) = line.rsplit_once(' ').unwrap();
+            assert_eq!(frames.split(';').count(), 3, "{line}");
+            assert!(weight.parse::<u64>().unwrap() >= 1, "{line}");
+        }
+        assert!(stack.contains("worker0;stage1;task"), "{stack}");
+        assert!(is_json_object(&p.to_json()), "{}", p.to_json());
+    }
+
+    #[test]
+    fn gap_classification_partitions_the_lane_exactly() {
+        // Lane 0: span [0,10), gap [10,40) containing a steal at 20,
+        // span [40,60), gap [60,100) containing a kill-drain (driver
+        // lane) at 70.  Wall = 100.
+        let events = [
+            ev(0, 0, TraceKind::Start, pack(1, 0)),
+            ev(10, 0, TraceKind::Finish, pack(1, 0)),
+            ev(20, 0, TraceKind::Steal, 2),
+            ev(40, 0, TraceKind::Start, pack(1, 1)),
+            ev(60, 0, TraceKind::Finish, pack(1, 1)),
+            ev(70, 1, TraceKind::KillDrain, 3),
+            ev(100, 1, TraceKind::CacheMiss, 0),
+        ];
+        let p = Profile::from_events(&events, 2);
+        let g = &p.lanes[0];
+        assert_eq!(g.self_nanos, 30);
+        assert_eq!(g.steal_wait_nanos, 30, "steal instant claims its gap");
+        assert_eq!(g.drain_wait_nanos, 40, "kill-drain claims the tail gap");
+        assert_eq!(g.idle_nanos, 0);
+        assert_eq!(
+            g.self_nanos + g.steal_wait_nanos + g.drain_wait_nanos + g.idle_nanos,
+            p.wall_nanos,
+            "partition must be exact"
+        );
+    }
+
+    #[test]
+    fn critical_path_picks_winning_attempts_per_stage() {
+        // Stage 1, task 0 runs twice (speculation): the slow original
+        // [0,100) loses to the duplicate [10,30) — winner dur 20.
+        // Stage 1, task 1: [5,50), dur 45 → stage-1 critical task.
+        // Stage 2, task 0: [120,160), dur 40.
+        let events = [
+            ev(0, 0, TraceKind::Start, pack(1, 0)),
+            ev(5, 1, TraceKind::Start, pack(1, 1)),
+            ev(10, 2, TraceKind::Start, pack(1, 0)),
+            ev(30, 2, TraceKind::Finish, pack(1, 0)),
+            ev(50, 1, TraceKind::Finish, pack(1, 1)),
+            ev(100, 0, TraceKind::Finish, pack(1, 0)),
+            ev(120, 0, TraceKind::Start, pack(2, 0)),
+            ev(160, 0, TraceKind::Finish, pack(2, 0)),
+        ];
+        let p = Profile::from_events(&events, 4);
+        assert_eq!(p.critical_path.len(), 2);
+        assert_eq!(
+            (p.critical_path[0].stage, p.critical_path[0].task, p.critical_path[0].dur_nanos),
+            (1, 1, 45),
+            "stage 1's critical task is the longest WINNER, not the zombie original"
+        );
+        assert_eq!(
+            (p.critical_path[1].stage, p.critical_path[1].task, p.critical_path[1].dur_nanos),
+            (2, 0, 40)
+        );
+        assert_eq!(p.critical_path_nanos, 85);
+        assert!(p.critical_path_frac > 0.0 && p.critical_path_frac <= 1.0);
+        assert!((p.critical_path_frac - 85.0 / 160.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn queue_delay_matches_enqueue_to_first_start() {
+        let events = [
+            ev(0, 2, TraceKind::Enqueue, pack(1, 0)),
+            ev(7, 2, TraceKind::Enqueue, pack(1, 1)),
+            ev(10, 0, TraceKind::Start, pack(1, 0)),
+            ev(12, 1, TraceKind::Start, pack(1, 1)),
+            ev(20, 0, TraceKind::Finish, pack(1, 0)),
+            ev(22, 1, TraceKind::Finish, pack(1, 1)),
+        ];
+        let p = Profile::from_events(&events, 3);
+        assert_eq!(p.queue.samples, 2);
+        assert_eq!(p.queue.total_nanos, 10 + 5);
+        assert_eq!(p.queue.max_nanos, 10);
+    }
+
+    #[test]
+    fn top_self_stages_ranks_by_total_self_time() {
+        let events = [
+            ev(0, 0, TraceKind::Start, pack(1, 0)),
+            ev(10, 0, TraceKind::Finish, pack(1, 0)),
+            ev(20, 0, TraceKind::Start, pack(2, 0)),
+            ev(100, 0, TraceKind::Finish, pack(2, 0)),
+            ev(110, 1, TraceKind::Start, pack(2, 1)),
+            ev(130, 1, TraceKind::Finish, pack(2, 1)),
+        ];
+        let p = Profile::from_events(&events, 3);
+        let top = p.top_self_stages(3);
+        assert_eq!(top, vec![(2, 100), (1, 10)]);
+        assert_eq!(p.top_self_stages(1).len(), 1);
+    }
+}

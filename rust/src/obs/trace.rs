@@ -273,17 +273,22 @@ pub fn chrome_trace_json(events: &[TraceEvent], num_lanes: usize) -> String {
         let tid = e.lane + 1;
         let name = e.kind.name();
         let part = match e.kind {
+            // Task payloads pack `(stage << 32) | task` (see the
+            // executor); decode both halves so Perfetto shows which
+            // stage a span belongs to.
             TraceKind::Start => format!(
                 "{{\"ph\":\"B\",\"name\":\"{name}\",\"cat\":\"task\",\
                  \"pid\":1,\"tid\":{tid},\"ts\":{ts},\
-                 \"args\":{{\"ordinal\":{}}}}}",
-                e.payload
+                 \"args\":{{\"stage\":{},\"ordinal\":{}}}}}",
+                e.payload >> 32,
+                e.payload & 0xffff_ffff
             ),
             TraceKind::Finish => format!(
                 "{{\"ph\":\"E\",\"name\":\"{name}\",\"cat\":\"task\",\
                  \"pid\":1,\"tid\":{tid},\"ts\":{ts},\
-                 \"args\":{{\"ordinal\":{}}}}}",
-                e.payload
+                 \"args\":{{\"stage\":{},\"ordinal\":{}}}}}",
+                e.payload >> 32,
+                e.payload & 0xffff_ffff
             ),
             _ => format!(
                 "{{\"ph\":\"i\",\"name\":\"{name}\",\"cat\":\"sched\",\
@@ -306,6 +311,22 @@ pub fn is_json_array(text: &str) -> bool {
     let mut pos = 0usize;
     skip_ws(b, &mut pos);
     if pos >= b.len() || b[pos] != b'[' {
+        return false;
+    }
+    if !parse_value(b, &mut pos) {
+        return false;
+    }
+    skip_ws(b, &mut pos);
+    pos == b.len()
+}
+
+/// Companion validator: true iff `text` is one syntactically valid JSON
+/// object (the `/profile/<hash>` response shape).
+pub fn is_json_object(text: &str) -> bool {
+    let b = text.as_bytes();
+    let mut pos = 0usize;
+    skip_ws(b, &mut pos);
+    if pos >= b.len() || b[pos] != b'{' {
         return false;
     }
     if !parse_value(b, &mut pos) {
@@ -518,6 +539,25 @@ mod tests {
         assert!(json.contains("\"ph\":\"B\""));
         assert!(json.contains("\"ph\":\"E\""));
         assert!(json.contains("\"steal\""));
+    }
+
+    #[test]
+    fn task_spans_decode_packed_stage_and_ordinal() {
+        let s = sink(1, 16);
+        s.emit(0, TraceKind::Start, (3 << 32) | 9);
+        s.emit(0, TraceKind::Finish, (3 << 32) | 9);
+        let json = chrome_trace_json(&s.drain_new(), 1);
+        assert!(is_json_array(&json), "{json}");
+        assert!(json.contains("\"stage\":3,\"ordinal\":9"), "{json}");
+    }
+
+    #[test]
+    fn object_validator_accepts_and_rejects() {
+        assert!(is_json_object("{}"));
+        assert!(is_json_object("{\"a\":{\"b\":[1,2]},\"c\":0.5}"));
+        assert!(!is_json_object("[]"));
+        assert!(!is_json_object("{\"a\":}"));
+        assert!(!is_json_object("{} trailing"));
     }
 
     #[test]

@@ -15,6 +15,11 @@
 //!   GET  /trace/<h>   — Chrome trace-event JSON for job hash `<h>`
 //!                       (recorded when the cluster's trace rings are
 //!                       enabled; load in Perfetto / chrome://tracing)
+//!   GET  /profile/<h> — post-hoc profile of a traced job: aggregate
+//!                       self-time table, scheduler gap analysis, and
+//!                       the critical path with `critical_path_frac`;
+//!                       append `/flame` for collapsed-stack text
+//!                       (pipe into any flamegraph renderer)
 //!   POST /align       — body: FASTA; query: ?alphabet=dna|protein
 //!                       returns the aligned FASTA + an X-Avg-SP header
 //!   POST /tree        — body: aligned FASTA; returns Newick +
@@ -56,7 +61,9 @@ use crate::align::MsaResult;
 use crate::cache::{canonical_digest, ArtifactStore, DigestBuilder};
 use crate::engine::Cluster;
 use crate::fasta::{io as fio, Alphabet};
-use crate::obs::{chrome_trace_json, Counter, Gauge, Histogram, Registry, TraceKind};
+use crate::obs::{
+    chrome_trace_json, Counter, Gauge, Histogram, Profile, Registry, TraceEvent, TraceKind,
+};
 use crate::runtime::XlaService;
 use crate::tree::{build_tree, TreeConfig};
 
@@ -64,15 +71,26 @@ use http::{ReadError, Request, Response};
 
 /// Route labels of the request metric families (fixed vocabulary so
 /// `/metrics` cardinality is bounded no matter what paths clients probe).
-const ROUTES: [&str; 7] = ["align", "tree", "health", "status", "metrics", "trace", "other"];
+const ROUTES: [&str; 8] =
+    ["align", "tree", "health", "status", "metrics", "trace", "profile", "other"];
 
 /// `cache` label values of `halign_request_seconds` (`X-Cache` outcomes
 /// on `/align`; everything else records under "none").
 const CACHE_OUTCOMES: [&str; 4] = ["hit", "append", "miss", "none"];
 
-/// Exported traces retained for `GET /trace/<job-hash>` (one per engine
-/// job, oldest evicted).
+/// Exported traces retained for `GET /trace/<job-hash>` and
+/// `GET /profile/<job-hash>` (one per engine job, oldest evicted).
 const TRACE_KEEP: usize = 16;
+
+/// One retained engine-job trace: the rendered Chrome JSON plus the raw
+/// drained events, kept so `/profile/<hash>` can aggregate, classify
+/// gaps, and extract the critical path on demand.
+struct RetainedTrace {
+    key: u64,
+    chrome_json: String,
+    events: Vec<TraceEvent>,
+    num_lanes: usize,
+}
 
 /// Server-side metric families, registered in the *cluster's* registry
 /// at construction — a fresh server's `/metrics` already lists every
@@ -86,6 +104,7 @@ struct ServerObs {
     cache_misses: Arc<Counter>,
     cache_appends: Arc<Counter>,
     cache_resident_bytes: Arc<Gauge>,
+    cache_resident_bytes_peak: Arc<Gauge>,
     cache_entries: Arc<Gauge>,
     cache_spill_files: Arc<Gauge>,
 }
@@ -138,6 +157,10 @@ impl ServerObs {
                 "halign_cache_resident_bytes",
                 "Result-cache bytes resident in memory (scrape-time)",
             ),
+            cache_resident_bytes_peak: registry.register_gauge(
+                "halign_cache_resident_bytes_peak",
+                "Result-cache resident-bytes high-water mark (scrape-time)",
+            ),
             cache_entries: registry.register_gauge(
                 "halign_cache_entries",
                 "Result-cache artifacts stored (scrape-time)",
@@ -177,6 +200,7 @@ fn route_label(method: &str, path: &str) -> &'static str {
         ("GET", "/") => "status",
         ("GET", "/metrics") => "metrics",
         _ if path.starts_with("/trace/") => "trace",
+        _ if path.starts_with("/profile/") => "profile",
         _ => "other",
     }
 }
@@ -218,7 +242,7 @@ pub struct Server {
     /// Exported engine traces by job hash, newest-last (bounded at
     /// [`TRACE_KEEP`]); only populated when the cluster's trace rings
     /// are enabled.
-    traces: Mutex<VecDeque<(u64, String)>>,
+    traces: Mutex<VecDeque<RetainedTrace>>,
     requests: AtomicUsize,
     shutdown: AtomicBool,
 }
@@ -300,20 +324,26 @@ impl Server {
         // the life of the peer.
         stream.set_read_timeout(Some(self.options.read_timeout))?;
         stream.set_write_timeout(Some(self.options.write_timeout))?;
+        // The request id is allocated before the read so *every*
+        // response path carries it — including the 413 body-cap and 400
+        // parse-error branches below, which never reach the router.
+        let seq = self.requests.fetch_add(1, Ordering::Relaxed);
+        let request_id = format!("{:x}-{seq:06x}", std::process::id());
         let request = match Request::read_from(&mut stream, self.options.max_body_bytes) {
             Ok(r) => r,
             Err(e @ ReadError::TooLarge { .. }) => {
-                let resp = Response::text(413, &format!("{e}\n"));
+                let mut resp = Response::text(413, &format!("{e}\n"));
+                resp.headers.push(("X-Request-Id".into(), request_id));
                 stream.write_all(&resp.to_bytes())?;
                 return Ok(());
             }
             Err(e) => {
-                let resp = Response::text(400, &format!("bad request: {e}\n"));
+                let mut resp = Response::text(400, &format!("bad request: {e}\n"));
+                resp.headers.push(("X-Request-Id".into(), request_id));
                 stream.write_all(&resp.to_bytes())?;
                 return Ok(());
             }
         };
-        let seq = self.requests.fetch_add(1, Ordering::Relaxed);
         let route = route_label(&request.method, &request.path);
         let started = Instant::now();
         let mut resp = self.route(&request).unwrap_or_else(|e| {
@@ -331,10 +361,7 @@ impl Server {
             .to_string();
         self.obs.count_request(route);
         self.obs.record_latency(route, &outcome, started.elapsed().as_nanos() as u64);
-        resp.headers.push((
-            "X-Request-Id".into(),
-            format!("{:x}-{seq:06x}", std::process::id()),
-        ));
+        resp.headers.push(("X-Request-Id".into(), request_id));
         stream.write_all(&resp.to_bytes())?;
         Ok(())
     }
@@ -345,6 +372,7 @@ impl Server {
             ("GET", "/") => Ok(self.status_page()),
             ("GET", "/metrics") => Ok(self.do_metrics()),
             ("GET", p) if p.starts_with("/trace/") => Ok(self.do_trace(p)),
+            ("GET", p) if p.starts_with("/profile/") => Ok(self.do_profile(p)),
             ("POST", "/align") => self.do_align(req),
             ("POST", "/tree") => self.do_tree(req),
             _ => Ok(Response::text(404, "not found\n")),
@@ -356,6 +384,7 @@ impl Server {
     /// every family renders in one pass.
     fn do_metrics(&self) -> Response {
         self.obs.cache_resident_bytes.set(self.cache.resident_bytes() as u64);
+        self.obs.cache_resident_bytes_peak.set(self.cache.peak_resident_bytes() as u64);
         self.obs.cache_entries.set(self.cache.entries() as u64);
         self.obs.cache_spill_files.set(self.cache.spill_files_written() as u64);
         Response::bytes(
@@ -373,24 +402,54 @@ impl Server {
             return Response::text(400, &format!("bad request: bad job hash {hex:?}\n"));
         };
         let traces = self.traces.lock().unwrap();
-        match traces.iter().find(|(k, _)| *k == key) {
-            Some((_, json)) => Response::bytes(200, "application/json", json.clone().into_bytes()),
+        match traces.iter().find(|t| t.key == key) {
+            Some(t) => {
+                Response::bytes(200, "application/json", t.chrome_json.clone().into_bytes())
+            }
             None => Response::text(404, &format!("no trace for job {key:016x}\n")),
         }
     }
 
+    /// Post-hoc profile of a retained trace: `GET /profile/<hash>`
+    /// answers the aggregate/gaps/critical-path JSON,
+    /// `GET /profile/<hash>/flame` the collapsed-stack text.  Computed
+    /// on demand from the retained raw events.
+    fn do_profile(&self, path: &str) -> Response {
+        let rest = path.trim_start_matches("/profile/");
+        let (hex, flame) = match rest.strip_suffix("/flame") {
+            Some(h) => (h, true),
+            None => (rest, false),
+        };
+        let Ok(key) = u64::from_str_radix(hex, 16) else {
+            return Response::text(400, &format!("bad request: bad job hash {hex:?}\n"));
+        };
+        let traces = self.traces.lock().unwrap();
+        let Some(t) = traces.iter().find(|t| t.key == key) else {
+            return Response::text(404, &format!("no trace for job {key:016x}\n"));
+        };
+        let profile = Profile::from_events(&t.events, t.num_lanes);
+        if flame {
+            Response::text(200, &profile.collapsed_stack())
+        } else {
+            Response::bytes(200, "application/json", profile.to_json().into_bytes())
+        }
+    }
+
     /// After an engine job ran for job `key`, drain the trace rings and
-    /// retain the Chrome JSON for `GET /trace/<key>` (no-op when the
-    /// cluster's trace rings are disabled).
+    /// retain both the Chrome JSON (for `GET /trace/<key>`) and the raw
+    /// events (for `GET /profile/<key>`); no-op when the cluster's
+    /// trace rings are disabled.
     fn retain_trace(&self, key: u64) {
         let sink = self.cluster.trace();
         if !sink.enabled() {
             return;
         }
-        let json = chrome_trace_json(&sink.drain_new(), sink.num_lanes());
+        let events = sink.drain_new();
+        let num_lanes = sink.num_lanes();
+        let chrome_json = chrome_trace_json(&events, num_lanes);
         let mut traces = self.traces.lock().unwrap();
-        traces.retain(|(k, _)| *k != key);
-        traces.push_back((key, json));
+        traces.retain(|t| t.key != key);
+        traces.push_back(RetainedTrace { key, chrome_json, events, num_lanes });
         while traces.len() > TRACE_KEEP {
             traces.pop_front();
         }
@@ -579,6 +638,29 @@ impl Server {
         out
     }
 
+    /// One-line profile summary of the most recently traced job:
+    /// `critical_path_frac` plus the top-3 self-time stages (the same
+    /// numbers `GET /profile/<hash>` serves in full).
+    fn profile_block(&self) -> String {
+        let traces = self.traces.lock().unwrap();
+        let Some(t) = traces.back() else {
+            return "  (no traced jobs yet)\n".into();
+        };
+        let p = Profile::from_events(&t.events, t.num_lanes);
+        let tops = p
+            .top_self_stages(3)
+            .iter()
+            .map(|(stage, nanos)| format!("stage{stage}={:.3}ms", *nanos as f64 / 1e6))
+            .collect::<Vec<_>>()
+            .join(" ");
+        format!(
+            "  job {:016x}: critical_path_frac={:.3} top_self: {}\n",
+            t.key,
+            p.critical_path_frac,
+            if tops.is_empty() { "(none)".into() } else { tops },
+        )
+    }
+
     fn status_page(&self) -> Response {
         let stats = self.cluster.stats();
         let artifacts = self
@@ -601,9 +683,12 @@ impl Server {
                  artifacts:      {}\n\
                  result cache:   {} jobs, {} hits / {} misses, {} resident bytes (budget {})\n\
                  request latency (from halign_request_seconds):\n\
+                 {}\
+                 last traced job (from /profile):\n\
                  {}\n\
                  GET  /metrics (Prometheus text format)\n\
                  GET  /trace/<job hash> (Chrome trace JSON, when tracing is on)\n\
+                 GET  /profile/<job hash> (profile JSON; append /flame for collapsed stacks)\n\
                  POST /align (FASTA body, ?alphabet=dna|protein, ?parent=<job hash>)\n\
                  POST /tree  (aligned FASTA body)\n",
                 stats.workers,
@@ -622,6 +707,7 @@ impl Server {
                 self.cache.resident_bytes(),
                 self.cache.byte_budget(),
                 self.latency_block(),
+                self.profile_block(),
             ),
         )
     }
@@ -865,6 +951,94 @@ mod tests {
     }
 
     #[test]
+    fn error_responses_carry_a_request_id_on_every_shape() {
+        // 400 parse error: the request line is garbage, so the router
+        // is never reached — the early-return path must still stamp
+        // the header.
+        let srv = start();
+        let bad = talk(srv.port, "NOT_EVEN_HTTP\r\n\r\n");
+        assert!(bad.starts_with("HTTP/1.1 400"), "{bad}");
+        header_value(&bad, "X-Request-Id");
+        // 404 unknown parent (flows through the router).
+        let fasta = ">a\nACGT\n";
+        let nope = talk(
+            srv.port,
+            &format!(
+                "POST /align?parent=00000000deadbeef HTTP/1.1\r\nHost: x\r\n\
+                 Content-Length: {}\r\n\r\n{}",
+                fasta.len(),
+                fasta
+            ),
+        );
+        assert!(nope.starts_with("HTTP/1.1 404"), "{nope}");
+        header_value(&nope, "X-Request-Id");
+        srv.stop();
+        // 413 body cap: another pre-router early return.
+        let cluster = Cluster::new(ClusterConfig::spark(2));
+        let opts = ServerOptions { max_body_bytes: 64, ..ServerOptions::default() };
+        let srv =
+            Server::with_options(cluster, None, opts).unwrap().serve("127.0.0.1:0").unwrap();
+        let big = talk(
+            srv.port,
+            "POST /align HTTP/1.1\r\nHost: x\r\nContent-Length: 100000\r\n\r\n",
+        );
+        assert!(big.starts_with("HTTP/1.1 413"), "{big}");
+        header_value(&big, "X-Request-Id");
+        srv.stop();
+    }
+
+    #[test]
+    fn profile_endpoint_serves_json_and_flame_for_traced_jobs() {
+        let mut cfg = ClusterConfig::spark(2);
+        cfg.scheduler.trace_capacity = 1 << 12;
+        let cluster = Cluster::new(cfg);
+        let srv = Server::new(cluster, None).unwrap().serve("127.0.0.1:0").unwrap();
+        let fasta = ">a\nACGTACGTAA\n>b\nACGTACGTA\n>c\nACGTTCGTAA\n";
+        let req = format!(
+            "POST /align HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{}",
+            fasta.len(),
+            fasta
+        );
+        let resp = talk(srv.port, &req);
+        assert_eq!(header_value(&resp, "X-Cache"), "miss", "{resp}");
+        let job = header_value(&resp, "X-Job-Hash").to_string();
+        // JSON profile: a valid object carrying all three sections.
+        let prof = talk(srv.port, &format!("GET /profile/{job} HTTP/1.1\r\nHost: x\r\n\r\n"));
+        assert!(prof.starts_with("HTTP/1.1 200"), "{prof}");
+        assert!(prof.contains("application/json"), "{prof}");
+        let body = body_of(&prof);
+        assert!(crate::obs::is_json_object(body), "profile must be valid JSON: {body}");
+        for section in
+            ["\"aggregate\"", "\"lanes\"", "\"critical_path\"", "\"critical_path_frac\""]
+        {
+            assert!(body.contains(section), "missing {section}: {body}");
+        }
+        // The engine ran real stages, so the path must be non-trivial.
+        assert!(!body.contains("\"critical_path\":[]"), "{body}");
+        // Flame export: `;`-arity 3 with positive integer weights.
+        let flame =
+            talk(srv.port, &format!("GET /profile/{job}/flame HTTP/1.1\r\nHost: x\r\n\r\n"));
+        assert!(flame.starts_with("HTTP/1.1 200"), "{flame}");
+        let lines: Vec<&str> = body_of(&flame).lines().collect();
+        assert!(!lines.is_empty(), "flame output must not be empty: {flame}");
+        for line in lines {
+            let (frames, weight) = line.rsplit_once(' ').unwrap();
+            assert_eq!(frames.split(';').count(), 3, "{line}");
+            assert!(weight.parse::<u64>().unwrap() >= 1, "{line}");
+        }
+        // Unknown hash: 404.  Malformed hash: 400.
+        let nope = talk(srv.port, "GET /profile/00000000deadbeef HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(nope.starts_with("HTTP/1.1 404"), "{nope}");
+        let bad = talk(srv.port, "GET /profile/zzzz HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(bad.starts_with("HTTP/1.1 400"), "{bad}");
+        // The status page surfaces the headline number for this job.
+        let status = talk(srv.port, "GET / HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(status.contains("critical_path_frac="), "{status}");
+        assert!(status.contains("top_self:"), "{status}");
+        srv.stop();
+    }
+
+    #[test]
     fn metrics_endpoint_serves_every_family() {
         let srv = start();
         // A fresh server must already expose every family (CI greps
@@ -878,6 +1052,8 @@ mod tests {
             "# TYPE halign_cache_misses_total counter",
             "# TYPE halign_cache_appends_total counter",
             "# TYPE halign_cache_resident_bytes gauge",
+            "# TYPE halign_cache_resident_bytes_peak gauge",
+            "# TYPE halign_trace_dropped_total counter",
             "# TYPE halign_tasks_stolen_total counter",
             "# TYPE halign_tasks_run_total counter",
             "# TYPE halign_task_exec_seconds histogram",

@@ -341,6 +341,78 @@ fn w8_suppressible_with_reason() {
     assert!(findings.iter().any(|f| f.suppressed && f.rule == Rule::MetricNameRegistry));
 }
 
+// ---------------------------------------------------------------- W9 --
+
+/// `cfg()` plus one committed bench baseline (scenario `table9`),
+/// parsed through the real baseline-key parser so the lexical JSON
+/// grammar is exercised too.
+fn bench_cfg() -> LintConfig {
+    let mut cfg = cfg();
+    cfg.bench_baseline_keys = vec![(
+        "table9".to_string(),
+        LintConfig::parse_bench_baseline(
+            "{\n  \"bench\": \"table9\",\n  \"note\": \"fixture\",\n  \
+             \"steals\": 1,\n  \"critical_path_frac\": 0.9,\n  \
+             \"max_critical_path_frac\": 0.95\n}\n",
+        ),
+    )];
+    cfg
+}
+
+#[test]
+fn w9_fires_on_undeclared_key() {
+    let src = "fn emit(n: u64) {\n    write_bench_json(\n        \"table9\",\n        \
+               &[(\"steals\", n.to_string()), (\"mystery_key\", n.to_string())],\n    );\n}\n";
+    let findings = lint_source("rust/src/bench/fx.rs", src, &bench_cfg());
+    assert_eq!(ids(&findings), ["W9"]);
+    assert_eq!(findings[0].line, 4);
+    assert!(findings[0].message.contains("mystery_key"));
+    assert!(findings[0].message.contains("BENCH_table9.baseline.json"));
+}
+
+#[test]
+fn w9_fires_on_missing_baseline() {
+    let src = "fn emit(n: u64) {\n    \
+               write_bench_json(\"table10\", &[(\"steals\", n.to_string())]);\n}\n";
+    let findings = lint_source("rust/src/bench/fx.rs", src, &bench_cfg());
+    assert_eq!(ids(&findings), ["W9"]);
+    assert_eq!(findings[0].line, 2);
+    assert!(findings[0].message.contains("BENCH_table10.baseline.json"));
+}
+
+#[test]
+fn w9_silent_on_declared_keys_tests_definitions_and_unconfigured() {
+    // Every emitted key is declared in the committed baseline.
+    let declared = "fn emit(n: u64) {\n    write_bench_json(\n        \"table9\",\n        \
+                    &[(\"steals\", n.to_string()), (\"critical_path_frac\", format!(\"{n}\"))],\n    \
+                    );\n}\n";
+    assert!(ids(&lint_source("rust/src/bench/fx.rs", declared, &bench_cfg())).is_empty());
+    // The writer's own definition has no scenario literal after the paren.
+    let definition = "pub fn write_bench_json(scenario: &str, fields: &[(&str, String)]) {\n    \
+                      let body = format!(\"{scenario} {}\", fields.len());\n    drop(body);\n}\n";
+    assert!(ids(&lint_source("rust/src/bench/fx.rs", definition, &bench_cfg())).is_empty());
+    // Test code may emit scratch scenarios.
+    let test_src = "#[cfg(test)]\nmod tests {\n    fn t() {\n        \
+                    write_bench_json(\"scratch\", &[(\"anything_goes\", 1.to_string())]);\n    \
+                    }\n}\n";
+    assert!(ids(&lint_source("rust/src/bench/fx.rs", test_src, &bench_cfg())).is_empty());
+    // With no committed baselines at all the rule is inert.
+    let undeclared = "fn emit(n: u64) {\n    \
+                      write_bench_json(\"table10\", &[(\"anything_goes\", n.to_string())]);\n}\n";
+    assert!(ids(&lint_source("rust/src/bench/fx.rs", undeclared, &cfg())).is_empty());
+}
+
+#[test]
+fn w9_suppressible_with_reason() {
+    let src = "fn emit(n: u64) {\n    \
+               // lint: allow(bench-json-schema) exploratory scenario, gated next PR\n    \
+               write_bench_json(\n        \"table10\",\n        \
+               &[(\"mystery_key\", n.to_string())],\n    );\n}\n";
+    let findings = lint_source("rust/src/bench/fx.rs", src, &bench_cfg());
+    assert!(ids(&findings).is_empty());
+    assert!(findings.iter().any(|f| f.suppressed && f.rule == Rule::BenchJsonSchema));
+}
+
 // -------------------------------------------------- suppression + W0 --
 
 #[test]

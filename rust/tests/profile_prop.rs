@@ -1,0 +1,260 @@
+//! Property tests for the post-hoc profiler (`src/obs/profile.rs`).
+//!
+//! Two trace sources feed the same invariant battery:
+//!
+//! * **Synthetic traces** — seeded, stage-sequential event streams
+//!   built directly from `TraceEvent` values, so each invariant is
+//!   checked against a ground truth the generator controls (longest
+//!   span, task count, stage windows).
+//! * **Real engine traces** — jobs run through the public cluster API
+//!   under BOTH scheduler modes with speculation disabled (so every
+//!   completed span is a winning attempt and the critical path bounds
+//!   below by the longest task).
+//!
+//! Randomness is the project's seeded [`halign2::util::Rng`]: every run
+//! checks the same 100+ traces, failures reproduce by seed.
+
+use halign2::engine::{Cluster, ClusterConfig, SchedulerMode};
+use halign2::obs::{Profile, TraceEvent, TraceKind};
+use halign2::util::Rng;
+
+// ------------------------------------------------ invariant battery --
+
+/// The profiler contract every trace must satisfy.  `longest_span`
+/// is the ground-truth longest completed winner span when the caller
+/// knows it (synthetic traces), else recovered from the aggregate.
+fn check_invariants(p: &Profile, longest_span: Option<u64>, label: &str) {
+    // Critical path never exceeds wall time (stages are sequential).
+    assert!(
+        p.critical_path_nanos <= p.wall_nanos,
+        "{label}: path {} > wall {}",
+        p.critical_path_nanos,
+        p.wall_nanos
+    );
+    // ...and never undercuts the longest completed task: that task
+    // alone is a lower bound on any schedule.
+    let longest =
+        longest_span.unwrap_or_else(|| p.aggregate.iter().map(|r| r.max_nanos).max().unwrap_or(0));
+    assert!(
+        p.critical_path_nanos >= longest,
+        "{label}: path {} < longest task {longest}",
+        p.critical_path_nanos
+    );
+    // The headline fraction is an honest fraction whenever work ran.
+    if !p.aggregate.is_empty() {
+        assert!(
+            p.critical_path_frac > 0.0 && p.critical_path_frac <= 1.0,
+            "{label}: frac {} outside (0, 1]",
+            p.critical_path_frac
+        );
+    }
+    // Worker-lane gap analysis partitions the wall exactly: executing,
+    // steal-wait, drain-wait, and idle account for every nanosecond.
+    assert_eq!(p.lanes.len(), p.num_lanes.saturating_sub(1).max(1).min(p.num_lanes), "{label}");
+    for g in &p.lanes {
+        assert_eq!(
+            g.self_nanos + g.steal_wait_nanos + g.drain_wait_nanos + g.idle_nanos,
+            p.wall_nanos,
+            "{label}: lane {} gap partition does not sum to wall",
+            g.lane
+        );
+    }
+    // Queue delays are bounded by the window they were measured in.
+    assert!(p.queue.max_nanos <= p.wall_nanos, "{label}: queue max exceeds wall");
+    assert!(p.queue.total_nanos >= p.queue.max_nanos, "{label}");
+
+    // Collapsed-stack round-trip: every line is `a;b;c <weight>` with a
+    // positive integer weight, and re-serializing the parsed parts
+    // reproduces the export byte-for-byte.
+    let collapsed = p.collapsed_stack();
+    let mut rebuilt = String::new();
+    for line in collapsed.lines() {
+        let (stack, weight) = line.rsplit_once(' ').unwrap_or_else(|| {
+            panic!("{label}: collapsed line has no weight separator: {line:?}")
+        });
+        let w: u64 = weight
+            .parse()
+            .unwrap_or_else(|_| panic!("{label}: non-integer weight in {line:?}"));
+        assert!(w >= 1, "{label}: zero weight in {line:?}");
+        assert_eq!(stack.split(';').count(), 3, "{label}: frame arity != 3 in {line:?}");
+        assert!(
+            stack.split(';').all(|frame| !frame.is_empty()),
+            "{label}: empty frame in {line:?}"
+        );
+        rebuilt.push_str(&format!("{stack} {w}\n"));
+    }
+    assert_eq!(rebuilt, collapsed, "{label}: collapsed stack does not round-trip");
+    assert_eq!(collapsed.lines().count(), p.aggregate.len(), "{label}: one line per row");
+}
+
+// ------------------------------------------------- synthetic traces --
+
+struct Synth {
+    events: Vec<TraceEvent>,
+    num_lanes: usize,
+    longest_span: u64,
+    num_tasks: u64,
+    num_spans: u64,
+}
+
+/// A stage-sequential trace: stages occupy disjoint time windows (the
+/// barrier the executor enforces between `run_tasks` calls), each task
+/// runs exactly once (speculation off), spans never overlap on a lane.
+fn synth_trace(rng: &mut Rng) -> Synth {
+    let num_lanes = 2 + rng.below(4); // 1..=4 workers + driver
+    let workers = num_lanes - 1;
+    let driver = num_lanes - 1;
+    let num_stages = 1 + rng.below(3) as u64;
+    let mut events = Vec::new();
+    let mut t = 10 + rng.below(100) as u64;
+    let mut longest_span = 0u64;
+    let mut num_tasks = 0u64;
+    for stage in 1..=num_stages {
+        let tasks = 1 + rng.below(6) as u64;
+        num_tasks += tasks;
+        let mut lane_cursor = vec![t; workers];
+        for task in 0..tasks {
+            let payload = (stage << 32) | task;
+            events.push(TraceEvent {
+                nanos: t,
+                lane: driver,
+                kind: TraceKind::Enqueue,
+                payload,
+            });
+            let lane = rng.below(workers);
+            let start = lane_cursor[lane] + rng.below(40) as u64;
+            let dur = 1 + rng.below(500) as u64;
+            events.push(TraceEvent { nanos: start, lane, kind: TraceKind::Start, payload });
+            events.push(TraceEvent {
+                nanos: start + dur,
+                lane,
+                kind: TraceKind::Finish,
+                payload,
+            });
+            lane_cursor[lane] = start + dur;
+            longest_span = longest_span.max(dur);
+        }
+        let stage_end = *lane_cursor.iter().max().unwrap();
+        // Scheduling noise inside the stage window: steal markers on
+        // worker lanes, the occasional kill-drain.
+        if rng.below(2) == 0 {
+            events.push(TraceEvent {
+                nanos: t + rng.below((stage_end - t + 1) as usize) as u64,
+                lane: rng.below(workers),
+                kind: TraceKind::Steal,
+                payload: 1 + rng.below(4) as u64,
+            });
+        }
+        if rng.below(4) == 0 {
+            events.push(TraceEvent {
+                nanos: t + rng.below((stage_end - t + 1) as usize) as u64,
+                lane: driver,
+                kind: TraceKind::KillDrain,
+                payload: 1,
+            });
+        }
+        t = stage_end + 1 + rng.below(30) as u64;
+    }
+    // Deliver in scrambled order: `from_events` must re-sort.
+    for i in (1..events.len()).rev() {
+        events.swap(i, rng.below(i + 1));
+    }
+    Synth { events, num_lanes, longest_span, num_tasks, num_spans: num_tasks }
+}
+
+#[test]
+fn prop_synthetic_traces_satisfy_profile_invariants() {
+    let mut rng = Rng::seed_from_u64(0x0F1A);
+    for case in 0..80 {
+        let s = synth_trace(&mut rng);
+        let p = Profile::from_events(&s.events, s.num_lanes);
+        let label = format!("synthetic case {case}");
+        check_invariants(&p, Some(s.longest_span), &label);
+        // Generator ground truth: every task span completed and was
+        // observed, every enqueue→start delay was measurable.
+        let counted: u64 = p.aggregate.iter().map(|r| r.count).sum();
+        assert_eq!(counted, s.num_spans, "{label}: aggregate loses spans");
+        assert_eq!(p.queue.samples, s.num_tasks, "{label}: queue samples != tasks");
+        assert_eq!(p.lanes.len(), s.num_lanes - 1, "{label}: one gap row per worker lane");
+    }
+}
+
+#[test]
+fn prop_degenerate_traces_do_not_panic() {
+    // Empty trace: everything zero, frac pinned at 0.
+    let p = Profile::from_events(&[], 3);
+    assert_eq!(p.wall_nanos, 0);
+    assert_eq!(p.critical_path_frac, 0.0);
+    assert!(p.collapsed_stack().is_empty());
+    // Single instantaneous task: wall 0 but work ran — frac reads 1.
+    let payload = (1u64 << 32) | 7;
+    let ev = [
+        TraceEvent { nanos: 5, lane: 0, kind: TraceKind::Start, payload },
+        TraceEvent { nanos: 5, lane: 0, kind: TraceKind::Finish, payload },
+    ];
+    let p = Profile::from_events(&ev, 2);
+    assert_eq!(p.wall_nanos, 0);
+    assert_eq!(p.critical_path_frac, 1.0);
+    check_invariants(&p, None, "degenerate single-task");
+}
+
+// ----------------------------------------------- real engine traces --
+
+/// Run a seeded two-stage job (busy map + empty probe stage) and return
+/// the profile of its drained trace.
+fn engine_profile(mode: SchedulerMode, seed: u64) -> Profile {
+    let mut rng = Rng::seed_from_u64(seed);
+    let workers = 2 + rng.below(2);
+    let mut cfg = ClusterConfig::spark(workers);
+    cfg.scheduler.mode = mode;
+    // Speculation off: every completed span is a winning attempt, so
+    // the critical path lower-bounds at the longest task (a zombie
+    // speculative duplicate would break that accounting).
+    cfg.scheduler.speculation = false;
+    cfg.scheduler.trace_capacity = 1 << 12;
+    let c = Cluster::new(cfg);
+
+    let n = 8 + rng.below(17) as u64;
+    let parts = 2 + rng.below(3);
+    let spin = 50 + rng.below(400) as u64;
+    let out = c
+        .parallelize((0..n).collect::<Vec<u64>>(), parts)
+        .map(move |x| {
+            let mut acc = x;
+            for i in 0..spin {
+                acc = std::hint::black_box(acc.wrapping_mul(0x9E37_79B9).rotate_left(7) ^ i);
+            }
+            acc
+        })
+        .collect()
+        .unwrap();
+    assert_eq!(out.len(), n as usize);
+    c.executor_probe(1 + rng.below(8)).unwrap();
+
+    let events = c.trace().drain_new();
+    assert!(
+        events.iter().any(|e| e.kind == TraceKind::Finish),
+        "traced job produced no Finish events"
+    );
+    Profile::from_events(&events, c.trace().num_lanes())
+}
+
+#[test]
+fn prop_engine_traces_satisfy_profile_invariants_both_modes() {
+    for mode in [SchedulerMode::Sharded, SchedulerMode::GlobalLock] {
+        for seed in 0..15u64 {
+            let p = engine_profile(mode, 0xE_0000 + seed);
+            let label = format!("engine {mode:?} seed {seed}");
+            check_invariants(&p, None, &label);
+            // The job ran at least two stages (map stage + probe stage)
+            // and the profiler saw both.
+            let stages: std::collections::BTreeSet<u64> =
+                p.aggregate.iter().map(|r| r.stage).collect();
+            assert!(stages.len() >= 2, "{label}: expected >= 2 stages, saw {stages:?}");
+            assert!(p.queue.samples > 0, "{label}: no enqueue->start delays measured");
+            assert_eq!(p.lanes.len(), p.num_lanes - 1, "{label}");
+            // Machine-readable export stays structurally valid JSON.
+            assert!(halign2::obs::is_json_object(&p.to_json()), "{label}: to_json invalid");
+        }
+    }
+}

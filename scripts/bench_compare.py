@@ -27,10 +27,23 @@ What is compared — and deliberately what is not:
   stay under the baseline's `max_tail_ratio` ceiling — a tail blowup is
   a code smell (one append falling off the incremental path) regardless
   of host speed.
+* table5: the tiled/dense distmat `peak_bytes_ratio` must stay under the
+  baseline's `max_peak_bytes_ratio` ceiling (tiled regressing to dense
+  memory is the failure this catches), `backends_agree` must be true,
+  the traced run must have executed tasks, and `critical_path_frac`
+  must be a fraction in (0, `max_critical_path_frac`].
+* fig6: for each scheduler mode (`sharded_`/`global_` prefixes), the
+  forced steal / speculation / kill-drain episodes must appear as
+  *minimum* counter floors (never exact pins — scheduling is
+  nondeterministic), and `critical_path_frac` must stay under the
+  ceiling: the speculation stage's deadline wait is wall-clock with no
+  path on it, so a fraction near 1.0 means the profiler lost the gap.
+* table2 is gated the same way as table5 (minus the peak ratio) when a
+  fresh BENCH_table2.json is present; the file is optional so partial
+  local runs still compare cleanly.
 
 `--update` rewrites the baselines from the current BENCH files (keeping
-serve's `min_speedup` floor and `max_tail_ratio` ceiling); commit the
-result.
+every `min_*`/`max_*` floor and ceiling knob); commit the result.
 """
 
 import argparse
@@ -130,6 +143,123 @@ def compare_serve(current, baseline):
     return failures
 
 
+def check_frac(failures, scenario, current, key, ceiling):
+    """critical_path_frac-shaped value: must exist and sit in (0, ceiling]."""
+    frac = current.get(key)
+    if frac is None:
+        failures.append(f"{scenario}: {key} missing")
+    elif not 0.0 < frac <= ceiling:
+        failures.append(
+            f"{scenario}: {key} = {frac:.4f} outside (0, {ceiling:.2f}] "
+            f"(ceiling from the committed baseline)"
+        )
+    else:
+        print(f"  {scenario} {key:<28} {frac:.4f}  (ceiling {ceiling:.2f})  ok")
+
+
+def check_counter_floor(failures, scenario, current, key, floor):
+    got = current.get(key)
+    if got is None or got < floor:
+        failures.append(f"{scenario}: {key} = {got}, below the minimum of {floor}")
+    else:
+        print(f"  {scenario} {key:<28} {got}  (floor {floor})  ok")
+
+
+def compare_table5(current, baseline):
+    failures = []
+    ceiling = baseline.get("max_peak_bytes_ratio", 1.0)
+    ratio = current.get("peak_bytes_ratio")
+    if ratio is None:
+        failures.append("table5: peak_bytes_ratio missing from BENCH_table5.json")
+    elif ratio > ceiling:
+        failures.append(
+            f"table5: tiled/dense peak_bytes_ratio {ratio:.3f} above the "
+            f"{ceiling:.2f} ceiling (tiled backend regressed toward dense memory)"
+        )
+    else:
+        print(f"  table5 {'peak_bytes_ratio':<28} {ratio:.4f}  (ceiling {ceiling:.2f})  ok")
+    if current.get("backends_agree") is not True:
+        failures.append(
+            f"table5: backends_agree = {current.get('backends_agree')}, dense and "
+            f"tiled must produce identical trees"
+        )
+    else:
+        print(f"  table5 {'backends_agree':<28} true  ok")
+    check_counter_floor(failures, "table5", current, "tasks_run", baseline.get("min_tasks_run", 1))
+    check_frac(
+        failures,
+        "table5",
+        current,
+        "critical_path_frac",
+        baseline.get("max_critical_path_frac", 1.0),
+    )
+    return failures
+
+
+def compare_fig6(current, baseline):
+    failures = []
+    for prefix in ("sharded", "global"):
+        for key, floor_key in (
+            ("steals", "min_steals"),
+            ("speculative_launches", "min_speculative_launches"),
+            ("kill_drained", "min_kill_drained"),
+        ):
+            check_counter_floor(
+                failures, "fig6", current, f"{prefix}_{key}", baseline.get(floor_key, 1)
+            )
+        check_frac(
+            failures,
+            "fig6",
+            current,
+            f"{prefix}_critical_path_frac",
+            baseline.get("max_critical_path_frac", 0.95),
+        )
+    return failures
+
+
+def compare_table2(current, baseline):
+    failures = []
+    if current.get("sp_match") is not True:
+        failures.append(
+            f"table2: sp_match = {current.get('sp_match')}, HAlign v1 and HAlign-II "
+            f"must report the same avg SP"
+        )
+    else:
+        print(f"  table2 {'sp_match':<28} true  ok")
+    check_counter_floor(failures, "table2", current, "tasks_run", baseline.get("min_tasks_run", 1))
+    check_frac(
+        failures,
+        "table2",
+        current,
+        "critical_path_frac",
+        baseline.get("max_critical_path_frac", 1.0),
+    )
+    return failures
+
+
+def profiled_baseline(scenario, current, old, knobs):
+    """Baseline for a profiled scenario: every fresh key is echoed (W9
+    requires written keys to appear in the baseline) plus the gate knobs,
+    preserved from the old baseline when present."""
+    base = {"bench": scenario}
+    base.update(current)
+    for knob, default in knobs.items():
+        base[knob] = old.get(knob, default)
+    return base
+
+
+PROFILE_KNOBS = {
+    "table5": {"max_peak_bytes_ratio": 1.0, "min_tasks_run": 1, "max_critical_path_frac": 1.0},
+    "fig6": {
+        "min_steals": 1,
+        "min_speculative_launches": 1,
+        "min_kill_drained": 1,
+        "max_critical_path_frac": 0.95,
+    },
+    "table2": {"min_tasks_run": 1, "max_critical_path_frac": 1.0},
+}
+
+
 def update_baselines(root, micro, serve, old_serve_baseline):
     micro_base = {
         "bench": "micro_kernel_ab",
@@ -150,10 +280,24 @@ def update_baselines(root, micro, serve, old_serve_baseline):
         "min_speedup": old_serve_baseline.get("min_speedup", 5.0),
         "max_tail_ratio": old_serve_baseline.get("max_tail_ratio", 50.0),
     }
-    for name, data in [
+    updates = [
         ("BENCH_micro.baseline.json", micro_base),
         ("BENCH_serve.baseline.json", serve_base),
-    ]:
+    ]
+    for scenario, knobs in PROFILE_KNOBS.items():
+        fresh = root / f"BENCH_{scenario}.json"
+        if not fresh.exists():
+            print(f"skipping BENCH_{scenario}.baseline.json (no fresh {fresh.name})")
+            continue
+        old_path = root / f"BENCH_{scenario}.baseline.json"
+        old = json.loads(old_path.read_text()) if old_path.exists() else {}
+        updates.append(
+            (
+                f"BENCH_{scenario}.baseline.json",
+                profiled_baseline(scenario, load(fresh), old, knobs),
+            )
+        )
+    for name, data in updates:
         path = root / name
         path.write_text(json.dumps(data, indent=2) + "\n")
         print(f"rewrote {path}")
@@ -190,6 +334,17 @@ def main():
 
     failures = compare_micro(micro, micro_baseline, args.threshold)
     failures += compare_serve(serve, serve_baseline)
+    # Profiled scenarios: table5 and fig6 are required (CI produces both),
+    # table2 is compared only when a fresh file is present.
+    comparators = {"table5": compare_table5, "fig6": compare_fig6, "table2": compare_table2}
+    for scenario, compare in comparators.items():
+        fresh_path = args.root / f"BENCH_{scenario}.json"
+        if scenario == "table2" and not fresh_path.exists():
+            print(f"  table2 skipped (no fresh {fresh_path.name})")
+            continue
+        fresh = load(fresh_path)
+        baseline = load(args.root / f"BENCH_{scenario}.baseline.json")
+        failures += compare(fresh, baseline)
     if failures:
         print(f"\nbench_compare: {len(failures)} regression(s):", file=sys.stderr)
         for f in failures:
